@@ -1,0 +1,64 @@
+//! End-to-end driver (Table I / Fig 8 / Fig 9): CNN accuracy under
+//! stuck-at faults across grouping configurations, run through the full
+//! three-layer stack — rust coordinator compiles per-chip decompositions,
+//! the PJRT runtime executes the AOT model graphs (Pallas FC head inside).
+//!
+//!   cargo run --release --example cnn_fault_eval                 # Table I
+//!   cargo run --release --example cnn_fault_eval -- --layerwise  # + Fig 8
+//!   cargo run --release --example cnn_fault_eval -- --sweep      # + Fig 9
+//!   cargo run --release --example cnn_fault_eval -- --trials 5 --archs cnn_s
+//!   cargo run --release --example cnn_fault_eval -- --unprotected
+
+use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
+use rchg::grouping::GroupConfig;
+use rchg::runtime::{artifacts_dir, Runtime};
+use rchg::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("CNN fault-injection accuracy (Table I / Fig 8 / Fig 9)")
+        .opt("archs", "comma-separated architectures", Some("cnn_s,cnn_m,cnn_d,vgg_n"))
+        .opt("configs", "grouping configs", Some("r1c4,r2c2,r2c4"))
+        .opt("trials", "chips (fault maps) per cell", Some("3"))
+        .opt("threads", "compile threads", Some("1"))
+        .opt("layerwise", "also print Fig 8 layer-wise error", None)
+        .opt("sweep", "also print Fig 9 fault-rate sweep", None)
+        .opt("unprotected", "add no-mitigation rows", None)
+        .opt("sweep-arch", "architecture for the sweep", Some("cnn_s"));
+    let args = cli.parse(std::env::args());
+
+    let art = artifacts_dir();
+    let rt = Runtime::new(&art)?;
+    let opts = AccuracyOptions {
+        archs: args.get_list("archs"),
+        configs: args
+            .get_list("configs")
+            .iter()
+            .filter_map(|s| GroupConfig::parse(s))
+            .collect(),
+        trials: args.get_usize("trials", 3),
+        threads: args.get_usize("threads", 1),
+        include_unprotected: args.get_bool("unprotected"),
+    };
+
+    let t = table1(&rt, &art, &opts)?;
+    println!("{}", t.render());
+
+    if args.get_bool("layerwise") {
+        let t = fig8(&rt, &art, args.get_str("sweep-arch", "cnn_s"), opts.threads)?;
+        println!("{}", t.render());
+    }
+
+    if args.get_bool("sweep") {
+        let rates = [0.02, 0.05, 0.1079, 0.15, 0.20];
+        let t = fig9(
+            &rt,
+            &art,
+            args.get_str("sweep-arch", "cnn_s"),
+            &rates,
+            opts.trials.min(3),
+            opts.threads,
+        )?;
+        println!("{}", t.render());
+    }
+    Ok(())
+}

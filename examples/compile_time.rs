@@ -1,0 +1,42 @@
+//! Table II + Fig 10: compilation-time evaluation of the proposed pipeline
+//! against the original Fault-Free baseline and the ILP-only variant.
+//!
+//!   cargo run --release --example compile_time
+//!   cargo run --release --example compile_time -- --models resnet20
+//!   cargo run --release --example compile_time -- --full-complete  # no sampling
+//!   cargo run --release --example compile_time -- --r2c4           # ILP-FAWD config
+
+use rchg::experiments::compile_time::{fig10a, fig10b, table2, CompileTimeOptions};
+use rchg::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("compilation time (Table II / Fig 10)")
+        .opt("models", "models to compile", Some("resnet20,resnet18,resnet50,vgg16"))
+        .opt("sample-complete", "weight sample for complete pipeline", Some("400000"))
+        .opt("sample-ilp", "weight sample for ILP-only", Some("2000"))
+        .opt("sample-ff", "weight sample for original FF", Some("2000"))
+        .opt("threads", "compile threads (paper: 1)", Some("1"))
+        .opt("full-complete", "run the complete pipeline at full model scale", None)
+        .opt("r2c4", "include the R2C4 row (ILP-FAWD territory)", None)
+        .opt("breakdown-model", "model for the Fig 10b breakdown", Some("resnet18"));
+    let args = cli.parse(std::env::args());
+
+    let opts = CompileTimeOptions {
+        models: args.get_list("models"),
+        sample_complete: if args.get_bool("full-complete") {
+            usize::MAX
+        } else {
+            args.get_usize("sample-complete", 400_000)
+        },
+        sample_ilp: args.get_usize("sample-ilp", 2_000),
+        sample_ff: args.get_usize("sample-ff", 2_000),
+        threads: args.get_usize("threads", 1),
+        include_r2c4: args.get_bool("r2c4"),
+    };
+
+    let (t, rows) = table2(&opts)?;
+    println!("{}", t.render());
+    println!("{}", fig10a(&rows, &opts.models).render());
+    println!("{}", fig10b(&rows, args.get_str("breakdown-model", "resnet18")).render());
+    Ok(())
+}

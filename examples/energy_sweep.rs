@@ -1,0 +1,40 @@
+//! Fig 11: normalized energy consumption vs crossbar array size, for the
+//! hybrid grouping configurations against the R1C4 column-grouping
+//! baseline (NeuroSIM/ConvMapSIM-style model, kernel-splitting mapper).
+//!
+//!   cargo run --release --example energy_sweep
+//!   cargo run --release --example energy_sweep -- --model resnet18
+//!   cargo run --release --example energy_sweep -- --packed   # ablation mapper
+
+use rchg::arrays::MapperPolicy;
+use rchg::energy::EnergyParams;
+use rchg::experiments::hw::fig11;
+use rchg::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("energy vs array size (Fig 11)")
+        .opt("model", "network (resnet20|resnet18|resnet50|vgg16)", Some("resnet20"))
+        .opt("sizes", "array sizes", Some("64,128,256,512"))
+        .opt("packed", "use the utilization-packed mapper (ablation)", None)
+        .opt("adc-energy", "ADC energy per conversion (pJ)", Some("2.0"));
+    let args = cli.parse(std::env::args());
+
+    let sizes: Vec<usize> =
+        args.get_list("sizes").iter().filter_map(|s| s.parse().ok()).collect();
+    let policy = if args.get_bool("packed") {
+        MapperPolicy::PackedVertical
+    } else {
+        MapperPolicy::KernelSplit
+    };
+    let mut params = EnergyParams::default();
+    params.e_adc = args.get_f64("adc-energy", 2.0);
+
+    for model in [args.get_str("model", "resnet20").to_string(), "resnet18".to_string()] {
+        let t = fig11(&model, &sizes, &params, policy)?;
+        println!("{}", t.render());
+        if args.get_str("model", "resnet20") != "resnet20" {
+            break; // explicit model given: print only that one
+        }
+    }
+    Ok(())
+}

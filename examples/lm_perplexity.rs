@@ -1,0 +1,37 @@
+//! Table III: OPT-like LM perplexity under stuck-at faults.
+//!
+//!   cargo run --release --example lm_perplexity
+//!   cargo run --release --example lm_perplexity -- --trials 10 --windows 120
+//!   cargo run --release --example lm_perplexity -- --unprotected
+
+use rchg::experiments::lm::{table3, LmOptions};
+use rchg::grouping::GroupConfig;
+use rchg::runtime::{artifacts_dir, Runtime};
+use rchg::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("LM perplexity under SAFs (Table III)")
+        .opt("configs", "grouping configs", Some("r1c4,r2c2"))
+        .opt("trials", "chips per config", Some("3"))
+        .opt("windows", "eval windows per stream", Some("60"))
+        .opt("threads", "compile threads", Some("1"))
+        .opt("unprotected", "add no-mitigation rows", None);
+    let args = cli.parse(std::env::args());
+
+    let art = artifacts_dir();
+    let rt = Runtime::new(&art)?;
+    let opts = LmOptions {
+        configs: args
+            .get_list("configs")
+            .iter()
+            .filter_map(|s| GroupConfig::parse(s))
+            .collect(),
+        trials: args.get_usize("trials", 3),
+        threads: args.get_usize("threads", 1),
+        max_windows: args.get_usize("windows", 60),
+        include_unprotected: args.get_bool("unprotected"),
+    };
+    let t = table3(&rt, &art, &opts)?;
+    println!("{}", t.render());
+    Ok(())
+}

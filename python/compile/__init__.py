@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 Pallas kernels + L2 JAX models + AOT export).
+
+Nothing in this package is imported at runtime; the rust coordinator only
+consumes the HLO-text artifacts and weight banks it emits.
+"""

@@ -1,0 +1,173 @@
+"""AOT export: lower the L2 deploy graphs (with the L1 Pallas kernel
+inside) to HLO **text** artifacts the rust runtime loads via the `xla`
+crate.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Artifacts written to ``artifacts/``:
+  imc_linear_<cfg>.hlo.txt       standalone crossbar-MVM executable
+  cnn_<arch>_<cfg>.hlo.txt       CNN deploy forward (batch 100)
+  lm_<cfg>.hlo.txt               LM deploy forward  (batch 2 × ctx)
+  manifest.json                  name → {path, args:[{name,shape,dtype}]}
+
+Run AFTER train.py (reads nothing from it, but `make artifacts` orders
+them; shapes depend only on the architecture tables).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.crossbar_mvm import imc_linear
+
+ART = os.environ.get(
+    "RCHG_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+)
+
+# Grouping configurations exported for the rust side: name -> (rows, cols, L).
+GROUP_CONFIGS = {
+    "r1c4": (1, 4, 4),
+    "r2c2": (2, 2, 4),
+    "r2c4": (2, 4, 4),
+}
+
+CNN_EVAL_BATCH = 100
+LM_EVAL_BATCH = 2
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sigs(cols, levels):
+    return [float(levels ** (cols - 1 - j)) for j in range(cols)]
+
+
+def export(name, fn, arg_specs, manifest):
+    """Lower `fn` at `arg_specs` and write `<name>.hlo.txt`."""
+    lowered = jax.jit(fn).lower(*[_spec(s, d) for _, s, d in arg_specs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(ART, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest[name] = {
+        "path": f"{name}.hlo.txt",
+        "args": [
+            {"name": n, "shape": list(s), "dtype": "i32" if d == jnp.int32 else "f32"}
+            for n, s, d in arg_specs
+        ],
+    }
+    print(f"  wrote {name}.hlo.txt ({len(text)/1024:.0f} KiB, {len(arg_specs)} args)")
+
+
+def cnn_deploy_fn(arch, rows, n_slices):
+    conv_names = [n for n, _ in M.cnn_param_shapes(arch) if n.startswith("conv")]
+
+    def fn(x, *rest):
+        conv = dict(zip(conv_names, rest[: len(conv_names)]))
+        fc_pos, fc_neg, fc_sigs, fc_scale, fc_b = rest[len(conv_names) :]
+        return (
+            M.cnn_forward_deploy(
+                conv, x, fc_pos, fc_neg, fc_sigs, fc_scale, fc_b, arch=arch, rows=rows
+            ),
+        )
+
+    return fn, conv_names
+
+
+def lm_deploy_fn(rows):
+    names = [n for n, _ in M.lm_param_shapes()]
+
+    def fn(tokens, *rest):
+        trunk = dict(zip(names, rest[: len(names)]))
+        head_pos, head_neg, head_sigs, head_scale = rest[len(names) :]
+        return (
+            M.lm_forward_deploy(
+                trunk, tokens, head_pos, head_neg, head_sigs, head_scale, rows=rows
+            ),
+        )
+
+    return fn, names
+
+
+def main():
+    os.makedirs(ART, exist_ok=True)
+    manifest = {}
+
+    for cfg_name, (rows, cols, levels) in GROUP_CONFIGS.items():
+        n_slices = cols
+
+        # ---- standalone crossbar-MVM microbench artifact ----------------
+        k, n, b = 64, 10, 8
+        export(
+            f"imc_linear_{cfg_name}",
+            lambda x, p, q, s: (imc_linear(x, p, q, s, rows_per_weight=rows),),
+            [
+                ("x", (b, k), jnp.float32),
+                ("pos_planes", (n_slices, k * rows, n), jnp.float32),
+                ("neg_planes", (n_slices, k * rows, n), jnp.float32),
+                ("sigs", (n_slices,), jnp.float32),
+            ],
+            manifest,
+        )
+
+        # ---- CNN deploy graphs -------------------------------------------
+        for arch in M.CNN_ARCHS:
+            fn, conv_names = cnn_deploy_fn(arch, rows, n_slices)
+            shapes = dict(M.cnn_param_shapes(arch))
+            feat = shapes["fc_w"][0]
+            args = [("x", (CNN_EVAL_BATCH, 32, 32, 3), jnp.float32)]
+            args += [(cn, shapes[cn], jnp.float32) for cn in conv_names]
+            args += [
+                ("fc_pos", (n_slices, feat * rows, M.NUM_CLASSES), jnp.float32),
+                ("fc_neg", (n_slices, feat * rows, M.NUM_CLASSES), jnp.float32),
+                ("fc_sigs", (n_slices,), jnp.float32),
+                ("fc_scale", (M.NUM_CLASSES,), jnp.float32),
+                ("fc_b", (M.NUM_CLASSES,), jnp.float32),
+            ]
+            export(f"cnn_{arch}_{cfg_name}", fn, args, manifest)
+
+        # ---- LM deploy graph ---------------------------------------------
+        cfg = M.LM_CONFIG
+        fn, names = lm_deploy_fn(rows)
+        shapes = dict(M.lm_param_shapes())
+        args = [("tokens", (LM_EVAL_BATCH, cfg["ctx"]), jnp.int32)]
+        args += [(n_, shapes[n_], jnp.float32) for n_ in names]
+        args += [
+            ("head_pos", (n_slices, cfg["d_model"] * rows, cfg["vocab"]), jnp.float32),
+            ("head_neg", (n_slices, cfg["d_model"] * rows, cfg["vocab"]), jnp.float32),
+            ("head_sigs", (n_slices,), jnp.float32),
+            ("head_scale", (cfg["vocab"],), jnp.float32),
+        ]
+        export(f"lm_{cfg_name}", fn, args, manifest)
+
+    manifest["_meta"] = {
+        "group_configs": {k: list(v) for k, v in GROUP_CONFIGS.items()},
+        "cnn_archs": {k: v for k, v in M.CNN_ARCHS.items()},
+        "cnn_eval_batch": CNN_EVAL_BATCH,
+        "lm_eval_batch": LM_EVAL_BATCH,
+        "lm_config": M.LM_CONFIG,
+        "num_classes": M.NUM_CLASSES,
+    }
+    with open(os.path.join(ART, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest)-1} executables)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Build-time datasets.
+
+* **Synthetic CIFAR** — the paper evaluates on CIFAR-10/ImageNet, which are
+  not available in this offline environment. We substitute a deterministic
+  procedurally-generated 10-class 32×32×3 set (stripes / checkers / disks /
+  crosses / gradients × two palettes, with random phase, jitter and noise).
+  What matters for the reproduction is the *relative* accuracy of grouping
+  configurations under SAFs, not ImageNet absolute accuracy (DESIGN.md §3).
+
+* **Byte corpora** — stand-ins for WikiText-2 / PTB / C4: three disjoint
+  real text corpora assembled from source trees shipped in the image
+  (jax, numpy, python stdlib). Byte-level tokenization, 256-way vocab.
+"""
+
+import os
+import sys
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Synthetic CIFAR
+# --------------------------------------------------------------------------
+
+_PALETTES = [
+    ((0.9, 0.2, 0.1), (0.1, 0.3, 0.9)),
+    ((0.2, 0.8, 0.3), (0.8, 0.7, 0.1)),
+]
+
+
+def _pattern(cls, rng):
+    """One 32×32×3 image for class `cls` (0..9)."""
+    kind = cls % 5
+    fg, bg = _PALETTES[cls // 5]
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    phase = rng.uniform(0, 8)
+    freq = rng.uniform(0.55, 0.8)
+    if kind == 0:  # horizontal stripes
+        m = ((yy * freq + phase) % 4 < 2).astype(np.float32)
+    elif kind == 1:  # vertical stripes
+        m = ((xx * freq + phase) % 4 < 2).astype(np.float32)
+    elif kind == 2:  # checkerboard
+        m = ((((xx + phase) // 4) + ((yy + phase) // 4)) % 2).astype(np.float32)
+    elif kind == 3:  # disk
+        cx, cy = rng.uniform(10, 22, size=2)
+        r = rng.uniform(6, 10)
+        m = (((xx - cx) ** 2 + (yy - cy) ** 2) < r * r).astype(np.float32)
+    else:  # diagonal gradient + cross
+        m = (((xx + yy) * 0.5 * freq + phase) % 6 < 3).astype(np.float32)
+    img = np.empty((32, 32, 3), np.float32)
+    for ch in range(3):
+        img[..., ch] = m * fg[ch] + (1 - m) * bg[ch]
+    img += rng.normal(0, 0.15, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def synth_cifar(n, seed):
+    """Return (x [n,32,32,3] f32, y [n] i32), class-balanced, deterministic."""
+    rng = np.random.default_rng(seed)
+    x = np.empty((n, 32, 32, 3), np.float32)
+    y = np.empty((n,), np.int32)
+    for i in range(n):
+        cls = i % 10
+        x[i] = _pattern(cls, rng)
+        y[i] = cls
+    perm = rng.permutation(n)
+    return x[perm], y[perm]
+
+
+# --------------------------------------------------------------------------
+# Byte corpora
+# --------------------------------------------------------------------------
+
+
+def _collect_py_bytes(root, limit_bytes):
+    """Concatenate .py sources under `root` (sorted walk → deterministic)."""
+    chunks = []
+    total = 0
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            try:
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    data = f.read()
+            except OSError:
+                continue
+            chunks.append(data)
+            total += len(data)
+            if total >= limit_bytes:
+                return b"\n".join(chunks)[:limit_bytes]
+    return b"\n".join(chunks)[:limit_bytes]
+
+
+def corpora(limit_bytes=400_000):
+    """Three disjoint byte corpora: {'jaxsrc', 'npsrc', 'pysrc'}."""
+    import jax as _jax
+    import numpy as _np
+
+    roots = {
+        "jaxsrc": os.path.dirname(_jax.__file__),
+        "npsrc": os.path.dirname(_np.__file__),
+        "pysrc": os.path.dirname(os.__file__),  # python stdlib
+    }
+    out = {}
+    for name, root in roots.items():
+        data = _collect_py_bytes(root, limit_bytes)
+        assert len(data) > 50_000, f"corpus {name} too small ({len(data)}B at {root})"
+        out[name] = np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+    return out
+
+
+def split_corpus(tokens, train_frac=0.85):
+    cut = int(len(tokens) * train_frac)
+    return tokens[:cut], tokens[cut:]
+
+
+def batch_tokens(tokens, batch, ctx, rng):
+    """Sample a [batch, ctx+1] matrix of token windows."""
+    starts = rng.integers(0, len(tokens) - ctx - 1, size=batch)
+    return np.stack([tokens[s : s + ctx + 1] for s in starts])
+
+
+# --------------------------------------------------------------------------
+# RCHG .bin export (mirrors rust/src/util/io.rs)
+# --------------------------------------------------------------------------
+
+MAGIC = 0x52434847
+_DTYPES = {np.float32: 0, np.int32: 1, np.uint8: 2}
+
+
+def save_bin(path, arr):
+    arr = np.ascontiguousarray(arr)
+    code = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}[
+        arr.dtype
+    ]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        header = np.array(
+            [MAGIC, code, arr.ndim] + list(arr.shape), dtype="<u4"
+        ).tobytes()
+        f.write(header)
+        f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def load_bin(path):
+    with open(path, "rb") as f:
+        raw = f.read()
+    head = np.frombuffer(raw[:12], dtype="<u4")
+    assert head[0] == MAGIC, f"bad magic in {path}"
+    code, ndim = int(head[1]), int(head[2])
+    dims = np.frombuffer(raw[12 : 12 + 4 * ndim], dtype="<u4").astype(int)
+    dtype = {0: np.float32, 1: np.int32, 2: np.uint8}[code]
+    payload = np.frombuffer(raw[12 + 4 * ndim :], dtype=np.dtype(dtype).newbyteorder("<"))
+    return payload.reshape(dims).astype(dtype)
+
+
+if __name__ == "__main__":
+    # Smoke: generate a tiny set and print stats.
+    x, y = synth_cifar(100, 0)
+    print("cifar", x.shape, x.mean(), np.bincount(y))
+    cs = corpora(100_000)
+    for k, v in cs.items():
+        print(k, v.shape, v[:16])
+    sys.exit(0)

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO)."""
+
+from .crossbar_mvm import fault_inject, imc_linear, imc_matmul  # noqa: F401

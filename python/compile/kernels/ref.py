@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests``) sweeps shapes/configs with hypothesis and asserts
+allclose between kernel and oracle. ``imc_matmul_ref`` is literally
+``x @ dequant(d(X̃⁺) − d(X̃⁻))`` from the paper's Eq. (2).
+"""
+
+import jax.numpy as jnp
+
+
+def adc_quantize_ref(bitline, adc_bits, max_code):
+    if adc_bits is None:
+        return bitline
+    levels = float(2**adc_bits - 1)
+    step = max_code / levels
+    return jnp.clip(jnp.round(bitline / step), 0.0, levels) * step
+
+
+def imc_matmul_ref(x_phys, pos_planes, neg_planes, sigs, *, adc_bits=None):
+    """Reference bit-sliced crossbar MVM: shift-add of per-slice matmuls."""
+    b, kr = x_phys.shape
+    n_slices = pos_planes.shape[0]
+    adc_max = float(kr)
+    out = jnp.zeros((b, pos_planes.shape[2]), dtype=jnp.float32)
+    for c in range(n_slices):
+        bl_pos = adc_quantize_ref(x_phys @ pos_planes[c], adc_bits, adc_max)
+        bl_neg = adc_quantize_ref(x_phys @ neg_planes[c], adc_bits, adc_max)
+        out = out + sigs[c] * (bl_pos - bl_neg)
+    return out
+
+
+def imc_linear_ref(x, pos_planes, neg_planes, sigs, *, rows_per_weight=1, adc_bits=None):
+    if rows_per_weight > 1:
+        x = jnp.repeat(x, rows_per_weight, axis=1)
+    return imc_matmul_ref(x, pos_planes, neg_planes, sigs, adc_bits=adc_bits)
+
+
+def reconstructed_weight_ref(pos_planes, neg_planes, sigs, rows_per_weight=1):
+    """Collapse bit-planes into the effective logical weight matrix
+    ``W̃[k, n] = Σ_c sig_c Σ_j (pos[c, k*r+j, n] − neg[c, k*r+j, n])`` —
+    the faulty weight of Eq. (2) for every (input, output) pair."""
+    c, kr, n = pos_planes.shape
+    k = kr // rows_per_weight
+    diff = (pos_planes - neg_planes).reshape(c, k, rows_per_weight, n).sum(axis=2)
+    return jnp.einsum("c,ckn->kn", sigs, diff)
+
+
+def fault_inject_ref(x, f0, f1, levels):
+    """Eq. (1) reference."""
+    return (1.0 - f0 - f1) * x + (levels - 1.0) * f0

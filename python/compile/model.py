@@ -1,0 +1,294 @@
+"""L2: JAX model definitions (forward graphs) for the evaluation models.
+
+Two families, matching the paper's evaluation:
+
+* **CNN** (§VII Table I / Fig 8 / Fig 9 substitutes): small convnets for
+  32×32×3 classification. Conv weights enter the deployed graph as
+  *faulty dequantized floats* (the rust coordinator reconstructs
+  ``w̃ = scale · (d(X̃⁺) − d(X̃⁻))`` — with an ideal ADC this is
+  numerically identical to running every MAC through the crossbar);
+  the FC classifier head runs through the L1 Pallas crossbar kernel with
+  raw bit-planes, so the AOT artifact exercises the full subarray
+  dataflow end-to-end.
+
+* **LM** (Table III substitute): an OPT-architecture decoder-only
+  transformer (pre-LN, learned positions, tied embeddings), byte-level
+  vocabulary. The tied LM head runs through the Pallas crossbar kernel.
+
+The float (training) forwards share all shape logic with the deployed
+forwards, so the trained parameters drop straight into the deploy path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.crossbar_mvm import imc_linear
+
+# --------------------------------------------------------------------------
+# CNN family
+# --------------------------------------------------------------------------
+
+# name -> (conv channel plan [(out_ch, stride), ...], fc width implied by
+# last conv). Input is NHWC 32x32x3; GAP before the FC head.
+CNN_ARCHS = {
+    # Stand-in for ResNet-20 (CIFAR-scale baseline in the paper).
+    "cnn_s": [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1)],
+    # Stand-in for ResNet-18.
+    "cnn_m": [(24, 1), (48, 2), (48, 1), (96, 2), (96, 1)],
+    # Stand-in for ResNet-50 (deeper).
+    "cnn_d": [(32, 1), (32, 1), (64, 2), (64, 1), (96, 2), (96, 1)],
+    # Stand-in for VGG-16 (wider, VGG-style plain stacking).
+    "vgg_n": [(32, 1), (32, 1), (64, 2), (64, 1), (128, 2), (128, 1)],
+}
+
+NUM_CLASSES = 10
+
+
+def cnn_param_shapes(arch):
+    """Ordered (name, shape) list for one CNN architecture."""
+    plan = CNN_ARCHS[arch]
+    shapes = []
+    cin = 3
+    for i, (cout, _stride) in enumerate(plan):
+        shapes.append((f"conv{i}_w", (3, 3, cin, cout)))
+        shapes.append((f"conv{i}_b", (cout,)))
+        cin = cout
+    shapes.append(("fc_w", (cin, NUM_CLASSES)))
+    shapes.append(("fc_b", (NUM_CLASSES,)))
+    return shapes
+
+
+def cnn_init(arch, key):
+    params = {}
+    for name, shape in cnn_param_shapes(arch):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+    return params
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def cnn_features(params, x, arch):
+    """Shared conv trunk: NHWC image -> [B, C_last] pooled features."""
+    h = x
+    for i, (_cout, stride) in enumerate(CNN_ARCHS[arch]):
+        h = _conv(h, params[f"conv{i}_w"], stride) + params[f"conv{i}_b"]
+        h = jax.nn.relu(h)
+    return h.mean(axis=(1, 2))  # global average pool
+
+
+def cnn_forward_float(params, x, arch):
+    """Float forward (training / ideal-accuracy reference)."""
+    feats = cnn_features(params, x, arch)
+    return feats @ params["fc_w"] + params["fc_b"]
+
+
+def cnn_forward_deploy(
+    conv_params, x, fc_pos, fc_neg, fc_sigs, fc_scale, fc_b, *, arch, rows
+):
+    """Deployed forward: conv weights are (faulty) floats, the FC head runs
+    on the Pallas crossbar kernel from raw bit-planes.
+
+    ``fc_scale``: per-output-column dequantization scale (quantizer's).
+    """
+    feats = cnn_features(conv_params, x, arch)
+    logits_int = imc_linear(feats, fc_pos, fc_neg, fc_sigs, rows_per_weight=rows)
+    return logits_int * fc_scale + fc_b
+
+
+# --------------------------------------------------------------------------
+# OPT-like language model
+# --------------------------------------------------------------------------
+
+LM_CONFIG = {
+    "vocab": 256,  # byte-level
+    "d_model": 96,
+    "n_heads": 4,
+    "n_layers": 3,
+    "d_ff": 384,
+    "ctx": 96,
+}
+
+
+def lm_param_shapes(cfg=LM_CONFIG):
+    d, f, v, t = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["ctx"]
+    shapes = [("embed", (v, d)), ("pos", (t, d))]
+    for i in range(cfg["n_layers"]):
+        p = f"l{i}_"
+        shapes += [
+            (p + "ln1_g", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "qkv_w", (d, 3 * d)),
+            (p + "qkv_b", (3 * d,)),
+            (p + "o_w", (d, d)),
+            (p + "o_b", (d,)),
+            (p + "ln2_g", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "fc1_w", (d, f)),
+            (p + "fc1_b", (f,)),
+            (p + "fc2_w", (f, d)),
+            (p + "fc2_b", (d,)),
+        ]
+    shapes += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return shapes
+
+
+def lm_init(key, cfg=LM_CONFIG):
+    params = {}
+    for name, shape in lm_param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "ln1_g", "ln2_g", "lnf_g")) or name.endswith("_g"):
+            params[name] = (
+                jnp.ones(shape, jnp.float32)
+                if name.endswith("_g")
+                else jnp.zeros(shape, jnp.float32)
+            )
+        elif name == "pos":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.01
+        else:
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (
+                0.02 if name == "embed" else 1.0 / jnp.sqrt(shape[0])
+            )
+    return params
+
+
+def _ln(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _attn(x, qkv_w, qkv_b, o_w, o_b, n_heads):
+    b, t, d = x.shape
+    hd = d // n_heads
+    qkv = x @ qkv_w + qkv_b
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ o_w + o_b
+
+
+def lm_trunk(params, tokens, cfg=LM_CONFIG):
+    """Embedding + transformer stack + final LN: tokens -> [B, T, d]."""
+    b, t = tokens.shape
+    h = params["embed"][tokens] + params["pos"][:t]
+    for i in range(cfg["n_layers"]):
+        p = f"l{i}_"
+        a = _attn(
+            _ln(h, params[p + "ln1_g"], params[p + "ln1_b"]),
+            params[p + "qkv_w"],
+            params[p + "qkv_b"],
+            params[p + "o_w"],
+            params[p + "o_b"],
+            cfg["n_heads"],
+        )
+        h = h + a
+        m = _ln(h, params[p + "ln2_g"], params[p + "ln2_b"])
+        m = jax.nn.gelu(m @ params[p + "fc1_w"] + params[p + "fc1_b"])
+        h = h + (m @ params[p + "fc2_w"] + params[p + "fc2_b"])
+    return _ln(h, params["lnf_g"], params["lnf_b"])
+
+
+def lm_forward_float(params, tokens, cfg=LM_CONFIG):
+    """Training forward: logits via the tied embedding matrix."""
+    h = lm_trunk(params, tokens, cfg)
+    return h @ params["embed"].T
+
+
+def lm_forward_deploy(
+    trunk_params, tokens, head_pos, head_neg, head_sigs, head_scale, *, rows, cfg=LM_CONFIG
+):
+    """Deployed forward: trunk weights are (faulty) floats; the tied LM head
+    (embedding transpose) runs on the Pallas crossbar kernel.
+
+    ``head_scale``: per-vocab-column dequant scale, shape [vocab].
+    """
+    h = lm_trunk(trunk_params, tokens, cfg)
+    b, t, d = h.shape
+    flat = h.reshape(b * t, d)
+    logits = imc_linear(flat, head_pos, head_neg, head_sigs, rows_per_weight=rows)
+    return (logits * head_scale).reshape(b, t, cfg["vocab"])
+
+
+def lm_loss(params, tokens, cfg=LM_CONFIG):
+    """Next-token cross-entropy (mean over positions)."""
+    logits = lm_forward_float(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def cnn_loss(params, x, y, arch):
+    logits = cnn_forward_float(params, x, arch)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+
+# jitted train-step factories -------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def make_cnn_train_step(arch, lr=1e-3):
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(partial(cnn_loss, arch=arch))(params, x, y)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    return step
+
+
+def make_lm_train_step(lr=3e-4, cfg=LM_CONFIG):
+    @jax.jit
+    def step(params, opt, tokens):
+        loss, grads = jax.value_and_grad(partial(lm_loss, cfg=cfg))(params, tokens)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    return step

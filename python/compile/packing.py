@@ -1,0 +1,65 @@
+"""Bit-plane packing reference (mirrors rust/src/grouping/bitmap.rs).
+
+The rust coordinator packs each weight's decomposition into plane tensors
+``[C, K*r, N]`` consumed by the L1 kernel. This module is the python-side
+reference for that layout, used by the pytest suite to validate the
+deploy graphs end-to-end and by quickstart demos. Cell layout:
+``cells[col*rows + row]`` (column 0 = MSB), physical row ``k*r + row``.
+"""
+
+import numpy as np
+
+
+def encode_ideal(w, rows, cols, levels):
+    """Ideal sign decomposition + generalized base-L digits, identical to
+    ``Decomposition::encode_ideal``. Returns (pos_cells, neg_cells), each
+    length rows*cols."""
+    max_per_array = rows * (levels**cols - 1)
+    assert abs(w) <= max_per_array, f"weight {w} out of range"
+    mag = abs(int(w))
+    cells = np.zeros(rows * cols, np.int64)
+    cap_per_col = (levels - 1) * rows
+    for col in range(cols):
+        sig = levels ** (cols - 1 - col)
+        lower_max = rows * (sig - 1)
+        take = min(mag // sig, cap_per_col)
+        while mag - take * sig > lower_max:
+            take += 1
+        mag -= take * sig
+        for row in range(rows):
+            v = min(take, levels - 1)
+            cells[col * rows + row] = v
+            take -= v
+        assert take == 0
+    assert mag == 0
+    zeros = np.zeros_like(cells)
+    return (cells, zeros) if w >= 0 else (zeros, cells)
+
+
+def pack_planes(w_int, rows, cols, levels):
+    """Pack an integer weight matrix [K, N] into (pos, neg) plane tensors
+    [C, K*rows, N] (float32)."""
+    k, n = w_int.shape
+    pos = np.zeros((cols, k * rows, n), np.float32)
+    neg = np.zeros((cols, k * rows, n), np.float32)
+    for ki in range(k):
+        for ni in range(n):
+            p, q = encode_ideal(int(w_int[ki, ni]), rows, cols, levels)
+            for col in range(cols):
+                for row in range(rows):
+                    pos[col, ki * rows + row, ni] = p[col * rows + row]
+                    neg[col, ki * rows + row, ni] = q[col * rows + row]
+    return pos, neg
+
+
+def sigs(cols, levels):
+    return np.array([levels ** (cols - 1 - j) for j in range(cols)], np.float32)
+
+
+def quantize_sym(w, max_int):
+    """Per-column symmetric quantization of [K, N] float weights: returns
+    (w_int [K,N], scale [N])."""
+    absmax = np.abs(w).max(axis=0)
+    scale = np.where(absmax > 0, absmax / max_int, 1.0).astype(np.float32)
+    w_int = np.clip(np.round(w / scale), -max_int, max_int).astype(np.int64)
+    return w_int, scale

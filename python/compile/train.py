@@ -1,0 +1,181 @@
+"""Build-time training: produce the evaluation models' float weights.
+
+Runs once as part of ``make artifacts`` (never at runtime). Trains
+
+* four small CNNs (``cnn_s``, ``cnn_m``, ``cnn_d``, ``vgg_n`` — the
+  ResNet-20/18/50 / VGG-16 stand-ins) on the synthetic CIFAR set, and
+* the OPT-like byte-level LM on the combined source-code corpus,
+
+then exports weights, test data and eval token streams to ``artifacts/``
+in the RCHG .bin format shared with the rust side.
+
+Environment knobs:
+  RCHG_FAST=1        tiny step counts (CI smoke)
+  RCHG_STEPS=<n>     override CNN train steps
+  RCHG_LM_STEPS=<n>  override LM train steps
+"""
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+ART = os.environ.get("RCHG_ARTIFACTS", os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+FAST = os.environ.get("RCHG_FAST") == "1"
+CNN_STEPS = int(os.environ.get("RCHG_STEPS", "60" if FAST else "900"))
+LM_STEPS = int(os.environ.get("RCHG_LM_STEPS", "30" if FAST else "700"))
+TRAIN_N = 1000 if FAST else 6000
+TEST_N = 200 if FAST else 1000
+BATCH = 64
+LM_BATCH = 8
+
+
+def train_cnn(arch, x_train, y_train, x_test, y_test, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.cnn_init(arch, key)
+    opt = M.adam_init(params)
+    step = M.make_cnn_train_step(arch)
+    rng = np.random.default_rng(seed + 1)
+    n = len(x_train)
+    t0 = time.time()
+    loss = float("nan")
+    for it in range(CNN_STEPS):
+        idx = rng.integers(0, n, size=BATCH)
+        params, opt, loss = step(params, opt, x_train[idx], y_train[idx])
+        if it % 100 == 0:
+            print(f"  [{arch}] step {it:4d} loss {float(loss):.4f}", flush=True)
+    # Test accuracy in batches.
+    preds = []
+    for i in range(0, len(x_test), 200):
+        logits = M.cnn_forward_float(params, x_test[i : i + 200], arch)
+        preds.append(np.argmax(np.asarray(logits), axis=-1))
+    acc = float((np.concatenate(preds) == y_test).mean())
+    print(
+        f"  [{arch}] done in {time.time()-t0:.1f}s, final loss {float(loss):.4f}, "
+        f"float test acc {acc*100:.2f}%",
+        flush=True,
+    )
+    return params, acc
+
+
+def train_lm(train_tokens, eval_streams, seed=0):
+    cfg = M.LM_CONFIG
+    key = jax.random.PRNGKey(100 + seed)
+    params = M.lm_init(key)
+    opt = M.adam_init(params)
+    step = M.make_lm_train_step()
+    rng = np.random.default_rng(seed + 7)
+    t0 = time.time()
+    loss = float("nan")
+    for it in range(LM_STEPS):
+        batch = D.batch_tokens(train_tokens, LM_BATCH, cfg["ctx"], rng)
+        params, opt, loss = step(params, opt, jnp.asarray(batch))
+        if it % 50 == 0:
+            print(f"  [lm] step {it:4d} loss {float(loss):.4f}", flush=True)
+    # Float perplexity on each eval stream.
+    ppls = {}
+    for name, stream in eval_streams.items():
+        ppls[name] = float(eval_ppl(params, stream))
+    print(
+        f"  [lm] done in {time.time()-t0:.1f}s, float ppl: "
+        + ", ".join(f"{k}={v:.2f}" for k, v in ppls.items()),
+        flush=True,
+    )
+    return params, ppls
+
+
+def eval_ppl(params, stream, max_windows=120):
+    """Float perplexity over non-overlapping ctx windows of a token stream."""
+    cfg = M.LM_CONFIG
+    ctx = cfg["ctx"]
+    n_win = min((len(stream) - 1) // ctx, max_windows)
+    total_nll, total_tok = 0.0, 0
+    fwd = jax.jit(lambda p, t: M.lm_forward_float(p, t))
+    for i in range(0, n_win, LM_BATCH):
+        rows = []
+        for j in range(i, min(i + LM_BATCH, n_win)):
+            rows.append(stream[j * ctx : j * ctx + ctx + 1])
+        batch = jnp.asarray(np.stack(rows))
+        logits = fwd(params, batch[:, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch[:, 1:, None], axis=-1)[..., 0]
+        total_nll += float(nll.sum())
+        total_tok += int(nll.size)
+    return np.exp(total_nll / max(total_tok, 1))
+
+
+def save_params(params, shapes, outdir, meta_extra=None):
+    os.makedirs(outdir, exist_ok=True)
+    order = []
+    for name, shape in shapes:
+        arr = np.asarray(params[name], dtype=np.float32)
+        assert arr.shape == tuple(shape), f"{name}: {arr.shape} vs {shape}"
+        D.save_bin(os.path.join(outdir, f"{name}.bin"), arr)
+        order.append({"name": name, "shape": list(shape)})
+    meta = {"params": order}
+    if meta_extra:
+        meta.update(meta_extra)
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+
+
+def main():
+    os.makedirs(ART, exist_ok=True)
+    print(f"== build-time training (fast={FAST}, cnn_steps={CNN_STEPS}, lm_steps={LM_STEPS})")
+
+    # ---------------- CNNs on synthetic CIFAR ----------------------------
+    print("== dataset: synthetic CIFAR")
+    x_train, y_train = D.synth_cifar(TRAIN_N, seed=1234)
+    x_test, y_test = D.synth_cifar(TEST_N, seed=9999)
+    D.save_bin(os.path.join(ART, "data", "cifar_test_x.bin"), x_test)
+    D.save_bin(os.path.join(ART, "data", "cifar_test_y.bin"), y_test)
+
+    cnn_results = {}
+    for arch in M.CNN_ARCHS:
+        print(f"== training {arch}")
+        params, acc = train_cnn(arch, x_train, jnp.asarray(y_train), x_test, y_test)
+        save_params(
+            params,
+            M.cnn_param_shapes(arch),
+            os.path.join(ART, "weights", arch),
+            {"arch": arch, "plan": M.CNN_ARCHS[arch], "float_acc": acc},
+        )
+        cnn_results[arch] = acc
+
+    # ---------------- LM on byte corpora ---------------------------------
+    print("== corpora")
+    corps = D.corpora()
+    train_parts, eval_streams = [], {}
+    for name, toks in corps.items():
+        tr, ev = D.split_corpus(toks)
+        train_parts.append(tr)
+        eval_streams[name] = ev
+        D.save_bin(os.path.join(ART, "data", f"lm_eval_{name}.bin"), ev.astype(np.int32))
+    train_tokens = np.concatenate(train_parts)
+    print(f"   train tokens: {len(train_tokens)}, eval streams: "
+          + ", ".join(f"{k}:{len(v)}" for k, v in eval_streams.items()))
+
+    print("== training lm")
+    lm_params, ppls = train_lm(train_tokens, eval_streams)
+    save_params(
+        lm_params,
+        M.lm_param_shapes(),
+        os.path.join(ART, "weights", "lm"),
+        {"config": M.LM_CONFIG, "float_ppl": ppls},
+    )
+
+    with open(os.path.join(ART, "training_summary.json"), "w") as f:
+        json.dump({"cnn_float_acc": cnn_results, "lm_float_ppl": ppls}, f, indent=2)
+    print("== training complete")
+
+
+if __name__ == "__main__":
+    main()

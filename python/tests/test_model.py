@@ -1,0 +1,125 @@
+"""L2 model graph tests: shapes, float/deploy consistency, loss sanity."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import packing
+
+
+@pytest.mark.parametrize("arch", list(M.CNN_ARCHS))
+def test_cnn_shapes(arch):
+    key = jax.random.PRNGKey(0)
+    params = M.cnn_init(arch, key)
+    x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+    logits = M.cnn_forward_float(params, x, arch)
+    assert logits.shape == (2, M.NUM_CLASSES)
+
+
+@pytest.mark.parametrize("r,c,levels", [(1, 4, 4), (2, 2, 4)])
+def test_cnn_deploy_matches_float_with_ideal_planes(r, c, levels):
+    """With fault-free planes packed from the quantized FC weights, the
+    deploy graph must equal the float graph with quantized FC."""
+    arch = "cnn_s"
+    key = jax.random.PRNGKey(1)
+    params = M.cnn_init(arch, key)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 32, 3), jnp.float32)
+
+    fc_w = np.asarray(params["fc_w"])
+    max_int = r * (levels**c - 1)
+    w_int, scale = packing.quantize_sym(fc_w, max_int)
+    pos, neg = packing.pack_planes(w_int, r, c, levels)
+    s = packing.sigs(c, levels)
+
+    conv = {k: v for k, v in params.items() if k.startswith("conv")}
+    deploy = M.cnn_forward_deploy(
+        conv, x, pos, neg, s, scale, params["fc_b"], arch=arch, rows=r
+    )
+
+    params_q = dict(params)
+    params_q["fc_w"] = jnp.asarray(w_int.astype(np.float32) * scale)
+    ref = M.cnn_forward_float(params_q, x, arch)
+    np.testing.assert_allclose(np.asarray(deploy), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_lm_shapes_and_causality():
+    params = M.lm_init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = M.lm_forward_float(params, toks)
+    assert logits.shape == (2, 16, M.LM_CONFIG["vocab"])
+    # Causality: changing a future token must not affect earlier logits.
+    toks2 = toks.at[:, 10].set(65)
+    logits2 = M.lm_forward_float(params, toks2)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :10]), np.asarray(logits2[:, :10]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits[:, 10:]), np.asarray(logits2[:, 10:]))
+
+
+def test_lm_deploy_matches_float_with_ideal_planes():
+    r, c, levels = 2, 2, 4
+    params = M.lm_init(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 12), 0, 255)
+
+    head_w = np.asarray(params["embed"]).T  # [d, vocab]
+    max_int = r * (levels**c - 1)
+    w_int, scale = packing.quantize_sym(head_w, max_int)
+    pos, neg = packing.pack_planes(w_int, r, c, levels)
+    s = packing.sigs(c, levels)
+
+    deploy = M.lm_forward_deploy(params, toks, pos, neg, s, scale, rows=r)
+
+    h = M.lm_trunk(params, toks)
+    ref = h @ jnp.asarray(w_int.astype(np.float32) * scale)
+    np.testing.assert_allclose(np.asarray(deploy), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+
+def test_cnn_training_reduces_loss():
+    from compile import data as D
+
+    arch = "cnn_s"
+    x, y = D.synth_cifar(256, seed=5)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    params = M.cnn_init(arch, jax.random.PRNGKey(7))
+    opt = M.adam_init(params)
+    step = M.make_cnn_train_step(arch, lr=2e-3)
+    first = None
+    loss = None
+    for i in range(30):
+        params, opt, loss = step(params, opt, x[:64], y[:64])
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.8, f"loss {first} -> {float(loss)}"
+
+
+def test_lm_training_reduces_loss():
+    params = M.lm_init(jax.random.PRNGKey(11))
+    opt = M.adam_init(params)
+    step = M.make_lm_train_step(lr=1e-3)
+    rng = np.random.default_rng(0)
+    # Learnable synthetic stream: repeated ascii phrase.
+    phrase = np.frombuffer(b"the quick brown fox jumps over the lazy dog. " * 200, dtype=np.uint8)
+    toks = phrase.astype(np.int32)
+    from compile import data as D
+
+    first = None
+    loss = None
+    for i in range(25):
+        batch = D.batch_tokens(toks, 4, 48, rng)
+        params, opt, loss = step(params, opt, jnp.asarray(batch))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, f"loss {first} -> {float(loss)}"
+
+
+def test_adam_updates_all_leaves():
+    params = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
+    opt = M.adam_init(params)
+    grads = {"a": jnp.ones((3,)), "b": jnp.ones((2, 2))}
+    new, opt = M.adam_update(params, grads, opt, lr=0.1)
+    assert not np.allclose(np.asarray(new["a"]), np.asarray(params["a"]))
+    assert not np.allclose(np.asarray(new["b"]), np.asarray(params["b"]))
+    assert opt["t"] == 1

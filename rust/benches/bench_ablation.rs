@@ -1,0 +1,99 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! memoization, theorem staging (vs ILP-only), thread scaling,
+//! table-vs-ILP crossover, and the remapping baseline comparison.
+
+use rchg::baseline::remap::remap_compile;
+use rchg::coordinator::{compile_tensor, CompileOptions, Method};
+use rchg::experiments::compile_time::synthetic_model_weights;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+use rchg::util::timer::{fmt_dur, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 30_000 } else { 200_000 };
+    let cfg = GroupConfig::R1C4;
+    let ws = synthetic_model_weights("resnet20", &cfg, n)?;
+    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+
+    println!("== ablation: memoization ({} weights, R1C4)", ws.len());
+    for memo in [true, false] {
+        let mut opts = CompileOptions::new(cfg, Method::Complete);
+        opts.memoize = memo;
+        let t = Timer::start();
+        let out = compile_tensor(&ws, &faults, &opts);
+        println!(
+            "  memoize={memo:<5} {:>10}  (hits {})",
+            fmt_dur(t.secs()),
+            out.stats.memo_hits
+        );
+    }
+
+    println!("== ablation: theorem staging (complete vs ILP-only, 2k sample)");
+    let small = &ws[..2_000.min(ws.len())];
+    let fsmall = &faults[..small.len()];
+    for method in [Method::Complete, Method::IlpOnly] {
+        let t = Timer::start();
+        let out = compile_tensor(small, fsmall, &CompileOptions::new(cfg, method));
+        println!(
+            "  {method:?}: {} (total|err|={})",
+            fmt_dur(t.secs()),
+            out.stats.total_abs_error
+        );
+    }
+
+    println!("== ablation: thread scaling (R2C2, {} weights)", ws.len());
+    let cfg2 = GroupConfig::R2C2;
+    let ws2 = synthetic_model_weights("resnet20", &cfg2, n)?;
+    let faults2 = chip.sample_tensor(0, ws2.len(), cfg2.cells());
+    for threads in [1usize, 2, 4] {
+        let mut opts = CompileOptions::new(cfg2, Method::Complete);
+        opts.threads = threads;
+        let t = Timer::start();
+        let _ = compile_tensor(&ws2, &faults2, &opts);
+        println!("  threads={threads}: {}", fmt_dur(t.secs()));
+    }
+
+    println!("== ablation: sparsest-solution mode (R2C2, 20k)");
+    let s20 = &ws2[..20_000.min(ws2.len())];
+    let f20 = &faults2[..s20.len()];
+    for sparsest in [false, true] {
+        let mut opts = CompileOptions::new(cfg2, Method::Complete);
+        opts.pipeline.sparsest = sparsest;
+        let t = Timer::start();
+        let out = compile_tensor(s20, f20, &opts);
+        let l1: u64 = out.decomps.iter().map(|d| d.l1()).sum();
+        println!(
+            "  sparsest={sparsest:<5} {:>10}  (Σ‖X‖₁ = {l1})",
+            fmt_dur(t.secs())
+        );
+    }
+
+    println!("== baseline comparison: residual error per method (R1C4, 20k)");
+    let s = &ws[..20_000.min(ws.len())];
+    let f = &faults[..s.len()];
+    let raw = compile_tensor(s, f, &CompileOptions::new(cfg, Method::Unprotected));
+    let remap = remap_compile(s, f, &cfg);
+    let pipe = compile_tensor(s, f, &CompileOptions::new(cfg, Method::Complete));
+    println!("  unprotected  total|err| = {}", raw.stats.total_abs_error);
+    println!("  row-remap    total|err| = {}", remap.total_abs_error);
+    println!("  pipeline     total|err| = {}", pipe.stats.total_abs_error);
+
+    println!("== 1-bit cells (L=2): paper's other cell resolution");
+    for name in ["r1c8@2", "r2c4@2"] {
+        let c = GroupConfig::parse(name).unwrap();
+        let w1 = synthetic_model_weights("resnet20", &c, 20_000)?;
+        let f1 = chip.sample_tensor(0, w1.len(), c.cells());
+        let t = Timer::start();
+        let out = compile_tensor(&w1, &f1, &CompileOptions::new(c, Method::Complete));
+        println!(
+            "  {name:<8} ({:.2} bit): {} — imperfect {:.3}%",
+            c.precision_bits(),
+            fmt_dur(t.secs()),
+            100.0 * out.stats.imperfect as f64 / w1.len() as f64
+        );
+    }
+    Ok(())
+}

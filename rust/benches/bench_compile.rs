@@ -1,0 +1,46 @@
+//! Table II / Fig 10 bench: compilation throughput of every method ×
+//! config on real layer shapes. `cargo bench --bench bench_compile`.
+//!
+//! Full-model times for slow methods are extrapolated from deterministic
+//! samples (printed explicitly). The complete pipeline additionally runs a
+//! full-scale ResNet-20 compile (no sampling) as a ground-truth datapoint.
+
+use rchg::coordinator::Method;
+use rchg::experiments::compile_time::{fig10a, fig10b, measure, table2, CompileTimeOptions};
+use rchg::grouping::GroupConfig;
+use rchg::util::timer::fmt_dur;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = CompileTimeOptions {
+        models: if quick {
+            vec!["resnet20".into()]
+        } else {
+            vec!["resnet20".into(), "resnet18".into(), "resnet50".into(), "vgg16".into()]
+        },
+        sample_complete: if quick { 50_000 } else { 400_000 },
+        sample_ilp: if quick { 500 } else { 2_000 },
+        sample_ff: if quick { 500 } else { 2_000 },
+        threads: 1,
+        include_r2c4: false,
+    };
+
+    let (t, rows) = table2(&opts)?;
+    println!("{}", t.render());
+    println!("{}", fig10a(&rows, &opts.models).render());
+    println!("{}", fig10b(&rows, opts.models.last().unwrap()).render());
+
+    // Ground-truth full-scale run: complete pipeline on all of ResNet-20.
+    println!("== full-scale (no sampling) complete-pipeline runs");
+    for cfg in [GroupConfig::R1C4, GroupConfig::R2C2] {
+        let r = measure("resnet20", cfg, Method::Complete, usize::MAX, 1, 1)?;
+        println!(
+            "  resnet20 {} complete: {} for {} weights ({:.0} weights/s)",
+            cfg.name(),
+            fmt_dur(r.measured_secs),
+            r.sampled_weights,
+            r.sampled_weights as f64 / r.measured_secs
+        );
+    }
+    Ok(())
+}

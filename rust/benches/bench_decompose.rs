@@ -1,0 +1,84 @@
+//! Per-stage decomposition microbenchmarks: how much does each pipeline
+//! stage cost per weight, per grouping config? Feeds the §Perf analysis.
+
+use rchg::baseline::fault_free::ff_decompose;
+use rchg::coordinator::{decompose_one, Method, PipelineOptions};
+use rchg::decompose::{cvm_ilp, fawd_ilp, GroupTables};
+use rchg::fault::{FaultRates, GroupFaults};
+use rchg::grouping::{FaultAnalysis, GroupConfig};
+use rchg::ilp::IlpStats;
+use rchg::util::prng::Rng;
+use rchg::util::timer::{bench, bench_header, black_box};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 20 } else { 100 };
+    println!("{}", bench_header());
+
+    for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+        let rates = FaultRates::paper_default();
+        // Pre-sample a pool of cases so the RNG isn't in the timed path.
+        let mut rng = Rng::new(7);
+        let cases: Vec<(GroupFaults, i64)> = (0..4096)
+            .map(|_| {
+                (
+                    GroupFaults::sample(cfg.cells(), &rates, &mut rng),
+                    rng.range_i64(-cfg.max_per_array(), cfg.max_per_array()),
+                )
+            })
+            .collect();
+        let mut st = IlpStats::default();
+        let opts = PipelineOptions { method: Method::Complete, ..Default::default() };
+
+        let mut i1 = 0usize;
+        let stats = bench(&format!("{}/analysis", cfg.name()), iters, 0.2, || {
+            i1 = (i1 + 1) % cases.len();
+            let (f, _) = &cases[i1];
+            black_box(FaultAnalysis::new(&cfg, f));
+        });
+        println!("{}", stats.report());
+
+        let mut i2 = 0usize;
+        let stats = bench(&format!("{}/complete-pipeline", cfg.name()), iters, 0.2, || {
+            i2 = (i2 + 1) % cases.len();
+            let (f, w) = &cases[i2];
+            black_box(decompose_one(&cfg, f, *w, &opts, &mut st));
+        });
+        println!("{}", stats.report());
+
+        let mut i3 = 0usize;
+        let stats = bench(&format!("{}/table-build+cvm", cfg.name()), iters, 0.2, || {
+            i3 = (i3 + 1) % cases.len();
+            let (f, w) = &cases[i3];
+            let t = GroupTables::build(&cfg, f);
+            black_box(t.cvm(&cfg, f, *w));
+        });
+        println!("{}", stats.report());
+
+        let mut i4 = 0usize;
+        let stats = bench(&format!("{}/ilp-fawd", cfg.name()), iters.min(30), 0.1, || {
+            i4 = (i4 + 1) % cases.len();
+            let (f, w) = &cases[i4];
+            black_box(fawd_ilp(&cfg, f, *w, &mut st));
+        });
+        println!("{}", stats.report());
+
+        let mut i5 = 0usize;
+        let stats = bench(&format!("{}/ilp-cvm", cfg.name()), iters.min(30), 0.1, || {
+            i5 = (i5 + 1) % cases.len();
+            let (f, w) = &cases[i5];
+            black_box(cvm_ilp(&cfg, f, *w, &mut st));
+        });
+        println!("{}", stats.report());
+
+        if cfg.rows == 1 {
+            let mut i6 = 0usize;
+            let stats = bench(&format!("{}/original-ff", cfg.name()), iters.min(20), 0.1, || {
+                i6 = (i6 + 1) % cases.len();
+                let (f, w) = &cases[i6];
+                black_box(ff_decompose(&cfg, f, *w));
+            });
+            println!("{}", stats.report());
+        }
+    }
+}

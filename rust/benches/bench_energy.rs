@@ -1,0 +1,43 @@
+//! Fig 11 bench: energy-model sweep across networks × array sizes ×
+//! grouping configs × mapper policies, plus model evaluation cost itself.
+
+use rchg::arrays::models::{resnet18, resnet20, total_params};
+use rchg::arrays::{ArrayDims, MapperPolicy};
+use rchg::energy::{network_energy, EnergyParams};
+use rchg::experiments::hw::fig11;
+use rchg::grouping::GroupConfig;
+use rchg::util::timer::{bench, bench_header, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let p = EnergyParams::default();
+    for model in ["resnet20", "resnet18"] {
+        for policy in [MapperPolicy::KernelSplit, MapperPolicy::PackedVertical] {
+            let t = fig11(model, &[64, 128, 256, 512], &p, policy)?;
+            println!("{}", t.render());
+        }
+    }
+
+    println!(
+        "(model sizes: resnet20 {} / resnet18 {} weights)",
+        total_params(&resnet20()),
+        total_params(&resnet18())
+    );
+
+    println!("{}", bench_header());
+    let layers = resnet18();
+    let stats = bench("energy-model/resnet18-full-sweep", 20, 0.2, || {
+        for n in [64usize, 128, 256, 512] {
+            for cfg in [GroupConfig::R1C4, GroupConfig::R2C2] {
+                black_box(network_energy(
+                    &layers,
+                    ArrayDims::square(n),
+                    &cfg,
+                    &p,
+                    MapperPolicy::KernelSplit,
+                ));
+            }
+        }
+    });
+    println!("{}", stats.report());
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! ILP solver microbenchmarks: simplex + branch-and-bound cost on the
+//! decomposition problem family, vs problem size.
+
+use rchg::ilp::{Cmp, IlpProblem};
+use rchg::util::prng::Rng;
+use rchg::util::timer::{bench, bench_header, black_box};
+
+fn random_decomposition_ilp(rng: &mut Rng, nvars: usize, levels: i64) -> IlpProblem {
+    // min Σx s.t. Σ ±sig·x = w, 0 ≤ x ≤ L−1 — the FAWD family.
+    let mut p = IlpProblem::new(nvars);
+    p.minimize(&vec![1; nvars]);
+    let mut coeffs = Vec::with_capacity(nvars);
+    let mut max_abs = 0i64;
+    for j in 0..nvars {
+        let sig = levels.pow((j % 4) as u32);
+        let s = if j % 2 == 0 { sig } else { -sig };
+        coeffs.push(s);
+        max_abs += sig * (levels - 1);
+        p.bound(j, 0, levels - 1);
+    }
+    let w = rng.range_i64(-max_abs / 2, max_abs / 2);
+    p.add(&coeffs, Cmp::Eq, w);
+    p
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 10 } else { 50 };
+    println!("{}", bench_header());
+    let mut rng = Rng::new(3);
+
+    // 2*r*c(+t) tops out at 17 for every paper configuration (R2C4 → 16+1);
+    // beyond that the exact-rational B&B needs stronger pruning than this
+    // reproduction justifies (Gurobi territory — see EXPERIMENTS.md).
+    for nvars in [4usize, 8, 12, 16] {
+        let problems: Vec<IlpProblem> =
+            (0..64).map(|_| random_decomposition_ilp(&mut rng, nvars, 4)).collect();
+        let mut i = 0usize;
+        // Large instances take seconds per solve — cap their iteration
+        // counts so the harness stays bounded.
+        let iters = if nvars >= 16 { 8.min(iters) } else { iters };
+        let stats = bench(&format!("fawd-ilp/{nvars}-vars"), iters, 0.1, || {
+            i = (i + 1) % problems.len();
+            black_box(problems[i].solve());
+        });
+        println!("{}", stats.report());
+    }
+
+    // LP relaxation only (simplex cost isolated): boxes without integrality
+    // pressure (loose rhs).
+    for nvars in [8usize, 16, 32] {
+        let mut p = IlpProblem::new(nvars);
+        p.minimize(&vec![1; nvars]);
+        for j in 0..nvars {
+            p.bound(j, 0, 3);
+        }
+        p.add(&vec![1; nvars], Cmp::Ge, nvars as i64); // achievable integrally
+        let stats = bench(&format!("lp-heavy/{nvars}-vars"), iters, 0.2, || {
+            black_box(p.solve());
+        });
+        println!("{}", stats.report());
+    }
+}

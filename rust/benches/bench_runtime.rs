@@ -1,0 +1,89 @@
+//! PJRT runtime benchmarks: executable load/compile cost and steady-state
+//! inference latency/throughput for every AOT artifact class. The L3 hot
+//! path budget (per-batch coordinator overhead vs XLA execute time) comes
+//! from here.
+
+use rchg::grouping::{Decomposition, GroupConfig};
+use rchg::nn::packing::Planes;
+use rchg::runtime::{artifacts_dir, ArgValue, Runtime};
+use rchg::util::prng::Rng;
+use rchg::util::timer::{bench, bench_header, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let art = artifacts_dir();
+    if !art.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&art)?;
+    println!("platform: {}", rt.platform());
+    println!("{}", bench_header());
+
+    // Compile cost per artifact.
+    for name in ["imc_linear_r2c2", "cnn_cnn_s_r2c2", "lm_r2c2"] {
+        let t = Timer::start();
+        let _exe = rt.load(name)?;
+        println!("{:<44} {:>10.2?}", format!("compile/{name}"), t.elapsed());
+    }
+
+    // Steady-state execution latency: crossbar kernel.
+    let cfg = GroupConfig::R2C2;
+    let exe = rt.load("imc_linear_r2c2")?;
+    let (k, n) = (64usize, 10usize);
+    let mut rng = Rng::new(1);
+    let ws: Vec<i64> = (0..k * n).map(|_| rng.range_i64(-30, 30)).collect();
+    let decomps: Vec<Decomposition> =
+        ws.iter().map(|&w| Decomposition::encode_ideal(w, &cfg)).collect();
+    let planes = Planes::pack(&decomps, None, k, n, &cfg);
+    let x: Vec<f32> = (0..8 * k).map(|_| rng.normal_f32()).collect();
+    let sigs: Vec<f32> = cfg.significances().iter().map(|&s| s as f32).collect();
+    let stats = bench("execute/imc_linear_r2c2 (8x64x10)", 30, 0.5, || {
+        exe.run(&[
+            ArgValue::F32(&x),
+            ArgValue::F32(&planes.pos),
+            ArgValue::F32(&planes.neg),
+            ArgValue::F32(&sigs),
+        ])
+        .unwrap();
+    });
+    println!("{}", stats.report());
+
+    // CNN batch inference latency (batch 100).
+    let exe = rt.load("cnn_cnn_s_r2c2")?;
+    let mut args_data: Vec<Vec<f32>> = Vec::new();
+    for spec in &exe.args {
+        args_data.push((0..spec.len()).map(|_| rng.normal_f32() * 0.1).collect());
+    }
+    let stats = bench("execute/cnn_cnn_s_r2c2 (batch 100)", 10, 1.0, || {
+        let values: Vec<ArgValue> = args_data.iter().map(|d| ArgValue::F32(d)).collect();
+        exe.run(&values).unwrap();
+    });
+    println!("{}", stats.report());
+    let per_img = stats.mean_s / 100.0;
+    println!("  → {:.2} ms/image, {:.0} images/s", per_img * 1e3, 1.0 / per_img);
+
+    // LM batch inference latency.
+    let exe = rt.load("lm_r2c2")?;
+    let mut values_store: Vec<(bool, Vec<f32>, Vec<i32>)> = Vec::new();
+    for spec in &exe.args {
+        if matches!(spec.dtype, rchg::runtime::DType::I32) {
+            values_store.push((true, vec![], (0..spec.len()).map(|i| (i % 200) as i32).collect()));
+        } else {
+            values_store.push((false, (0..spec.len()).map(|_| rng.normal_f32() * 0.05).collect(), vec![]));
+        }
+    }
+    let stats = bench("execute/lm_r2c2 (batch 2 x 96)", 10, 1.0, || {
+        let values: Vec<ArgValue> = values_store
+            .iter()
+            .map(|(is_i, f, i)| if *is_i { ArgValue::I32(i) } else { ArgValue::F32(f) })
+            .collect();
+        exe.run(&values).unwrap();
+    });
+    println!("{}", stats.report());
+    let toks = 2.0 * 96.0;
+    println!(
+        "  → {:.1} tokens/s scoring throughput",
+        toks / stats.mean_s
+    );
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Crossbar array model + convolution weight mapping (the ConvMapSIM /
+//! NeuroSIM substrate of §VII "Hardware Evaluation").
+//!
+//! Mapping scheme: *kernel splitting* (NeuroSIM's default, the paper's
+//! choice): each of the `kh × kw` kernel positions contributes a
+//! `cin → cout` sub-matrix mapped to its own region. A grouping
+//! configuration RrCc inflates it to `cin·r` physical rows × `cout·c`
+//! physical columns per array sign; positive and negative arrays double
+//! everything (sign decomposition).
+//!
+//! Two mapper policies:
+//! * [`MapperPolicy::KernelSplit`] — the paper's: one kernel position per
+//!   array (column-tiled if too wide, row-spanned if too tall). Known for
+//!   energy efficiency but leaves rows idle when `cin·r ≪ rows` — exactly
+//!   the utilization weakness Fig 11 discusses.
+//! * [`MapperPolicy::PackedVertical`] — ablation: stack several kernel
+//!   positions vertically in one array (their bit-line sums realize the
+//!   convolution's accumulation in-array). Better utilization, fewer
+//!   activations; used by the `bench_energy` ablation.
+
+pub mod models;
+
+use crate::grouping::GroupConfig;
+use models::LayerShape;
+
+/// Physical crossbar dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayDims {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ArrayDims {
+    pub fn square(n: usize) -> ArrayDims {
+        ArrayDims { rows: n, cols: n }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MapperPolicy {
+    /// One kernel position per array (paper / NeuroSIM default).
+    #[default]
+    KernelSplit,
+    /// Utilization-aware vertical packing (ablation).
+    PackedVertical,
+}
+
+/// Mapping of one layer onto crossbars.
+#[derive(Clone, Debug)]
+pub struct LayerMapping {
+    pub layer: String,
+    /// Total arrays allocated (positive + negative).
+    pub n_arrays: usize,
+    /// MVM activations per inference (arrays × output pixels).
+    pub activations: u64,
+    /// ADC conversions per inference (used columns × activations).
+    pub adc_conversions: u64,
+    /// Wordline drives per inference (used rows × activations).
+    pub row_drives: u64,
+    /// Average row utilization across allocated arrays (0..1].
+    pub row_utilization: f64,
+    /// Average column utilization.
+    pub col_utilization: f64,
+    /// Physical cells allocated (both signs).
+    pub cells_allocated: u64,
+    /// Cells actually storing weights (both signs).
+    pub cells_used: u64,
+}
+
+/// Map one layer under the given policy.
+pub fn map_layer(
+    layer: &LayerShape,
+    dims: ArrayDims,
+    cfg: &GroupConfig,
+    policy: MapperPolicy,
+) -> LayerMapping {
+    let sub_rows = layer.cin * cfg.rows; // physical rows per kernel position
+    let sub_cols = layer.cout * cfg.cols; // physical cols (per sign)
+    let positions = layer.kh * layer.kw;
+
+    // Vertical dimension: arrays needed to host all kernel positions, and
+    // the used rows of each.
+    let (arrays_v, used_rows_total) = match policy {
+        MapperPolicy::KernelSplit => {
+            if sub_rows <= dims.rows {
+                (positions, (positions * sub_rows) as u64)
+            } else {
+                let span = sub_rows.div_ceil(dims.rows);
+                (positions * span, (positions * sub_rows) as u64)
+            }
+        }
+        MapperPolicy::PackedVertical => {
+            if sub_rows <= dims.rows {
+                let per = (dims.rows / sub_rows).max(1).min(positions.max(1));
+                (positions.div_ceil(per), (positions * sub_rows) as u64)
+            } else {
+                let span = sub_rows.div_ceil(dims.rows);
+                (positions * span, (positions * sub_rows) as u64)
+            }
+        }
+    };
+
+    // Horizontal tiling over output columns.
+    let arrays_h = sub_cols.div_ceil(dims.cols);
+    let used_cols_per_vslice = sub_cols as u64; // summed over the h tiles
+
+    let pixels = (layer.oh * layer.ow) as u64;
+    let arrays_per_sign = arrays_v * arrays_h;
+    let n_arrays = arrays_per_sign * 2;
+    let activations = n_arrays as u64 * pixels;
+
+    // Every vertical slice digitizes all used columns once per pixel.
+    let adc_conversions = 2 * arrays_v as u64 * used_cols_per_vslice * pixels;
+    // Wordline drives: used rows across the layer, once per pixel, per sign
+    // (column tiles share wordlines within an array but distinct arrays
+    // re-drive them).
+    let row_drives = 2 * used_rows_total * arrays_h as u64 * pixels;
+
+    let cells_used = 2 * (layer.params() * cfg.rows * cfg.cols) as u64;
+    let cells_allocated = n_arrays as u64 * (dims.rows * dims.cols) as u64;
+
+    let row_utilization =
+        (positions * sub_rows) as f64 / (arrays_per_sign.min(positions * arrays_h) * dims.rows).max(1) as f64;
+    let col_utilization = sub_cols as f64 / (arrays_h * dims.cols) as f64;
+
+    LayerMapping {
+        layer: layer.name.clone(),
+        n_arrays,
+        activations,
+        adc_conversions,
+        row_drives,
+        row_utilization: row_utilization.min(1.0),
+        col_utilization: col_utilization.min(1.0),
+        cells_allocated,
+        cells_used,
+    }
+}
+
+/// Map a whole network; returns per-layer mappings.
+pub fn map_network(
+    layers: &[LayerShape],
+    dims: ArrayDims,
+    cfg: &GroupConfig,
+    policy: MapperPolicy,
+) -> Vec<LayerMapping> {
+    layers.iter().map(|l| map_layer(l, dims, cfg, policy)).collect()
+}
+
+/// Aggregate row utilization, weighted by allocated cells.
+pub fn mean_row_utilization(mappings: &[LayerMapping]) -> f64 {
+    let total: u64 = mappings.iter().map(|m| m.cells_allocated).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    mappings
+        .iter()
+        .map(|m| m.row_utilization * m.cells_allocated as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use models::resnet20;
+
+    const KS: MapperPolicy = MapperPolicy::KernelSplit;
+
+    #[test]
+    fn kernel_split_one_array_per_position() {
+        // conv 16→16 3×3, R1C4, 256×256: 9 positions → 9 arrays per sign.
+        let l = LayerShape::conv("c", 16, 16, 3, 32);
+        let m = map_layer(&l, ArrayDims::square(256), &GroupConfig::R1C4, KS);
+        assert_eq!(m.n_arrays, 18);
+        assert_eq!(m.activations, 18 * 1024);
+        assert_eq!(m.adc_conversions, 2 * 9 * 64 * 1024);
+    }
+
+    #[test]
+    fn r2c2_halves_adc_conversions_kernel_split() {
+        let l = LayerShape::conv("c", 16, 16, 3, 32);
+        let d = ArrayDims::square(256);
+        let a = map_layer(&l, d, &GroupConfig::R1C4, KS);
+        let b = map_layer(&l, d, &GroupConfig::R2C2, KS);
+        assert_eq!(b.adc_conversions * 2, a.adc_conversions);
+        assert!(b.row_utilization > a.row_utilization * 1.9);
+    }
+
+    #[test]
+    fn packed_policy_reduces_arrays() {
+        let l = LayerShape::conv("c", 16, 16, 3, 32);
+        let d = ArrayDims::square(256);
+        let ks = map_layer(&l, d, &GroupConfig::R1C4, KS);
+        let pk = map_layer(&l, d, &GroupConfig::R1C4, MapperPolicy::PackedVertical);
+        assert!(pk.n_arrays < ks.n_arrays);
+        assert!(pk.activations < ks.activations);
+        // Same cells stored either way.
+        assert_eq!(pk.cells_used, ks.cells_used);
+    }
+
+    #[test]
+    fn wide_layer_tiles_horizontally() {
+        // cout 512, c=4 → 2048 cols → 8 tiles at 256 cols; 9 positions.
+        let l = LayerShape::conv("c", 64, 512, 3, 7);
+        let m = map_layer(&l, ArrayDims::square(256), &GroupConfig::R1C4, KS);
+        assert_eq!(m.n_arrays, 2 * 9 * 8);
+    }
+
+    #[test]
+    fn tall_position_spans_arrays() {
+        // cin 4096 rows > 256 → 16-array vertical span (r=1), 1 position.
+        let l = LayerShape::fc("fc", 4096, 10);
+        let m = map_layer(&l, ArrayDims::square(256), &GroupConfig::R1C4, KS);
+        assert_eq!(m.n_arrays, 2 * 16);
+        assert_eq!(m.activations, 32);
+    }
+
+    #[test]
+    fn utilization_bounded_across_grid() {
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+            for n in [64usize, 128, 256, 512] {
+                for policy in [KS, MapperPolicy::PackedVertical] {
+                    for m in map_network(&resnet20(), ArrayDims::square(n), &cfg, policy) {
+                        assert!(m.row_utilization > 0.0 && m.row_utilization <= 1.0);
+                        assert!(m.col_utilization > 0.0 && m.col_utilization <= 1.0);
+                        assert!(m.cells_used <= m.cells_allocated);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_utilization_drops_with_array_size() {
+        // The paper's observation: kernel splitting under-uses rows on
+        // larger arrays (shallow layers especially).
+        let net = resnet20();
+        let u128 = mean_row_utilization(&map_network(&net, ArrayDims::square(128), &GroupConfig::R1C4, KS));
+        let u512 = mean_row_utilization(&map_network(&net, ArrayDims::square(512), &GroupConfig::R1C4, KS));
+        assert!(u512 < u128, "{u512} !< {u128}");
+        // And hybrid grouping recovers utilization.
+        let h512 = mean_row_utilization(&map_network(&net, ArrayDims::square(512), &GroupConfig::R2C2, KS));
+        assert!(h512 > u512);
+    }
+}

@@ -1,0 +1,169 @@
+//! Real layer-shape tables for the paper's evaluation networks.
+//!
+//! Compile-time (Table II) and energy (Fig 11) experiments depend only on
+//! layer *shapes* — weight counts, kernel geometry, output resolution —
+//! not on trained values, so we reproduce the exact architectures:
+//! ResNet-20 (CIFAR-10), ResNet-18/50 (ImageNet), VGG-16 (ImageNet).
+
+/// One weight layer, conv or fully connected (`kh == kw == 1, oh == ow == 1`
+/// for FC).
+#[derive(Clone, Debug)]
+pub struct LayerShape {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// Output spatial resolution (per-pixel array activations).
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl LayerShape {
+    pub fn conv(name: &str, cin: usize, cout: usize, k: usize, out: usize) -> LayerShape {
+        LayerShape { name: name.into(), cin, cout, kh: k, kw: k, oh: out, ow: out }
+    }
+    pub fn fc(name: &str, cin: usize, cout: usize) -> LayerShape {
+        LayerShape { name: name.into(), cin, cout, kh: 1, kw: 1, oh: 1, ow: 1 }
+    }
+    /// Weight parameter count.
+    pub fn params(&self) -> usize {
+        self.cin * self.cout * self.kh * self.kw
+    }
+}
+
+/// ResNet-20 for CIFAR-10 (16/32/64 channels, 3 stages × 3 blocks × 2 convs).
+pub fn resnet20() -> Vec<LayerShape> {
+    let mut l = vec![LayerShape::conv("conv1", 3, 16, 3, 32)];
+    for (stage, (ch, out)) in [(16usize, 32usize), (32, 16), (64, 8)].iter().enumerate() {
+        for block in 0..3 {
+            let cin = if block == 0 && stage > 0 { ch / 2 } else { *ch };
+            l.push(LayerShape::conv(&format!("s{stage}b{block}c1"), cin, *ch, 3, *out));
+            l.push(LayerShape::conv(&format!("s{stage}b{block}c2"), *ch, *ch, 3, *out));
+        }
+        if stage > 0 {
+            l.push(LayerShape::conv(&format!("s{stage}down"), ch / 2, *ch, 1, *out));
+        }
+    }
+    l.push(LayerShape::fc("fc", 64, 10));
+    l
+}
+
+/// ResNet-18 for ImageNet (BasicBlock ×2 per stage).
+pub fn resnet18() -> Vec<LayerShape> {
+    let mut l = vec![LayerShape::conv("conv1", 3, 64, 7, 112)];
+    let stages: [(usize, usize); 4] = [(64, 56), (128, 28), (256, 14), (512, 7)];
+    for (si, (ch, out)) in stages.iter().enumerate() {
+        for block in 0..2 {
+            let cin = if block == 0 && si > 0 { ch / 2 } else { *ch };
+            l.push(LayerShape::conv(&format!("s{si}b{block}c1"), cin, *ch, 3, *out));
+            l.push(LayerShape::conv(&format!("s{si}b{block}c2"), *ch, *ch, 3, *out));
+        }
+        if si > 0 {
+            l.push(LayerShape::conv(&format!("s{si}down"), ch / 2, *ch, 1, *out));
+        }
+    }
+    l.push(LayerShape::fc("fc", 512, 1000));
+    l
+}
+
+/// ResNet-50 for ImageNet (Bottleneck; blocks 3/4/6/3).
+pub fn resnet50() -> Vec<LayerShape> {
+    let mut l = vec![LayerShape::conv("conv1", 3, 64, 7, 112)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 256, 56), (128, 512, 28), (256, 1024, 14), (512, 2048, 7)];
+    let blocks = [3usize, 4, 6, 3];
+    let mut cin = 64usize;
+    for (si, ((mid, outc, res), nb)) in stages.iter().zip(blocks).enumerate() {
+        for b in 0..nb {
+            l.push(LayerShape::conv(&format!("s{si}b{b}c1"), cin, *mid, 1, *res));
+            l.push(LayerShape::conv(&format!("s{si}b{b}c2"), *mid, *mid, 3, *res));
+            l.push(LayerShape::conv(&format!("s{si}b{b}c3"), *mid, *outc, 1, *res));
+            if b == 0 {
+                l.push(LayerShape::conv(&format!("s{si}down"), cin, *outc, 1, *res));
+            }
+            cin = *outc;
+        }
+    }
+    l.push(LayerShape::fc("fc", 2048, 1000));
+    l
+}
+
+/// VGG-16 for ImageNet.
+pub fn vgg16() -> Vec<LayerShape> {
+    let plan: [(usize, usize, usize); 13] = [
+        (3, 64, 224),
+        (64, 64, 224),
+        (64, 128, 112),
+        (128, 128, 112),
+        (128, 256, 56),
+        (256, 256, 56),
+        (256, 256, 56),
+        (256, 512, 28),
+        (512, 512, 28),
+        (512, 512, 28),
+        (512, 512, 14),
+        (512, 512, 14),
+        (512, 512, 14),
+    ];
+    let mut l: Vec<LayerShape> = plan
+        .iter()
+        .enumerate()
+        .map(|(i, (cin, cout, out))| LayerShape::conv(&format!("conv{i}"), *cin, *cout, 3, *out))
+        .collect();
+    l.push(LayerShape::fc("fc6", 512 * 7 * 7, 4096));
+    l.push(LayerShape::fc("fc7", 4096, 4096));
+    l.push(LayerShape::fc("fc8", 4096, 1000));
+    l
+}
+
+/// Model registry by paper name.
+pub fn by_name(name: &str) -> Option<Vec<LayerShape>> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet20" | "resnet-20" => Some(resnet20()),
+        "resnet18" | "resnet-18" => Some(resnet18()),
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        "vgg16" | "vgg-16" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+pub fn total_params(layers: &[LayerShape]) -> usize {
+    layers.iter().map(|l| l.params()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        // Published weight counts (conv+fc, no BN): ResNet-20 ≈ 0.27M,
+        // ResNet-18 ≈ 11.7M, ResNet-50 ≈ 25.5M, VGG-16 ≈ 138M.
+        let r20 = total_params(&resnet20());
+        assert!((260_000..300_000).contains(&r20), "resnet20: {r20}");
+        let r18 = total_params(&resnet18());
+        assert!((11_000_000..12_500_000).contains(&r18), "resnet18: {r18}");
+        let r50 = total_params(&resnet50());
+        assert!((23_000_000..27_000_000).contains(&r50), "resnet50: {r50}");
+        let v16 = total_params(&vgg16());
+        assert!((132_000_000..140_000_000).contains(&v16), "vgg16: {v16}");
+    }
+
+    #[test]
+    fn registry_resolves() {
+        for n in ["resnet20", "ResNet-18", "resnet50", "VGG16"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn fc_layers_are_1x1() {
+        for l in vgg16() {
+            if l.name.starts_with("fc") {
+                assert_eq!((l.kh, l.kw, l.oh, l.ow), (1, 1, 1, 1));
+            }
+        }
+    }
+}

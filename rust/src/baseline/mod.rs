@@ -1,0 +1,11 @@
+//! Comparison baselines.
+//!
+//! * [`fault_free`] — our reimplementation of the original Fault-Free
+//!   algorithm (Shin et al., TC'23): exhaustive decomposition-table search,
+//!   the compile-time baseline of Table II / Fig 10.
+//! * [`unprotected`] — no mitigation at all: ideal sign decomposition
+//!   programmed onto the faulty array as-is (the accuracy floor).
+
+pub mod fault_free;
+pub mod remap;
+pub mod unprotected;

@@ -1,0 +1,59 @@
+//! Unprotected mapping: ideal sign decomposition programmed straight onto
+//! the faulty arrays. This is what a fault-oblivious toolchain does and is
+//! the accuracy floor every mitigation method is measured against.
+
+use crate::fault::GroupFaults;
+use crate::grouping::{Decomposition, GroupConfig};
+
+/// Program `w` ignoring faults; return the decomposition and the incurred
+/// |error| under the fault map.
+pub fn unprotected_decompose(
+    cfg: &GroupConfig,
+    faults: &GroupFaults,
+    w: i64,
+) -> (Decomposition, i64) {
+    let d = Decomposition::encode_ideal(w, cfg);
+    let err = (w - d.faulty_value(cfg, faults)).abs();
+    (d, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::{FaultRates, FaultState};
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn zero_error_without_faults() {
+        let cfg = GroupConfig::R1C4;
+        let faults = GroupFaults::free(cfg.cells());
+        for w in [-255, 0, 77] {
+            assert_eq!(unprotected_decompose(&cfg, &faults, w).1, 0);
+        }
+    }
+
+    #[test]
+    fn msb_fault_is_catastrophic() {
+        // The Fig 1b scenario: large distortion from a single MSB fault.
+        let cfg = GroupConfig::R1C4;
+        let mut faults = GroupFaults::free(cfg.cells());
+        faults.pos[0] = FaultState::Sa0; // MSB stuck high
+        faults.pos[2] = FaultState::Sa1; // 2nd LSB stuck low
+        let (_, err) = unprotected_decompose(&cfg, &faults, 52);
+        assert_eq!(err, 188); // 52 → 240, exactly Fig 1b
+    }
+
+    #[test]
+    fn error_bounded_by_span() {
+        prop_check("unprotected-bound", 200, |rng| {
+            let cfg = GroupConfig::R2C2;
+            let faults =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.3, p_sa1: 0.3 }, rng);
+            let w = rng.range_i64(-30, 30);
+            let (_, err) = unprotected_decompose(&cfg, &faults, w);
+            prop_assert!(err <= 2 * cfg.max_per_array(), "error beyond physical span");
+            Ok(())
+        });
+    }
+}

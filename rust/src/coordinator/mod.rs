@@ -1,0 +1,11 @@
+//! L3 coordinator: the paper's compilation pipeline (§V, Fig 7) and the
+//! per-chip/per-model compilation driver around it.
+
+pub mod compiler;
+pub mod pipeline;
+
+pub use compiler::{compile_model, compile_tensor, CompileOptions, CompileStats, CompiledTensor};
+pub use pipeline::{decompose_one, Method, Outcome, PipelineOptions, Stage};
+
+/// Convenience alias: the full compiler entry point.
+pub type Compiler = compiler::CompileOptions;

@@ -1,0 +1,215 @@
+//! ILP formulations of FAWD (Eq. 12) and CVM (Eq. 13).
+//!
+//! Variables are created only for *free* cells (stuck cells contribute
+//! constants — their programmed value is irrelevant and the ℓ1-minimal
+//! choice is 0, exactly what Gurobi would return for the paper's full
+//! formulation). Layout: positive-array free cells first, then negative;
+//! CVM appends the auxiliary `t` variable last.
+
+use crate::fault::{FaultState, GroupFaults};
+use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::ilp::{IlpProblem, IlpStats};
+
+/// Free-cell variable layout shared by both formulations.
+struct VarMap {
+    /// (array: 0 pos / 1 neg, cell idx, significance)
+    vars: Vec<(u8, usize, i64)>,
+    /// Constant component C = Σ stuck-at contributions (pos − neg).
+    constant: i64,
+}
+
+fn build_varmap(cfg: &GroupConfig, faults: &GroupFaults) -> VarMap {
+    let lm1 = cfg.levels as i64 - 1;
+    let mut vars = Vec::new();
+    let mut constant = 0i64;
+    for (idx, f) in faults.pos.iter().enumerate() {
+        match f {
+            FaultState::Free => vars.push((0u8, idx, cfg.sig_of(idx))),
+            FaultState::Sa0 => constant += cfg.sig_of(idx) * lm1,
+            FaultState::Sa1 => {}
+        }
+    }
+    for (idx, f) in faults.neg.iter().enumerate() {
+        match f {
+            FaultState::Free => vars.push((1u8, idx, cfg.sig_of(idx))),
+            FaultState::Sa0 => constant -= cfg.sig_of(idx) * lm1,
+            FaultState::Sa1 => {}
+        }
+    }
+    VarMap { vars, constant }
+}
+
+fn decomposition_from(cfg: &GroupConfig, vm: &VarMap, values: &[i64]) -> Decomposition {
+    let mut pos = Bitmap::zeros(cfg);
+    let mut neg = Bitmap::zeros(cfg);
+    for ((array, idx, _), &v) in vm.vars.iter().zip(values) {
+        debug_assert!((0..cfg.levels as i64).contains(&v));
+        if *array == 0 {
+            pos.cells[*idx] = v as u8;
+        } else {
+            neg.cells[*idx] = v as u8;
+        }
+    }
+    Decomposition { pos, neg }
+}
+
+/// ILP-FAWD (Eq. 12): minimize `‖X⁺‖₁ + ‖X⁻‖₁` subject to the faulty
+/// decomposition reproducing `w` exactly. Returns `None` when no exact
+/// (fault-masked) decomposition exists.
+pub fn fawd_ilp(
+    cfg: &GroupConfig,
+    faults: &GroupFaults,
+    w: i64,
+    stats: &mut IlpStats,
+) -> Option<Decomposition> {
+    let vm = build_varmap(cfg, faults);
+    let n = vm.vars.len();
+    let mut p = IlpProblem::new(n);
+    // Objective: Σ x (every stored level counts toward ℓ1 on both arrays).
+    p.minimize(&vec![1i64; n]);
+    for (j, _) in vm.vars.iter().enumerate() {
+        p.bound(j, 0, cfg.levels as i64 - 1);
+    }
+    // d(X̃⁺) − d(X̃⁻) = w  ⇒  Σ ±sig·x = w − C.
+    let coeffs: Vec<i64> = vm
+        .vars
+        .iter()
+        .map(|(a, _, sig)| if *a == 0 { *sig } else { -*sig })
+        .collect();
+    p.add_eq(&coeffs, w - vm.constant);
+    p.solve_with_stats(stats)
+        .map(|s| decomposition_from(cfg, &vm, &s.values))
+}
+
+/// ILP-CVM (Eq. 13): minimize `t` with `−t ≤ w − w̃ ≤ t`. Always feasible.
+/// Returns the decomposition and the achieved |error|.
+pub fn cvm_ilp(
+    cfg: &GroupConfig,
+    faults: &GroupFaults,
+    w: i64,
+    stats: &mut IlpStats,
+) -> (Decomposition, i64) {
+    let vm = build_varmap(cfg, faults);
+    let n = vm.vars.len();
+    let mut p = IlpProblem::new(n + 1); // + t
+    let mut obj = vec![0i64; n + 1];
+    obj[n] = 1;
+    p.minimize(&obj);
+    for j in 0..n {
+        p.bound(j, 0, cfg.levels as i64 - 1);
+    }
+    // t ∈ [0, 2·max]: |error| can never exceed the full span.
+    p.bound(n, 0, 4 * cfg.max_per_array());
+    // w − w̃ ≤ t  and  w − w̃ ≥ −t, where w̃ = Σ ±sig·x + C:
+    //   −Σ ±sig·x − t ≤ C − w      (w − w̃ ≤ t)
+    //    Σ ±sig·x − t ≤ w − C      (−t ≤ w − w̃)
+    let mut up = vec![0i64; n + 1];
+    let mut dn = vec![0i64; n + 1];
+    for (j, (a, _, sig)) in vm.vars.iter().enumerate() {
+        let s = if *a == 0 { *sig } else { -*sig };
+        up[j] = -s;
+        dn[j] = s;
+    }
+    up[n] = -1;
+    dn[n] = -1;
+    p.add_le(&up, vm.constant - w);
+    p.add_le(&dn, w - vm.constant);
+    let s = p
+        .solve_with_stats(stats)
+        .expect("CVM is always feasible (t unconstrained above)");
+    let d = decomposition_from(cfg, &vm, &s.values[..n]);
+    (d, s.objective)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::table::GroupTables;
+    use crate::fault::FaultRates;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn fawd_ilp_exact_when_solvable() {
+        prop_check("fawd-ilp", 120, |rng| {
+            let cfg = GroupConfig::R2C2;
+            let faults =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.15, p_sa1: 0.15 }, rng);
+            let w = rng.range_i64(-30, 30);
+            let mut st = IlpStats::default();
+            let tables = GroupTables::build(&cfg, &faults);
+            match fawd_ilp(&cfg, &faults, w, &mut st) {
+                Some(d) => {
+                    prop_assert!(
+                        d.faulty_value(&cfg, &faults) == w,
+                        "ILP-FAWD inexact: {} != {w}",
+                        d.faulty_value(&cfg, &faults)
+                    );
+                }
+                None => {
+                    prop_assert!(
+                        tables.fawd(&cfg, &faults, w).is_none(),
+                        "ILP says infeasible but table FAWD found a pair (w={w}, faults={faults:?})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fawd_ilp_l1_matches_table_l1() {
+        prop_check("fawd-ilp-l1", 60, |rng| {
+            let cfg = GroupConfig::R2C2;
+            let faults =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.1, p_sa1: 0.1 }, rng);
+            let w = rng.range_i64(-30, 30);
+            let mut st = IlpStats::default();
+            let tables = GroupTables::build(&cfg, &faults);
+            if let (Some(di), Some(dt)) = (fawd_ilp(&cfg, &faults, w, &mut st), tables.fawd(&cfg, &faults, w)) {
+                prop_assert!(
+                    di.l1() == dt.l1(),
+                    "sparsest-solution mismatch: ilp {} vs table {}",
+                    di.l1(),
+                    dt.l1()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cvm_ilp_matches_table_cvm_error() {
+        prop_check("cvm-ilp", 80, |rng| {
+            let cfg = [GroupConfig::R2C2, GroupConfig::new(1, 3, 4)][rng.index(2)];
+            let faults =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.25, p_sa1: 0.25 }, rng);
+            let w = rng.range_i64(-cfg.max_per_array(), cfg.max_per_array());
+            let mut st = IlpStats::default();
+            let (d, err) = cvm_ilp(&cfg, &faults, w, &mut st);
+            let tables = GroupTables::build(&cfg, &faults);
+            let (_, table_err) = tables.cvm(&cfg, &faults, w);
+            prop_assert!(
+                err == table_err,
+                "CVM error mismatch: ilp {err} vs table {table_err} (w={w}, faults={faults:?})"
+            );
+            prop_assert!(
+                (w - d.faulty_value(&cfg, &faults)).abs() == err,
+                "ILP-CVM witness error mismatch"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cvm_zero_error_on_fault_free() {
+        let cfg = GroupConfig::R1C4;
+        let faults = GroupFaults::free(cfg.cells());
+        let mut st = IlpStats::default();
+        for w in [-255, -100, 0, 100, 255] {
+            let (d, err) = cvm_ilp(&cfg, &faults, w, &mut st);
+            assert_eq!(err, 0);
+            assert_eq!(d.faulty_value(&cfg, &faults), w);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Fault-aware weight decomposition algorithms.
+//!
+//! Four interchangeable solvers for the same problem — given a grouping
+//! config, a per-group fault map and a target integer weight `w`, produce
+//! bitmaps `(X⁺, X⁻)` whose *faulty* decode is as close to `w` as
+//! possible:
+//!
+//! * [`table::GroupTables::fawd`] — table-based FAWD (exact, sparsest).
+//! * [`ilp_forms::fawd_ilp`] — ILP FAWD (exact, sparsest; scales to
+//!   configurations whose tables are intractable).
+//! * [`table::GroupTables::cvm`] — direct closest-value matching.
+//! * [`ilp_forms::cvm_ilp`] — ILP CVM (Eq. 13).
+//!
+//! plus the theorem-guided greedy ([`crate::grouping::FaultAnalysis::solve_exact`])
+//! used by the complete pipeline for consecutive ranges.
+
+pub mod ilp_forms;
+pub mod table;
+
+pub use ilp_forms::{cvm_ilp, fawd_ilp};
+pub use table::{GroupTables, ValueTable};

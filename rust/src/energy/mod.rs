@@ -1,0 +1,192 @@
+//! Energy model — the NeuroSIM-flavoured substrate behind Fig 11.
+//!
+//! Component energies are *relative* units calibrated to the published
+//! NeuroSIM/ISAAC breakdowns (ADC dominates analog IMC energy; wordline/
+//! DAC drive next; cell read small; digital shift-add/subtract cheap per
+//! op but per-column). Absolute joules are not the claim — the paper
+//! normalizes against the R1C4 baseline, and so do we.
+//!
+//! Per array activation (one MVM against one crossbar):
+//!   e_fixed(dims)  — precharge/decoder/sense bias, scales with array size
+//!   e_row  × rows driven (DAC + wordline)
+//!   e_cell × rows×cols used (bit-line current)
+//!   e_adc  × columns digitized (dominant)
+//!   e_sa   × columns (shift-and-add)
+//! plus e_sub per logical output value (pos − neg subtraction).
+
+use crate::arrays::models::LayerShape;
+use crate::arrays::{map_network, ArrayDims, LayerMapping, MapperPolicy};
+use crate::grouping::GroupConfig;
+
+/// Component energies (pJ, relative calibration).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// ADC energy per conversion.
+    pub e_adc: f64,
+    /// Wordline + DAC energy per driven row per activation.
+    pub e_row: f64,
+    /// Per-cell read energy (row×col product term).
+    pub e_cell: f64,
+    /// Shift-and-add per column per activation.
+    pub e_sa: f64,
+    /// Subtractor per logical output per pixel.
+    pub e_sub: f64,
+    /// Fixed activation overhead per (row + col) of the physical array.
+    pub e_fixed_per_line: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        // Ratios follow NeuroSIM-style breakdowns for ReRAM + SAR-ADC at
+        // ~5-bit: ADC ≈ 2 pJ/conv dominates; row drive ≈ 0.05 pJ; cell
+        // read ≈ 0.001 pJ; digital ops ≈ 0.05 pJ; fixed ≈ 0.002 pJ/line.
+        EnergyParams {
+            e_adc: 2.0,
+            e_row: 0.05,
+            e_cell: 0.001,
+            e_sa: 0.05,
+            e_sub: 0.05,
+            e_fixed_per_line: 0.002,
+        }
+    }
+}
+
+/// Energy breakdown for one layer (pJ).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub adc: f64,
+    pub rows: f64,
+    pub cells: f64,
+    pub digital: f64,
+    pub fixed: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.adc + self.rows + self.cells + self.digital + self.fixed
+    }
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.adc += o.adc;
+        self.rows += o.rows;
+        self.cells += o.cells;
+        self.digital += o.digital;
+        self.fixed += o.fixed;
+    }
+}
+
+/// Energy of one mapped layer per inference.
+pub fn layer_energy(
+    m: &LayerMapping,
+    layer: &LayerShape,
+    dims: ArrayDims,
+    p: &EnergyParams,
+) -> EnergyBreakdown {
+    let pixels = (layer.oh * layer.ow) as f64;
+    EnergyBreakdown {
+        adc: p.e_adc * m.adc_conversions as f64,
+        rows: p.e_row * m.row_drives as f64,
+        cells: p.e_cell * (m.row_drives as f64 / m.activations.max(1) as f64)
+            * (m.adc_conversions as f64 / m.activations.max(1) as f64)
+            * m.activations as f64,
+        digital: p.e_sa * m.adc_conversions as f64
+            + p.e_sub * layer.cout as f64 * pixels,
+        fixed: p.e_fixed_per_line * (dims.rows + dims.cols) as f64 * m.activations as f64,
+    }
+}
+
+/// Whole-network energy per inference.
+pub fn network_energy(
+    layers: &[LayerShape],
+    dims: ArrayDims,
+    cfg: &GroupConfig,
+    p: &EnergyParams,
+    policy: MapperPolicy,
+) -> (EnergyBreakdown, Vec<LayerMapping>) {
+    let mappings = map_network(layers, dims, cfg, policy);
+    let mut total = EnergyBreakdown::default();
+    for (m, l) in mappings.iter().zip(layers) {
+        total.add(&layer_energy(m, l, dims, p));
+    }
+    (total, mappings)
+}
+
+/// Fig 11 datapoint: energy of `cfg` normalized against the R1C4 baseline
+/// on the same network and array size (paper's kernel-splitting mapper).
+pub fn normalized_energy(
+    layers: &[LayerShape],
+    dims: ArrayDims,
+    cfg: &GroupConfig,
+    p: &EnergyParams,
+) -> f64 {
+    let policy = MapperPolicy::KernelSplit;
+    let (e, _) = network_energy(layers, dims, cfg, p, policy);
+    let (base, _) = network_energy(layers, dims, &GroupConfig::R1C4, p, policy);
+    e.total() / base.total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arrays::models::{resnet18, resnet20};
+
+    #[test]
+    fn r1c4_normalizes_to_one() {
+        let p = EnergyParams::default();
+        let n = normalized_energy(&resnet20(), ArrayDims::square(128), &GroupConfig::R1C4, &p);
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2c2_saves_energy_fig11() {
+        // The headline claim: R2C2 reduces energy by up to ~2× (≈0.5
+        // normalized) for both ResNet-20 and ResNet-18, at every array size.
+        let p = EnergyParams::default();
+        for layers in [resnet20(), resnet18()] {
+            let mut best = 1.0f64;
+            for n in [64usize, 128, 256, 512] {
+                let r = normalized_energy(&layers, ArrayDims::square(n), &GroupConfig::R2C2, &p);
+                assert!(r < 0.9, "R2C2 should always save energy, got {r} at {n}");
+                best = best.min(r);
+            }
+            assert!(best < 0.62, "peak saving should approach 2x, got {best}");
+        }
+    }
+
+    #[test]
+    fn adc_dominates_default_params() {
+        let p = EnergyParams::default();
+        let (e, _) = network_energy(
+            &resnet20(),
+            ArrayDims::square(256),
+            &GroupConfig::R1C4,
+            &p,
+            MapperPolicy::KernelSplit,
+        );
+        assert!(e.adc > e.total() * 0.5, "adc {} of {}", e.adc, e.total());
+    }
+
+    #[test]
+    fn energy_positive_and_finite_across_grid() {
+        let p = EnergyParams::default();
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+            for n in [64usize, 128, 256, 512] {
+                for policy in [MapperPolicy::KernelSplit, MapperPolicy::PackedVertical] {
+                    let (e, maps) =
+                        network_energy(&resnet20(), ArrayDims::square(n), &cfg, &p, policy);
+                    assert!(e.total().is_finite() && e.total() > 0.0);
+                    assert!(!maps.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn r2c4_costs_more_than_r2c2() {
+        // R2C4 doubles the columns of R2C2 → more ADC work.
+        let p = EnergyParams::default();
+        let d = ArrayDims::square(256);
+        let e22 = normalized_energy(&resnet20(), d, &GroupConfig::R2C2, &p);
+        let e24 = normalized_energy(&resnet20(), d, &GroupConfig::R2C4, &p);
+        assert!(e24 > e22);
+    }
+}

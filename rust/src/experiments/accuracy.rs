@@ -1,0 +1,165 @@
+//! Table I (CNN accuracy under SAFs), Fig 8 (layer-wise error) and Fig 9
+//! (accuracy vs fault rate).
+
+use super::Table;
+use crate::coordinator::Method;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::metrics::mean_std;
+use crate::nn::cnn::CnnEvaluator;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::path::Path;
+
+pub struct AccuracyOptions {
+    pub archs: Vec<String>,
+    pub configs: Vec<GroupConfig>,
+    pub trials: usize,
+    pub threads: usize,
+    /// Also evaluate the unprotected (no-mitigation) baseline rows.
+    pub include_unprotected: bool,
+}
+
+impl Default for AccuracyOptions {
+    fn default() -> Self {
+        AccuracyOptions {
+            archs: vec!["cnn_s".into(), "cnn_m".into(), "cnn_d".into(), "vgg_n".into()],
+            configs: vec![GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4],
+            trials: 3,
+            threads: 1,
+            include_unprotected: false,
+        }
+    }
+}
+
+/// Table I: accuracy per (grouping config × architecture), mean ± std over
+/// chips, plus the fault-free reference row.
+pub fn table1(rt: &Runtime, art: &Path, opts: &AccuracyOptions) -> Result<Table> {
+    let mut header = vec!["config".to_string(), "prec.".to_string()];
+    header.extend(opts.archs.iter().cloned());
+    let mut t = Table::new(
+        "Table I — accuracy under SAFs (mean ± std, %)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    // Fault-free reference (quantization only, R1C4's 8-bit).
+    let mut row = vec!["w/o SAF".to_string(), "8 bit".to_string()];
+    for arch in &opts.archs {
+        let ev = CnnEvaluator::new(rt, art, arch, GroupConfig::R1C4)?;
+        let r = ev.eval(0, FaultRates::none(), Method::Complete, opts.threads)?;
+        row.push(format!("{:.2}", 100.0 * r.accuracy));
+    }
+    t.row(row);
+
+    for cfg in &opts.configs {
+        let mut row = vec![cfg.name(), format!("{:.2} bit", cfg.precision_bits())];
+        for arch in &opts.archs {
+            let ev = CnnEvaluator::new(rt, art, arch, *cfg)?;
+            let accs: Vec<f64> = (0..opts.trials)
+                .map(|trial| {
+                    ev.eval(
+                        1000 + trial as u64,
+                        FaultRates::paper_default(),
+                        Method::Complete,
+                        opts.threads,
+                    )
+                    .map(|r| 100.0 * r.accuracy)
+                })
+                .collect::<Result<_>>()?;
+            let (m, s) = mean_std(&accs);
+            row.push(format!("{m:.2} (±{s:.2})"));
+        }
+        t.row(row);
+
+        if opts.include_unprotected {
+            let mut row = vec![format!("{} raw", cfg.name()), "(no mitig.)".to_string()];
+            for arch in &opts.archs {
+                let ev = CnnEvaluator::new(rt, art, arch, *cfg)?;
+                let accs: Vec<f64> = (0..opts.trials)
+                    .map(|trial| {
+                        ev.eval(
+                            1000 + trial as u64,
+                            FaultRates::paper_default(),
+                            Method::Unprotected,
+                            opts.threads,
+                        )
+                        .map(|r| 100.0 * r.accuracy)
+                    })
+                    .collect::<Result<_>>()?;
+                let (m, s) = mean_std(&accs);
+                row.push(format!("{m:.2} (±{s:.2})"));
+            }
+            t.row(row);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig 8: per-layer fault+quantization ℓ1 error for one architecture.
+pub fn fig8(rt: &Runtime, art: &Path, arch: &str, threads: usize) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Fig 8 — layer-wise fault ℓ1 error ({arch})"),
+        &["layer", "R1C4", "R2C2", "R2C4"],
+    );
+    let mut per_cfg: Vec<Vec<(String, f64)>> = Vec::new();
+    for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+        let ev = CnnEvaluator::new(rt, art, arch, cfg)?;
+        let r = ev.eval(7, FaultRates::paper_default(), Method::Complete, threads)?;
+        per_cfg.push(r.layer_l1);
+    }
+    for i in 0..per_cfg[0].len() {
+        t.row(vec![
+            per_cfg[0][i].0.clone(),
+            format!("{:.2}", per_cfg[0][i].1),
+            format!("{:.2}", per_cfg[1][i].1),
+            format!("{:.2}", per_cfg[2][i].1),
+        ]);
+    }
+    let sums: Vec<f64> = per_cfg.iter().map(|v| v.iter().map(|(_, e)| e).sum()).collect();
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.2}", sums[0]),
+        format!("{:.2}", sums[1]),
+        format!("{:.2}", sums[2]),
+    ]);
+    Ok(t)
+}
+
+/// Fig 9: accuracy vs total fault rate (SA0:SA1 ratio fixed at 1.75:9.04).
+pub fn fig9(
+    rt: &Runtime,
+    art: &Path,
+    arch: &str,
+    rates: &[f64],
+    trials: usize,
+    threads: usize,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Fig 9 — accuracy vs fault rate ({arch})"),
+        &["fault rate", "R1C4", "R2C2", "R2C4"],
+    );
+    let evs: Vec<CnnEvaluator> = [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4]
+        .iter()
+        .map(|cfg| CnnEvaluator::new(rt, art, arch, *cfg))
+        .collect::<Result<_>>()?;
+    for &rate in rates {
+        let mut row = vec![format!("{:.1}%", rate * 100.0)];
+        for ev in &evs {
+            let accs: Vec<f64> = (0..trials)
+                .map(|trial| {
+                    ev.eval(
+                        5000 + trial as u64,
+                        FaultRates::scaled_to_total(rate),
+                        Method::Complete,
+                        threads,
+                    )
+                    .map(|r| 100.0 * r.accuracy)
+                })
+                .collect::<Result<_>>()?;
+            let (m, s) = mean_std(&accs);
+            row.push(format!("{m:.2} (±{s:.2})"));
+        }
+        t.row(row);
+    }
+    Ok(t)
+}

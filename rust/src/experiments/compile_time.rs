@@ -1,0 +1,249 @@
+//! Table II + Fig 10: compilation-time evaluation.
+//!
+//! Protocol mirrors the paper: single processor thread (unless asked
+//! otherwise), per-chip fault maps at the published rates, real layer
+//! shapes for ResNet-20/18/50 and VGG-16 with synthetic quantized weight
+//! values (compile time depends on weight values + fault maps, not on
+//! trained accuracy).
+//!
+//! Slow methods (original FF, ILP-only) are measured on a deterministic
+//! weight sample and extrapolated linearly to the full model — both the
+//! measured sample time and the extrapolation are reported. The complete
+//! pipeline is fast enough to run at full scale.
+
+use super::Table;
+use crate::arrays::models::{by_name, total_params};
+use crate::coordinator::{compile_tensor, CompileOptions, Method};
+use crate::fault::bank::ChipFaults;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::util::prng::Rng;
+use crate::util::timer::{fmt_dur, Timer};
+use anyhow::{anyhow, Result};
+
+/// Synthetic quantized weights for one model at real layer shapes.
+/// Deterministic in (model, cfg). Values roughly bell-shaped like trained
+/// weights (sum of two uniforms), clamped to the config's range.
+pub fn synthetic_model_weights(model: &str, cfg: &GroupConfig, limit: usize) -> Result<Vec<i64>> {
+    let layers = by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let total = total_params(&layers).min(limit);
+    let mut rng = Rng::new(0xC0DE ^ crate::util::prop::fnv1a(model.as_bytes()));
+    let max = cfg.max_per_array();
+    Ok((0..total)
+        .map(|_| {
+            let a = rng.range_i64(-max, max);
+            let b = rng.range_i64(-max, max);
+            ((a + b) / 2).clamp(-max, max)
+        })
+        .collect())
+}
+
+#[derive(Clone, Debug)]
+pub struct CompileTimeRow {
+    pub method: Method,
+    pub cfg: GroupConfig,
+    pub model: String,
+    pub sampled_weights: usize,
+    pub total_weights: usize,
+    pub measured_secs: f64,
+    /// Linear extrapolation to the full model.
+    pub full_secs: f64,
+    /// Stage-bucket breakdown (cond / fawd / cvm / ff), seconds, measured.
+    pub breakdown: Vec<(String, f64)>,
+}
+
+/// Measure one (method, config, model) cell of Table II.
+pub fn measure(
+    model: &str,
+    cfg: GroupConfig,
+    method: Method,
+    sample: usize,
+    threads: usize,
+    chip_seed: u64,
+) -> Result<CompileTimeRow> {
+    let layers = by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let total_weights = total_params(&layers);
+    let ws = synthetic_model_weights(model, &cfg, sample)?;
+    let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let mut opts = CompileOptions::new(cfg, method);
+    opts.threads = threads;
+    // Pure-throughput mode (no per-stage clocks) via RCHG_TIME_STAGES=0.
+    if std::env::var("RCHG_TIME_STAGES").as_deref() == Ok("0") {
+        opts.time_stages = false;
+    }
+    let timer = Timer::start();
+    let out = compile_tensor(&ws, &faults, &opts);
+    let measured = timer.secs();
+    let full = measured * total_weights as f64 / ws.len() as f64;
+    Ok(CompileTimeRow {
+        method,
+        cfg,
+        model: model.to_string(),
+        sampled_weights: ws.len(),
+        total_weights,
+        measured_secs: measured,
+        full_secs: full,
+        breakdown: out
+            .stats
+            .clock
+            .entries()
+            .iter()
+            .map(|(n, s)| (n.clone(), *s * total_weights as f64 / ws.len() as f64))
+            .collect(),
+    })
+}
+
+pub struct CompileTimeOptions {
+    pub models: Vec<String>,
+    /// Sample sizes per method (full-model times are extrapolated).
+    pub sample_complete: usize,
+    pub sample_ilp: usize,
+    pub sample_ff: usize,
+    pub threads: usize,
+    pub include_r2c4: bool,
+}
+
+impl Default for CompileTimeOptions {
+    fn default() -> Self {
+        CompileTimeOptions {
+            models: vec!["resnet20".into(), "resnet18".into(), "resnet50".into(), "vgg16".into()],
+            sample_complete: 400_000,
+            sample_ilp: 2_000,
+            sample_ff: 2_000,
+            threads: 1,
+            include_r2c4: false,
+        }
+    }
+}
+
+/// Table II: compilation time (extrapolated full-model, measured sample in
+/// parentheses where sampled).
+pub fn table2(opts: &CompileTimeOptions) -> Result<(Table, Vec<CompileTimeRow>)> {
+    let mut header = vec!["method".to_string(), "config".to_string()];
+    header.extend(opts.models.iter().cloned());
+    let mut t = Table::new(
+        "Table II — compilation time (full-model; '~' = extrapolated from sample)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut all_rows = Vec::new();
+
+    let mut plan: Vec<(Method, GroupConfig, usize, &str)> = vec![
+        (Method::OriginalFf, GroupConfig::R1C4, opts.sample_ff, "Fault-Free (FF)"),
+        (Method::IlpOnly, GroupConfig::R1C4, opts.sample_ilp, "ILP only"),
+        (Method::IlpOnly, GroupConfig::R2C2, opts.sample_ilp, "ILP only"),
+        (Method::Complete, GroupConfig::R1C4, opts.sample_complete, "Complete pipeline"),
+        (Method::Complete, GroupConfig::R2C2, opts.sample_complete, "Complete pipeline"),
+    ];
+    if opts.include_r2c4 {
+        plan.push((Method::Complete, GroupConfig::R2C4, opts.sample_complete, "Complete pipeline"));
+    }
+
+    for (method, cfg, sample, label) in plan {
+        let mut row = vec![label.to_string(), cfg.name()];
+        for model in &opts.models {
+            let r = measure(model, cfg, method, sample, opts.threads, 1)?;
+            let approx = if r.sampled_weights < r.total_weights { "~" } else { "" };
+            row.push(format!("{approx}{}", fmt_dur(r.full_secs)));
+            all_rows.push(r);
+        }
+        t.row(row);
+    }
+    Ok((t, all_rows))
+}
+
+/// Fig 10a: speedup factors of the complete pipeline vs FF and vs ILP-only.
+pub fn fig10a(rows: &[CompileTimeRow], models: &[String]) -> Table {
+    let mut header = vec!["model".to_string()];
+    header.extend(["FF/complete(R1C4)", "ILP/complete(R1C4)", "FF/complete(R2C2)"].map(String::from));
+    let mut t = Table::new(
+        "Fig 10a — compile-time speedup of the complete pipeline",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let find = |m: Method, c: GroupConfig, model: &str| -> Option<f64> {
+        rows.iter()
+            .find(|r| r.method == m && r.cfg == c && r.model == model)
+            .map(|r| r.full_secs)
+    };
+    for model in models {
+        let ff = find(Method::OriginalFf, GroupConfig::R1C4, model);
+        let ilp = find(Method::IlpOnly, GroupConfig::R1C4, model);
+        let c14 = find(Method::Complete, GroupConfig::R1C4, model);
+        let c22 = find(Method::Complete, GroupConfig::R2C2, model);
+        let fmt = |a: Option<f64>, b: Option<f64>| match (a, b) {
+            (Some(x), Some(y)) if y > 0.0 => format!("{:.0}x", x / y),
+            _ => "-".to_string(),
+        };
+        t.row(vec![
+            model.clone(),
+            fmt(ff, c14),
+            fmt(ilp, c14),
+            fmt(ff, c22),
+        ]);
+    }
+    t
+}
+
+/// Fig 10b: stage breakdown of the complete pipeline per config.
+pub fn fig10b(rows: &[CompileTimeRow], model: &str) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 10b — complete-pipeline stage breakdown ({model}, extrapolated s)"),
+        &["config", "cond+fast", "fawd", "cvm", "total"],
+    );
+    for r in rows.iter().filter(|r| r.method == Method::Complete && r.model == model) {
+        let get = |k: &str| {
+            r.breakdown
+                .iter()
+                .find(|(n, _)| n == k)
+                .map(|(_, s)| *s)
+                .unwrap_or(0.0)
+        };
+        let (cond, fawd, cvm) = (get("cond"), get("fawd"), get("cvm"));
+        t.row(vec![
+            r.cfg.name(),
+            format!("{:.3}", cond),
+            format!("{:.3}", fawd),
+            format!("{:.3}", cvm),
+            format!("{:.3}", cond + fawd + cvm),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_weights_in_range_and_deterministic() {
+        let cfg = GroupConfig::R2C2;
+        let a = synthetic_model_weights("resnet20", &cfg, 10_000).unwrap();
+        let b = synthetic_model_weights("resnet20", &cfg, 10_000).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&w| w.abs() <= cfg.max_per_array()));
+        // Bell-shaped: more mass near zero than at extremes.
+        let near = a.iter().filter(|w| w.abs() <= 10).count();
+        let far = a.iter().filter(|w| w.abs() >= 25).count();
+        assert!(near > far);
+    }
+
+    #[test]
+    fn measure_complete_small_sample() {
+        let r = measure("resnet20", GroupConfig::R2C2, Method::Complete, 5_000, 1, 1).unwrap();
+        assert_eq!(r.sampled_weights, 5_000);
+        assert!(r.full_secs >= r.measured_secs);
+        assert!(r.total_weights > 250_000);
+    }
+
+    #[test]
+    fn pipeline_beats_ff_on_same_sample() {
+        let ff = measure("resnet20", GroupConfig::R1C4, Method::OriginalFf, 800, 1, 1).unwrap();
+        let cp = measure("resnet20", GroupConfig::R1C4, Method::Complete, 800, 1, 1).unwrap();
+        assert!(
+            cp.measured_secs * 5.0 < ff.measured_secs,
+            "complete {} vs ff {}",
+            cp.measured_secs,
+            ff.measured_secs
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Fig 6 (inconsecutivity probability) and Fig 11 (energy vs array size).
+
+use super::Table;
+use crate::arrays::models::by_name;
+use crate::arrays::{map_network, ArrayDims, MapperPolicy};
+use crate::energy::{network_energy, EnergyParams};
+use crate::fault::{FaultRates, GroupFaults};
+use crate::grouping::{FaultAnalysis, GroupConfig};
+use crate::util::prng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Fig 6: Monte-Carlo probability that a sampled fault map yields an
+/// inconsecutive representable range, per grouping config.
+pub fn fig6(configs: &[GroupConfig], samples: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Fig 6 — inconsecutivity probability at published fault rates",
+        &["config", "P(inconsecutive)", "P(any fault)", "samples"],
+    );
+    let rates = FaultRates::paper_default();
+    for cfg in configs {
+        let mut rng = Rng::new(seed);
+        let mut inconsec = 0usize;
+        let mut any_fault = 0usize;
+        for _ in 0..samples {
+            let faults = GroupFaults::sample(cfg.cells(), &rates, &mut rng);
+            if faults.is_fault_free() {
+                continue;
+            }
+            any_fault += 1;
+            let fa = FaultAnalysis::new(cfg, &faults);
+            if !fa.consecutive {
+                inconsec += 1;
+            }
+        }
+        t.row(vec![
+            cfg.name(),
+            format!("{:.4}%", 100.0 * inconsec as f64 / samples as f64),
+            format!("{:.2}%", 100.0 * any_fault as f64 / samples as f64),
+            samples.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig 11: normalized energy vs array dimension for one network.
+pub fn fig11(
+    model: &str,
+    sizes: &[usize],
+    params: &EnergyParams,
+    policy: MapperPolicy,
+) -> Result<Table> {
+    let layers = by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let mut t = Table::new(
+        &format!("Fig 11 — normalized energy vs array size ({model}, {policy:?})"),
+        &["array", "R1C4", "R2C2", "R2C4", "R1C4 row-util", "R2C2 row-util"],
+    );
+    for &n in sizes {
+        let dims = ArrayDims::square(n);
+        let base = network_energy(&layers, dims, &GroupConfig::R1C4, params, policy).0.total();
+        let e22 = network_energy(&layers, dims, &GroupConfig::R2C2, params, policy).0.total();
+        let e24 = network_energy(&layers, dims, &GroupConfig::R2C4, params, policy).0.total();
+        let u14 = crate::arrays::mean_row_utilization(&map_network(
+            &layers,
+            dims,
+            &GroupConfig::R1C4,
+            policy,
+        ));
+        let u22 = crate::arrays::mean_row_utilization(&map_network(
+            &layers,
+            dims,
+            &GroupConfig::R2C2,
+            policy,
+        ));
+        t.row(vec![
+            format!("{n}x{n}"),
+            "1.000".to_string(),
+            format!("{:.3}", e22 / base),
+            format!("{:.3}", e24 / base),
+            format!("{:.2}", u14),
+            format!("{:.2}", u22),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_r1c4_much_more_inconsecutive_than_r2c2() {
+        let t = fig6(&[GroupConfig::R1C4, GroupConfig::R2C2], 200_000, 99);
+        let parse = |row: &[String]| -> f64 {
+            row[1].trim_end_matches('%').parse::<f64>().unwrap()
+        };
+        let p14 = parse(&t.rows[0]);
+        let p22 = parse(&t.rows[1]);
+        // Paper: 3.49% vs 0.01% — two orders of magnitude apart.
+        assert!(p14 > 1.0, "R1C4 inconsecutivity {p14}% too low");
+        assert!(p22 < 0.2, "R2C2 inconsecutivity {p22}% too high");
+        assert!(p14 / p22.max(1e-6) > 20.0);
+    }
+
+    #[test]
+    fn fig11_generates_all_sizes() {
+        let t = fig11(
+            "resnet20",
+            &[64, 128, 256, 512],
+            &EnergyParams::default(),
+            MapperPolicy::KernelSplit,
+        )
+        .unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            let r22: f64 = row[2].parse().unwrap();
+            assert!(r22 < 1.0, "R2C2 should save energy: {r22}");
+        }
+    }
+}

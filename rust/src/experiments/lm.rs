@@ -1,0 +1,90 @@
+//! Table III: LM perplexity under SAFs per grouping configuration.
+
+use super::Table;
+use crate::coordinator::Method;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::metrics::mean_std;
+use crate::nn::lm::LmEvaluator;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::path::Path;
+
+pub struct LmOptions {
+    pub configs: Vec<GroupConfig>,
+    pub trials: usize,
+    pub threads: usize,
+    pub max_windows: usize,
+    pub include_unprotected: bool,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions {
+            configs: vec![GroupConfig::R1C4, GroupConfig::R2C2],
+            trials: 3,
+            threads: 1,
+            max_windows: 60,
+            include_unprotected: false,
+        }
+    }
+}
+
+/// Table III: perplexity per stream (jaxsrc/npsrc/pysrc stand in for
+/// WikiText-2/PTB/C4), mean over chips.
+pub fn table3(rt: &Runtime, art: &Path, opts: &LmOptions) -> Result<Table> {
+    let mut t = Table::new(
+        "Table III — LM perplexity under SAFs (mean ± std over chips)",
+        &["config", "prec.", "jaxsrc", "npsrc", "pysrc"],
+    );
+
+    // Fault-free quantized reference.
+    {
+        let mut ev = LmEvaluator::new(rt, art, GroupConfig::R1C4)?;
+        ev.max_windows = opts.max_windows;
+        let r = ev.eval(0, FaultRates::none(), Method::Complete, opts.threads)?;
+        let mut row = vec!["w/o SAF".to_string(), "8 bit".to_string()];
+        for (_, p) in &r.ppl {
+            row.push(format!("{p:.2}"));
+        }
+        t.row(row);
+    }
+
+    for cfg in &opts.configs {
+        for (method, suffix) in method_rows(opts.include_unprotected) {
+            let mut ev = LmEvaluator::new(rt, art, *cfg)?;
+            ev.max_windows = opts.max_windows;
+            // trials × 3 streams.
+            let mut per_stream: Vec<Vec<f64>> = vec![Vec::new(); 3];
+            for trial in 0..opts.trials {
+                let r = ev.eval(
+                    9000 + trial as u64,
+                    FaultRates::paper_default(),
+                    method,
+                    opts.threads,
+                )?;
+                for (i, (_, p)) in r.ppl.iter().enumerate() {
+                    per_stream[i].push(*p);
+                }
+            }
+            let mut row = vec![
+                format!("{}{}", cfg.name(), suffix),
+                format!("{:.2} bit", cfg.precision_bits()),
+            ];
+            for s in &per_stream {
+                let (m, sd) = mean_std(s);
+                row.push(format!("{m:.2} (±{sd:.2})"));
+            }
+            t.row(row);
+        }
+    }
+    Ok(t)
+}
+
+fn method_rows(include_unprotected: bool) -> Vec<(Method, &'static str)> {
+    if include_unprotected {
+        vec![(Method::Complete, ""), (Method::Unprotected, " raw")]
+    } else {
+        vec![(Method::Complete, "")]
+    }
+}

@@ -1,0 +1,80 @@
+//! Chip-level fault map banks.
+//!
+//! A physical chip has one fixed SAF pattern; the compiler runs once per
+//! chip (the paper's recurring per-chip compilation cost). `ChipFaults`
+//! models a chip as a deterministic stream of per-group fault maps derived
+//! from a chip seed, so "compile model M for chip 7" is reproducible and
+//! different chips get different patterns — matching the paper's protocol
+//! of averaging over independently sampled fault maps (10 trials for the
+//! LM experiments, ± std for Table I).
+
+use super::{FaultRates, GroupFaults};
+use crate::util::prng::Rng;
+
+/// One chip's fault universe: seeds + rates. Group fault maps are drawn
+/// lazily per (tensor, group index), so arbitrarily large models never
+/// materialize a full chip map.
+#[derive(Clone, Debug)]
+pub struct ChipFaults {
+    pub chip_seed: u64,
+    pub rates: FaultRates,
+}
+
+impl ChipFaults {
+    pub fn new(chip_seed: u64, rates: FaultRates) -> Self {
+        ChipFaults { chip_seed, rates }
+    }
+
+    /// RNG for one tensor's region of the chip.
+    pub fn tensor_rng(&self, tensor_id: u64) -> Rng {
+        let mut root = Rng::new(self.chip_seed);
+        root.fork(tensor_id.wrapping_mul(0x0123_4567_89AB_CDEF) ^ 0xA5A5_A5A5)
+    }
+
+    /// Sample the fault maps for `n_groups` groups of `cells` cells each in
+    /// tensor `tensor_id`. Deterministic in (chip_seed, tensor_id).
+    pub fn sample_tensor(&self, tensor_id: u64, n_groups: usize, cells: usize) -> Vec<GroupFaults> {
+        let mut rng = self.tensor_rng(tensor_id);
+        (0..n_groups)
+            .map(|_| GroupFaults::sample(cells, &self.rates, &mut rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_chip_and_tensor() {
+        let chip = ChipFaults::new(1234, FaultRates::paper_default());
+        let a = chip.sample_tensor(5, 100, 8);
+        let b = chip.sample_tensor(5, 100, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_tensors_differ() {
+        let chip = ChipFaults::new(1234, FaultRates::paper_default());
+        let a = chip.sample_tensor(1, 200, 8);
+        let b = chip.sample_tensor(2, 200, 8);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn different_chips_differ() {
+        let c1 = ChipFaults::new(1, FaultRates::paper_default());
+        let c2 = ChipFaults::new(2, FaultRates::paper_default());
+        assert_ne!(c1.sample_tensor(0, 200, 8), c2.sample_tensor(0, 200, 8));
+    }
+
+    #[test]
+    fn observed_rate_close_to_requested() {
+        let chip = ChipFaults::new(77, FaultRates::paper_default());
+        let groups = chip.sample_tensor(0, 20_000, 8);
+        let cells: usize = groups.len() * 16;
+        let faults: usize = groups.iter().map(|g| g.num_faults()).sum();
+        let rate = faults as f64 / cells as f64;
+        assert!((rate - 0.1079).abs() < 0.005, "rate={rate}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Fault-map extraction: march-test + squeeze-search simulation.
+//!
+//! The paper assumes per-chip fault maps are known, citing the
+//! squeeze-search scheme (Chen et al., TC'15) for obtaining them. This
+//! module closes that loop in simulation: a [`PhysicalArray`] holds the
+//! ground-truth cell states; [`march_detect`] plays the classical march
+//! sequence (write-0/read, write-max/read) against it to classify every
+//! cell, optionally with read noise, and returns the measured
+//! [`FaultState`] map the compiler consumes.
+//!
+//! With zero read noise the procedure is exact (tests assert recovery of
+//! the injected map); with noise, repeated reads + majority vote emulate
+//! the "squeeze" refinement and the residual misclassification rate is
+//! exposed so experiments can study compilation under *imperfect* fault
+//! knowledge — an extension the paper leaves open.
+
+use super::{FaultRates, FaultState};
+use crate::util::prng::Rng;
+
+/// Ground-truth array of cells for detection experiments.
+#[derive(Clone, Debug)]
+pub struct PhysicalArray {
+    pub levels: u8,
+    pub truth: Vec<FaultState>,
+    /// Programmed values (what a write stored, before fault override).
+    stored: Vec<u8>,
+}
+
+impl PhysicalArray {
+    pub fn sample(cells: usize, levels: u8, rates: &FaultRates, rng: &mut Rng) -> Self {
+        PhysicalArray {
+            levels,
+            truth: (0..cells).map(|_| rates.sample(rng)).collect(),
+            stored: vec![0; cells],
+        }
+    }
+
+    pub fn write(&mut self, idx: usize, v: u8) {
+        self.stored[idx] = v.min(self.levels - 1);
+    }
+
+    /// Read with optional analog noise: the returned level flips to a
+    /// neighbouring level with probability `noise`.
+    pub fn read(&self, idx: usize, noise: f64, rng: &mut Rng) -> u8 {
+        let ideal = self.truth[idx].apply(self.stored[idx], self.levels);
+        if noise > 0.0 && rng.chance(noise) {
+            if ideal == 0 {
+                1.min(self.levels - 1)
+            } else if rng.chance(0.5) {
+                ideal - 1
+            } else {
+                (ideal + 1).min(self.levels - 1)
+            }
+        } else {
+            ideal
+        }
+    }
+}
+
+/// Result of a detection pass.
+#[derive(Clone, Debug)]
+pub struct DetectionResult {
+    pub measured: Vec<FaultState>,
+    /// Cells whose measured state disagrees with ground truth.
+    pub misclassified: usize,
+}
+
+/// March-style detection with `votes`-fold repeated reads (majority).
+///
+/// Sequence per cell: write 0 → read (expect 0; higher ⇒ SA0 candidate);
+/// write L−1 → read (expect L−1; lower ⇒ SA1 candidate). A cell flagged in
+/// both directions is impossible for a pure stuck-at and resolves to the
+/// stronger deviation — with noise this is where the majority vote earns
+/// its keep.
+pub fn march_detect(
+    array: &mut PhysicalArray,
+    noise: f64,
+    votes: usize,
+    rng: &mut Rng,
+) -> DetectionResult {
+    let n = array.truth.len();
+    let votes = votes.max(1) | 1; // odd
+    let mut measured = Vec::with_capacity(n);
+    for idx in 0..n {
+        // Phase 1: write 0, read back.
+        array.write(idx, 0);
+        let mut high_votes = 0usize;
+        for _ in 0..votes {
+            if array.read(idx, noise, rng) == array.levels - 1 {
+                high_votes += 1;
+            }
+        }
+        // Phase 2: write L−1, read back.
+        array.write(idx, array.levels - 1);
+        let mut low_votes = 0usize;
+        for _ in 0..votes {
+            if array.read(idx, noise, rng) == 0 {
+                low_votes += 1;
+            }
+        }
+        let state = if high_votes * 2 > votes {
+            FaultState::Sa0 // reads max even when programmed to 0
+        } else if low_votes * 2 > votes {
+            FaultState::Sa1 // reads 0 even when programmed to max
+        } else {
+            FaultState::Free
+        };
+        measured.push(state);
+    }
+    let misclassified = measured
+        .iter()
+        .zip(&array.truth)
+        .filter(|(m, t)| m != t)
+        .count();
+    DetectionResult { measured, misclassified }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_detection_is_exact() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let mut arr = PhysicalArray::sample(500, 4, &FaultRates::paper_default(), &mut rng);
+            let truth = arr.truth.clone();
+            let det = march_detect(&mut arr, 0.0, 1, &mut rng);
+            assert_eq!(det.misclassified, 0);
+            assert_eq!(det.measured, truth);
+        }
+    }
+
+    #[test]
+    fn majority_vote_beats_single_read_under_noise() {
+        let mut rng = Rng::new(9);
+        let mut total_single = 0usize;
+        let mut total_voted = 0usize;
+        for trial in 0..10 {
+            let mut arr =
+                PhysicalArray::sample(2_000, 4, &FaultRates::paper_default(), &mut rng);
+            let mut rng1 = Rng::new(100 + trial);
+            let single = march_detect(&mut arr, 0.10, 1, &mut rng1);
+            let mut rng2 = Rng::new(200 + trial);
+            let voted = march_detect(&mut arr, 0.10, 7, &mut rng2);
+            total_single += single.misclassified;
+            total_voted += voted.misclassified;
+        }
+        assert!(
+            total_voted * 3 < total_single.max(1),
+            "voting {total_voted} vs single {total_single}"
+        );
+    }
+
+    #[test]
+    fn free_cells_survive_detection_noise() {
+        // Noise can flip to a *neighbouring* level only; free-cell reads of
+        // 0/max are never mistaken for the opposite rail under majority.
+        let mut rng = Rng::new(11);
+        let mut arr = PhysicalArray::sample(3_000, 4, &FaultRates::none(), &mut rng);
+        let det = march_detect(&mut arr, 0.15, 5, &mut rng);
+        assert_eq!(det.misclassified, 0);
+    }
+
+    #[test]
+    fn two_level_cells_work() {
+        // 1-bit cells (L=2): neighbouring-level noise *can* cross the rail,
+        // so misclassification is possible but must stay below the noise
+        // rate with voting.
+        let mut rng = Rng::new(13);
+        let mut arr = PhysicalArray::sample(5_000, 2, &FaultRates::paper_default(), &mut rng);
+        let det = march_detect(&mut arr, 0.05, 9, &mut rng);
+        assert!(
+            (det.misclassified as f64) < 0.02 * 5_000.0,
+            "misclassified {}",
+            det.misclassified
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Stuck-at-fault (SAF) model — §III of the paper.
+//!
+//! A ReRAM cell is either programmable (`Free`), stuck at its highest
+//! conductance level (`SA0`, value locked to `L-1`), or stuck at its lowest
+//! (`SA1`, value locked to `0`).
+//!
+//! Naming follows the paper (and the RRAM test literature it cites): SA0 =
+//! stuck at the *low-resistance* state = maximum cell value; SA1 = stuck at
+//! the *high-resistance* state = zero. This matches the paper's Fig 1b
+//! worked example (SA0 in the MSB + SA1 in the 2nd LSB turn 52 into 240
+//! for L=4, c=4).
+//!
+//! Fault maps are sampled i.i.d. per cell with published rates
+//! (SA0 1.75%, SA1 9.04% — Chen et al., squeeze-search characterization),
+//! uniformly across bit positions, exactly as the paper's experimental
+//! setup describes.
+
+pub mod bank;
+pub mod detection;
+
+use crate::util::prng::Rng;
+
+/// Paper's default SA0 rate (fraction of all cells).
+pub const DEFAULT_P_SA0: f64 = 0.0175;
+/// Paper's default SA1 rate (fraction of all cells).
+pub const DEFAULT_P_SA1: f64 = 0.0904;
+
+/// Per-cell fault state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FaultState {
+    /// Programmable cell (free variable in the decomposition problem).
+    Free = 0,
+    /// Stuck at low-resistance state: cell reads `L-1` regardless of writes.
+    Sa0 = 1,
+    /// Stuck at high-resistance state: cell reads `0` regardless of writes.
+    Sa1 = 2,
+}
+
+impl FaultState {
+    /// The value a cell reports when programmed to `v` under this state.
+    #[inline]
+    pub fn apply(self, v: u8, levels: u8) -> u8 {
+        match self {
+            FaultState::Free => v,
+            FaultState::Sa0 => levels - 1,
+            FaultState::Sa1 => 0,
+        }
+    }
+
+    #[inline]
+    pub fn is_fault(self) -> bool {
+        !matches!(self, FaultState::Free)
+    }
+}
+
+/// SA0/SA1 occurrence rates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRates {
+    pub p_sa0: f64,
+    pub p_sa1: f64,
+}
+
+impl FaultRates {
+    pub const fn paper_default() -> Self {
+        FaultRates { p_sa0: DEFAULT_P_SA0, p_sa1: DEFAULT_P_SA1 }
+    }
+
+    /// No faults at all (ideal array).
+    pub const fn none() -> Self {
+        FaultRates { p_sa0: 0.0, p_sa1: 0.0 }
+    }
+
+    /// Scale total fault rate to `total`, keeping the paper's SA0:SA1 ratio
+    /// of 1.75:9.04 — this is exactly the Fig 9 sweep protocol.
+    pub fn scaled_to_total(total: f64) -> Self {
+        let base = DEFAULT_P_SA0 + DEFAULT_P_SA1;
+        FaultRates {
+            p_sa0: total * DEFAULT_P_SA0 / base,
+            p_sa1: total * DEFAULT_P_SA1 / base,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.p_sa0 + self.p_sa1
+    }
+
+    /// Sample one cell's state.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> FaultState {
+        let u = rng.f64();
+        if u < self.p_sa0 {
+            FaultState::Sa0
+        } else if u < self.p_sa0 + self.p_sa1 {
+            FaultState::Sa1
+        } else {
+            FaultState::Free
+        }
+    }
+}
+
+/// The fault map for one weight's grouped cells across the positive and
+/// negative arrays. Cell layout matches `grouping::Bitmap`: column-major by
+/// significance, `cells[col * rows + row]`, column 0 = MSB.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GroupFaults {
+    pub pos: Vec<FaultState>,
+    pub neg: Vec<FaultState>,
+}
+
+impl GroupFaults {
+    pub fn free(cells: usize) -> Self {
+        GroupFaults { pos: vec![FaultState::Free; cells], neg: vec![FaultState::Free; cells] }
+    }
+
+    pub fn sample(cells: usize, rates: &FaultRates, rng: &mut Rng) -> Self {
+        GroupFaults {
+            pos: (0..cells).map(|_| rates.sample(rng)).collect(),
+            neg: (0..cells).map(|_| rates.sample(rng)).collect(),
+        }
+    }
+
+    pub fn num_faults(&self) -> usize {
+        self.pos.iter().chain(&self.neg).filter(|f| f.is_fault()).count()
+    }
+
+    pub fn is_fault_free(&self) -> bool {
+        self.pos.iter().chain(&self.neg).all(|f| !f.is_fault())
+    }
+
+    /// Dense bit-pattern key for memoization: 2 bits per cell. Supports up
+    /// to 32 cells total (r*c <= 16), which covers every configuration the
+    /// paper evaluates (and then some).
+    pub fn pattern_key(&self) -> u64 {
+        debug_assert!(self.pos.len() + self.neg.len() <= 32);
+        let mut key = 0u64;
+        for f in self.pos.iter().chain(&self.neg) {
+            key = (key << 2) | (*f as u64);
+        }
+        key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_semantics() {
+        assert_eq!(FaultState::Free.apply(2, 4), 2);
+        assert_eq!(FaultState::Sa0.apply(2, 4), 3);
+        assert_eq!(FaultState::Sa1.apply(2, 4), 0);
+        assert_eq!(FaultState::Sa0.apply(0, 2), 1);
+    }
+
+    #[test]
+    fn rates_sampling_statistics() {
+        let rates = FaultRates::paper_default();
+        let mut rng = Rng::new(99);
+        let n = 200_000;
+        let mut sa0 = 0;
+        let mut sa1 = 0;
+        for _ in 0..n {
+            match rates.sample(&mut rng) {
+                FaultState::Sa0 => sa0 += 1,
+                FaultState::Sa1 => sa1 += 1,
+                FaultState::Free => {}
+            }
+        }
+        let r0 = sa0 as f64 / n as f64;
+        let r1 = sa1 as f64 / n as f64;
+        assert!((r0 - DEFAULT_P_SA0).abs() < 0.002, "sa0 rate {r0}");
+        assert!((r1 - DEFAULT_P_SA1).abs() < 0.004, "sa1 rate {r1}");
+    }
+
+    #[test]
+    fn scaled_rates_preserve_ratio() {
+        let r = FaultRates::scaled_to_total(0.05);
+        assert!((r.total() - 0.05).abs() < 1e-12);
+        assert!((r.p_sa0 / r.p_sa1 - DEFAULT_P_SA0 / DEFAULT_P_SA1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_rates_always_free() {
+        let rates = FaultRates::none();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(rates.sample(&mut rng), FaultState::Free);
+        }
+    }
+
+    #[test]
+    fn pattern_key_distinct_and_stable() {
+        let a = GroupFaults {
+            pos: vec![FaultState::Free, FaultState::Sa0],
+            neg: vec![FaultState::Sa1, FaultState::Free],
+        };
+        let b = GroupFaults {
+            pos: vec![FaultState::Sa0, FaultState::Free],
+            neg: vec![FaultState::Sa1, FaultState::Free],
+        };
+        assert_ne!(a.pattern_key(), b.pattern_key());
+        assert_eq!(a.pattern_key(), a.clone().pattern_key());
+    }
+
+    #[test]
+    fn fault_free_detection() {
+        assert!(GroupFaults::free(8).is_fault_free());
+        let mut g = GroupFaults::free(8);
+        g.neg[3] = FaultState::Sa1;
+        assert!(!g.is_fault_free());
+        assert_eq!(g.num_faults(), 1);
+    }
+}

@@ -1,0 +1,451 @@
+//! Fault analysis of a grouped bitmap pair — Theorems 1 and 2 (§III).
+//!
+//! Given a `GroupConfig` and a `GroupFaults` map this computes, in closed
+//! form (no enumeration):
+//!
+//! * the constant component `C = (L−1)·(d(F0⁺) − d(F0⁻))` of Eq. (4);
+//! * the representable range `[C − N, C + P]` of the faulty weight, where
+//!   `P`/`N` are the free-cell capacities of the positive/negative arrays
+//!   (Theorem 1 — the *clipping* characterization);
+//! * whether the representable set is *consecutive* (gap-free). The paper's
+//!   Theorem 2 gives a sufficient condition for inconsecutivity when a
+//!   whole significance column is stuck; we implement the exact criterion
+//!   (complete-sequence test over free-cell significances), which the
+//!   pipeline needs to decide FAWD vs CVM safely, and test both against
+//!   brute-force enumeration;
+//! * a constructive zero-error solution (greedy digit assignment) whenever
+//!   the target is representable and the set is consecutive.
+
+use super::bitmap::{Bitmap, Decomposition};
+use super::config::GroupConfig;
+use crate::fault::{FaultState, GroupFaults};
+
+/// Which array a free cell lives in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Array {
+    Pos,
+    Neg,
+}
+
+/// One programmable (fault-free) cell of the group.
+#[derive(Clone, Copy, Debug)]
+pub struct FreeCell {
+    pub array: Array,
+    /// Flat index within its bitmap.
+    pub idx: usize,
+    /// Column significance.
+    pub sig: i64,
+}
+
+/// Closed-form fault analysis for one (config, faultmap) pair.
+#[derive(Clone, Debug)]
+pub struct FaultAnalysis {
+    pub cfg: GroupConfig,
+    /// Constant component `C` of Eq. (4).
+    pub constant: i64,
+    /// Max positive free contribution `max(d(Ẋ⁺))`.
+    pub pos_cap: i64,
+    /// Max negative free contribution `max(d(Ẋ⁻))`.
+    pub neg_cap: i64,
+    /// Free cells, sorted by descending significance (for greedy assign).
+    pub free: Vec<FreeCell>,
+    /// Exact consecutivity of the representable set.
+    pub consecutive: bool,
+}
+
+impl FaultAnalysis {
+    pub fn new(cfg: &GroupConfig, faults: &GroupFaults) -> FaultAnalysis {
+        debug_assert_eq!(faults.pos.len(), cfg.cells());
+        debug_assert_eq!(faults.neg.len(), cfg.cells());
+        let lm1 = cfg.levels as i64 - 1;
+
+        let mut constant = 0i64;
+        let mut pos_cap = 0i64;
+        let mut neg_cap = 0i64;
+        let mut free: Vec<FreeCell> = Vec::with_capacity(2 * cfg.cells());
+
+        for (idx, f) in faults.pos.iter().enumerate() {
+            let sig = cfg.sig_of(idx);
+            match f {
+                FaultState::Free => {
+                    pos_cap += sig * lm1;
+                    free.push(FreeCell { array: Array::Pos, idx, sig });
+                }
+                FaultState::Sa0 => constant += sig * lm1,
+                FaultState::Sa1 => {}
+            }
+        }
+        for (idx, f) in faults.neg.iter().enumerate() {
+            let sig = cfg.sig_of(idx);
+            match f {
+                FaultState::Free => {
+                    neg_cap += sig * lm1;
+                    free.push(FreeCell { array: Array::Neg, idx, sig });
+                }
+                FaultState::Sa0 => constant -= sig * lm1,
+                FaultState::Sa1 => {}
+            }
+        }
+
+        // Sort ascending once; check consecutivity on the ascending order,
+        // then reverse in place for the descending-order greedy solver
+        // (avoids a second allocation — this is the per-weight hot path).
+        free.sort_unstable_by_key(|cell| cell.sig);
+
+        // Exact consecutivity: the achievable variable component, shifted by
+        // +neg_cap, is the set of sums Σ v_i·sig_i with v_i ∈ [0, L−1] over
+        // *all* free cells (both arrays — a negative-array cell programmed
+        // to b contributes (L−1−b)·sig − (L−1)·sig). Such a digit system is
+        // gap-free iff, processing significances in increasing order, each
+        // item's significance is ≤ 1 + (total capacity of smaller items).
+        let mut consecutive = true;
+        let mut reach = 0i64; // all of [0, reach] is achievable so far
+        for cell in &free {
+            if cell.sig > reach + 1 {
+                consecutive = false;
+                break;
+            }
+            reach += cell.sig * lm1;
+        }
+        free.reverse();
+
+        FaultAnalysis { cfg: *cfg, constant, pos_cap, neg_cap, free, consecutive }
+    }
+
+    /// Theorem 1 quantities: inclusive faulty-representable range.
+    #[inline]
+    pub fn range(&self) -> (i64, i64) {
+        (self.constant - self.neg_cap, self.constant + self.pos_cap)
+    }
+
+    /// Width of the faulty range (Theorem 1 says this strictly shrinks
+    /// whenever at least one fault exists).
+    pub fn range_width(&self) -> i64 {
+        self.pos_cap + self.neg_cap
+    }
+
+    /// Does the paper's Theorem-2 *sufficient* condition hold for any
+    /// significance column? (All cells of significance `L^{i-1}`, i ≠ MSB,
+    /// stuck in both arrays, and `(L^i − 1)/(L^{i−1} − 1) > 2r`.)
+    pub fn theorem2_condition(&self, faults: &GroupFaults) -> bool {
+        let l = self.cfg.levels as i64;
+        for col in 1..self.cfg.cols {
+            // col > 0 ⇒ not the MSB; significance index i = cols − col.
+            let all_stuck = (0..self.cfg.rows).all(|row| {
+                let idx = col * self.cfg.rows + row;
+                faults.pos[idx].is_fault() && faults.neg[idx].is_fault()
+            });
+            if !all_stuck {
+                continue;
+            }
+            let i = (self.cfg.cols - col) as u32; // significance exponent above this column
+            let num = l.pow(i) - 1;
+            let den = l.pow(i - 1) - 1;
+            if den > 0 && num > 2 * self.cfg.rows as i64 * den {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is `w` inside the faulty representable range?
+    #[inline]
+    pub fn in_range(&self, w: i64) -> bool {
+        let (lo, hi) = self.range();
+        w >= lo && w <= hi
+    }
+
+    /// Clamp `w` to the faulty range — the Theorem-1 trivial solution value.
+    #[inline]
+    pub fn clamp(&self, w: i64) -> i64 {
+        let (lo, hi) = self.range();
+        w.clamp(lo, hi)
+    }
+
+    /// Build the decomposition whose faulty value is exactly the range
+    /// extreme: free cells of one array full, the other zeroed.
+    pub fn extreme_solution(&self, hi: bool) -> Decomposition {
+        let mut pos = Bitmap::zeros(&self.cfg);
+        let mut neg = Bitmap::zeros(&self.cfg);
+        for cell in &self.free {
+            match (cell.array, hi) {
+                (Array::Pos, true) => pos.cells[cell.idx] = self.cfg.levels - 1,
+                (Array::Neg, false) => neg.cells[cell.idx] = self.cfg.levels - 1,
+                _ => {}
+            }
+        }
+        Decomposition { pos, neg }
+    }
+
+    /// Constructive zero-error solution via greedy generalized-digit
+    /// assignment. Returns `None` if `w` is out of range, or if the set is
+    /// inconsecutive and the greedy residual cannot be closed (the CVM path
+    /// handles those cases).
+    ///
+    /// Transformation: a negative-array free cell programmed to `b`
+    /// contributes `−b·sig`; substituting `v = (L−1) − b` makes every free
+    /// cell a non-negative digit `v·sig` with target `T = w − C + N ≥ 0`.
+    pub fn solve_exact(&self, w: i64) -> Option<Decomposition> {
+        if !self.in_range(w) {
+            return None;
+        }
+        let lm1 = (self.cfg.levels - 1) as i64;
+        let mut target = w - self.constant + self.neg_cap;
+        debug_assert!(target >= 0);
+
+        // Greedy over descending significance with exact remainder guard:
+        // keep the remaining lower capacity as a running suffix sum and
+        // take v = clamp(ceil((T − lower_cap)/sig), 0, min(L−1, T/sig)).
+        // Digits are written straight into the bitmaps — no intermediate
+        // allocations (per-weight hot path; see EXPERIMENTS.md §Perf).
+        let mut lower = self.pos_cap + self.neg_cap; // capacity of cells i..
+        let mut pos = Bitmap::zeros(&self.cfg);
+        let mut neg = Bitmap::zeros(&self.cfg);
+        for cell in &self.free {
+            lower -= cell.sig * lm1; // capacity strictly below cell i
+            let max_take = lm1.min(target / cell.sig);
+            // Must take at least enough that the rest fits below.
+            let need = target - lower;
+            let min_take = if need > 0 { (need + cell.sig - 1) / cell.sig } else { 0 };
+            if min_take > max_take {
+                return None; // unreachable target (inconsecutive gap)
+            }
+            // Prefer the largest take (keeps remainder smallest — standard
+            // complete-sequence greedy; also tends to sparsify pos array).
+            let v = max_take;
+            target -= v * cell.sig;
+            match cell.array {
+                Array::Pos => pos.cells[cell.idx] = v as u8,
+                Array::Neg => neg.cells[cell.idx] = (lm1 - v) as u8,
+            }
+        }
+        if target != 0 {
+            return None;
+        }
+        Some(Decomposition { pos, neg })
+    }
+
+    /// Enumerate every achievable faulty value (exponential in free cells —
+    /// test/verification use only).
+    pub fn enumerate_values(&self) -> Vec<i64> {
+        let lm1 = (self.cfg.levels - 1) as i64;
+        let mut vals = vec![0i64];
+        for cell in &self.free {
+            let signed = match cell.array {
+                Array::Pos => cell.sig,
+                Array::Neg => -cell.sig,
+            };
+            let mut next = Vec::with_capacity(vals.len() * (lm1 as usize + 1));
+            for v in &vals {
+                for d in 0..=lm1 {
+                    next.push(v + signed * d);
+                }
+            }
+            next.sort_unstable();
+            next.dedup();
+            vals = next;
+        }
+        vals.iter_mut().for_each(|v| *v += self.constant);
+        vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultRates;
+    use crate::util::prop::prop_check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn random_cfg(rng: &mut crate::util::prng::Rng) -> GroupConfig {
+        let rows = 1 + rng.index(3);
+        let cols = 1 + rng.index(3);
+        let levels = [2u8, 4][rng.index(2)];
+        GroupConfig::new(rows, cols, levels)
+    }
+
+    #[test]
+    fn no_faults_full_range_consecutive() {
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+            let fa = FaultAnalysis::new(&cfg, &GroupFaults::free(cfg.cells()));
+            assert_eq!(fa.range(), (-cfg.max_per_array(), cfg.max_per_array()));
+            assert!(fa.consecutive);
+            assert_eq!(fa.constant, 0);
+        }
+    }
+
+    #[test]
+    fn theorem1_any_fault_strictly_shrinks_range() {
+        prop_check("thm1-clipping", 400, |rng| {
+            let cfg = random_cfg(rng);
+            let faults = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: 0.2, p_sa1: 0.2 },
+                rng,
+            );
+            let fa = FaultAnalysis::new(&cfg, &faults);
+            let ideal_width = 2 * cfg.max_per_array();
+            if faults.is_fault_free() {
+                prop_assert!(fa.range_width() == ideal_width, "free map lost range");
+            } else {
+                prop_assert!(
+                    fa.range_width() < ideal_width,
+                    "faulty map range {} !< ideal {} (cfg {cfg}, faults {faults:?})",
+                    fa.range_width(),
+                    ideal_width
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_matches_enumeration() {
+        prop_check("range-vs-enum", 200, |rng| {
+            let cfg = random_cfg(rng);
+            let faults = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: 0.25, p_sa1: 0.25 },
+                rng,
+            );
+            let fa = FaultAnalysis::new(&cfg, &faults);
+            let vals = fa.enumerate_values();
+            let (lo, hi) = fa.range();
+            prop_assert!(*vals.first().unwrap() == lo, "min mismatch");
+            prop_assert!(*vals.last().unwrap() == hi, "max mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn consecutivity_matches_enumeration() {
+        prop_check("consec-vs-enum", 300, |rng| {
+            let cfg = random_cfg(rng);
+            let faults = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: 0.3, p_sa1: 0.3 },
+                rng,
+            );
+            let fa = FaultAnalysis::new(&cfg, &faults);
+            let vals = fa.enumerate_values();
+            let gap_free = vals.windows(2).all(|w| w[1] - w[0] == 1) || vals.len() <= 1;
+            prop_assert!(
+                fa.consecutive == gap_free,
+                "criterion {} but enumeration gap_free {} (cfg {cfg}, faults {faults:?}, vals {vals:?})",
+                fa.consecutive,
+                gap_free
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theorem2_sufficient_condition_implies_inconsecutive() {
+        // R1C4: stick both LSB cells (pos+neg) at col 3 (sig 1): then
+        // significance step 4 with max lower... use col index 1 (sig 16):
+        // condition (L^i − 1)/(L^{i−1} − 1) = (4^3−1)/(4^2−1) = 63/15 = 4.2 > 2r = 2.
+        let cfg = GroupConfig::R1C4;
+        let mut faults = GroupFaults::free(cfg.cells());
+        faults.pos[1] = FaultState::Sa1; // col 1 (sig 16)
+        faults.neg[1] = FaultState::Sa0;
+        let fa = FaultAnalysis::new(&cfg, &faults);
+        assert!(fa.theorem2_condition(&faults));
+        assert!(!fa.consecutive, "theorem 2 condition must imply inconsecutive");
+        let vals = fa.enumerate_values();
+        assert!(vals.windows(2).any(|w| w[1] - w[0] > 1));
+    }
+
+    #[test]
+    fn theorem2_r2c2_needs_all_four_cells() {
+        // In R2C2 a single stuck LSB does not trigger inconsecutivity —
+        // the redundancy argument from Fig 6.
+        let cfg = GroupConfig::R2C2;
+        let mut faults = GroupFaults::free(cfg.cells());
+        faults.pos[2] = FaultState::Sa1; // one LSB cell of four
+        let fa = FaultAnalysis::new(&cfg, &faults);
+        assert!(fa.consecutive);
+        assert!(!fa.theorem2_condition(&faults));
+    }
+
+    #[test]
+    fn solve_exact_zero_error_when_consecutive() {
+        prop_check("solve-exact", 500, |rng| {
+            let cfg = random_cfg(rng);
+            let faults = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: 0.15, p_sa1: 0.15 },
+                rng,
+            );
+            let fa = FaultAnalysis::new(&cfg, &faults);
+            let (lo, hi) = fa.range();
+            if lo > hi {
+                return Ok(());
+            }
+            let w = rng.range_i64(lo, hi);
+            match fa.solve_exact(w) {
+                Some(d) => {
+                    let got = d.faulty_value(&cfg, &faults);
+                    prop_assert!(got == w, "solution decodes to {got}, want {w}");
+                    // Free-cell-only: stuck cells may hold anything, but our
+                    // solution must respect L-1 bounds.
+                    for &c in d.pos.cells.iter().chain(&d.neg.cells) {
+                        prop_assert!(c < cfg.levels, "cell value {c} out of bounds");
+                    }
+                }
+                None => {
+                    prop_assert!(
+                        !fa.consecutive,
+                        "solve_exact failed on consecutive set (w={w}, cfg={cfg}, faults={faults:?})"
+                    );
+                    // w must genuinely be unreachable.
+                    let vals = fa.enumerate_values();
+                    prop_assert!(
+                        !vals.contains(&w),
+                        "greedy failed but {w} is enumerable (cfg {cfg}, faults {faults:?})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extreme_solutions_hit_range_ends() {
+        prop_check("extremes", 200, |rng| {
+            let cfg = random_cfg(rng);
+            let faults = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: 0.25, p_sa1: 0.25 },
+                rng,
+            );
+            let fa = FaultAnalysis::new(&cfg, &faults);
+            let (lo, hi) = fa.range();
+            prop_assert_eq!(fa.extreme_solution(true).faulty_value(&cfg, &faults), hi);
+            prop_assert_eq!(fa.extreme_solution(false).faulty_value(&cfg, &faults), lo);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fig5_clipping_numbers() {
+        // Fig 5 narrative: an MSB fault in R1C4 wipes a large share of the
+        // range; the same fault in R2C2 wipes much less, because
+        // significance is distributed. Quantify both.
+        let r1c4 = GroupConfig::R1C4;
+        let mut f = GroupFaults::free(r1c4.cells());
+        f.pos[0] = FaultState::Sa1; // MSB stuck at 0 in pos array
+        let fa = FaultAnalysis::new(&r1c4, &f);
+        let loss_r1c4 = 1.0 - fa.range_width() as f64 / (2 * r1c4.max_per_array()) as f64;
+
+        let r2c2 = GroupConfig::R2C2;
+        let mut f2 = GroupFaults::free(r2c2.cells());
+        f2.pos[0] = FaultState::Sa1; // one of the two MSB cells
+        let fa2 = FaultAnalysis::new(&r2c2, &f2);
+        let loss_r2c2 = 1.0 - fa2.range_width() as f64 / (2 * r2c2.max_per_array()) as f64;
+
+        // R1C4 loses 192/510 ≈ 38%; R2C2 loses 12/60 = 20%.
+        assert!((loss_r1c4 - 192.0 / 510.0).abs() < 1e-9);
+        assert!((loss_r2c2 - 12.0 / 60.0).abs() < 1e-9);
+        assert!(loss_r2c2 < loss_r1c4);
+    }
+}

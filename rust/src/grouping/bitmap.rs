@@ -1,0 +1,238 @@
+//! Bitmaps: the cell-value matrices `X⁺`, `X⁻` holding one weight.
+//!
+//! Layout: flat `Vec<u8>`, index `col*rows + row`, column 0 = MSB. The
+//! decode function implements the paper's `d(X) = s X 1` (Eq. 2); fault
+//! application implements Eq. (1).
+
+use super::config::GroupConfig;
+use crate::fault::{FaultState, GroupFaults};
+
+/// Cell values for one array (positive or negative) of one weight group.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    pub cells: Vec<u8>,
+}
+
+impl Bitmap {
+    pub fn zeros(cfg: &GroupConfig) -> Self {
+        Bitmap { cells: vec![0; cfg.cells()] }
+    }
+
+    pub fn full(cfg: &GroupConfig) -> Self {
+        Bitmap { cells: vec![cfg.levels - 1; cfg.cells()] }
+    }
+
+    /// Decode `d(X) = Σ_cells sig(cell)·value(cell)` (Eq. 2's `sXl`).
+    pub fn decode(&self, cfg: &GroupConfig) -> i64 {
+        self.cells
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| cfg.sig_of(i) * v as i64)
+            .sum()
+    }
+
+    /// Decode after fault injection: `d(f(X, F0, F1))` per Eq. (1) — SA0
+    /// cells read `L-1`, SA1 cells read `0`, free cells read their value.
+    pub fn decode_faulty(&self, cfg: &GroupConfig, faults: &[FaultState]) -> i64 {
+        debug_assert_eq!(self.cells.len(), faults.len());
+        self.cells
+            .iter()
+            .zip(faults)
+            .enumerate()
+            .map(|(i, (&v, f))| cfg.sig_of(i) * f.apply(v, cfg.levels) as i64)
+            .sum()
+    }
+
+    /// The faulty bitmap itself, `X̃ = (1−F0−F1)⊙X + (L−1)F0`.
+    pub fn inject(&self, cfg: &GroupConfig, faults: &[FaultState]) -> Bitmap {
+        Bitmap {
+            cells: self
+                .cells
+                .iter()
+                .zip(faults)
+                .map(|(&v, f)| f.apply(v, cfg.levels))
+                .collect(),
+        }
+    }
+}
+
+/// A positive/negative bitmap pair representing one signed weight.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Decomposition {
+    pub pos: Bitmap,
+    pub neg: Bitmap,
+}
+
+impl Decomposition {
+    /// Ideal (fault-unaware) sign decomposition + base-L digit encoding:
+    /// the magnitude goes into the matching array, zero into the other.
+    /// Rows are filled greedily: row 0 takes as much of each digit as it
+    /// can, overflow cascades into further rows (for r>1 a digit can exceed
+    /// L-1 per cell up to r(L-1) per column).
+    pub fn encode_ideal(w: i64, cfg: &GroupConfig) -> Decomposition {
+        debug_assert!(w.abs() <= cfg.max_per_array(), "weight {w} out of range for {cfg}");
+        let mag = w.unsigned_abs() as i64;
+        let filled = encode_magnitude(mag, cfg);
+        if w >= 0 {
+            Decomposition { pos: filled, neg: Bitmap::zeros(cfg) }
+        } else {
+            Decomposition { pos: Bitmap::zeros(cfg), neg: filled }
+        }
+    }
+
+    /// The represented (fault-free) weight: `d(X⁺) − d(X⁻)`.
+    pub fn value(&self, cfg: &GroupConfig) -> i64 {
+        self.pos.decode(cfg) - self.neg.decode(cfg)
+    }
+
+    /// The faulty weight `w̃ = d(f(X⁺,…)) − d(f(X⁻,…))` (Eq. 2).
+    pub fn faulty_value(&self, cfg: &GroupConfig, faults: &GroupFaults) -> i64 {
+        self.pos.decode_faulty(cfg, &faults.pos) - self.neg.decode_faulty(cfg, &faults.neg)
+    }
+
+    /// ℓ1 norm of the stored cell values (the ILP-FAWD objective).
+    pub fn l1(&self) -> u64 {
+        self.pos.cells.iter().chain(&self.neg.cells).map(|&v| v as u64).sum()
+    }
+}
+
+/// Encode a non-negative magnitude into one array's cells.
+///
+/// Per column (significance L^j) the digit can reach `r·(L−1)`; we compute
+/// generalized base-L digits with that per-column capacity, most
+/// significant first, then split each column digit across its `r` rows.
+fn encode_magnitude(mut mag: i64, cfg: &GroupConfig) -> Bitmap {
+    let mut bm = Bitmap::zeros(cfg);
+    let cap_per_col = (cfg.levels as i64 - 1) * cfg.rows as i64;
+    for col in 0..cfg.cols {
+        let sig = (cfg.levels as i64).pow((cfg.cols - 1 - col) as u32);
+        // Take as many units of this significance as available/needed.
+        let lower_cap = cap_per_col * (sig - 1) / (cfg.levels as i64 - 1) * 1; // r*(sig-1)
+        // capacity of all lower columns combined: r*(L-1)*(sig-1)/(L-1) = r*(sig-1)
+        let lower_max = cfg.rows as i64 * (sig - 1);
+        let mut take = mag / sig;
+        if take > cap_per_col {
+            take = cap_per_col;
+        }
+        // Ensure remainder fits in lower columns (always true for generalized
+        // base-L with per-column capacity ≥ L-1, but keep the guard exact).
+        while mag - take * sig > lower_max {
+            take += 1;
+        }
+        debug_assert!(take <= cap_per_col);
+        mag -= take * sig;
+        // Split `take` across rows.
+        for row in 0..cfg.rows {
+            let v = take.min(cfg.levels as i64 - 1);
+            bm.cells[col * cfg.rows + row] = v as u8;
+            take -= v;
+        }
+        debug_assert_eq!(take, 0);
+        let _ = lower_cap;
+    }
+    debug_assert_eq!(mag, 0);
+    bm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn decode_full_equals_max() {
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4, GroupConfig::new(3, 3, 2)] {
+            assert_eq!(Bitmap::full(&cfg).decode(&cfg), cfg.max_per_array());
+            assert_eq!(Bitmap::zeros(&cfg).decode(&cfg), 0);
+        }
+    }
+
+    #[test]
+    fn paper_fig1b_example() {
+        // 52 stored in R1C4 (L=4); SA0 at MSB, SA1 at 2nd-LSB ⇒ reads 240.
+        let cfg = GroupConfig::R1C4;
+        let d = Decomposition::encode_ideal(52, &cfg);
+        assert_eq!(d.pos.cells, vec![0, 3, 1, 0]);
+        let mut faults = GroupFaults::free(cfg.cells());
+        faults.pos[0] = FaultState::Sa0; // MSB
+        faults.pos[2] = FaultState::Sa1; // 2nd LSB
+        assert_eq!(d.faulty_value(&cfg, &faults), 240);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_weights() {
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+            for w in -cfg.max_per_array()..=cfg.max_per_array() {
+                let d = Decomposition::encode_ideal(w, &cfg);
+                assert_eq!(d.value(&cfg), w, "cfg={cfg} w={w}");
+                // Sign decomposition: one side must be all zeros.
+                if w >= 0 {
+                    assert!(d.neg.cells.iter().all(|&c| c == 0));
+                } else {
+                    assert!(d.pos.cells.iter().all(|&c| c == 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_roundtrip_random_configs() {
+        prop_check("encode-roundtrip", 300, |rng| {
+            let rows = 1 + rng.index(3);
+            let cols = 1 + rng.index(4);
+            let levels = [2u8, 4, 8][rng.index(3)];
+            let cfg = GroupConfig::new(rows, cols, levels);
+            let w = rng.range_i64(-cfg.max_per_array(), cfg.max_per_array());
+            let d = Decomposition::encode_ideal(w, &cfg);
+            prop_assert!(d.value(&cfg) == w, "w={w} decoded={} cfg={cfg}", d.value(&cfg));
+            for &cell in d.pos.cells.iter().chain(&d.neg.cells) {
+                prop_assert!(cell < levels, "cell {cell} exceeds L-1");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fault_free_faulty_value_equals_value() {
+        let cfg = GroupConfig::R2C2;
+        let faults = GroupFaults::free(cfg.cells());
+        for w in [-30, -1, 0, 17, 30] {
+            let d = Decomposition::encode_ideal(w, &cfg);
+            assert_eq!(d.faulty_value(&cfg, &faults), w);
+        }
+    }
+
+    #[test]
+    fn inject_matches_decode_faulty() {
+        prop_check("inject-consistency", 200, |rng| {
+            let cfg = GroupConfig::R2C2;
+            let w = rng.range_i64(-30, 30);
+            let d = Decomposition::encode_ideal(w, &cfg);
+            let faults = GroupFaults::sample(cfg.cells(), &crate::fault::FaultRates { p_sa0: 0.3, p_sa1: 0.3 }, rng);
+            let injected = d.pos.inject(&cfg, &faults.pos);
+            prop_assert!(
+                injected.decode(&cfg) == d.pos.decode_faulty(&cfg, &faults.pos),
+                "inject/decode_faulty disagree"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn l1_of_ideal_zero_is_zero() {
+        let cfg = GroupConfig::R1C4;
+        assert_eq!(Decomposition::encode_ideal(0, &cfg).l1(), 0);
+        assert!(Decomposition::encode_ideal(255, &cfg).l1() > 0);
+    }
+
+    #[test]
+    fn row_overflow_encoding() {
+        // R2C2: w=25 needs col digit > L-1 split across rows:
+        // 25 = 6*4 + 1 ⇒ col0 digit 6 → rows (3,3), col1 digit 1 → (1,0).
+        let cfg = GroupConfig::R2C2;
+        let d = Decomposition::encode_ideal(25, &cfg);
+        assert_eq!(d.pos.cells, vec![3, 3, 1, 0]);
+        assert_eq!(d.value(&cfg), 25);
+    }
+}

@@ -1,0 +1,162 @@
+//! Grouping configurations — §IV of the paper.
+//!
+//! A `GroupConfig` RrCc with cell resolution `L` groups `r × c` cells (per
+//! array) to represent one signed weight. Columns carry base-`L`
+//! significance `[L^{c-1}, …, L, 1]`; the `r` rows of a group share the
+//! same input voltage, so their conductances add — each significance is
+//! backed by `r` interchangeable cells. The representable magnitude per
+//! array is `r·(L^c − 1)`; with positive/negative sign decomposition the
+//! weight range is `[−r(L^c−1), +r(L^c−1)]`.
+//!
+//! Paper configurations (L = 4, i.e. 2-bit cells):
+//!   R1C4 → range ±255, 8.00 bits (conventional column grouping baseline)
+//!   R2C2 → range ±30,  4.95 bits
+//!   R2C4 → range ±510, 8.99 bits
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GroupConfig {
+    /// Grouped rows per weight (shared input voltage).
+    pub rows: usize,
+    /// Grouped columns per weight (bit slices).
+    pub cols: usize,
+    /// Cell conductance levels (2 = 1-bit cell, 4 = 2-bit cell).
+    pub levels: u8,
+}
+
+impl GroupConfig {
+    pub const fn new(rows: usize, cols: usize, levels: u8) -> Self {
+        GroupConfig { rows, cols, levels }
+    }
+
+    /// The paper's baseline: conventional column grouping, 2-bit cells.
+    pub const R1C4: GroupConfig = GroupConfig::new(1, 4, 4);
+    /// Hybrid grouping, 2 rows × 2 cols, 2-bit cells (the headline config).
+    pub const R2C2: GroupConfig = GroupConfig::new(2, 2, 4);
+    /// Hybrid grouping, 2 rows × 4 cols (higher precision than R1C4).
+    pub const R2C4: GroupConfig = GroupConfig::new(2, 4, 4);
+
+    /// Parse "r2c2" / "R2C2" style names, optionally with "@L" suffix
+    /// ("r2c2@2" = 1-bit cells).
+    pub fn parse(s: &str) -> Option<GroupConfig> {
+        let t = s.trim().to_ascii_lowercase();
+        let (body, levels) = match t.split_once('@') {
+            Some((b, l)) => (b.to_string(), l.parse().ok()?),
+            None => (t, 4u8),
+        };
+        let rest = body.strip_prefix('r')?;
+        let (r, c) = rest.split_once('c')?;
+        let rows: usize = r.parse().ok()?;
+        let cols: usize = c.parse().ok()?;
+        if rows == 0 || cols == 0 || levels < 2 {
+            return None;
+        }
+        Some(GroupConfig { rows, cols, levels })
+    }
+
+    /// Cells per array for one weight.
+    #[inline]
+    pub fn cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Column significance vector, MSB first: `[L^{c-1}, …, L, 1]`.
+    pub fn significances(&self) -> Vec<i64> {
+        let l = self.levels as i64;
+        (0..self.cols).rev().map(|j| l.pow(j as u32)).collect()
+    }
+
+    /// Significance of the cell at flat index `idx` (layout
+    /// `idx = col*rows + row`, column 0 = MSB).
+    #[inline]
+    pub fn sig_of(&self, idx: usize) -> i64 {
+        let col = idx / self.rows;
+        (self.levels as i64).pow((self.cols - 1 - col) as u32)
+    }
+
+    /// Maximum decoded magnitude of one array: `r·(L^c − 1)`.
+    pub fn max_per_array(&self) -> i64 {
+        self.rows as i64 * ((self.levels as i64).pow(self.cols as u32) - 1)
+    }
+
+    /// Effective precision in bits: `log2(r(L^c−1) + 1)` — the paper's
+    /// "Prec." column (R2C2 → 4.95, R2C4 → 8.99).
+    pub fn precision_bits(&self) -> f64 {
+        ((self.max_per_array() + 1) as f64).log2()
+    }
+
+    /// Number of representable signed integer weights.
+    pub fn num_weight_levels(&self) -> i64 {
+        2 * self.max_per_array() + 1
+    }
+
+    pub fn name(&self) -> String {
+        if self.levels == 4 {
+            format!("R{}C{}", self.rows, self.cols)
+        } else {
+            format!("R{}C{}@{}", self.rows, self.cols, self.levels)
+        }
+    }
+}
+
+impl fmt::Display for GroupConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_ranges() {
+        assert_eq!(GroupConfig::R1C4.max_per_array(), 255);
+        assert_eq!(GroupConfig::R2C2.max_per_array(), 30);
+        assert_eq!(GroupConfig::R2C4.max_per_array(), 510);
+    }
+
+    #[test]
+    fn paper_precisions() {
+        assert!((GroupConfig::R1C4.precision_bits() - 8.00).abs() < 0.01);
+        assert!((GroupConfig::R2C2.precision_bits() - 4.95).abs() < 0.01);
+        assert!((GroupConfig::R2C4.precision_bits() - 8.99).abs() < 0.01);
+    }
+
+    #[test]
+    fn significances_msb_first() {
+        assert_eq!(GroupConfig::R1C4.significances(), vec![64, 16, 4, 1]);
+        assert_eq!(GroupConfig::R2C2.significances(), vec![4, 1]);
+        assert_eq!(GroupConfig::new(1, 3, 2).significances(), vec![4, 2, 1]);
+    }
+
+    #[test]
+    fn sig_of_matches_layout() {
+        let cfg = GroupConfig::R2C2;
+        // layout: [col0row0, col0row1, col1row0, col1row1]
+        assert_eq!(cfg.sig_of(0), 4);
+        assert_eq!(cfg.sig_of(1), 4);
+        assert_eq!(cfg.sig_of(2), 1);
+        assert_eq!(cfg.sig_of(3), 1);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(GroupConfig::parse("r1c4"), Some(GroupConfig::R1C4));
+        assert_eq!(GroupConfig::parse("R2C2"), Some(GroupConfig::R2C2));
+        assert_eq!(
+            GroupConfig::parse("r4c8@2"),
+            Some(GroupConfig::new(4, 8, 2))
+        );
+        assert_eq!(GroupConfig::parse("x2c2"), None);
+        assert_eq!(GroupConfig::parse("r0c2"), None);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::new(3, 2, 2)] {
+            assert_eq!(GroupConfig::parse(&cfg.name()), Some(cfg));
+        }
+    }
+}

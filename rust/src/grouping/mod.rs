@@ -1,0 +1,10 @@
+//! Multi-bit weight representation on IMC arrays: grouping configurations,
+//! bitmaps and the fault-analysis theorems (§III–§IV of the paper).
+
+pub mod analysis;
+pub mod bitmap;
+pub mod config;
+
+pub use analysis::{Array, FaultAnalysis, FreeCell};
+pub use bitmap::{Bitmap, Decomposition};
+pub use config::GroupConfig;

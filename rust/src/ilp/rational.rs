@@ -1,0 +1,242 @@
+//! Exact rational arithmetic for the simplex tableau.
+//!
+//! `i128` numerator/denominator, normalized (gcd-reduced, positive
+//! denominator) after every operation. The decomposition ILPs are tiny
+//! (≤ ~40 variables, coefficients ≤ L^c), so i128 gives enormous headroom;
+//! arithmetic overflow panics loudly in debug and is checked in release
+//! via `checked_*` where growth is possible.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Rat {
+    num: i128,
+    den: i128, // always > 0
+}
+
+pub const ZERO: Rat = Rat { num: 0, den: 1 };
+pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+fn gcd(mut a: i128, mut b: i128) -> i128 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+impl Rat {
+    pub fn new(num: i128, den: i128) -> Rat {
+        assert!(den != 0, "rational with zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd(num, den);
+        Rat { num: sign * num / g, den: sign * den / g }
+    }
+
+    pub fn int(v: i64) -> Rat {
+        Rat { num: v as i128, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+    pub fn is_neg(&self) -> bool {
+        self.num < 0
+    }
+    pub fn is_pos(&self) -> bool {
+        self.num > 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// Largest integer ≤ self.
+    pub fn floor(&self) -> i64 {
+        let q = self.num.div_euclid(self.den);
+        q as i64
+    }
+
+    /// Smallest integer ≥ self.
+    pub fn ceil(&self) -> i64 {
+        let q = (-(-self.num).div_euclid(self.den)) as i64;
+        q
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    pub fn abs(&self) -> Rat {
+        Rat { num: self.num.abs(), den: self.den }
+    }
+
+    pub fn recip(&self) -> Rat {
+        assert!(self.num != 0, "reciprocal of zero");
+        Rat::new(self.den, self.num)
+    }
+}
+
+impl Add for Rat {
+    type Output = Rat;
+    fn add(self, o: Rat) -> Rat {
+        // Reduce cross terms first to limit growth.
+        let g = gcd(self.den, o.den);
+        let (da, db) = (self.den / g, o.den / g);
+        let num = self
+            .num
+            .checked_mul(db)
+            .and_then(|x| o.num.checked_mul(da).and_then(|y| x.checked_add(y)))
+            .expect("rational overflow (add)");
+        let den = self.den.checked_mul(db).expect("rational overflow (add den)");
+        Rat::new(num, den)
+    }
+}
+
+impl Sub for Rat {
+    type Output = Rat;
+    fn sub(self, o: Rat) -> Rat {
+        self + (-o)
+    }
+}
+
+impl Neg for Rat {
+    type Output = Rat;
+    fn neg(self) -> Rat {
+        Rat { num: -self.num, den: self.den }
+    }
+}
+
+impl Mul for Rat {
+    type Output = Rat;
+    fn mul(self, o: Rat) -> Rat {
+        // Cross-reduce before multiplying.
+        let g1 = gcd(self.num, o.den);
+        let g2 = gcd(o.num, self.den);
+        let num = (self.num / g1)
+            .checked_mul(o.num / g2)
+            .expect("rational overflow (mul)");
+        let den = (self.den / g2)
+            .checked_mul(o.den / g1)
+            .expect("rational overflow (mul den)");
+        Rat::new(num, den)
+    }
+}
+
+impl Div for Rat {
+    type Output = Rat;
+    fn div(self, o: Rat) -> Rat {
+        self * o.recip()
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, o: &Rat) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, o: &Rat) -> Ordering {
+        // den > 0 on both sides.
+        let lhs = self.num.checked_mul(o.den).expect("rational overflow (cmp)");
+        let rhs = o.num.checked_mul(self.den).expect("rational overflow (cmp)");
+        lhs.cmp(&rhs)
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization() {
+        assert_eq!(Rat::new(2, 4), Rat::new(1, 2));
+        assert_eq!(Rat::new(-2, -4), Rat::new(1, 2));
+        assert_eq!(Rat::new(2, -4), Rat::new(-1, 2));
+        assert_eq!(Rat::new(0, -7), ZERO);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rat::new(1, 2);
+        let b = Rat::new(1, 3);
+        assert_eq!(a + b, Rat::new(5, 6));
+        assert_eq!(a - b, Rat::new(1, 6));
+        assert_eq!(a * b, Rat::new(1, 6));
+        assert_eq!(a / b, Rat::new(3, 2));
+        assert_eq!(-a, Rat::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rat::new(1, 3) < Rat::new(1, 2));
+        assert!(Rat::new(-1, 2) < ZERO);
+        assert!(Rat::int(3) > Rat::new(5, 2));
+    }
+
+    #[test]
+    fn floor_ceil() {
+        assert_eq!(Rat::new(7, 2).floor(), 3);
+        assert_eq!(Rat::new(7, 2).ceil(), 4);
+        assert_eq!(Rat::new(-7, 2).floor(), -4);
+        assert_eq!(Rat::new(-7, 2).ceil(), -3);
+        assert_eq!(Rat::int(5).floor(), 5);
+        assert_eq!(Rat::int(5).ceil(), 5);
+    }
+
+    #[test]
+    fn integer_detection() {
+        assert!(Rat::new(4, 2).is_integer());
+        assert!(!Rat::new(5, 2).is_integer());
+    }
+
+    #[test]
+    fn prop_field_axioms() {
+        use crate::util::prop::prop_check;
+        prop_check("rat-axioms", 300, |rng| {
+            let r = |rng: &mut crate::util::prng::Rng| {
+                Rat::new(rng.range_i64(-50, 50) as i128, rng.range_i64(1, 20) as i128)
+            };
+            let (a, b, c) = (r(rng), r(rng), r(rng));
+            if (a + b) + c != a + (b + c) {
+                return Err("add assoc".into());
+            }
+            if a * (b + c) != a * b + a * c {
+                return Err("distributivity".into());
+            }
+            if !b.is_zero() && (a / b) * b != a {
+                return Err("div/mul inverse".into());
+            }
+            Ok(())
+        });
+    }
+}

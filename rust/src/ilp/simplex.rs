@@ -1,0 +1,427 @@
+//! Two-phase primal simplex over exact rationals.
+//!
+//! Dense tableau, Bland's anti-cycling rule. Sized for the decomposition
+//! ILPs (≤ ~40 structural variables, ≤ ~90 rows once bounds are folded
+//! in); exactness matters more than asymptotics here — a wrong pivot
+//! tolerance would silently corrupt weight decompositions.
+//!
+//! Standard form solved: minimize `c·x` subject to `A x {≤,≥,=} b`,
+//! `x ≥ 0`. Upper bounds are expected to be encoded as explicit `≤`
+//! constraints by the caller ([`crate::ilp::IlpProblem`] does this).
+
+use super::rational::{Rat, ONE, ZERO};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Clone, Debug)]
+pub enum LpResult {
+    Optimal { objective: Rat, x: Vec<Rat> },
+    Infeasible,
+    Unbounded,
+}
+
+/// Solve min c·x s.t. rows, x ≥ 0.
+pub fn solve_lp(c: &[Rat], rows: &[(Vec<Rat>, Cmp, Rat)]) -> LpResult {
+    let n = c.len();
+    let m = rows.len();
+
+    // Normalize rows to b ≥ 0 by flipping sign/comparison.
+    let mut a: Vec<Vec<Rat>> = Vec::with_capacity(m);
+    let mut b: Vec<Rat> = Vec::with_capacity(m);
+    let mut cmp: Vec<Cmp> = Vec::with_capacity(m);
+    for (coef, cm, rhs) in rows {
+        assert_eq!(coef.len(), n, "constraint arity mismatch");
+        if rhs.is_neg() {
+            a.push(coef.iter().map(|&v| -v).collect());
+            b.push(-*rhs);
+            cmp.push(match cm {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            });
+        } else {
+            a.push(coef.clone());
+            b.push(*rhs);
+            cmp.push(*cm);
+        }
+    }
+
+    // Column layout: [x (n)] [slack/surplus (m_slack)] [artificial (m_art)] [rhs].
+    let mut n_slack = 0usize;
+    let mut n_art = 0usize;
+    for cm in &cmp {
+        match cm {
+            Cmp::Le => n_slack += 1,
+            Cmp::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Cmp::Eq => n_art += 1,
+        }
+    }
+    let total = n + n_slack + n_art;
+    let rhs_col = total;
+
+    let mut t: Vec<Vec<Rat>> = vec![vec![ZERO; total + 1]; m];
+    let mut basis: Vec<usize> = vec![usize::MAX; m];
+    let mut art_cols: Vec<usize> = Vec::with_capacity(n_art);
+
+    let mut slack_at = n;
+    let mut art_at = n + n_slack;
+    for i in 0..m {
+        for j in 0..n {
+            t[i][j] = a[i][j];
+        }
+        t[i][rhs_col] = b[i];
+        match cmp[i] {
+            Cmp::Le => {
+                t[i][slack_at] = ONE;
+                basis[i] = slack_at;
+                slack_at += 1;
+            }
+            Cmp::Ge => {
+                t[i][slack_at] = -ONE; // surplus
+                slack_at += 1;
+                t[i][art_at] = ONE;
+                basis[i] = art_at;
+                art_cols.push(art_at);
+                art_at += 1;
+            }
+            Cmp::Eq => {
+                t[i][art_at] = ONE;
+                basis[i] = art_at;
+                art_cols.push(art_at);
+                art_at += 1;
+            }
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials --------------------------
+    if n_art > 0 {
+        let mut obj1 = vec![ZERO; total + 1];
+        for &ac in &art_cols {
+            obj1[ac] = ONE;
+        }
+        // Price out basic artificials.
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) {
+                for j in 0..=total {
+                    obj1[j] = obj1[j] - t[i][j];
+                }
+            }
+        }
+        if !pivot_to_optimality(&mut t, &mut obj1, &mut basis, total) {
+            // Phase 1 objective is bounded below by 0; unbounded impossible.
+            unreachable!("phase-1 cannot be unbounded");
+        }
+        // Feasible iff artificial sum is 0 (objective row rhs holds -obj).
+        if !obj1[rhs_col].is_zero() {
+            return LpResult::Infeasible;
+        }
+        // Drive any basic artificial out of the basis (degenerate rows).
+        for i in 0..m {
+            if art_cols.contains(&basis[i]) {
+                // Find a non-artificial column with nonzero entry to pivot in.
+                let piv = (0..n + n_slack).find(|&j| !t[i][j].is_zero());
+                match piv {
+                    Some(j) => {
+                        pivot(&mut t, &mut basis, i, j, total);
+                    }
+                    None => {
+                        // Redundant row: force basis entry to a harmless
+                        // marker (row is all-zero among structurals).
+                        basis[i] = usize::MAX - 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2: minimize c over structural + slack columns -----------
+    let mut obj = vec![ZERO; total + 1];
+    for j in 0..n {
+        obj[j] = c[j];
+    }
+    // Artificial columns must never re-enter: mark with +inf-ish cost by
+    // zeroing them from the tableau instead.
+    for i in 0..m {
+        for &ac in &art_cols {
+            t[i][ac] = ZERO;
+        }
+    }
+    // Price out basic variables.
+    for i in 0..m {
+        let bi = basis[i];
+        if bi < total && !obj[bi].is_zero() {
+            let coef = obj[bi];
+            for j in 0..=total {
+                obj[j] = obj[j] - coef * t[i][j];
+            }
+        }
+    }
+    if !pivot_to_optimality(&mut t, &mut obj, &mut basis, total) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![ZERO; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i][rhs_col];
+        }
+    }
+    // Objective row rhs holds -z.
+    LpResult::Optimal { objective: -obj[rhs_col], x }
+}
+
+/// Bland-rule simplex iterations until optimal (true) or unbounded (false).
+fn pivot_to_optimality(
+    t: &mut [Vec<Rat>],
+    obj: &mut [Rat],
+    basis: &mut [usize],
+    total: usize,
+) -> bool {
+    let m = t.len();
+    let rhs_col = total;
+    loop {
+        // Entering: smallest-index column with negative reduced cost.
+        let Some(enter) = (0..total).find(|&j| obj[j].is_neg()) else {
+            return true;
+        };
+        // Leaving: min ratio b_i / a_ie over a_ie > 0, tie → smallest basis index.
+        let mut leave: Option<usize> = None;
+        let mut best: Option<Rat> = None;
+        for i in 0..m {
+            if t[i][enter].is_pos() {
+                let ratio = t[i][rhs_col] / t[i][enter];
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        ratio < *b || (ratio == *b && basis[i] < basis[leave.unwrap()])
+                    }
+                };
+                if better {
+                    best = Some(ratio);
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(li) = leave else {
+            return false; // unbounded
+        };
+        pivot_with_obj(t, obj, basis, li, enter, total);
+    }
+}
+
+fn pivot(t: &mut [Vec<Rat>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let piv = t[row][col];
+    debug_assert!(!piv.is_zero());
+    let inv = piv.recip();
+    for j in 0..=total {
+        t[row][j] = t[row][j] * inv;
+    }
+    for i in 0..t.len() {
+        if i != row && !t[i][col].is_zero() {
+            let f = t[i][col];
+            for j in 0..=total {
+                let delta = f * t[row][j];
+                t[i][j] = t[i][j] - delta;
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_obj(
+    t: &mut [Vec<Rat>],
+    obj: &mut [Rat],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    pivot(t, basis, row, col, total);
+    if !obj[col].is_zero() {
+        let f = obj[col];
+        for j in 0..=total {
+            let delta = f * t[row][j];
+            obj[j] = obj[j] - delta;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(v: i64) -> Rat {
+        Rat::int(v)
+    }
+
+    #[test]
+    fn simple_le_maximization_as_min() {
+        // max x+y s.t. x+2y<=4, 3x+y<=6  → min -(x+y); optimum at (8/5, 6/5), z=14/5.
+        let c = vec![r(-1), r(-1)];
+        let rows = vec![
+            (vec![r(1), r(2)], Cmp::Le, r(4)),
+            (vec![r(3), r(1)], Cmp::Le, r(6)),
+        ];
+        match solve_lp(&c, &rows) {
+            LpResult::Optimal { objective, x } => {
+                assert_eq!(objective, Rat::new(-14, 5));
+                assert_eq!(x, vec![Rat::new(8, 5), Rat::new(6, 5)]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x+y s.t. x+y=3, x>=1 → z=3.
+        let c = vec![r(1), r(1)];
+        let rows = vec![
+            (vec![r(1), r(1)], Cmp::Eq, r(3)),
+            (vec![r(1), r(0)], Cmp::Ge, r(1)),
+        ];
+        match solve_lp(&c, &rows) {
+            LpResult::Optimal { objective, .. } => assert_eq!(objective, r(3)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= 1 and x >= 2.
+        let c = vec![r(0)];
+        let rows = vec![
+            (vec![r(1)], Cmp::Le, r(1)),
+            (vec![r(1)], Cmp::Ge, r(2)),
+        ];
+        assert!(matches!(solve_lp(&c, &rows), LpResult::Infeasible));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x s.t. x >= 0 (no upper bound).
+        let c = vec![r(-1)];
+        let rows = vec![(vec![r(1)], Cmp::Ge, r(0))];
+        assert!(matches!(solve_lp(&c, &rows), LpResult::Unbounded));
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x s.t. -x <= -2  (i.e. x >= 2).
+        let c = vec![r(1)];
+        let rows = vec![(vec![r(-1)], Cmp::Le, r(-2))];
+        match solve_lp(&c, &rows) {
+            LpResult::Optimal { objective, x } => {
+                assert_eq!(objective, r(2));
+                assert_eq!(x[0], r(2));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_redundant_rows() {
+        // Duplicate equality constraints → redundant artificial row.
+        let c = vec![r(1), r(2)];
+        let rows = vec![
+            (vec![r(1), r(1)], Cmp::Eq, r(2)),
+            (vec![r(2), r(2)], Cmp::Eq, r(4)),
+            (vec![r(1), r(0)], Cmp::Le, r(2)),
+        ];
+        match solve_lp(&c, &rows) {
+            LpResult::Optimal { objective, .. } => assert_eq!(objective, r(2)), // x=2,y=0
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_bounded_lps() {
+        use crate::util::prop::prop_check;
+        // Random ILP-like LPs with box bounds encoded as rows; compare the
+        // LP optimum against a fine brute-force grid lower bound sanity:
+        // LP optimum must be ≤ best integer point (for minimization) and
+        // all constraints must hold at the returned x.
+        prop_check("lp-vs-grid", 120, |rng| {
+            let n = 2 + rng.index(2); // 2..3 vars
+            let mut rows: Vec<(Vec<Rat>, Cmp, Rat)> = Vec::new();
+            // Box: x_i <= ub_i.
+            let ubs: Vec<i64> = (0..n).map(|_| rng.range_i64(1, 5)).collect();
+            for (i, &u) in ubs.iter().enumerate() {
+                let mut coef = vec![ZERO; n];
+                coef[i] = ONE;
+                rows.push((coef, Cmp::Le, Rat::int(u)));
+            }
+            for _ in 0..2 {
+                let coef: Vec<Rat> = (0..n).map(|_| Rat::int(rng.range_i64(-3, 3))).collect();
+                let rhs = Rat::int(rng.range_i64(0, 10));
+                rows.push((coef, Cmp::Le, rhs));
+            }
+            let c: Vec<Rat> = (0..n).map(|_| Rat::int(rng.range_i64(-4, 4))).collect();
+            let res = solve_lp(&c, &rows);
+            let LpResult::Optimal { objective, x } = res else {
+                return Err("bounded feasible LP not optimal".into());
+            };
+            // Feasibility of returned x.
+            for (coef, cm, rhs) in &rows {
+                let lhs = coef
+                    .iter()
+                    .zip(&x)
+                    .fold(ZERO, |acc, (a, xi)| acc + *a * *xi);
+                let ok = match cm {
+                    Cmp::Le => lhs <= *rhs,
+                    Cmp::Ge => lhs >= *rhs,
+                    Cmp::Eq => lhs == *rhs,
+                };
+                if !ok {
+                    return Err(format!("infeasible solution returned: {lhs:?} vs {rhs:?}"));
+                }
+            }
+            // LP optimum lower-bounds every feasible integer point.
+            let mut idx = vec![0i64; n];
+            loop {
+                let feasible = rows.iter().all(|(coef, cm, rhs)| {
+                    let lhs = coef
+                        .iter()
+                        .zip(&idx)
+                        .fold(ZERO, |acc, (a, &xi)| acc + *a * Rat::int(xi));
+                    match cm {
+                        Cmp::Le => lhs <= *rhs,
+                        Cmp::Ge => lhs >= *rhs,
+                        Cmp::Eq => lhs == *rhs,
+                    }
+                });
+                if feasible {
+                    let z = c
+                        .iter()
+                        .zip(&idx)
+                        .fold(ZERO, |acc, (a, &xi)| acc + *a * Rat::int(xi));
+                    if z < objective {
+                        return Err(format!(
+                            "integer point {idx:?} beats LP optimum {objective:?}"
+                        ));
+                    }
+                }
+                // Advance odometer.
+                let mut k = 0;
+                loop {
+                    if k == n {
+                        return Ok(());
+                    }
+                    idx[k] += 1;
+                    if idx[k] <= ubs[k] {
+                        break;
+                    }
+                    idx[k] = 0;
+                    k += 1;
+                }
+            }
+        });
+    }
+}

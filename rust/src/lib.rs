@@ -1,0 +1,37 @@
+//! # RCHG — Row-Column Hybrid Grouping for fault-resilient IMC arrays
+//!
+//! Production-oriented reproduction of *"Row-Column Hybrid Grouping for
+//! Fault-Resilient Multi-Bit Weight Representation on IMC Arrays"*
+//! (Jeon et al., 2025): a fault model for stuck-at faults (SAFs) on ReRAM
+//! crossbars, the row-column hybrid grouping weight representation, and an
+//! ILP-based compilation pipeline that decomposes every DNN weight into
+//! positive/negative cell bitmaps that mask the chip's fault pattern.
+//!
+//! Architecture (three layers):
+//! * **L3 (this crate)** — the compilation pipeline and every substrate it
+//!   needs (exact ILP solver, fault models, crossbar mapper, energy model,
+//!   quantizers, dataset/eval drivers) plus a PJRT runtime that executes
+//!   the AOT-compiled model graphs. Python never runs at this layer.
+//! * **L2 (python/compile/model.py)** — JAX forward graphs for the eval
+//!   models, lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas crossbar-MVM kernel
+//!   (bit-sliced MACs + shift-and-add + pos/neg subtraction).
+//!
+//! Start with [`coordinator::Compiler`] (the paper's contribution) or the
+//! `examples/` directory.
+
+pub mod arrays;
+pub mod baseline;
+pub mod energy;
+pub mod experiments;
+pub mod coordinator;
+pub mod decompose;
+pub mod fault;
+pub mod grouping;
+pub mod ilp;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,255 @@
+//! `rchg` — the L3 coordinator CLI.
+//!
+//! Subcommands map to the paper's experiments and to operational tasks:
+//!
+//!   rchg tables                 regenerate every paper table/figure (fast set)
+//!   rchg compile …              compile a model's weights for a chip
+//!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
+//!   rchg eval-lm …              LM perplexity under SAFs  (Table III)
+//!   rchg compile-time …         compilation-time study    (Table II/Fig 10)
+//!   rchg energy …               energy sweep              (Fig 11)
+//!   rchg inconsecutivity …      Monte-Carlo Theorem-2 study (Fig 6)
+//!   rchg info                   runtime + artifact info
+
+use rchg::arrays::MapperPolicy;
+use rchg::coordinator::Method;
+use rchg::energy::EnergyParams;
+use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
+use rchg::experiments::compile_time::{fig10a, fig10b, measure, table2, CompileTimeOptions};
+use rchg::experiments::hw::{fig6, fig11};
+use rchg::experiments::lm::{table3, LmOptions};
+use rchg::grouping::GroupConfig;
+use rchg::runtime::{artifacts_dir, Runtime};
+use rchg::util::cli::Cli;
+use rchg::util::timer::fmt_dur;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let sub = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = std::iter::once(format!("rchg {sub}"))
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+
+    match sub {
+        "info" => {
+            let art = artifacts_dir();
+            println!("artifacts dir: {}", art.display());
+            if art.join("manifest.json").exists() {
+                let rt = Runtime::new(&art)?;
+                println!("platform: {}", rt.platform());
+                println!("executables:");
+                for n in rt.executables() {
+                    println!("  {n}");
+                }
+            } else {
+                println!("artifacts not built — run `make artifacts`");
+            }
+        }
+        "tables" => {
+            // A fast regeneration of every table/figure (reduced trials).
+            let art = artifacts_dir();
+            let rt = Runtime::new(&art)?;
+            let aopts = AccuracyOptions { trials: 2, ..Default::default() };
+            println!("{}", table1(&rt, &art, &aopts)?.render());
+            println!("{}", fig8(&rt, &art, "cnn_s", 1)?.render());
+            println!("{}", fig9(&rt, &art, "cnn_s", &[0.05, 0.1079, 0.2], 2, 1)?.render());
+            let ctopts = CompileTimeOptions {
+                models: vec!["resnet20".into(), "resnet18".into()],
+                sample_complete: 100_000,
+                sample_ilp: 1_000,
+                sample_ff: 1_000,
+                threads: 1,
+                include_r2c4: false,
+            };
+            let (t2, rows) = table2(&ctopts)?;
+            println!("{}", t2.render());
+            println!("{}", fig10a(&rows, &ctopts.models).render());
+            println!("{}", fig10b(&rows, "resnet18").render());
+            let lopts = LmOptions { trials: 2, max_windows: 40, ..Default::default() };
+            println!("{}", table3(&rt, &art, &lopts)?.render());
+            println!(
+                "{}",
+                fig6(&[GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4], 500_000, 99)
+                    .render()
+            );
+            println!(
+                "{}",
+                fig11(
+                    "resnet20",
+                    &[64, 128, 256, 512],
+                    &EnergyParams::default(),
+                    MapperPolicy::KernelSplit
+                )?
+                .render()
+            );
+        }
+        "eval-cnn" => {
+            let cli = Cli::new("CNN accuracy under SAFs")
+                .opt("archs", "architectures", Some("cnn_s,cnn_m,cnn_d,vgg_n"))
+                .opt("configs", "grouping configs", Some("r1c4,r2c2,r2c4"))
+                .opt("trials", "chips per cell", Some("3"))
+                .opt("threads", "threads", Some("1"))
+                .opt("layerwise", "Fig 8 output", None)
+                .opt("sweep", "Fig 9 output", None)
+                .opt("unprotected", "no-mitigation rows", None);
+            let args = cli.parse(rest);
+            let art = artifacts_dir();
+            let rt = Runtime::new(&art)?;
+            let opts = AccuracyOptions {
+                archs: args.get_list("archs"),
+                configs: args
+                    .get_list("configs")
+                    .iter()
+                    .filter_map(|s| GroupConfig::parse(s))
+                    .collect(),
+                trials: args.get_usize("trials", 3),
+                threads: args.get_usize("threads", 1),
+                include_unprotected: args.get_bool("unprotected"),
+            };
+            println!("{}", table1(&rt, &art, &opts)?.render());
+            if args.get_bool("layerwise") {
+                println!("{}", fig8(&rt, &art, &opts.archs[0], opts.threads)?.render());
+            }
+            if args.get_bool("sweep") {
+                println!(
+                    "{}",
+                    fig9(
+                        &rt,
+                        &art,
+                        &opts.archs[0],
+                        &[0.02, 0.05, 0.1079, 0.15, 0.2],
+                        opts.trials,
+                        opts.threads
+                    )?
+                    .render()
+                );
+            }
+        }
+        "eval-lm" => {
+            let cli = Cli::new("LM perplexity under SAFs")
+                .opt("configs", "grouping configs", Some("r1c4,r2c2"))
+                .opt("trials", "chips", Some("3"))
+                .opt("windows", "eval windows per stream", Some("60"))
+                .opt("threads", "threads", Some("1"))
+                .opt("unprotected", "no-mitigation rows", None);
+            let args = cli.parse(rest);
+            let art = artifacts_dir();
+            let rt = Runtime::new(&art)?;
+            let opts = LmOptions {
+                configs: args
+                    .get_list("configs")
+                    .iter()
+                    .filter_map(|s| GroupConfig::parse(s))
+                    .collect(),
+                trials: args.get_usize("trials", 3),
+                threads: args.get_usize("threads", 1),
+                max_windows: args.get_usize("windows", 60),
+                include_unprotected: args.get_bool("unprotected"),
+            };
+            println!("{}", table3(&rt, &art, &opts)?.render());
+        }
+        "compile-time" => {
+            let cli = Cli::new("compilation time study")
+                .opt("models", "models", Some("resnet20,resnet18,resnet50,vgg16"))
+                .opt("sample-complete", "complete-pipeline sample", Some("400000"))
+                .opt("sample-ilp", "ILP-only sample", Some("2000"))
+                .opt("sample-ff", "FF sample", Some("2000"))
+                .opt("threads", "threads", Some("1"))
+                .opt("r2c4", "include R2C4", None);
+            let args = cli.parse(rest);
+            let opts = CompileTimeOptions {
+                models: args.get_list("models"),
+                sample_complete: args.get_usize("sample-complete", 400_000),
+                sample_ilp: args.get_usize("sample-ilp", 2_000),
+                sample_ff: args.get_usize("sample-ff", 2_000),
+                threads: args.get_usize("threads", 1),
+                include_r2c4: args.get_bool("r2c4"),
+            };
+            let (t, rows) = table2(&opts)?;
+            println!("{}", t.render());
+            println!("{}", fig10a(&rows, &opts.models).render());
+            println!("{}", fig10b(&rows, opts.models.last().unwrap()).render());
+        }
+        "compile" => {
+            let cli = Cli::new("compile a synthetic model for one chip")
+                .opt("model", "layer-shape model", Some("resnet20"))
+                .opt("config", "grouping config", Some("r2c2"))
+                .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
+                .opt("chip", "chip seed", Some("1"))
+                .opt("threads", "threads", Some("1"))
+                .opt("limit", "max weights", None);
+            let args = cli.parse(rest);
+            let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
+                .ok_or_else(|| anyhow::anyhow!("bad config"))?;
+            let method = Method::parse(args.get_str("method", "complete"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let r = measure(
+                args.get_str("model", "resnet20"),
+                cfg,
+                method,
+                args.get_usize("limit", usize::MAX),
+                args.get_usize("threads", 1),
+                args.get_u64("chip", 1),
+            )?;
+            println!(
+                "compiled {} weights of {} ({}) in {} — full model {} weights ≈ {}",
+                r.sampled_weights,
+                r.model,
+                cfg.name(),
+                fmt_dur(r.measured_secs),
+                r.total_weights,
+                fmt_dur(r.full_secs)
+            );
+        }
+        "energy" => {
+            let cli = Cli::new("energy sweep (Fig 11)")
+                .opt("model", "network", Some("resnet20"))
+                .opt("sizes", "array sizes", Some("64,128,256,512"))
+                .opt("packed", "packed mapper ablation", None);
+            let args = cli.parse(rest);
+            let policy = if args.get_bool("packed") {
+                MapperPolicy::PackedVertical
+            } else {
+                MapperPolicy::KernelSplit
+            };
+            let sizes: Vec<usize> =
+                args.get_list("sizes").iter().filter_map(|s| s.parse().ok()).collect();
+            println!(
+                "{}",
+                fig11(args.get_str("model", "resnet20"), &sizes, &EnergyParams::default(), policy)?
+                    .render()
+            );
+        }
+        "inconsecutivity" => {
+            let cli = Cli::new("Fig 6 Monte-Carlo")
+                .opt("samples", "samples", Some("1000000"))
+                .opt("seed", "seed", Some("99"));
+            let args = cli.parse(rest);
+            println!(
+                "{}",
+                fig6(
+                    &[GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4],
+                    args.get_usize("samples", 1_000_000),
+                    args.get_u64("seed", 99)
+                )
+                .render()
+            );
+        }
+        _ => {
+            println!(
+                "rchg — row-column hybrid grouping compiler + IMC fault simulator\n\n\
+                 subcommands:\n\
+                 \x20 info             runtime + artifact info\n\
+                 \x20 tables           regenerate all paper tables/figures (fast set)\n\
+                 \x20 compile          compile a model for one chip (timing)\n\
+                 \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
+                 \x20 eval-lm          Table III\n\
+                 \x20 compile-time     Table II / Fig 10\n\
+                 \x20 energy           Fig 11\n\
+                 \x20 inconsecutivity  Fig 6\n\n\
+                 run `rchg <subcommand> --help` for options"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Evaluation metrics: classification accuracy, next-token NLL/perplexity,
+//! and small aggregation helpers (mean ± std over trials).
+
+/// Argmax classification accuracy. `logits`: `[n, classes]` row-major.
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if pred == y as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Total next-token negative log-likelihood for one sequence's logits.
+/// `logits`: `[t, vocab]`, `targets`: `[t]`. Numerically stable log-softmax.
+pub fn sequence_nll(logits: &[f32], targets: &[i32], vocab: usize) -> f64 {
+    assert_eq!(logits.len(), targets.len() * vocab);
+    let mut total = 0.0f64;
+    for (i, &tgt) in targets.iter().enumerate() {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum = m as f64 + row.iter().map(|&v| ((v - m) as f64).exp()).sum::<f64>().ln();
+        total += logsum - row[tgt as usize] as f64;
+    }
+    total
+}
+
+/// exp(total_nll / tokens).
+pub fn perplexity(total_nll: f64, tokens: usize) -> f64 {
+    (total_nll / tokens.max(1) as f64).exp()
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        // logits rows: picks class 1, class 0.
+        let logits = vec![0.1, 0.9, 0.8, 0.2];
+        assert_eq!(accuracy(&logits, &[1, 0], 2), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0], 2), 0.5);
+    }
+
+    #[test]
+    fn nll_uniform() {
+        // Uniform logits over 4 classes → nll = ln(4) per token.
+        let logits = vec![0.0f32; 8];
+        let nll = sequence_nll(&logits, &[0, 3], 4);
+        assert!((nll - 2.0 * (4f64).ln()).abs() < 1e-6);
+        assert!((perplexity(nll, 2) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_confident() {
+        let mut logits = vec![0.0f32; 4];
+        logits[2] = 50.0; // near-certain class 2
+        let nll = sequence_nll(&logits, &[2], 4);
+        assert!(nll < 1e-6);
+    }
+
+    #[test]
+    fn nll_stable_for_large_logits() {
+        let logits = vec![1e4f32, -1e4, 0.0, 5.0];
+        let nll = sequence_nll(&logits, &[0], 4);
+        assert!(nll.is_finite() && nll < 1e-6);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

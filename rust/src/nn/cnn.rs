@@ -1,0 +1,216 @@
+//! CNN fault-injection accuracy evaluation (Table I, Fig 8, Fig 9).
+//!
+//! For one (architecture, grouping config, chip, method):
+//! 1. quantize every conv/fc weight tensor to the config's integer range;
+//! 2. compile each tensor against the chip's fault maps (coordinator);
+//! 3. reconstruct faulty floats for the conv trunk, pack faulty bit-planes
+//!    for the FC head (which runs on the L1 Pallas kernel);
+//! 4. execute the AOT graph over the test set via PJRT and score accuracy.
+
+use super::data::CifarTest;
+use super::CompiledMatrix;
+use crate::coordinator::{CompileOptions, CompileStats, Method};
+use crate::fault::bank::ChipFaults;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::metrics;
+use crate::runtime::{ArgValue, Executable, Runtime, WeightBank};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Result of one CNN fault-evaluation trial.
+#[derive(Clone, Debug)]
+pub struct CnnEvalResult {
+    pub arch: String,
+    pub cfg: GroupConfig,
+    pub method: Method,
+    pub accuracy: f64,
+    /// Per-layer fault-induced ℓ1 error (dequantized domain) — Fig 8.
+    pub layer_l1: Vec<(String, f64)>,
+    /// Aggregated compile statistics across all tensors.
+    pub compile: CompileStats,
+}
+
+/// Reusable evaluator: holds the compiled executable, weights and data.
+pub struct CnnEvaluator {
+    pub arch: String,
+    pub cfg: GroupConfig,
+    exe: Executable,
+    bank: WeightBank,
+    data: CifarTest,
+    batch: usize,
+    conv_layers: usize,
+}
+
+impl CnnEvaluator {
+    pub fn new(rt: &Runtime, art_dir: &Path, arch: &str, cfg: GroupConfig) -> Result<CnnEvaluator> {
+        let cfg_name = cfg.name().to_ascii_lowercase();
+        let exe = rt.load(&format!("cnn_{arch}_{cfg_name}"))?;
+        let bank = WeightBank::load(&art_dir.join("weights").join(arch))?;
+        let data = CifarTest::load(art_dir)?;
+        let batch = rt.meta().get("cnn_eval_batch").as_usize().unwrap_or(100);
+        let conv_layers = bank.order.iter().filter(|n| n.ends_with("_w") && n.starts_with("conv")).count();
+        if data.n % batch != 0 {
+            bail!("test set size {} not divisible by eval batch {batch}", data.n);
+        }
+        Ok(CnnEvaluator { arch: arch.to_string(), cfg, exe, bank, data, batch, conv_layers })
+    }
+
+    /// Float-weight reference accuracy (no quantization, no faults) — used
+    /// to sanity-check the PJRT path against the training-time accuracy.
+    pub fn float_accuracy(&self) -> Result<f64> {
+        // Pack "identity" planes representing the float fc via quantization
+        // with zero faults and the true scale: easiest exact float path is
+        // a fault-free, quantization-on evaluation at high precision —
+        // callers use eval() with FaultRates::none() instead. Here we run
+        // the quantized-but-fault-free path for R2C4 (9-bit, negligible
+        // quantization).
+        let r = self.eval(0, FaultRates::none(), Method::Complete, 1)?;
+        Ok(r.accuracy)
+    }
+
+    /// One full trial.
+    pub fn eval(
+        &self,
+        chip_seed: u64,
+        rates: FaultRates,
+        method: Method,
+        threads: usize,
+    ) -> Result<CnnEvalResult> {
+        let chip = ChipFaults::new(chip_seed, rates);
+        let mut opts = CompileOptions::new(self.cfg, method);
+        opts.threads = threads;
+        let mut compile_total = CompileStats::default();
+        let mut layer_l1 = Vec::new();
+
+        // ---- compile conv tensors → faulty float weights -----------------
+        let mut conv_args: Vec<Vec<f32>> = Vec::new();
+        for li in 0..self.conv_layers {
+            let wname = format!("conv{li}_w");
+            let t = self.bank.get(&wname)?;
+            let (dims, w) = (&t.dims, &t.f32s);
+            // HWIO [3,3,cin,cout] → K = 3*3*cin rows, N = cout columns.
+            let n = *dims.last().unwrap();
+            let k = w.len() / n;
+            let cm = CompiledMatrix::compile(w, k, n, &chip, li as u64, &opts);
+            layer_l1.push((wname, cm.fault_l1(&self.cfg)));
+            merge_stats(&mut compile_total, &cm.stats);
+            conv_args.push(cm.faulty_dequant(&self.cfg));
+        }
+
+        // ---- compile FC head → faulty bit-planes -------------------------
+        let fc = self.bank.get("fc_w")?;
+        let n = *fc.dims.last().unwrap();
+        let k = fc.f32s.len() / n;
+        let cm = CompiledMatrix::compile(&fc.f32s, k, n, &chip, 1000, &opts);
+        layer_l1.push(("fc_w".to_string(), cm.fault_l1(&self.cfg)));
+        merge_stats(&mut compile_total, &cm.stats);
+        let planes = cm.planes(&self.cfg);
+        let sigs: Vec<f32> = self.cfg.significances().iter().map(|&s| s as f32).collect();
+        let fc_b = &self.bank.get("fc_b")?.f32s;
+
+        // ---- run the test set through PJRT --------------------------------
+        let mut correct_logits: Vec<f32> = Vec::with_capacity(self.data.n * 10);
+        let n_batches = self.data.n / self.batch;
+        for b in 0..n_batches {
+            let (bx, _) = self.data.batch(b, self.batch);
+            let mut values: Vec<ArgValue> = Vec::with_capacity(self.exe.args.len());
+            let mut conv_it = conv_args.iter();
+            for spec in &self.exe.args {
+                let v = match spec.name.as_str() {
+                    "x" => ArgValue::F32(bx),
+                    "fc_pos" => ArgValue::F32(&planes.pos),
+                    "fc_neg" => ArgValue::F32(&planes.neg),
+                    "fc_sigs" => ArgValue::F32(&sigs),
+                    "fc_scale" => ArgValue::F32(&cm.q.scale),
+                    "fc_b" => ArgValue::F32(fc_b),
+                    name if name.ends_with("_w") => ArgValue::F32(
+                        conv_it.next().ok_or_else(|| anyhow!("conv arg underflow"))?,
+                    ),
+                    name if name.ends_with("_b") => {
+                        ArgValue::F32(&self.bank.get(name)?.f32s)
+                    }
+                    other => bail!("unexpected arg {other}"),
+                };
+                values.push(v);
+            }
+            let out = self.exe.run(&values)?;
+            correct_logits.extend_from_slice(&out);
+        }
+        let accuracy = metrics::accuracy(&correct_logits, &self.data.y, 10);
+
+        Ok(CnnEvalResult { arch: self.arch.clone(), cfg: self.cfg, method, accuracy, layer_l1, compile: compile_total })
+    }
+}
+
+fn merge_stats(total: &mut CompileStats, s: &CompileStats) {
+    merge_stats_pub(total, s)
+}
+
+/// Merge compile statistics (shared with the LM evaluator).
+pub fn merge_stats_pub(total: &mut CompileStats, s: &CompileStats) {
+    total.weights += s.weights;
+    total.total_abs_error += s.total_abs_error;
+    total.imperfect += s.imperfect;
+    total.memo_hits += s.memo_hits;
+    total.wall_secs += s.wall_secs;
+    total.clock.merge(&s.clock);
+    for (name, c) in &s.stage_counts {
+        if let Some(e) = total.stage_counts.iter_mut().find(|(n, _)| n == name) {
+            e.1 += c;
+        } else {
+            total.stage_counts.push((name, *c));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn cnn_eval_fault_free_matches_float_closely() {
+        let art = artifacts_dir();
+        if !art.join("manifest.json").exists() || !art.join("weights/cnn_s/meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art).unwrap();
+        let ev = CnnEvaluator::new(&rt, &art, "cnn_s", GroupConfig::R1C4).unwrap();
+        let r = ev.eval(0, FaultRates::none(), Method::Complete, 1).unwrap();
+        let float_acc = ev.bank.meta.get("float_acc").as_f64().unwrap_or(0.0);
+        // 8-bit quantization should cost almost nothing.
+        assert!(
+            (r.accuracy - float_acc).abs() < 0.05,
+            "quantized acc {} vs float {}",
+            r.accuracy,
+            float_acc
+        );
+        assert!(r.layer_l1.iter().all(|(_, e)| *e == 0.0));
+    }
+
+    #[test]
+    fn cnn_eval_faults_hurt_and_mitigation_helps() {
+        let art = artifacts_dir();
+        if !art.join("manifest.json").exists() || !art.join("weights/cnn_s/meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art).unwrap();
+        let ev = CnnEvaluator::new(&rt, &art, "cnn_s", GroupConfig::R1C4).unwrap();
+        let clean = ev.eval(0, FaultRates::none(), Method::Complete, 1).unwrap();
+        let raw = ev.eval(1, FaultRates::paper_default(), Method::Unprotected, 1).unwrap();
+        let fixed = ev.eval(1, FaultRates::paper_default(), Method::Complete, 1).unwrap();
+        assert!(raw.accuracy <= clean.accuracy + 0.02);
+        assert!(
+            fixed.accuracy >= raw.accuracy - 0.02,
+            "mitigated {} vs raw {}",
+            fixed.accuracy,
+            raw.accuracy
+        );
+        // Fault-induced ℓ1 must drop with mitigation.
+        let l1 = |r: &CnnEvalResult| r.layer_l1.iter().map(|(_, e)| e).sum::<f64>();
+        assert!(l1(&fixed) < l1(&raw));
+    }
+}

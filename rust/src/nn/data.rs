@@ -1,0 +1,92 @@
+//! Evaluation dataset loaders (written by `python/compile/train.py`).
+
+use crate::util::io::RawTensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The synthetic-CIFAR test split.
+pub struct CifarTest {
+    /// `[N, 32, 32, 3]` flattened.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+}
+
+impl CifarTest {
+    pub fn load(art_dir: &Path) -> Result<CifarTest> {
+        let xt = RawTensor::load(&art_dir.join("data/cifar_test_x.bin"))
+            .context("cifar test images")?;
+        let yt = RawTensor::load(&art_dir.join("data/cifar_test_y.bin"))
+            .context("cifar test labels")?;
+        if xt.dims.len() != 4 || xt.dims[1..] != [32, 32, 3] {
+            bail!("unexpected cifar dims {:?}", xt.dims);
+        }
+        let n = xt.dims[0];
+        if yt.dims != [n] {
+            bail!("label count mismatch");
+        }
+        Ok(CifarTest { x: xt.f32s, y: yt.i32s, n })
+    }
+
+    /// Batch `b` of size `bs` (images flattened).
+    pub fn batch(&self, b: usize, bs: usize) -> (&[f32], &[i32]) {
+        let img = 32 * 32 * 3;
+        let lo = b * bs;
+        let hi = ((b + 1) * bs).min(self.n);
+        (&self.x[lo * img..hi * img], &self.y[lo..hi])
+    }
+}
+
+/// One LM evaluation token stream.
+pub struct TokenStream {
+    pub name: String,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenStream {
+    pub fn load_all(art_dir: &Path) -> Result<Vec<TokenStream>> {
+        let mut out = Vec::new();
+        for name in ["jaxsrc", "npsrc", "pysrc"] {
+            let path = art_dir.join(format!("data/lm_eval_{name}.bin"));
+            let t = RawTensor::load(&path).with_context(|| format!("stream {name}"))?;
+            out.push(TokenStream { name: name.to_string(), tokens: t.i32s });
+        }
+        Ok(out)
+    }
+
+    /// Non-overlapping windows of `ctx+1` tokens.
+    pub fn windows(&self, ctx: usize, max_windows: usize) -> Vec<&[i32]> {
+        let n_win = ((self.tokens.len().saturating_sub(1)) / ctx).min(max_windows);
+        (0..n_win).map(|i| &self.tokens[i * ctx..i * ctx + ctx + 1]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn loads_when_built() {
+        let art = artifacts_dir();
+        if !art.join("data/cifar_test_x.bin").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = CifarTest::load(&art).unwrap();
+        assert!(c.n >= 100);
+        assert!(c.y.iter().all(|&y| (0..10).contains(&y)));
+        let (bx, by) = c.batch(0, 50);
+        assert_eq!(bx.len(), 50 * 32 * 32 * 3);
+        assert_eq!(by.len(), 50);
+
+        let streams = TokenStream::load_all(&art).unwrap();
+        assert_eq!(streams.len(), 3);
+        for s in &streams {
+            assert!(s.tokens.iter().all(|&t| (0..256).contains(&t)));
+            let w = s.windows(96, 10);
+            assert!(w.len() <= 10);
+            assert!(w.iter().all(|win| win.len() == 97));
+        }
+    }
+}

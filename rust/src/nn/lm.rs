@@ -1,0 +1,220 @@
+//! Language-model fault-injection perplexity evaluation (Table III).
+//!
+//! The OPT-like trunk's 2-D weight matrices are quantized + fault-compiled
+//! and enter the graph as faulty floats; the tied LM head runs on the L1
+//! Pallas crossbar kernel from faulty bit-planes. LayerNorm parameters,
+//! biases and positional embeddings stay digital (the paper maps weight
+//! matrices to IMC arrays; tiny 1-D parameters live in the digital logic).
+
+use super::data::TokenStream;
+use super::CompiledMatrix;
+use crate::coordinator::{CompileOptions, CompileStats, Method};
+use crate::fault::bank::ChipFaults;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::metrics;
+use crate::quant::QuantizedMatrix;
+use crate::runtime::{ArgValue, Executable, Runtime, WeightBank};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Result of one LM trial: perplexity per evaluation stream.
+#[derive(Clone, Debug)]
+pub struct LmEvalResult {
+    pub cfg: GroupConfig,
+    pub method: Method,
+    pub ppl: Vec<(String, f64)>,
+    pub compile: CompileStats,
+}
+
+pub struct LmEvaluator {
+    pub cfg: GroupConfig,
+    exe: Executable,
+    bank: WeightBank,
+    streams: Vec<TokenStream>,
+    ctx: usize,
+    batch: usize,
+    vocab: usize,
+    d_model: usize,
+    pub max_windows: usize,
+}
+
+impl LmEvaluator {
+    pub fn new(rt: &Runtime, art_dir: &Path, cfg: GroupConfig) -> Result<LmEvaluator> {
+        let cfg_name = cfg.name().to_ascii_lowercase();
+        let exe = rt.load(&format!("lm_{cfg_name}"))?;
+        let bank = WeightBank::load(&art_dir.join("weights").join("lm"))?;
+        let streams = TokenStream::load_all(art_dir)?;
+        let meta = rt.meta();
+        let lmc = meta.get("lm_config");
+        let ctx = lmc.get("ctx").as_usize().unwrap_or(96);
+        let vocab = lmc.get("vocab").as_usize().unwrap_or(256);
+        let d_model = lmc.get("d_model").as_usize().unwrap_or(96);
+        let batch = meta.get("lm_eval_batch").as_usize().unwrap_or(2);
+        Ok(LmEvaluator {
+            cfg,
+            exe,
+            bank,
+            streams,
+            ctx,
+            batch,
+            vocab,
+            d_model,
+            max_windows: 120,
+        })
+    }
+
+    /// Which trunk parameters get quantized + fault-mapped (2-D matmul
+    /// weights). Everything else stays digital/float.
+    fn is_mapped(name: &str) -> bool {
+        name.ends_with("qkv_w") || name.ends_with("o_w") || name.ends_with("fc1_w")
+            || name.ends_with("fc2_w")
+    }
+
+    pub fn eval(
+        &self,
+        chip_seed: u64,
+        rates: FaultRates,
+        method: Method,
+        threads: usize,
+    ) -> Result<LmEvalResult> {
+        let chip = ChipFaults::new(chip_seed, rates);
+        let mut opts = CompileOptions::new(self.cfg, method);
+        opts.threads = threads;
+        let mut compile_total = CompileStats::default();
+
+        // ---- trunk tensors ------------------------------------------------
+        let mut trunk: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for (ti, name) in self.bank.order.clone().iter().enumerate() {
+            let t = self.bank.get(name)?;
+            if Self::is_mapped(name) {
+                let n = *t.dims.last().unwrap();
+                let k = t.f32s.len() / n;
+                let cm = CompiledMatrix::compile(&t.f32s, k, n, &chip, ti as u64, &opts);
+                super::cnn::merge_stats_pub(&mut compile_total, &cm.stats);
+                trunk.insert(name.clone(), cm.faulty_dequant(&self.cfg));
+            } else {
+                trunk.insert(name.clone(), t.f32s.clone());
+            }
+        }
+
+        // ---- LM head: tied embedding transpose through the kernel --------
+        let embed = self.bank.get("embed")?;
+        let v = embed.dims[0];
+        let d = embed.dims[1];
+        debug_assert_eq!((v, d), (self.vocab, self.d_model));
+        // head_w[d, vocab] = embed.T
+        let mut head_w = vec![0f32; d * v];
+        for vi in 0..v {
+            for di in 0..d {
+                head_w[di * v + vi] = embed.f32s[vi * d + di];
+            }
+        }
+        let q = QuantizedMatrix::quantize_gptq_lite(&head_w, d, v, &self.cfg);
+        let cm = CompiledMatrix::from_quantized(q, &chip, 5000, &opts);
+        super::cnn::merge_stats_pub(&mut compile_total, &cm.stats);
+        let planes = cm.planes(&self.cfg);
+        let sigs: Vec<f32> = self.cfg.significances().iter().map(|&s| s as f32).collect();
+
+        // ---- perplexity per stream ----------------------------------------
+        let mut ppl = Vec::new();
+        for stream in &self.streams {
+            let windows = stream.windows(self.ctx, self.max_windows);
+            if windows.is_empty() {
+                bail!("stream {} too short", stream.name);
+            }
+            let mut total_nll = 0.0f64;
+            let mut total_tok = 0usize;
+            for chunk in windows.chunks(self.batch) {
+                // Pad the final chunk by repeating the last window (its
+                // duplicate NLL is not counted).
+                let mut tokens: Vec<i32> = Vec::with_capacity(self.batch * self.ctx);
+                for i in 0..self.batch {
+                    let win = chunk.get(i).unwrap_or(chunk.last().unwrap());
+                    tokens.extend_from_slice(&win[..self.ctx]);
+                }
+                let logits = self.run_batch(&tokens, &trunk, &planes, &sigs, &cm.q.scale)?;
+                for (i, win) in chunk.iter().enumerate() {
+                    let row = &logits[i * self.ctx * self.vocab..(i + 1) * self.ctx * self.vocab];
+                    total_nll += metrics::sequence_nll(row, &win[1..], self.vocab);
+                    total_tok += self.ctx;
+                }
+            }
+            ppl.push((stream.name.clone(), metrics::perplexity(total_nll, total_tok)));
+        }
+        Ok(LmEvalResult { cfg: self.cfg, method, ppl, compile: compile_total })
+    }
+
+    fn run_batch(
+        &self,
+        tokens: &[i32],
+        trunk: &BTreeMap<String, Vec<f32>>,
+        planes: &super::packing::Planes,
+        sigs: &[f32],
+        head_scale: &[f32],
+    ) -> Result<Vec<f32>> {
+        let mut values: Vec<ArgValue> = Vec::with_capacity(self.exe.args.len());
+        for spec in &self.exe.args {
+            let v = match spec.name.as_str() {
+                "tokens" => ArgValue::I32(tokens),
+                "head_pos" => ArgValue::F32(&planes.pos),
+                "head_neg" => ArgValue::F32(&planes.neg),
+                "head_sigs" => ArgValue::F32(sigs),
+                "head_scale" => ArgValue::F32(head_scale),
+                name => match trunk.get(name) {
+                    Some(buf) => ArgValue::F32(buf),
+                    None => bail!("unexpected LM arg {name}"),
+                },
+            };
+            values.push(v);
+        }
+        self.exe.run(&values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn lm_eval_fault_free_close_to_float_ppl() {
+        let art = artifacts_dir();
+        if !art.join("weights/lm/meta.json").exists() || !art.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art).unwrap();
+        let mut ev = LmEvaluator::new(&rt, &art, GroupConfig::R1C4).unwrap();
+        ev.max_windows = 16; // keep the test fast
+        let r = ev.eval(0, FaultRates::none(), Method::Complete, 1).unwrap();
+        for (name, p) in &r.ppl {
+            let float_p = ev.bank.meta.get("float_ppl").get(name).as_f64().unwrap_or(0.0);
+            assert!(
+                *p < float_p * 1.35 + 1.0,
+                "stream {name}: quantized ppl {p} vs float {float_p}"
+            );
+        }
+    }
+
+    #[test]
+    fn lm_faults_increase_ppl_and_mitigation_helps() {
+        let art = artifacts_dir();
+        if !art.join("weights/lm/meta.json").exists() || !art.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art).unwrap();
+        let mut ev = LmEvaluator::new(&rt, &art, GroupConfig::R1C4).unwrap();
+        ev.max_windows = 10;
+        let clean = ev.eval(0, FaultRates::none(), Method::Complete, 1).unwrap();
+        let raw = ev.eval(3, FaultRates::paper_default(), Method::Unprotected, 1).unwrap();
+        let fixed = ev.eval(3, FaultRates::paper_default(), Method::Complete, 1).unwrap();
+        let avg = |r: &LmEvalResult| {
+            r.ppl.iter().map(|(_, p)| p).sum::<f64>() / r.ppl.len() as f64
+        };
+        assert!(avg(&raw) > avg(&clean), "faults should hurt ppl");
+        assert!(avg(&fixed) <= avg(&raw) * 1.05, "mitigation should help");
+    }
+}

@@ -1,0 +1,139 @@
+//! Model zoo + fault-injection evaluation drivers.
+//!
+//! Connects the pieces: load trained float weights (from `artifacts/`),
+//! quantize to the grouping config's range, compile against a chip's fault
+//! map via the coordinator, reconstruct the faulty weights, and execute
+//! the AOT model graphs through the PJRT runtime to measure accuracy /
+//! perplexity under SAFs.
+
+pub mod cnn;
+pub mod data;
+pub mod lm;
+pub mod packing;
+
+use crate::coordinator::{compile_tensor, CompileOptions, CompileStats};
+use crate::fault::bank::ChipFaults;
+use crate::fault::GroupFaults;
+use crate::grouping::Decomposition;
+use crate::quant::QuantizedMatrix;
+use packing::Planes;
+
+/// One weight matrix taken through the full quantize → fault-aware-compile
+/// → reconstruct flow.
+pub struct CompiledMatrix {
+    pub q: QuantizedMatrix,
+    pub decomps: Vec<Decomposition>,
+    pub faults: Vec<GroupFaults>,
+    pub stats: CompileStats,
+}
+
+impl CompiledMatrix {
+    /// Quantize `[k, n]` float weights and compile them against the chip's
+    /// fault map for tensor `tensor_id`.
+    pub fn compile(
+        w: &[f32],
+        k: usize,
+        n: usize,
+        chip: &ChipFaults,
+        tensor_id: u64,
+        opts: &CompileOptions,
+    ) -> CompiledMatrix {
+        let q = QuantizedMatrix::quantize(w, k, n, &opts.cfg);
+        Self::from_quantized(q, chip, tensor_id, opts)
+    }
+
+    pub fn from_quantized(
+        q: QuantizedMatrix,
+        chip: &ChipFaults,
+        tensor_id: u64,
+        opts: &CompileOptions,
+    ) -> CompiledMatrix {
+        let faults = chip.sample_tensor(tensor_id, q.w_int.len(), opts.cfg.cells());
+        let compiled = compile_tensor(&q.w_int, &faults, opts);
+        CompiledMatrix { q, decomps: compiled.decomps, faults, stats: compiled.stats }
+    }
+
+    /// The faulty integer weights this compilation realizes on-chip.
+    pub fn faulty_ints(&self, cfg: &crate::grouping::GroupConfig) -> Vec<i64> {
+        self.decomps
+            .iter()
+            .zip(&self.faults)
+            .map(|(d, f)| d.faulty_value(cfg, f))
+            .collect()
+    }
+
+    /// Faulty dequantized float weights, `[k*n]` row-major.
+    pub fn faulty_dequant(&self, cfg: &crate::grouping::GroupConfig) -> Vec<f32> {
+        let ints: Vec<i64> = self
+            .decomps
+            .iter()
+            .zip(&self.faults)
+            .map(|(d, f)| d.faulty_value(cfg, f))
+            .collect();
+        self.q.dequant_values(&ints)
+    }
+
+    /// Ideal dequantized weights (quantization error only).
+    pub fn ideal_dequant(&self) -> Vec<f32> {
+        self.q.dequant()
+    }
+
+    /// Fault-induced ℓ1 error in the dequantized domain (the Fig 8 metric:
+    /// fault error on top of quantization).
+    pub fn fault_l1(&self, cfg: &crate::grouping::GroupConfig) -> f64 {
+        let ideal = self.ideal_dequant();
+        let faulty = self.faulty_dequant(cfg);
+        ideal.iter().zip(&faulty).map(|(a, b)| (a - b).abs() as f64).sum()
+    }
+
+    /// Pack the (faulty) bit-planes for the L1 kernel.
+    pub fn planes(&self, cfg: &crate::grouping::GroupConfig) -> Planes {
+        Planes::pack(&self.decomps, Some(&self.faults), self.q.k, self.q.n, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+    use crate::fault::FaultRates;
+    use crate::grouping::GroupConfig;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn compiled_matrix_flow() {
+        let cfg = GroupConfig::R2C2;
+        let mut rng = Rng::new(1);
+        let (k, n) = (20, 6);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.5).collect();
+        let chip = ChipFaults::new(42, FaultRates::paper_default());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let cm = CompiledMatrix::compile(&w, k, n, &chip, 0, &opts);
+        assert_eq!(cm.decomps.len(), k * n);
+        // Faulty dequant differs from ideal only where residual errors exist.
+        let ideal = cm.ideal_dequant();
+        let faulty = cm.faulty_dequant(&cfg);
+        let n_diff = ideal.iter().zip(&faulty).filter(|(a, b)| a != b).count();
+        assert_eq!(n_diff, cm.stats.imperfect);
+        // Planes reproduce exactly the faulty ints.
+        let eff = cm.planes(&cfg).effective_weights(&cfg);
+        let faulty_ints: Vec<i64> = cm
+            .decomps
+            .iter()
+            .zip(&cm.faults)
+            .map(|(d, f)| d.faulty_value(&cfg, f))
+            .collect();
+        assert_eq!(eff, faulty_ints);
+    }
+
+    #[test]
+    fn fault_l1_zero_without_faults() {
+        let cfg = GroupConfig::R1C4;
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+        let chip = ChipFaults::new(1, FaultRates::none());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let cm = CompiledMatrix::compile(&w, 10, 5, &chip, 0, &opts);
+        assert_eq!(cm.fault_l1(&cfg), 0.0);
+    }
+}

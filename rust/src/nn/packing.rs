@@ -1,0 +1,130 @@
+//! Bit-plane packing: turn per-weight decompositions into the `[C, K*r, N]`
+//! plane tensors the L1 Pallas kernel consumes (layout contract documented
+//! in `python/compile/kernels/crossbar_mvm.py` and mirrored by
+//! `python/compile/packing.py`).
+
+use crate::fault::GroupFaults;
+use crate::grouping::{Decomposition, GroupConfig};
+
+/// Packed plane pair for one weight matrix.
+#[derive(Clone, Debug)]
+pub struct Planes {
+    /// `[C, K*r, N]` flattened row-major.
+    pub pos: Vec<f32>,
+    pub neg: Vec<f32>,
+    pub slices: usize,
+    pub phys_rows: usize,
+    pub n: usize,
+}
+
+impl Planes {
+    /// Pack decompositions (one per logical weight, row-major `[K, N]`)
+    /// into plane tensors. When `faults` is given, the *faulty* cell values
+    /// are packed (what the physical array actually reads); otherwise the
+    /// programmed values.
+    pub fn pack(
+        decomps: &[Decomposition],
+        faults: Option<&[GroupFaults]>,
+        k: usize,
+        n: usize,
+        cfg: &GroupConfig,
+    ) -> Planes {
+        assert_eq!(decomps.len(), k * n);
+        let (c, r) = (cfg.cols, cfg.rows);
+        let kr = k * r;
+        let mut pos = vec![0f32; c * kr * n];
+        let mut neg = vec![0f32; c * kr * n];
+        for ki in 0..k {
+            for ni in 0..n {
+                let idx = ki * n + ni;
+                let d = &decomps[idx];
+                let (pcells, ncells) = match faults {
+                    Some(fs) => {
+                        let f = &fs[idx];
+                        (d.pos.inject(cfg, &f.pos).cells, d.neg.inject(cfg, &f.neg).cells)
+                    }
+                    None => (d.pos.cells.clone(), d.neg.cells.clone()),
+                };
+                for col in 0..c {
+                    for row in 0..r {
+                        let flat = col * kr * n + (ki * r + row) * n + ni;
+                        pos[flat] = pcells[col * r + row] as f32;
+                        neg[flat] = ncells[col * r + row] as f32;
+                    }
+                }
+            }
+        }
+        Planes { pos, neg, slices: c, phys_rows: kr, n }
+    }
+
+    /// Collapse planes back into the effective logical integer weights —
+    /// inverse of the kernel's shift-add (test/verification helper).
+    pub fn effective_weights(&self, cfg: &GroupConfig) -> Vec<i64> {
+        let r = cfg.rows;
+        let k = self.phys_rows / r;
+        let sigs = cfg.significances();
+        let mut out = vec![0i64; k * self.n];
+        for ki in 0..k {
+            for ni in 0..self.n {
+                let mut acc = 0i64;
+                for (col, &sig) in sigs.iter().enumerate() {
+                    for row in 0..r {
+                        let flat = col * self.phys_rows * self.n + (ki * r + row) * self.n + ni;
+                        acc += sig * (self.pos[flat] as i64 - self.neg[flat] as i64);
+                    }
+                }
+                out[ki * self.n + ni] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultRates;
+    use crate::util::prop::prop_check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn pack_roundtrip_ideal() {
+        prop_check("planes-roundtrip", 60, |rng| {
+            let cfg = [GroupConfig::R1C4, GroupConfig::R2C2][rng.index(2)];
+            let (k, n) = (1 + rng.index(6), 1 + rng.index(5));
+            let ws: Vec<i64> = (0..k * n)
+                .map(|_| rng.range_i64(-cfg.max_per_array(), cfg.max_per_array()))
+                .collect();
+            let decomps: Vec<Decomposition> =
+                ws.iter().map(|&w| Decomposition::encode_ideal(w, &cfg)).collect();
+            let planes = Planes::pack(&decomps, None, k, n, &cfg);
+            prop_assert_eq!(planes.effective_weights(&cfg), ws);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn faulty_pack_matches_faulty_value() {
+        prop_check("planes-faulty", 60, |rng| {
+            let cfg = GroupConfig::R2C2;
+            let (k, n) = (3usize, 4usize);
+            let ws: Vec<i64> = (0..k * n).map(|_| rng.range_i64(-30, 30)).collect();
+            let decomps: Vec<Decomposition> =
+                ws.iter().map(|&w| Decomposition::encode_ideal(w, &cfg)).collect();
+            let faults: Vec<GroupFaults> = (0..k * n)
+                .map(|_| {
+                    GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.2, p_sa1: 0.2 }, rng)
+                })
+                .collect();
+            let planes = Planes::pack(&decomps, Some(&faults), k, n, &cfg);
+            let eff = planes.effective_weights(&cfg);
+            for i in 0..k * n {
+                prop_assert!(
+                    eff[i] == decomps[i].faulty_value(&cfg, &faults[i]),
+                    "packed faulty weight mismatch at {i}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

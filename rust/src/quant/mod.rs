@@ -1,0 +1,195 @@
+//! Post-training quantization to the grouping configuration's integer
+//! range.
+//!
+//! The paper quantizes CNNs with AnyPrecision QAT and LMs with GPTQ; both
+//! produce integer weights in the representable range of the grouping
+//! config — which is the only contract the compiler needs. We implement
+//! symmetric per-output-channel PTQ (the python side mirrors it in
+//! `packing.quantize_sym`), plus an optional greedy error-compensating
+//! variant (`gptq_lite`) in the spirit of GPTQ's column-by-column residual
+//! correction for the LM head.
+
+use crate::grouping::GroupConfig;
+
+/// A per-output-column symmetric quantized matrix.
+///
+/// Layout: `w_int[k * n + j]` for input row `k`, output column `j`;
+/// `dequant(k, j) = w_int[k,j] * scale[j]`.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub k: usize,
+    pub n: usize,
+    pub w_int: Vec<i64>,
+    pub scale: Vec<f32>,
+    pub max_int: i64,
+}
+
+impl QuantizedMatrix {
+    /// Symmetric per-column quantization of a row-major `[k, n]` matrix.
+    pub fn quantize(w: &[f32], k: usize, n: usize, cfg: &GroupConfig) -> QuantizedMatrix {
+        assert_eq!(w.len(), k * n);
+        let max_int = cfg.max_per_array();
+        let mut absmax = vec![0f32; n];
+        for row in 0..k {
+            for col in 0..n {
+                absmax[col] = absmax[col].max(w[row * n + col].abs());
+            }
+        }
+        let scale: Vec<f32> = absmax
+            .iter()
+            .map(|&m| if m > 0.0 { m / max_int as f32 } else { 1.0 })
+            .collect();
+        let mut w_int = vec![0i64; k * n];
+        for row in 0..k {
+            for col in 0..n {
+                let q = (w[row * n + col] / scale[col]).round() as i64;
+                w_int[row * n + col] = q.clamp(-max_int, max_int);
+            }
+        }
+        QuantizedMatrix { k, n, w_int, scale, max_int }
+    }
+
+    /// GPTQ-flavoured quantization: process input rows in order; after
+    /// rounding a row, push its rounding residual into the next row
+    /// (weighted by a decaying factor), which reduces the *accumulated*
+    /// output error for correlated inputs. A lightweight stand-in for
+    /// GPTQ's Hessian-weighted update that needs no calibration data.
+    pub fn quantize_gptq_lite(w: &[f32], k: usize, n: usize, cfg: &GroupConfig) -> QuantizedMatrix {
+        assert_eq!(w.len(), k * n);
+        let max_int = cfg.max_per_array();
+        let mut absmax = vec![0f32; n];
+        for row in 0..k {
+            for col in 0..n {
+                absmax[col] = absmax[col].max(w[row * n + col].abs());
+            }
+        }
+        let scale: Vec<f32> = absmax
+            .iter()
+            .map(|&m| if m > 0.0 { m / max_int as f32 } else { 1.0 })
+            .collect();
+        let mut w_int = vec![0i64; k * n];
+        let mut carry = vec![0f32; n];
+        for row in 0..k {
+            for col in 0..n {
+                let target = w[row * n + col] + carry[col] * 0.5;
+                let q = (target / scale[col]).round() as i64;
+                let q = q.clamp(-max_int, max_int);
+                w_int[row * n + col] = q;
+                carry[col] = target - q as f32 * scale[col];
+            }
+        }
+        QuantizedMatrix { k, n, w_int, scale, max_int }
+    }
+
+    /// Dequantize arbitrary integer values with this matrix's scales.
+    pub fn dequant_values(&self, ints: &[i64]) -> Vec<f32> {
+        assert_eq!(ints.len(), self.k * self.n);
+        let mut out = vec![0f32; ints.len()];
+        for row in 0..self.k {
+            for col in 0..self.n {
+                out[row * self.n + col] = ints[row * self.n + col] as f32 * self.scale[col];
+            }
+        }
+        out
+    }
+
+    /// The ideal dequantized weights (quantization error only, no faults).
+    pub fn dequant(&self) -> Vec<f32> {
+        self.dequant_values(&self.w_int)
+    }
+
+    /// Max |w − dequant| over all entries (quantization error bound check).
+    pub fn quant_error_linf(&self, w: &[f32]) -> f32 {
+        let dq = self.dequant();
+        w.iter().zip(&dq).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        prop_check("quant-halfstep", 100, |rng| {
+            let (k, n) = (1 + rng.index(20), 1 + rng.index(8));
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.3).collect();
+            let cfg = GroupConfig::R1C4;
+            let q = QuantizedMatrix::quantize(&w, k, n, &cfg);
+            for col in 0..n {
+                let half = q.scale[col] * 0.5 + 1e-7;
+                for row in 0..k {
+                    let err = (w[row * n + col] - q.w_int[row * n + col] as f32 * q.scale[col]).abs();
+                    prop_assert!(err <= half, "err {err} > half-step {half}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ints_within_config_range() {
+        prop_check("quant-range", 100, |rng| {
+            let cfg = [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4][rng.index(3)];
+            let (k, n) = (1 + rng.index(10), 1 + rng.index(5));
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 2.0).collect();
+            let q = QuantizedMatrix::quantize(&w, k, n, &cfg);
+            prop_assert!(
+                q.w_int.iter().all(|&v| v.abs() <= cfg.max_per_array()),
+                "int out of range"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn higher_precision_configs_quantize_better() {
+        let mut rng = crate::util::prng::Rng::new(5);
+        let (k, n) = (64, 16);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let e_r2c2 = QuantizedMatrix::quantize(&w, k, n, &GroupConfig::R2C2).quant_error_linf(&w);
+        let e_r1c4 = QuantizedMatrix::quantize(&w, k, n, &GroupConfig::R1C4).quant_error_linf(&w);
+        let e_r2c4 = QuantizedMatrix::quantize(&w, k, n, &GroupConfig::R2C4).quant_error_linf(&w);
+        assert!(e_r2c4 < e_r1c4 && e_r1c4 < e_r2c2, "{e_r2c4} < {e_r1c4} < {e_r2c2}");
+    }
+
+    #[test]
+    fn zero_column_safe() {
+        let w = vec![0.0f32; 12];
+        let q = QuantizedMatrix::quantize(&w, 4, 3, &GroupConfig::R2C2);
+        assert!(q.w_int.iter().all(|&v| v == 0));
+        assert!(q.scale.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn gptq_lite_reduces_column_sum_error() {
+        // The carry trick should shrink the accumulated per-column error
+        // |Σ_k (w - dq)| relative to plain rounding (it compensates
+        // residuals along k).
+        let mut rng = crate::util::prng::Rng::new(17);
+        let (k, n) = (256, 8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.2).collect();
+        let cfg = GroupConfig::R2C2; // coarse quantization → visible effect
+        let plain = QuantizedMatrix::quantize(&w, k, n, &cfg);
+        let lite = QuantizedMatrix::quantize_gptq_lite(&w, k, n, &cfg);
+        let colsum = |q: &QuantizedMatrix| -> f64 {
+            let dq = q.dequant();
+            (0..n)
+                .map(|j| {
+                    (0..k)
+                        .map(|i| (w[i * n + j] - dq[i * n + j]) as f64)
+                        .sum::<f64>()
+                        .abs()
+                })
+                .sum()
+        };
+        assert!(
+            colsum(&lite) < colsum(&plain),
+            "gptq-lite {} !< plain {}",
+            colsum(&lite),
+            colsum(&plain)
+        );
+    }
+}

@@ -1,0 +1,328 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust hot path (python never runs here).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifact names, argument order, shapes and dtypes come from
+//! `artifacts/manifest.json` written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Argument dtype (matches the manifest's "f32" / "i32").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One executable argument's spec.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Runtime argument value (borrowed buffers; shapes from the spec).
+#[derive(Clone, Debug)]
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// The PJRT runtime: client + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    art_dir: PathBuf,
+    manifest: Json,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `art_dir`.
+    pub fn new(art_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest_path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        Ok(Runtime { client, art_dir: art_dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all executables in the manifest.
+    pub fn executables(&self) -> Vec<String> {
+        self.manifest
+            .as_obj()
+            .map(|o| o.keys().filter(|k| !k.starts_with('_')).cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The manifest's `_meta` section.
+    pub fn meta(&self) -> &Json {
+        self.manifest.get("_meta")
+    }
+
+    /// Compile one artifact into an executable.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let entry = self.manifest.get(name);
+        let rel = entry
+            .get("path")
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.art_dir.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+
+        let args = entry
+            .get("args")
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifact '{name}' has no args"))?
+            .iter()
+            .map(|a| {
+                let shape = a
+                    .get("shape")
+                    .as_arr()
+                    .map(|xs| xs.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_default();
+                let dtype = match a.get("dtype").as_str() {
+                    Some("i32") => DType::I32,
+                    _ => DType::F32,
+                };
+                ArgSpec {
+                    name: a.get("name").as_str().unwrap_or("?").to_string(),
+                    shape,
+                    dtype,
+                }
+            })
+            .collect();
+        Ok(Executable { exe, args, name: name.to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub args: Vec<ArgSpec>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with positional arguments (must match `self.args`).
+    /// Returns the first tuple element flattened to f32.
+    pub fn run(&self, values: &[ArgValue]) -> Result<Vec<f32>> {
+        if values.len() != self.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.args.len(),
+                values.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(values.len());
+        for (spec, val) in self.args.iter().zip(values) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (spec.dtype, val) {
+                (DType::F32, ArgValue::F32(data)) => {
+                    if data.len() != spec.len() {
+                        bail!(
+                            "{}: arg '{}' wants {} elements, got {}",
+                            self.name,
+                            spec.name,
+                            spec.len(),
+                            data.len()
+                        );
+                    }
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?
+                }
+                (DType::I32, ArgValue::I32(data)) => {
+                    if data.len() != spec.len() {
+                        bail!(
+                            "{}: arg '{}' wants {} elements, got {}",
+                            self.name,
+                            spec.name,
+                            spec.len(),
+                            data.len()
+                        );
+                    }
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape {}: {e:?}", spec.name))?
+                }
+                _ => bail!(
+                    "{}: arg '{}' dtype mismatch (spec {:?})",
+                    self.name,
+                    spec.name,
+                    spec.dtype
+                ),
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))
+    }
+
+    /// Find an argument index by name.
+    pub fn arg_index(&self, name: &str) -> Option<usize> {
+        self.args.iter().position(|a| a.name == name)
+    }
+}
+
+/// Locate the artifacts directory: $RCHG_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("RCHG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load a named weight bank (`artifacts/weights/<model>/`): meta.json param
+/// order + one .bin per parameter.
+pub struct WeightBank {
+    pub params: BTreeMap<String, crate::util::io::RawTensor>,
+    pub order: Vec<String>,
+    pub meta: Json,
+}
+
+impl WeightBank {
+    pub fn load(dir: &Path) -> Result<WeightBank> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("read {}/meta.json", dir.display()))?;
+        let meta = Json::parse(&meta_text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let mut params = BTreeMap::new();
+        let mut order = Vec::new();
+        for p in meta.get("params").as_arr().unwrap_or(&[]) {
+            let name = p.get("name").as_str().ok_or_else(|| anyhow!("param sans name"))?;
+            let t = crate::util::io::RawTensor::load(&dir.join(format!("{name}.bin")))?;
+            let want: Vec<usize> = p
+                .get("shape")
+                .as_arr()
+                .map(|xs| xs.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default();
+            if t.dims != want {
+                bail!("param {name}: file dims {:?} != meta {:?}", t.dims, want);
+            }
+            params.insert(name.to_string(), t);
+            order.push(name.to_string());
+        }
+        Ok(WeightBank { params, order, meta })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&crate::util::io::RawTensor> {
+        self.params.get(name).ok_or_else(|| anyhow!("missing param {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> PathBuf {
+        artifacts_dir()
+    }
+
+    fn have_artifacts() -> bool {
+        art().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn runtime_loads_and_lists() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art()).unwrap();
+        assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+        let names = rt.executables();
+        assert!(names.iter().any(|n| n.starts_with("imc_linear_")));
+    }
+
+    #[test]
+    fn imc_linear_executes_and_matches_integer_matmul() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        use crate::grouping::{Decomposition, GroupConfig};
+        let rt = Runtime::new(&art()).unwrap();
+        let exe = rt.load("imc_linear_r2c2").unwrap();
+        // Spec: x [8,64], planes [2,128,10], sigs [2].
+        let cfg = GroupConfig::R2C2;
+        let (k, n) = (64usize, 10usize);
+        let mut rng = crate::util::prng::Rng::new(42);
+        let w_int: Vec<i64> =
+            (0..k * n).map(|_| rng.range_i64(-cfg.max_per_array(), cfg.max_per_array())).collect();
+        // Pack planes (fault-free) in the kernel layout.
+        let mut pos = vec![0f32; cfg.cols * k * cfg.rows * n];
+        let mut neg = vec![0f32; cfg.cols * k * cfg.rows * n];
+        let kr = k * cfg.rows;
+        for ki in 0..k {
+            for ni in 0..n {
+                let d = Decomposition::encode_ideal(w_int[ki * n + ni], &cfg);
+                for col in 0..cfg.cols {
+                    for row in 0..cfg.rows {
+                        let cell = d.pos.cells[col * cfg.rows + row] as f32;
+                        let celln = d.neg.cells[col * cfg.rows + row] as f32;
+                        let idx = col * kr * n + (ki * cfg.rows + row) * n + ni;
+                        pos[idx] = cell;
+                        neg[idx] = celln;
+                    }
+                }
+            }
+        }
+        let x: Vec<f32> = (0..8 * k).map(|_| rng.normal_f32()).collect();
+        let sigs: Vec<f32> = cfg.significances().iter().map(|&s| s as f32).collect();
+        let out = exe
+            .run(&[
+                ArgValue::F32(&x),
+                ArgValue::F32(&pos),
+                ArgValue::F32(&neg),
+                ArgValue::F32(&sigs),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 8 * n);
+        // Compare with x @ w_int.
+        for b in 0..8 {
+            for j in 0..n {
+                let want: f32 =
+                    (0..k).map(|i| x[b * k + i] * w_int[i * n + j] as f32).sum();
+                let got = out[b * n + j];
+                assert!(
+                    (want - got).abs() <= 1e-2 * want.abs().max(1.0),
+                    "mismatch at ({b},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}

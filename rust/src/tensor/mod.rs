@@ -1,0 +1,167 @@
+//! Minimal dense f32 tensor used by the quantizers, mappers and evaluation
+//! drivers. Row-major, owned storage. This is deliberately small: the heavy
+//! numerics run inside the AOT-compiled XLA executables; the rust side only
+//! needs reshapes, slicing, matmul for GPTQ-style calibration, and im2col
+//! bookkeeping for the conv mappers.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn randn(dims: &[usize], rng: &mut Rng, std: f32) -> Self {
+        let n: usize = dims.iter().product();
+        Tensor {
+            dims: dims.to_vec(),
+            data: (0..n).map(|_| rng.normal_f32() * std).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.dims.len(), 2);
+        self.data[i * self.dims[1] + j] = v;
+    }
+
+    /// Matrix multiply: `[m,k] x [k,n] -> [m,n]`.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.dims.len(), 2);
+        assert_eq!(rhs.dims.len(), 2);
+        let (m, k) = (self.dims[0], self.dims[1]);
+        let (k2, n) = (rhs.dims[0], rhs.dims[1]);
+        assert_eq!(k, k2, "matmul inner dims");
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order for cache friendliness.
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dst[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.dims.len(), 2);
+        let (m, n) = (self.dims[0], self.dims[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// ℓ1 norm of the difference — the Fig 8 metric.
+    pub fn l1_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[4, 4], &mut rng, 1.0);
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.set2(i, i, 1.0);
+        }
+        let out = a.matmul(&eye);
+        for (x, y) in out.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[3, 7], &mut rng, 1.0);
+        let b = a.transpose2().transpose2();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn l1_diff_zero_for_self() {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(&[10], &mut rng, 2.0);
+        assert_eq!(a.l1_diff(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,185 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub program: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative option spec used for help text and validation.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// CLI definition for one (sub)command.
+pub struct Cli {
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli { about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default });
+        self
+    }
+
+    pub fn help(&self, program: &str) -> String {
+        let mut s = format!("{program} — {}\n\noptions:\n", self.about);
+        for o in &self.opts {
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s.push_str("  --help               show this help\n");
+        s
+    }
+
+    /// Parse `std::env::args()` (or any iterator). Exits on `--help` or on
+    /// an unknown `--option`.
+    pub fn parse(&self, argv: impl IntoIterator<Item = String>) -> Args {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_else(|| "rchg".into());
+        let mut args = Args { program: program.clone(), ..Default::default() };
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.flags.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let known: Vec<&str> = self.opts.iter().map(|o| o.name).collect();
+        let mut rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = std::mem::take(&mut rest[i]);
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help(&program));
+                std::process::exit(0);
+            } else if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known.contains(&key.as_str()) {
+                    eprintln!("unknown option --{key}\n");
+                    eprint!("{}", self.help(&program));
+                    std::process::exit(2);
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Value is the next token unless it looks like an option
+                        // (then this is a boolean flag).
+                        if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                            i += 1;
+                            std::mem::take(&mut rest[i])
+                        } else {
+                            "true".to_string()
+                        }
+                    }
+                };
+                args.flags.insert(key, val);
+            } else {
+                args.positional.push(a);
+            }
+            i += 1;
+        }
+        args
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|s| s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(parts.iter().map(|s| s.to_string()))
+            .collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .opt("seed", "rng seed", Some("42"))
+            .opt("config", "grouping config", Some("r2c2"))
+            .opt("verbose", "chatty", None)
+            .opt("rates", "fault rates", None)
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(argv(&[]));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get_usize("seed", 0), 42);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = cli().parse(argv(&["--seed", "7", "--config=r1c4"]));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("config"), Some("r1c4"));
+    }
+
+    #[test]
+    fn boolean_flag() {
+        let a = cli().parse(argv(&["--verbose", "--seed", "3"]));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("seed", 0), 3);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cli().parse(argv(&["run", "--seed", "1", "thing"]));
+        assert_eq!(a.positional, vec!["run".to_string(), "thing".to_string()]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = cli().parse(argv(&["--rates", "0.01, 0.05,0.1"]));
+        assert_eq!(a.get_list("rates"), vec!["0.01", "0.05", "0.1"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = cli().parse(argv(&["--rates", "-5"]));
+        assert_eq!(a.get_f64("rates", 0.0), -5.0);
+    }
+}

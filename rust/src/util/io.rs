@@ -1,0 +1,211 @@
+//! Binary tensor I/O shared with the python build path.
+//!
+//! Format (`.bin`, little-endian): the python side (`aot.py`) writes each
+//! trained weight tensor as
+//!
+//! ```text
+//! magic   u32 = 0x52434847  ("RCHG")
+//! dtype   u32 (0 = f32, 1 = i32, 2 = u8)
+//! ndim    u32
+//! dims    u32 × ndim
+//! data    dtype × prod(dims)
+//! ```
+//!
+//! plus a JSON manifest listing tensors by name. Keeping the format trivial
+//! means zero parsing dependencies on either side.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x5243_4847;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U8 = 2,
+}
+
+/// A raw tensor loaded from / destined for a `.bin` file.
+#[derive(Clone, Debug)]
+pub struct RawTensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub f32s: Vec<f32>,
+    pub i32s: Vec<i32>,
+    pub u8s: Vec<u8>,
+}
+
+impl RawTensor {
+    pub fn from_f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        RawTensor { dtype: DType::F32, dims, f32s: data, i32s: vec![], u8s: vec![] }
+    }
+    pub fn from_i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        RawTensor { dtype: DType::I32, dims, f32s: vec![], i32s: data, u8s: vec![] }
+    }
+    pub fn from_u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        RawTensor { dtype: DType::U8, dims, f32s: vec![], i32s: vec![], u8s: data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(16 + self.len() * 4);
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&(self.dtype as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.dims.len() as u32).to_le_bytes());
+        for &d in &self.dims {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match self.dtype {
+            DType::F32 => {
+                for v in &self.f32s {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                for v in &self.i32s {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::U8 => buf.extend_from_slice(&self.u8s),
+        }
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<RawTensor> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<RawTensor> {
+        let mut pos = 0usize;
+        let rd_u32 = |pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > bytes.len() {
+                bail!("truncated header");
+            }
+            let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let magic = rd_u32(&mut pos)?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let dtype = match rd_u32(&mut pos)? {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            d => bail!("bad dtype {d}"),
+        };
+        let ndim = rd_u32(&mut pos)? as usize;
+        if ndim > 8 {
+            bail!("ndim {ndim} too large");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(rd_u32(&mut pos)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut t = RawTensor { dtype, dims, f32s: vec![], i32s: vec![], u8s: vec![] };
+        match dtype {
+            DType::F32 => {
+                if pos + n * 4 != bytes.len() {
+                    bail!("payload size mismatch");
+                }
+                t.f32s = bytes[pos..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+            }
+            DType::I32 => {
+                if pos + n * 4 != bytes.len() {
+                    bail!("payload size mismatch");
+                }
+                t.i32s = bytes[pos..]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+            }
+            DType::U8 => {
+                if pos + n != bytes.len() {
+                    bail!("payload size mismatch");
+                }
+                t.u8s = bytes[pos..].to_vec();
+            }
+        }
+        Ok(t)
+    }
+}
+
+/// Read a whole text file.
+pub fn read_text(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = RawTensor::from_f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-8, 7.25]);
+        let dir = std::env::temp_dir().join("rchg_io_test");
+        let p = dir.join("t.bin");
+        t.save(&p).unwrap();
+        let u = RawTensor::load(&p).unwrap();
+        assert_eq!(u.dims, vec![2, 3]);
+        assert_eq!(u.f32s, t.f32s);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_i32_u8() {
+        let t = RawTensor::from_i32(vec![4], vec![-5, 0, 7, i32::MAX]);
+        let bytes = {
+            let dir = std::env::temp_dir().join("rchg_io_test2");
+            let p = dir.join("t.bin");
+            t.save(&p).unwrap();
+            std::fs::read(&p).unwrap()
+        };
+        let u = RawTensor::from_bytes(&bytes).unwrap();
+        assert_eq!(u.i32s, t.i32s);
+
+        let b = RawTensor::from_u8(vec![3], vec![1, 2, 255]);
+        let dir = std::env::temp_dir().join("rchg_io_test3");
+        let p = dir.join("b.bin");
+        b.save(&p).unwrap();
+        assert_eq!(RawTensor::load(&p).unwrap().u8s, vec![1, 2, 255]);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(RawTensor::from_bytes(&[]).is_err());
+        assert!(RawTensor::from_bytes(&[1, 2, 3, 4, 5]).is_err());
+        let t = RawTensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let dir = std::env::temp_dir().join("rchg_io_test4");
+        let p = dir.join("t.bin");
+        t.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(bytes.len() - 1);
+        assert!(RawTensor::from_bytes(&bytes).is_err());
+    }
+}

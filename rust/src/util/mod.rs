@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, timing/benchmarks, thread pooling, property
+//! testing and binary tensor I/O.
+
+pub mod cli;
+pub mod fnv;
+pub mod io;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod timer;

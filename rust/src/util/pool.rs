@@ -1,0 +1,141 @@
+//! Scoped data-parallel helpers over std threads (no `rayon` offline).
+//!
+//! The coordinator compiles millions of independent weights; we split index
+//! ranges across threads with `std::thread::scope`. Results are collected
+//! per-chunk and stitched in order, so output is deterministic regardless
+//! of thread count.
+
+/// Number of worker threads to use: explicit override, else available
+/// parallelism, else 1.
+pub fn default_threads(requested: Option<usize>) -> usize {
+    match requested {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Split `n` items into at most `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Apply `f(range) -> Vec<T>` to each range on its own thread and
+/// concatenate results in range order. `f` must produce exactly the items
+/// for its range.
+pub fn parallel_map_ranges<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
+{
+    let ranges = split_ranges(n, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().flat_map(&f).collect();
+    }
+    let mut slots: Vec<Option<Vec<T>>> = Vec::new();
+    slots.resize_with(ranges.len(), || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for r in &ranges {
+            let r = r.clone();
+            let f = &f;
+            handles.push(scope.spawn(move || f(r)));
+        }
+        for (slot, h) in slots.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("worker thread panicked"));
+        }
+    });
+    slots.into_iter().flatten().flatten().collect()
+}
+
+/// Parallel fold: apply `f(range) -> A`, combine with `merge`.
+pub fn parallel_fold<A, F, M>(n: usize, threads: usize, f: F, merge: M, init: A) -> A
+where
+    A: Send,
+    F: Fn(std::ops::Range<usize>) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    let ranges = split_ranges(n, threads);
+    if ranges.is_empty() {
+        return init;
+    }
+    let mut partials: Vec<Option<A>> = Vec::new();
+    partials.resize_with(ranges.len(), || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for r in &ranges {
+            let r = r.clone();
+            let f = &f;
+            handles.push(scope.spawn(move || f(r)));
+        }
+        for (slot, h) in partials.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("worker thread panicked"));
+        }
+    });
+    partials.into_iter().flatten().fold(init, merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8, 200] {
+                let rs = split_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let out = parallel_map_ranges(1000, 4, |r| r.map(|i| i * i).collect::<Vec<_>>());
+        let expect: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn map_single_thread() {
+        let out = parallel_map_ranges(10, 1, |r| r.collect::<Vec<_>>());
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fold_sums() {
+        let s = parallel_fold(
+            10_000,
+            4,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            |a, b| a + b,
+            0u64,
+        );
+        assert_eq!(s, (10_000u64 * 9_999) / 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map_ranges(0, 4, |r| r.collect());
+        assert!(out.is_empty());
+    }
+}

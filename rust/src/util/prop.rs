@@ -1,0 +1,109 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline environment lacks the `proptest` crate, so invariant tests
+//! use this harness instead: run a closure over many seeded random cases;
+//! on failure report the case seed so the exact input can be replayed by
+//! constructing `Rng::new(seed)`. Used throughout `grouping`, `ilp`,
+//! `decompose` and `coordinator` tests.
+
+use super::prng::Rng;
+
+/// Run `cases` random property checks. `f` receives a fresh deterministic
+/// `Rng` per case and returns `Err(description)` on property violation.
+/// Panics with the failing case seed.
+pub fn prop_check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Base seed is fixed: test runs are reproducible across machines.
+    let base = 0xC0FFEE_u64 ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with Rng::new({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a hash (for deriving per-property base seeds from names).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert helper returning `Err` instead of panicking, for use inside
+/// `prop_check` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Equality variant of [`prop_assert!`].
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        prop_check("sum-commutes", 200, |rng| {
+            let a = rng.range_i64(-100, 100);
+            let b = rng.range_i64(-100, 100);
+            prop_assert!(a + b == b + a, "commutativity broke");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn panics_with_seed_on_failure() {
+        prop_check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn fnv_distinct() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_ne!(fnv1a(b""), fnv1a(b"a"));
+    }
+
+    #[test]
+    fn rng_is_deterministic_per_case() {
+        let mut first: Vec<i64> = Vec::new();
+        prop_check("capture", 5, |rng| {
+            first.push(rng.range_i64(0, 1_000_000));
+            Ok(())
+        });
+        let mut second: Vec<i64> = Vec::new();
+        prop_check("capture", 5, |rng| {
+            second.push(rng.range_i64(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,190 @@
+//! Wall-clock timing + a tiny benchmark harness (no `criterion` offline).
+//!
+//! Used by the `rust/benches/*` targets (all `harness = false`) and by the
+//! coordinator's per-stage breakdown counters (Fig 10b reproduction).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulating stage clock: the coordinator charges wall time to named
+/// stages (cond-check / FAWD / CVM) to reproduce the Fig 10b breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct StageClock {
+    entries: Vec<(String, f64)>,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == stage) {
+            e.1 += secs;
+        } else {
+            self.entries.push((stage.to_string(), secs));
+        }
+    }
+
+    pub fn merge(&mut self, other: &StageClock) {
+        for (n, s) in &other.entries {
+            self.add(n, *s);
+        }
+    }
+
+    pub fn get(&self, stage: &str) -> f64 {
+        self.entries.iter().find(|(n, _)| n == stage).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+}
+
+/// Benchmark statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} ±{:>9}  (n={})",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.min_s),
+            fmt_dur(self.max_s),
+            fmt_dur(self.stddev_s),
+            self.iters
+        )
+    }
+}
+
+/// Human-friendly duration formatting (ns → h scale).
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else if s < 7200.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup iterations, then at least `min_iters`
+/// timed iterations or until `min_time_s` elapsed, whichever is longer.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_s: f64, mut f: F) -> BenchStats {
+    // Warmup.
+    for _ in 0..2.min(min_iters) {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    stats_from(name, &samples)
+}
+
+pub fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min).min(mean),
+        max_s: samples.iter().cloned().fold(0.0, f64::max).max(mean),
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Header line matching `BenchStats::report` columns.
+pub fn bench_header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "min", "max", "stddev"
+    )
+}
+
+/// Black-box helper to stop the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_clock_accumulates_and_merges() {
+        let mut a = StageClock::new();
+        a.add("fawd", 1.0);
+        a.add("fawd", 0.5);
+        a.add("cvm", 2.0);
+        let mut b = StageClock::new();
+        b.add("cvm", 1.0);
+        b.merge(&a);
+        assert_eq!(b.get("fawd"), 1.5);
+        assert_eq!(b.get("cvm"), 3.0);
+        assert!((b.total() - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let mut count = 0usize;
+        let st = bench("noop", 5, 0.0, || count += 1);
+        assert!(st.iters >= 5);
+        assert!(count >= st.iters);
+        assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(200.0).ends_with('m'));
+        assert!(fmt_dur(8000.0).ends_with('h'));
+    }
+}

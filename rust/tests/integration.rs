@@ -1,0 +1,287 @@
+//! Cross-module integration tests: the full quantize → fault-compile →
+//! pack → execute flow, cross-method agreement at model scale, chip
+//! determinism, and failure injection on the runtime loading path.
+
+use rchg::coordinator::{compile_tensor, CompileOptions, Method, Stage};
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::{FaultRates, GroupFaults};
+use rchg::grouping::{Decomposition, FaultAnalysis, GroupConfig};
+use rchg::nn::packing::Planes;
+use rchg::nn::CompiledMatrix;
+use rchg::quant::QuantizedMatrix;
+use rchg::util::prng::Rng;
+
+fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_i64(-max, max)).collect()
+}
+
+#[test]
+fn every_method_agrees_on_residual_error() {
+    // Complete, ILP-only and (r=1) original FF must produce identical
+    // per-weight |error| — they solve the same optimization problem.
+    let cfg = GroupConfig::R1C4;
+    let ws = random_weights(300, cfg.max_per_array(), 3);
+    let chip = ChipFaults::new(11, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+
+    let run = |m: Method| {
+        compile_tensor(&ws, &faults, &CompileOptions::new(cfg, m)).errors
+    };
+    let complete = run(Method::Complete);
+    let ilp = run(Method::IlpOnly);
+    let ff = run(Method::OriginalFf);
+    assert_eq!(complete, ilp);
+    assert_eq!(complete, ff);
+}
+
+#[test]
+fn full_weight_range_exactness_census() {
+    // For a fixed fault map, sweep EVERY representable weight and verify
+    // the pipeline achieves zero error exactly on the achievable set.
+    let cfg = GroupConfig::R2C2;
+    let mut rng = Rng::new(5);
+    for _ in 0..20 {
+        let faults = GroupFaults::sample(
+            cfg.cells(),
+            &FaultRates { p_sa0: 0.2, p_sa1: 0.2 },
+            &mut rng,
+        );
+        let fa = FaultAnalysis::new(&cfg, &faults);
+        let achievable: std::collections::BTreeSet<i64> =
+            fa.enumerate_values().into_iter().collect();
+        let ws: Vec<i64> = (-cfg.max_per_array()..=cfg.max_per_array()).collect();
+        let fs = vec![faults.clone(); ws.len()];
+        let out = compile_tensor(&ws, &fs, &CompileOptions::new(cfg, Method::Complete));
+        for (w, err) in ws.iter().zip(&out.errors) {
+            if achievable.contains(w) {
+                assert_eq!(*err, 0, "w={w} achievable but error={err} (faults {faults:?})");
+            } else {
+                assert!(*err > 0, "w={w} unachievable but error=0");
+            }
+        }
+    }
+}
+
+#[test]
+fn chip_compilation_is_deterministic() {
+    let cfg = GroupConfig::R2C2;
+    let ws = random_weights(2_000, cfg.max_per_array(), 9);
+    let chip = ChipFaults::new(77, FaultRates::paper_default());
+    let faults = chip.sample_tensor(3, ws.len(), cfg.cells());
+    let mut opts = CompileOptions::new(cfg, Method::Complete);
+    opts.threads = 2;
+    let a = compile_tensor(&ws, &faults, &opts);
+    let b = compile_tensor(&ws, &faults, &opts);
+    assert_eq!(a.decomps, b.decomps);
+    assert_eq!(a.errors, b.errors);
+}
+
+#[test]
+fn quantize_compile_pack_roundtrip_model_scale() {
+    // A "layer" of float weights goes through the full path; the packed
+    // planes must decode to exactly the faulty ints the compiler reported,
+    // and the dequantized error must be bounded by scale × integer error.
+    let cfg = GroupConfig::R2C2;
+    let (k, n) = (48usize, 12usize);
+    let mut rng = Rng::new(21);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.4).collect();
+    let chip = ChipFaults::new(5, FaultRates::paper_default());
+    let opts = CompileOptions::new(cfg, Method::Complete);
+    let cm = CompiledMatrix::compile(&w, k, n, &chip, 0, &opts);
+
+    let eff = cm.planes(&cfg).effective_weights(&cfg);
+    assert_eq!(eff, cm.faulty_ints(&cfg));
+
+    let ideal = cm.ideal_dequant();
+    let faulty = cm.faulty_dequant(&cfg);
+    for col in 0..n {
+        for row in 0..k {
+            let i = row * n + col;
+            let int_err = (cm.q.w_int[i] - cm.faulty_ints(&cfg)[i]).abs() as f32;
+            let float_err = (ideal[i] - faulty[i]).abs();
+            assert!(
+                (float_err - cm.q.scale[col] * int_err).abs() < 1e-4,
+                "float/int error inconsistent at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn unprotected_is_never_beaten_by_itself_with_mitigation_census() {
+    // Aggregate fault error strictly improves with mitigation across a
+    // sweep of chips and configs (failure-mode census).
+    for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
+        for chip_seed in [1u64, 2, 3] {
+            let ws = random_weights(1_500, cfg.max_per_array(), chip_seed ^ 0xAB);
+            let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+            let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+            let raw = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Unprotected));
+            let fixed = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+            assert!(fixed.stats.total_abs_error < raw.stats.total_abs_error);
+            // Per-weight: never worse.
+            for (a, b) in fixed.errors.iter().zip(&raw.errors) {
+                assert!(a <= b);
+            }
+        }
+    }
+}
+
+#[test]
+fn stage_census_matches_theorem_predictions() {
+    // At paper rates on R2C2, inconsecutivity is rare (Fig 6) → the CVM
+    // stage should be nearly unused; fault-free groups ≈ (1-p)^(2 cells).
+    let cfg = GroupConfig::R2C2;
+    let ws = random_weights(40_000, cfg.max_per_array(), 13);
+    let chip = ChipFaults::new(2, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let mut opts = CompileOptions::new(cfg, Method::Complete);
+    opts.memoize = false;
+    let out = compile_tensor(&ws, &faults, &opts);
+    let n = ws.len() as f64;
+    let fast = out.stats.count_of(Stage::FastPath) as f64 / n;
+    let cvm = out.stats.count_of(Stage::TableCvm) as f64 / n;
+    let expected_fault_free = (1.0 - 0.1079f64).powi(8);
+    assert!((fast - expected_fault_free).abs() < 0.02, "fast-path {fast}");
+    assert!(cvm < 0.002, "CVM share {cvm} should be negligible on R2C2");
+}
+
+#[test]
+fn planes_respect_cell_bounds_under_faults() {
+    let cfg = GroupConfig::R2C4;
+    let (k, n) = (10usize, 10usize);
+    let ws = random_weights(k * n, cfg.max_per_array(), 31);
+    let chip = ChipFaults::new(8, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let out = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+    let decomps: Vec<Decomposition> = out.decomps;
+    let planes = Planes::pack(&decomps, Some(&faults), k, n, &cfg);
+    for v in planes.pos.iter().chain(planes.neg.iter()) {
+        assert!(*v >= 0.0 && *v <= (cfg.levels - 1) as f32);
+    }
+}
+
+#[test]
+fn quantizer_then_pipeline_respects_range_invariant() {
+    // Quantized ints always fit the config range; compile must never panic
+    // across configs (the debug_assert in decompose_one guards this).
+    let mut rng = Rng::new(77);
+    for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::new(1, 2, 2)] {
+        let (k, n) = (30usize, 7usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 3.0).collect();
+        let q = QuantizedMatrix::quantize(&w, k, n, &cfg);
+        let chip = ChipFaults::new(3, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, q.w_int.len(), cfg.cells());
+        let _ = compile_tensor(&q.w_int, &faults, &CompileOptions::new(cfg, Method::Complete));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection on the runtime path.
+// ---------------------------------------------------------------------
+
+mod runtime_failures {
+    use rchg::runtime::Runtime;
+    use std::path::PathBuf;
+
+    fn scratch(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rchg_it_{name}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let d = scratch("nomanifest");
+        let err = match Runtime::new(&d) { Err(e) => e.to_string(), Ok(_) => panic!("expected error") };
+        assert!(err.contains("manifest.json"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_manifest_is_a_clean_error() {
+        let d = scratch("badmanifest");
+        std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+        assert!(Runtime::new(&d).is_err());
+    }
+
+    #[test]
+    fn unknown_executable_is_a_clean_error() {
+        let d = scratch("emptymanifest");
+        std::fs::write(d.join("manifest.json"), "{}").unwrap();
+        let rt = Runtime::new(&d).unwrap();
+        let err = match rt.load("nope") { Err(e) => e.to_string(), Ok(_) => panic!("expected error") };
+        assert!(err.contains("not in manifest"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_hlo_is_a_clean_error() {
+        let d = scratch("badhlo");
+        std::fs::write(d.join("bad.hlo.txt"), "this is not hlo").unwrap();
+        std::fs::write(
+            d.join("manifest.json"),
+            r#"{"bad": {"path": "bad.hlo.txt", "args": [{"name":"x","shape":[1],"dtype":"f32"}]}}"#,
+        )
+        .unwrap();
+        let rt = Runtime::new(&d).unwrap();
+        assert!(rt.load("bad").is_err());
+    }
+
+    #[test]
+    fn wrong_arg_count_and_size_rejected() {
+        // Against the real artifacts if present.
+        let art = rchg::runtime::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&art).unwrap();
+        let exe = rt.load("imc_linear_r2c2").unwrap();
+        // Too few args.
+        let err = exe.run(&[]).unwrap_err().to_string();
+        assert!(err.contains("expected"), "{err}");
+        // Wrong element count.
+        let bad = vec![0f32; 3];
+        let vals: Vec<rchg::runtime::ArgValue> =
+            exe.args.iter().map(|_| rchg::runtime::ArgValue::F32(&bad)).collect();
+        assert!(exe.run(&vals).is_err());
+    }
+}
+
+mod weightbank_failures {
+    use rchg::runtime::WeightBank;
+    use std::path::PathBuf;
+
+    fn scratch(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rchg_wb_{name}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn missing_meta_is_clean_error() {
+        let d = scratch("nometa");
+        assert!(WeightBank::load(&d).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let d = scratch("shapemismatch");
+        std::fs::write(
+            d.join("meta.json"),
+            r#"{"params": [{"name": "w", "shape": [2, 2]}]}"#,
+        )
+        .unwrap();
+        // Write a 3-element tensor where meta says 2x2.
+        crate::rchg_io_save(&d.join("w.bin"), &[1.0, 2.0, 3.0]);
+        let err = match WeightBank::load(&d) { Err(e) => e.to_string(), Ok(_) => panic!("expected error") };
+        assert!(err.contains("dims"), "{err}");
+    }
+}
+
+/// Helper for the failure tests: write a RawTensor f32 file.
+fn rchg_io_save(path: &std::path::Path, data: &[f32]) {
+    rchg::util::io::RawTensor::from_f32(vec![data.len()], data.to_vec())
+        .save(path)
+        .unwrap();
+}
