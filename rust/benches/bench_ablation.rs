@@ -18,14 +18,27 @@ fn main() -> anyhow::Result<()> {
     let chip = ChipFaults::new(1, FaultRates::paper_default());
     let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
 
-    println!("== ablation: memoization ({} weights, R1C4)", ws.len());
+    println!("== ablation: dedupe / memoization ({} weights, R1C4)", ws.len());
+    {
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let t = Timer::start();
+        let out = compile_tensor(&ws, &faults, &opts);
+        println!(
+            "  pattern-class dedupe {:>10}  ({} classes, {} unique pairs, {:.1}x)",
+            fmt_dur(t.secs()),
+            out.stats.unique_patterns,
+            out.stats.unique_pairs,
+            out.stats.dedup_ratio()
+        );
+    }
     for memo in [true, false] {
         let mut opts = CompileOptions::new(cfg, Method::Complete);
+        opts.dedupe = false;
         opts.memoize = memo;
         let t = Timer::start();
         let out = compile_tensor(&ws, &faults, &opts);
         println!(
-            "  memoize={memo:<5} {:>10}  (hits {})",
+            "  legacy memoize={memo:<5} {:>10}  (hits {})",
             fmt_dur(t.secs()),
             out.stats.memo_hits
         );

@@ -3,10 +3,17 @@
 //!
 //! Full-model times for slow methods are extrapolated from deterministic
 //! samples (printed explicitly). The complete pipeline additionally runs a
-//! full-scale ResNet-20 compile (no sampling) as a ground-truth datapoint.
+//! full-scale ResNet-20 compile (no sampling) as a ground-truth datapoint,
+//! reports the pattern-class dedup factor (solver invocations vs weights),
+//! and cross-checks that the dedupe-first core is byte-identical to the
+//! legacy per-weight path at several thread counts.
 
-use rchg::coordinator::Method;
-use rchg::experiments::compile_time::{fig10a, fig10b, measure, table2, CompileTimeOptions};
+use rchg::coordinator::{compile_tensor, CompileOptions, Method};
+use rchg::experiments::compile_time::{
+    dedup_report, fig10a, fig10b, measure, synthetic_model_weights, table2, CompileTimeOptions,
+};
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
 use rchg::util::timer::fmt_dur;
 
@@ -29,17 +36,54 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
     println!("{}", fig10a(&rows, &opts.models).render());
     println!("{}", fig10b(&rows, opts.models.last().unwrap()).render());
+    println!("{}", dedup_report(&rows).render());
 
-    // Ground-truth full-scale run: complete pipeline on all of ResNet-20.
+    // Ground-truth full-scale run: complete pipeline on all of ResNet-20,
+    // with the dedup factor (weights per solver invocation) per config.
     println!("== full-scale (no sampling) complete-pipeline runs");
+    let mut best_ratio = 1.0f64;
     for cfg in [GroupConfig::R1C4, GroupConfig::R2C2] {
         let r = measure("resnet20", cfg, Method::Complete, usize::MAX, 1, 1)?;
         println!(
-            "  resnet20 {} complete: {} for {} weights ({:.0} weights/s)",
+            "  resnet20 {} complete: {} for {} weights ({:.0} weights/s) — \
+             {} classes, {} unique pairs, {:.1}x dedup",
             cfg.name(),
             fmt_dur(r.measured_secs),
             r.sampled_weights,
-            r.sampled_weights as f64 / r.measured_secs
+            r.sampled_weights as f64 / r.measured_secs,
+            r.unique_patterns,
+            r.unique_pairs,
+            r.dedup_ratio()
+        );
+        best_ratio = best_ratio.max(r.dedup_ratio());
+    }
+    println!(
+        "  dedup criterion (solver on ≥5x fewer pairs than weights): {}",
+        if best_ratio >= 5.0 { "PASS" } else { "FAIL" }
+    );
+
+    // Byte-equivalence: the pattern-class path must match the legacy
+    // per-weight path exactly, at any thread count.
+    println!("== pattern-class vs legacy per-weight equivalence (resnet20 sample)");
+    let cfg = GroupConfig::R2C2;
+    let n = if quick { 40_000 } else { 120_000 };
+    let ws = synthetic_model_weights("resnet20", &cfg, n)?;
+    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let mut legacy = CompileOptions::new(cfg, Method::Complete);
+    legacy.dedupe = false;
+    let base = compile_tensor(&ws, &faults, &legacy);
+    for threads in [1usize, 4, 8] {
+        let mut o = CompileOptions::new(cfg, Method::Complete);
+        o.threads = threads;
+        let out = compile_tensor(&ws, &faults, &o);
+        assert_eq!(out.decomps, base.decomps, "decompositions diverged at threads={threads}");
+        assert_eq!(out.errors, base.errors, "errors diverged at threads={threads}");
+        println!(
+            "  threads={threads}: byte-identical to legacy ({} weights, {} unique pairs, {})",
+            ws.len(),
+            out.stats.unique_pairs,
+            fmt_dur(out.stats.wall_secs)
         );
     }
     Ok(())

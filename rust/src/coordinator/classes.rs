@@ -1,0 +1,309 @@
+//! Pattern-class registry: the dedupe-first compiler core.
+//!
+//! At realistic SAF rates most groups are fault-free or share a
+//! low-cardinality fault pattern, so the compiler's unit of work is not a
+//! weight but a **pattern class**: the set of weights whose groups carry
+//! the same `GroupFaults` pattern. This module interns patterns by their
+//! dense [`crate::fault::PatternKey`] and attaches one shared
+//! [`PatternCtx`] per class — the `FaultAnalysis` and `GroupTables` that
+//! the legacy per-weight pipeline rebuilt for every single weight are now
+//! built at most once per class, lazily, and shared across worker threads.
+//!
+//! [`SolveCache`] extends the dedup one level further: a chip-wide
+//! (pattern, weight) → [`Outcome`] cache. Tensors compiled through the
+//! same cache (see `compile_model`) reuse each other's solved pairs, so a
+//! pattern+weight combination recurring in layer 17 of a model costs a
+//! hash lookup, not a solve. Both structures are deterministic: pattern
+//! ids and solve slots are assigned in first-seen scan order, independent
+//! of thread count.
+
+use super::pipeline::{Outcome, PipelineOptions};
+use crate::decompose::GroupTables;
+use crate::fault::{GroupFaults, PatternKey};
+use crate::grouping::{FaultAnalysis, GroupConfig};
+use crate::util::fnv::FnvMap;
+use std::sync::OnceLock;
+
+/// Index of an interned pattern within its [`PatternRegistry`].
+pub type PatternId = u32;
+
+/// Shared solve context for one fault-pattern class: the fault map itself
+/// plus its analysis and decomposition tables, built at most once and
+/// shared by every weight (and every worker thread) in the class.
+#[derive(Clone, Debug)]
+pub struct PatternCtx {
+    pub cfg: GroupConfig,
+    pub faults: GroupFaults,
+    /// Dense interning key (see [`GroupFaults::pattern_key`]).
+    pub key: PatternKey,
+    fault_free: bool,
+    analysis: OnceLock<FaultAnalysis>,
+    tables: OnceLock<GroupTables>,
+}
+
+impl PatternCtx {
+    pub fn new(cfg: GroupConfig, faults: GroupFaults) -> PatternCtx {
+        let key = faults.pattern_key();
+        let fault_free = faults.is_fault_free();
+        PatternCtx {
+            cfg,
+            faults,
+            key,
+            fault_free,
+            analysis: OnceLock::new(),
+            tables: OnceLock::new(),
+        }
+    }
+
+    #[inline]
+    pub fn is_fault_free(&self) -> bool {
+        self.fault_free
+    }
+
+    /// Theorem-1/2 analysis for this class (built on first use).
+    pub fn analysis(&self) -> &FaultAnalysis {
+        self.analysis.get_or_init(|| FaultAnalysis::new(&self.cfg, &self.faults))
+    }
+
+    /// Decomposition tables for this class (built on first use; threads
+    /// block on the single builder rather than re-running the DP).
+    pub fn tables(&self) -> &GroupTables {
+        self.tables.get_or_init(|| GroupTables::build(&self.cfg, &self.faults))
+    }
+
+    /// Whether the (expensive) tables were ever materialized.
+    pub fn tables_built(&self) -> bool {
+        self.tables.get().is_some()
+    }
+}
+
+/// Interning registry of fault-pattern classes for one grouping config.
+///
+/// Pattern ids are assigned in first-intern order, so a registry filled by
+/// a deterministic scan is itself deterministic.
+#[derive(Clone, Debug)]
+pub struct PatternRegistry {
+    cfg: GroupConfig,
+    by_key: FnvMap<PatternKey, PatternId>,
+    ctxs: Vec<PatternCtx>,
+}
+
+impl PatternRegistry {
+    pub fn new(cfg: GroupConfig) -> PatternRegistry {
+        PatternRegistry { cfg, by_key: FnvMap::default(), ctxs: Vec::new() }
+    }
+
+    pub fn cfg(&self) -> &GroupConfig {
+        &self.cfg
+    }
+
+    /// Intern one pattern, returning its class id.
+    pub fn intern(&mut self, faults: &GroupFaults) -> PatternId {
+        let key = faults.pattern_key();
+        if let Some(&id) = self.by_key.get(&key) {
+            return id;
+        }
+        let id = self.ctxs.len() as PatternId;
+        self.by_key.insert(key, id);
+        self.ctxs.push(PatternCtx::new(self.cfg, faults.clone()));
+        id
+    }
+
+    /// Scan a tensor's fault maps, interning every pattern. Returns one
+    /// class id per group, aligned with the input.
+    pub fn intern_all(&mut self, faults: &[GroupFaults]) -> Vec<PatternId> {
+        faults.iter().map(|f| self.intern(f)).collect()
+    }
+
+    pub fn ctx(&self, id: PatternId) -> &PatternCtx {
+        &self.ctxs[id as usize]
+    }
+
+    /// Number of distinct pattern classes interned so far.
+    pub fn len(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ctxs.is_empty()
+    }
+
+    /// How many classes materialized their decomposition tables.
+    pub fn tables_built(&self) -> usize {
+        self.ctxs.iter().filter(|c| c.tables_built()).count()
+    }
+}
+
+/// Chip-wide (pattern, weight) → [`Outcome`] solve cache.
+///
+/// One `SolveCache` per chip: every tensor compiled through it shares the
+/// pattern registry and the solved pairs of all tensors before it. Slots
+/// are assigned in first-seen order, so the cache contents — and every
+/// compilation drawing on them — are byte-deterministic regardless of
+/// thread count.
+#[derive(Clone, Debug)]
+pub struct SolveCache {
+    pub registry: PatternRegistry,
+    index: FnvMap<(PatternId, i64), u32>,
+    solved: Vec<Outcome>,
+    /// Pipeline options the cached outcomes were solved under; set on
+    /// first use. Outcomes are keyed by (pattern, weight) only, so mixing
+    /// pipelines in one cache would silently serve stale solutions.
+    pipeline: Option<PipelineOptions>,
+}
+
+impl SolveCache {
+    pub fn new(cfg: GroupConfig) -> SolveCache {
+        SolveCache {
+            registry: PatternRegistry::new(cfg),
+            index: FnvMap::default(),
+            solved: Vec::new(),
+            pipeline: None,
+        }
+    }
+
+    /// Bind the cache to one set of pipeline options (first caller wins;
+    /// later callers must match or the cached outcomes would be invalid).
+    pub fn bind_pipeline(&mut self, p: &PipelineOptions) {
+        match self.pipeline {
+            None => self.pipeline = Some(*p),
+            Some(bound) => assert_eq!(
+                bound, *p,
+                "solve cache reused with different pipeline options"
+            ),
+        }
+    }
+
+    /// Map every (pattern-id, weight) to a solve slot, collecting the
+    /// pairs not yet solved. Returns the per-weight slot assignment plus
+    /// the fresh pairs in slot order; the caller must solve them and pass
+    /// the outcomes to [`SolveCache::absorb`] before resolving slots.
+    pub fn dedupe(
+        &mut self,
+        pids: &[PatternId],
+        weights: &[i64],
+    ) -> (Vec<u32>, Vec<(PatternId, i64)>) {
+        debug_assert_eq!(pids.len(), weights.len());
+        let mut slots = Vec::with_capacity(weights.len());
+        let mut fresh: Vec<(PatternId, i64)> = Vec::new();
+        for (&pid, &w) in pids.iter().zip(weights.iter()) {
+            let next = (self.solved.len() + fresh.len()) as u32;
+            let slot = match self.index.get(&(pid, w)) {
+                Some(&s) => s,
+                None => {
+                    self.index.insert((pid, w), next);
+                    fresh.push((pid, w));
+                    next
+                }
+            };
+            slots.push(slot);
+        }
+        (slots, fresh)
+    }
+
+    /// Append outcomes for the pairs returned by the latest
+    /// [`SolveCache::dedupe`], in the same order.
+    pub fn absorb(&mut self, outcomes: Vec<Outcome>) {
+        self.solved.extend(outcomes);
+    }
+
+    pub fn outcome(&self, slot: u32) -> &Outcome {
+        &self.solved[slot as usize]
+    }
+
+    /// Total unique (pattern, weight) pairs solved through this cache.
+    pub fn solved_pairs(&self) -> usize {
+        self.solved.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::Stage;
+    use crate::fault::{FaultRates, FaultState};
+    use crate::grouping::Decomposition;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn interning_dedupes_by_key() {
+        let cfg = GroupConfig::R2C2;
+        let mut reg = PatternRegistry::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let mut faulty = GroupFaults::free(cfg.cells());
+        faulty.pos[1] = FaultState::Sa1;
+        let a = reg.intern(&free);
+        let b = reg.intern(&faulty);
+        let c = reg.intern(&free);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ctx(b).faults, faulty);
+    }
+
+    #[test]
+    fn ctx_lazy_builds_are_consistent() {
+        let cfg = GroupConfig::R1C4;
+        let mut rng = Rng::new(3);
+        let faults = GroupFaults::sample(cfg.cells(), &FaultRates::paper_default(), &mut rng);
+        let ctx = PatternCtx::new(cfg, faults.clone());
+        assert!(!ctx.tables_built());
+        let fresh = FaultAnalysis::new(&cfg, &faults);
+        assert_eq!(ctx.analysis().range(), fresh.range());
+        assert_eq!(ctx.analysis().consecutive, fresh.consecutive);
+        let t = ctx.tables();
+        assert!(ctx.tables_built());
+        let fresh_t = GroupTables::build(&cfg, &faults);
+        assert_eq!(t.pos.values(), fresh_t.pos.values());
+        assert_eq!(t.neg.values(), fresh_t.neg.values());
+    }
+
+    #[test]
+    fn registry_ids_are_scan_order_deterministic() {
+        let cfg = GroupConfig::R2C2;
+        let mut rng = Rng::new(11);
+        let maps: Vec<GroupFaults> = (0..500)
+            .map(|_| GroupFaults::sample(cfg.cells(), &FaultRates::paper_default(), &mut rng))
+            .collect();
+        let mut r1 = PatternRegistry::new(cfg);
+        let mut r2 = PatternRegistry::new(cfg);
+        let ids1 = r1.intern_all(&maps);
+        let ids2 = r2.intern_all(&maps);
+        assert_eq!(ids1, ids2);
+        assert_eq!(r1.len(), r2.len());
+        // Every id resolves back to a pattern with the same key.
+        for (f, id) in maps.iter().zip(&ids1) {
+            assert_eq!(r1.ctx(*id).key, f.pattern_key());
+        }
+    }
+
+    #[test]
+    fn solve_cache_slots_and_absorb_roundtrip() {
+        let cfg = GroupConfig::R2C2;
+        let mut cache = SolveCache::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let pids = vec![cache.registry.intern(&free); 4];
+        let weights = [3i64, 7, 3, 7];
+        let (slots, fresh) = cache.dedupe(&pids, &weights);
+        assert_eq!(fresh, vec![(0, 3), (0, 7)]);
+        assert_eq!(slots, vec![0, 1, 0, 1]);
+        let outcomes: Vec<Outcome> = fresh
+            .iter()
+            .map(|&(_, w)| Outcome {
+                decomposition: Decomposition::encode_ideal(w, &cfg),
+                error: 0,
+                stage: Stage::FastPath,
+            })
+            .collect();
+        cache.absorb(outcomes);
+        assert_eq!(cache.solved_pairs(), 2);
+        // Second tensor through the same cache: all hits.
+        let (slots2, fresh2) = cache.dedupe(&pids[..2], &[7, 3]);
+        assert!(fresh2.is_empty());
+        assert_eq!(slots2, vec![1, 0]);
+        assert_eq!(
+            cache.outcome(slots2[1]).decomposition,
+            Decomposition::encode_ideal(3, &cfg)
+        );
+    }
+}

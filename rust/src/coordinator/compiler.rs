@@ -1,20 +1,51 @@
-//! Per-chip, per-model compilation driver.
+//! Per-chip, per-model compilation driver — dedupe-first.
 //!
-//! This is the L3 coordinator proper: it walks a model's weight tensors,
-//! samples the chip's fault maps, fans the per-weight decomposition
-//! problems out across worker threads, memoizes repeated
-//! (fault-pattern, weight) pairs, and aggregates stage counts/timings for
-//! the Table II / Fig 10 reports.
+//! This is the L3 coordinator proper. The pattern-class core runs four
+//! phases per tensor:
+//!
+//! 1. **Scan** — intern every group's fault pattern into the chip's
+//!    [`PatternRegistry`]; each class gets one shared [`PatternCtx`]
+//!    (lazy `FaultAnalysis` + `GroupTables`).
+//! 2. **Dedupe** — collapse the tensor to its unique (pattern, weight)
+//!    pairs against the chip-wide [`SolveCache`]; pairs already solved by
+//!    an earlier tensor of the same chip are reused outright.
+//! 3. **Solve** — decompose each fresh pair exactly once, fanned out over
+//!    an atomic-counter work-stealing scheduler
+//!    ([`crate::util::pool::parallel_work_steal`]). Slot order is fixed by
+//!    the scan, so results are byte-deterministic at any thread count.
+//! 4. **Scatter** — map solved pairs back to weight indices and aggregate
+//!    stage counts/timings for the Table II / Fig 10 reports.
+//!
+//! The legacy per-weight path (contiguous ranges + thread-local memo) is
+//! retained behind `CompileOptions::dedupe = false` as the equivalence
+//! baseline for tests and ablation benches.
 
-use super::pipeline::{decompose_one, Method, Outcome, PipelineOptions, Stage, ALL_STAGES};
+use super::classes::SolveCache;
+use super::pipeline::{
+    decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage, ALL_STAGES,
+};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::{Decomposition, GroupConfig};
 use crate::ilp::IlpStats;
-use crate::util::pool::{parallel_map_ranges, split_ranges};
-use crate::util::timer::{StageClock, Timer};
 use crate::util::fnv::FnvMap;
+use crate::util::pool::{parallel_map_ranges, parallel_work_steal, split_ranges};
+use crate::util::timer::{StageClock, Timer};
 use std::collections::HashMap;
+
+/// Work-stealing chunk size for the solve phase: large enough to amortize
+/// the atomic fetch, small enough to balance skewed pattern classes.
+const SOLVE_CHUNK: usize = 64;
+
+/// Weights per solver invocation; `unique_pairs == 0` (legacy path or an
+/// empty tensor) counts as no dedup.
+pub fn dedup_ratio_of(weights: usize, unique_pairs: usize) -> f64 {
+    if unique_pairs == 0 {
+        1.0
+    } else {
+        weights as f64 / unique_pairs as f64
+    }
+}
 
 /// Options for a compilation run.
 #[derive(Clone, Debug)]
@@ -23,10 +54,14 @@ pub struct CompileOptions {
     pub pipeline: PipelineOptions,
     /// Worker threads (1 reproduces the paper's single-thread protocol).
     pub threads: usize,
-    /// Memoize (fault-pattern, weight) → decomposition.
+    /// Use the dedupe-first pattern-class core (default). `false` selects
+    /// the legacy per-weight path, kept as the equivalence baseline.
+    pub dedupe: bool,
+    /// Legacy path only: memoize (fault-pattern, weight) → decomposition
+    /// per worker thread. The pattern-class core subsumes this globally.
     pub memoize: bool,
     /// Charge wall time to per-stage buckets (Fig 10b). Two clock reads per
-    /// weight; disable for pure-throughput runs (§Perf).
+    /// solve; disable for pure-throughput runs (§Perf).
     pub time_stages: bool,
 }
 
@@ -36,6 +71,7 @@ impl CompileOptions {
             cfg,
             pipeline: PipelineOptions { method, ..Default::default() },
             threads: 1,
+            dedupe: true,
             memoize: true,
             time_stages: true,
         }
@@ -48,9 +84,23 @@ pub struct CompileStats {
     pub weights: usize,
     /// Weights routed to each stage.
     pub stage_counts: Vec<(&'static str, usize)>,
-    /// Wall time charged to each stage bucket (cond/fawd/cvm/…).
+    /// Wall time charged to each stage bucket (cond/fawd/cvm/…). On the
+    /// pattern-class path each unique pair is charged once.
     pub clock: StageClock,
+    /// Legacy path: thread-local memo hits.
     pub memo_hits: usize,
+    /// Distinct fault-pattern classes interned (chip-wide when tensors are
+    /// compiled through a shared cache).
+    pub unique_patterns: usize,
+    /// Unique (pattern, weight) pairs this compilation actually solved —
+    /// the number of solver invocations.
+    pub unique_pairs: usize,
+    /// Weights served from the shared solve cache instead of a fresh
+    /// solve (within-tensor repeats + cross-tensor cache hits).
+    pub dedup_hits: usize,
+    /// Pattern classes that materialized decomposition tables (chip-wide
+    /// snapshot at the end of this compilation).
+    pub tables_built: usize,
     pub ilp: IlpStats,
     /// Σ |w − w̃| over all weights (integer domain).
     pub total_abs_error: u64,
@@ -68,7 +118,23 @@ impl CompileStats {
             .unwrap_or(0)
     }
 
-    fn merge(&mut self, other: &CompileStats) {
+    /// Weights per solver invocation — the pattern-class dedup factor
+    /// (1.0 on the legacy path, which solves every weight).
+    pub fn dedup_ratio(&self) -> f64 {
+        dedup_ratio_of(self.weights, self.unique_pairs)
+    }
+
+    /// Merge statistics of separate compilations, summing wall time too —
+    /// the aggregate the CNN/LM evaluators report per trial.
+    pub fn merge_with_wall(&mut self, other: &CompileStats) {
+        self.merge(other);
+        self.wall_secs += other.wall_secs;
+    }
+
+    /// Merge per-range/per-tensor statistics. Wall time is deliberately
+    /// not summed — the compiler stamps it from its own timer; callers
+    /// aggregating across compilations add it themselves.
+    pub fn merge(&mut self, other: &CompileStats) {
         self.weights += other.weights;
         for (name, c) in &other.stage_counts {
             if let Some(e) = self.stage_counts.iter_mut().find(|(n, _)| n == name) {
@@ -79,6 +145,12 @@ impl CompileStats {
         }
         self.clock.merge(&other.clock);
         self.memo_hits += other.memo_hits;
+        // Chip-wide gauges: tensors sharing a cache all see the same
+        // (growing) registry, so the merged value is the latest snapshot.
+        self.unique_patterns = self.unique_patterns.max(other.unique_patterns);
+        self.tables_built = self.tables_built.max(other.tables_built);
+        self.unique_pairs += other.unique_pairs;
+        self.dedup_hits += other.dedup_hits;
         self.ilp.nodes += other.ilp.nodes;
         self.ilp.lp_solves += other.ilp.lp_solves;
         self.total_abs_error += other.total_abs_error;
@@ -95,6 +167,16 @@ impl CompileStats {
             self.total_abs_error,
             self.memo_hits,
         );
+        if self.unique_pairs > 0 {
+            s.push_str(&format!(
+                "patterns={} unique_pairs={} dedup_hits={} ({:.1}x dedup) tables_built={}\n",
+                self.unique_patterns,
+                self.unique_pairs,
+                self.dedup_hits,
+                self.dedup_ratio(),
+                self.tables_built,
+            ));
+        }
         for (name, c) in &self.stage_counts {
             if *c > 0 {
                 s.push_str(&format!("  stage {name:<13} {c:>10}\n"));
@@ -130,6 +212,94 @@ impl CompiledTensor {
 /// Compile one tensor of quantized integer weights against per-group fault
 /// maps. `weights.len() == faults.len()`.
 pub fn compile_tensor(
+    weights: &[i64],
+    faults: &[GroupFaults],
+    opts: &CompileOptions,
+) -> CompiledTensor {
+    if !opts.dedupe {
+        return compile_tensor_per_weight(weights, faults, opts);
+    }
+    let mut cache = SolveCache::new(opts.cfg);
+    compile_tensor_with_cache(weights, faults, opts, &mut cache)
+}
+
+/// Pattern-class compilation against a caller-owned chip-wide cache.
+/// Tensors compiled through the same cache share interned patterns and
+/// solved (pattern, weight) pairs.
+pub fn compile_tensor_with_cache(
+    weights: &[i64],
+    faults: &[GroupFaults],
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+) -> CompiledTensor {
+    assert_eq!(weights.len(), faults.len(), "one fault map per weight group");
+    assert_eq!(*cache.registry.cfg(), opts.cfg, "solve cache bound to a different config");
+    cache.bind_pipeline(&opts.pipeline);
+    let timer = Timer::start();
+    let n = weights.len();
+    let threads = opts.threads.max(1);
+    let mut stats = CompileStats::default();
+
+    // Phase 1 — scan: intern each group's fault pattern.
+    let pids = cache.registry.intern_all(faults);
+
+    // Phase 2 — dedupe: unique (pattern, weight) pairs not already solved.
+    let (slots, fresh) = cache.dedupe(&pids, weights);
+
+    // Phase 3 — solve each fresh pair exactly once (work-stealing; slot
+    // order was fixed by the scan, so output is thread-count independent).
+    let registry = &cache.registry;
+    let solved: Vec<(Outcome, IlpStats, f64)> =
+        parallel_work_steal(fresh.len(), threads, SOLVE_CHUNK, |i| {
+            let (pid, w) = fresh[i];
+            let ctx = registry.ctx(pid);
+            let mut ist = IlpStats::default();
+            let t = opts.time_stages.then(Timer::start);
+            let out = decompose_with_ctx(ctx, w, &opts.pipeline, &mut ist);
+            let secs = t.map(|t| t.secs()).unwrap_or(0.0);
+            (out, ist, secs)
+        });
+    let mut outcomes = Vec::with_capacity(solved.len());
+    for (out, ist, secs) in solved {
+        stats.clock.add(out.stage.bucket(), secs);
+        stats.ilp.nodes += ist.nodes;
+        stats.ilp.lp_solves += ist.lp_solves;
+        outcomes.push(out);
+    }
+    stats.unique_pairs = outcomes.len();
+    cache.absorb(outcomes);
+
+    // Phase 4 — scatter solved pairs back to weight indices.
+    let mut decomps = Vec::with_capacity(n);
+    let mut errors = Vec::with_capacity(n);
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    for &slot in &slots {
+        let out = cache.outcome(slot);
+        *counts.entry(out.stage.name()).or_insert(0) += 1;
+        if out.error != 0 {
+            stats.imperfect += 1;
+            stats.total_abs_error += out.error.unsigned_abs();
+        }
+        decomps.push(out.decomposition.clone());
+        errors.push(out.error);
+    }
+
+    stats.weights = n;
+    stats.dedup_hits = n - stats.unique_pairs;
+    stats.unique_patterns = cache.registry.len();
+    stats.tables_built = cache.registry.tables_built();
+    stats.stage_counts = ALL_STAGES
+        .iter()
+        .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
+        .collect();
+    stats.wall_secs = timer.secs();
+    CompiledTensor { cfg: opts.cfg, decomps, errors, stats }
+}
+
+/// Legacy per-weight compilation: contiguous ranges across threads with
+/// thread-local memoization. Kept as the equivalence baseline for the
+/// pattern-class core (`CompileOptions::dedupe = false`).
+fn compile_tensor_per_weight(
     weights: &[i64],
     faults: &[GroupFaults],
     opts: &CompileOptions,
@@ -174,7 +344,7 @@ fn compile_range(
     let mut memo: FnvMap<(u64, i64), (Decomposition, i64, Stage)> = FnvMap::default();
     // Memoizing the fault-free pattern would just duplicate encode_ideal;
     // skip it so the memo holds only interesting patterns.
-    let free_key = GroupFaults::free(opts.cfg.cells()).pattern_key();
+    let free_key = crate::fault::FREE_PATTERN_KEY;
 
     for i in range.clone() {
         let w = weights[i];
@@ -228,17 +398,26 @@ fn compile_range(
 
 /// Compile a whole model (a list of named integer-weight tensors) against a
 /// chip's fault bank. Returns per-tensor results in input order.
+///
+/// On the pattern-class path all tensors share one chip-wide [`SolveCache`]
+/// — a (pattern, weight) pair recurring across layers is solved exactly
+/// once for the whole model.
 pub fn compile_model(
     tensors: &[(String, Vec<i64>)],
     chip: &ChipFaults,
     opts: &CompileOptions,
 ) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
+    let sizes: Vec<usize> = tensors.iter().map(|(_, ws)| ws.len()).collect();
+    let all_faults = chip.sample_model(&sizes, opts.cfg.cells());
+    let mut cache = opts.dedupe.then(|| SolveCache::new(opts.cfg));
     tensors
         .iter()
-        .enumerate()
-        .map(|(ti, (name, ws))| {
-            let faults = chip.sample_tensor(ti as u64, ws.len(), opts.cfg.cells());
-            let compiled = compile_tensor(ws, &faults, opts);
+        .zip(all_faults)
+        .map(|((name, ws), faults)| {
+            let compiled = match cache.as_mut() {
+                Some(c) => compile_tensor_with_cache(ws, &faults, opts, c),
+                None => compile_tensor(ws, &faults, opts),
+            };
             (name.clone(), compiled, faults)
         })
         .collect()
@@ -272,6 +451,26 @@ mod tests {
         assert_eq!(out.stats.weights, ws.len());
         let total: usize = out.stats.stage_counts.iter().map(|(_, c)| c).sum();
         assert_eq!(total, ws.len());
+        // Dedup accounting is consistent.
+        assert_eq!(out.stats.unique_pairs + out.stats.dedup_hits, ws.len());
+        assert!(out.stats.unique_patterns > 0);
+        assert!(out.stats.unique_pairs < ws.len(), "R2C2 at scale must dedupe");
+    }
+
+    #[test]
+    fn pattern_class_path_matches_legacy() {
+        let cfg = GroupConfig::R1C4;
+        let ws = random_weights(6_000, cfg.max_per_array(), 17);
+        let chip = ChipFaults::new(5, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let mut legacy = CompileOptions::new(cfg, Method::Complete);
+        legacy.dedupe = false;
+        let a = compile_tensor(&ws, &faults, &legacy);
+        let b = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+        // Stage routing is identical per weight, so the censuses agree.
+        assert_eq!(a.stats.stage_counts, b.stats.stage_counts);
     }
 
     #[test]
@@ -288,17 +487,19 @@ mod tests {
         let b = compile_tensor(&ws, &faults, &o4);
         assert_eq!(a.decomps, b.decomps);
         assert_eq!(a.errors, b.errors);
+        assert_eq!(a.stats.unique_pairs, b.stats.unique_pairs);
     }
 
     #[test]
-    fn memoization_preserves_results() {
-        // Memoization is selective (expensive stages only), so use R1C4 at
-        // scale where CVM patterns repeat.
+    fn legacy_memoization_preserves_results() {
+        // The legacy path's selective memo (expensive stages only) must not
+        // change results; use R1C4 at scale where CVM patterns repeat.
         let cfg = GroupConfig::R1C4;
         let ws = random_weights(30_000, cfg.max_per_array(), 5);
         let chip = ChipFaults::new(9, FaultRates::paper_default());
         let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
         let mut with = CompileOptions::new(cfg, Method::Complete);
+        with.dedupe = false;
         with.memoize = true;
         let mut without = with.clone();
         without.memoize = false;
@@ -311,6 +512,30 @@ mod tests {
     }
 
     #[test]
+    fn shared_cache_across_tensors_dedupes_chip_wide() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(4, FaultRates::paper_default());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let ws0 = random_weights(3_000, cfg.max_per_array(), 21);
+        let ws1 = random_weights(3_000, cfg.max_per_array(), 22);
+        let f0 = chip.sample_tensor(0, ws0.len(), cfg.cells());
+        let f1 = chip.sample_tensor(1, ws1.len(), cfg.cells());
+        let mut cache = SolveCache::new(cfg);
+        let a = compile_tensor_with_cache(&ws0, &f0, &opts, &mut cache);
+        let solved_after_first = cache.solved_pairs();
+        let b = compile_tensor_with_cache(&ws1, &f1, &opts, &mut cache);
+        // The second tensor reuses the first tensor's solved pairs: it adds
+        // far fewer fresh pairs than it has weights.
+        assert!(b.stats.unique_pairs < ws1.len() / 2, "cross-tensor reuse missing");
+        assert_eq!(cache.solved_pairs(), solved_after_first + b.stats.unique_pairs);
+        // And results are identical to standalone compilation.
+        let standalone = compile_tensor(&ws1, &f1, &opts);
+        assert_eq!(b.decomps, standalone.decomps);
+        assert_eq!(b.errors, standalone.errors);
+        let _ = a;
+    }
+
+    #[test]
     fn fault_free_chip_compiles_perfectly() {
         let cfg = GroupConfig::R1C4;
         let ws = random_weights(500, cfg.max_per_array(), 2);
@@ -320,6 +545,9 @@ mod tests {
         assert_eq!(out.stats.imperfect, 0);
         assert_eq!(out.stats.total_abs_error, 0);
         assert_eq!(out.stats.count_of(Stage::FastPath), 500);
+        // One pattern class: the fault-free one; no tables ever built.
+        assert_eq!(out.stats.unique_patterns, 1);
+        assert_eq!(out.stats.tables_built, 0);
     }
 
     #[test]
@@ -335,12 +563,22 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].1.decomps.len(), 800);
         assert_eq!(out[1].1.decomps.len(), 400);
-        // Reconstructed weights respect per-tensor fault maps.
-        for (_, compiled, faults) in &out {
+        // Reconstructed weights respect per-tensor fault maps: each
+        // reported error matches the decomposition's actual residual.
+        for ((_, ws), (_, compiled, faults)) in tensors.iter().zip(&out) {
             let rec = compiled.faulty_weights(faults);
-            for (e, (w_rec, err)) in rec.iter().zip(compiled.errors.iter()).enumerate().map(|(i, p)| (i, p)) {
-                let _ = (e, w_rec, err);
+            for ((w, r), e) in ws.iter().zip(&rec).zip(&compiled.errors) {
+                assert_eq!((w - r).abs(), *e);
             }
+        }
+        // Chip-wide dedup: identical to legacy per-tensor compilation.
+        let mut legacy = CompileOptions::new(cfg, Method::Complete);
+        legacy.dedupe = false;
+        let base = compile_model(&tensors, &chip, &legacy);
+        for ((_, c_new, f_new), (_, c_old, f_old)) in out.iter().zip(&base) {
+            assert_eq!(f_new, f_old);
+            assert_eq!(c_new.decomps, c_old.decomps);
+            assert_eq!(c_new.errors, c_old.errors);
         }
     }
 

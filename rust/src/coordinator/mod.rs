@@ -1,11 +1,17 @@
-//! L3 coordinator: the paper's compilation pipeline (§V, Fig 7) and the
-//! per-chip/per-model compilation driver around it.
+//! L3 coordinator: the paper's compilation pipeline (§V, Fig 7), the
+//! pattern-class registry that dedupes it, and the per-chip/per-model
+//! compilation driver around both.
 
+pub mod classes;
 pub mod compiler;
 pub mod pipeline;
 
-pub use compiler::{compile_model, compile_tensor, CompileOptions, CompileStats, CompiledTensor};
-pub use pipeline::{decompose_one, Method, Outcome, PipelineOptions, Stage};
+pub use classes::{PatternCtx, PatternId, PatternRegistry, SolveCache};
+pub use compiler::{
+    compile_model, compile_tensor, compile_tensor_with_cache, CompileOptions, CompileStats,
+    CompiledTensor,
+};
+pub use pipeline::{decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage};
 
 /// Convenience alias: the full compiler entry point.
 pub type Compiler = compiler::CompileOptions;

@@ -26,7 +26,7 @@ impl Default for AccuracyOptions {
             archs: vec!["cnn_s".into(), "cnn_m".into(), "cnn_d".into(), "vgg_n".into()],
             configs: vec![GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4],
             trials: 3,
-            threads: 1,
+            threads: crate::util::pool::default_threads(None),
             include_unprotected: false,
         }
     }

@@ -50,6 +50,20 @@ pub struct CompileTimeRow {
     pub full_secs: f64,
     /// Stage-bucket breakdown (cond / fawd / cvm / ff), seconds, measured.
     pub breakdown: Vec<(String, f64)>,
+    /// Distinct fault-pattern classes seen in the sample.
+    pub unique_patterns: usize,
+    /// Unique (pattern, weight) pairs the solver actually ran on — the
+    /// pattern-class dedup makes this ≪ `sampled_weights`.
+    pub unique_pairs: usize,
+    /// Weights served from the solve cache instead of a fresh solve.
+    pub dedup_hits: usize,
+}
+
+impl CompileTimeRow {
+    /// Weights per solver invocation (1.0 when dedup is off).
+    pub fn dedup_ratio(&self) -> f64 {
+        crate::coordinator::compiler::dedup_ratio_of(self.sampled_weights, self.unique_pairs)
+    }
 }
 
 /// Measure one (method, config, model) cell of Table II.
@@ -68,6 +82,12 @@ pub fn measure(
     let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
     let mut opts = CompileOptions::new(cfg, method);
     opts.threads = threads;
+    // Baselines (FF, ILP-only, unprotected) reproduce the paper's
+    // per-weight protocol; only the complete pipeline — the contribution
+    // under measurement — runs the dedupe-first core. Letting baselines
+    // dedupe would deflate their sample times and distort the Table II /
+    // Fig 10a speedup ratios.
+    opts.dedupe = method == Method::Complete;
     // Pure-throughput mode (no per-stage clocks) via RCHG_TIME_STAGES=0.
     if std::env::var("RCHG_TIME_STAGES").as_deref() == Ok("0") {
         opts.time_stages = false;
@@ -91,6 +111,9 @@ pub fn measure(
             .iter()
             .map(|(n, s)| (n.clone(), *s * total_weights as f64 / ws.len() as f64))
             .collect(),
+        unique_patterns: out.stats.unique_patterns,
+        unique_pairs: out.stats.unique_pairs,
+        dedup_hits: out.stats.dedup_hits,
     })
 }
 
@@ -184,6 +207,26 @@ pub fn fig10a(rows: &[CompileTimeRow], models: &[String]) -> Table {
     t
 }
 
+/// Pattern-class dedup report: how far the dedupe-first core collapses
+/// each (config, model) cell's workload before the solver ever runs.
+pub fn dedup_report(rows: &[CompileTimeRow]) -> Table {
+    let mut t = Table::new(
+        "Pattern-class dedup — complete pipeline (sampled weights vs solver invocations)",
+        &["config", "model", "weights", "patterns", "unique pairs", "dedup"],
+    );
+    for r in rows.iter().filter(|r| r.method == Method::Complete && r.unique_pairs > 0) {
+        t.row(vec![
+            r.cfg.name(),
+            r.model.clone(),
+            r.sampled_weights.to_string(),
+            r.unique_patterns.to_string(),
+            r.unique_pairs.to_string(),
+            format!("{:.1}x", r.dedup_ratio()),
+        ]);
+    }
+    t
+}
+
 /// Fig 10b: stage breakdown of the complete pipeline per config.
 pub fn fig10b(rows: &[CompileTimeRow], model: &str) -> Table {
     let mut t = Table::new(
@@ -233,6 +276,11 @@ mod tests {
         assert_eq!(r.sampled_weights, 5_000);
         assert!(r.full_secs >= r.measured_secs);
         assert!(r.total_weights > 250_000);
+        // Dedup counters flow through from CompileStats.
+        assert!(r.unique_pairs > 0 && r.unique_pairs <= r.sampled_weights);
+        assert_eq!(r.unique_pairs + r.dedup_hits, r.sampled_weights);
+        assert!(r.unique_patterns > 0);
+        assert!(r.dedup_ratio() > 1.0, "R2C2 at 5k weights must dedupe");
     }
 
     #[test]

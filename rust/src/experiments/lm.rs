@@ -23,7 +23,7 @@ impl Default for LmOptions {
         LmOptions {
             configs: vec![GroupConfig::R1C4, GroupConfig::R2C2],
             trials: 3,
-            threads: 1,
+            threads: crate::util::pool::default_threads(None),
             max_windows: 60,
             include_unprotected: false,
         }

@@ -39,6 +39,18 @@ impl ChipFaults {
             .map(|_| GroupFaults::sample(cells, &self.rates, &mut rng))
             .collect()
     }
+
+    /// Sample fault maps for a whole model at once: tensor `i` gets the
+    /// same maps `sample_tensor(i, …)` would return. This is the chip-wide
+    /// scan the pattern-class compiler runs so one registry / solve cache
+    /// can dedupe (pattern, weight) pairs across every tensor of a chip.
+    pub fn sample_model(&self, group_counts: &[usize], cells: usize) -> Vec<Vec<GroupFaults>> {
+        group_counts
+            .iter()
+            .enumerate()
+            .map(|(ti, &n)| self.sample_tensor(ti as u64, n, cells))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -66,6 +78,17 @@ mod tests {
         let c1 = ChipFaults::new(1, FaultRates::paper_default());
         let c2 = ChipFaults::new(2, FaultRates::paper_default());
         assert_ne!(c1.sample_tensor(0, 200, 8), c2.sample_tensor(0, 200, 8));
+    }
+
+    #[test]
+    fn sample_model_matches_per_tensor_sampling() {
+        let chip = ChipFaults::new(31, FaultRates::paper_default());
+        let counts = [50usize, 120, 7];
+        let all = chip.sample_model(&counts, 8);
+        assert_eq!(all.len(), counts.len());
+        for (ti, maps) in all.iter().enumerate() {
+            assert_eq!(maps, &chip.sample_tensor(ti as u64, counts[ti], 8));
+        }
     }
 
     #[test]

@@ -128,10 +128,13 @@ impl GroupFaults {
         self.pos.iter().chain(&self.neg).all(|f| !f.is_fault())
     }
 
-    /// Dense bit-pattern key for memoization: 2 bits per cell. Supports up
-    /// to 32 cells total (r*c <= 16), which covers every configuration the
-    /// paper evaluates (and then some).
-    pub fn pattern_key(&self) -> u64 {
+    /// Dense bit-pattern key for interning and memoization: 2 bits per
+    /// cell. Supports up to 32 cells total (r*c <= 16), which covers every
+    /// configuration the paper evaluates (and then some). Two fault maps of
+    /// the same shape share a key iff they are the same pattern, so this is
+    /// the identity under which the pattern-class compiler
+    /// (`coordinator::classes`) interns fault patterns.
+    pub fn pattern_key(&self) -> PatternKey {
         debug_assert!(self.pos.len() + self.neg.len() <= 32);
         let mut key = 0u64;
         for f in self.pos.iter().chain(&self.neg) {
@@ -140,6 +143,13 @@ impl GroupFaults {
         key
     }
 }
+
+/// Interning key of one fault pattern (see [`GroupFaults::pattern_key`]).
+pub type PatternKey = u64;
+
+/// The key of an all-free pattern: `Free` encodes as 0 in every 2-bit
+/// slot, so a fault-free group of any shape always keys to 0.
+pub const FREE_PATTERN_KEY: PatternKey = 0;
 
 #[cfg(test)]
 mod tests {
@@ -201,6 +211,16 @@ mod tests {
         };
         assert_ne!(a.pattern_key(), b.pattern_key());
         assert_eq!(a.pattern_key(), a.clone().pattern_key());
+    }
+
+    #[test]
+    fn free_pattern_keys_to_zero() {
+        for cells in [2usize, 4, 8, 16] {
+            assert_eq!(GroupFaults::free(cells).pattern_key(), FREE_PATTERN_KEY);
+        }
+        let mut g = GroupFaults::free(4);
+        g.neg[3] = FaultState::Sa1;
+        assert_ne!(g.pattern_key(), FREE_PATTERN_KEY);
     }
 
     #[test]

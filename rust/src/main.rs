@@ -15,7 +15,9 @@ use rchg::arrays::MapperPolicy;
 use rchg::coordinator::Method;
 use rchg::energy::EnergyParams;
 use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
-use rchg::experiments::compile_time::{fig10a, fig10b, measure, table2, CompileTimeOptions};
+use rchg::experiments::compile_time::{
+    dedup_report, fig10a, fig10b, measure, table2, CompileTimeOptions,
+};
 use rchg::experiments::hw::{fig6, fig11};
 use rchg::experiments::lm::{table3, LmOptions};
 use rchg::grouping::GroupConfig;
@@ -65,6 +67,7 @@ fn main() -> anyhow::Result<()> {
             println!("{}", t2.render());
             println!("{}", fig10a(&rows, &ctopts.models).render());
             println!("{}", fig10b(&rows, "resnet18").render());
+            println!("{}", dedup_report(&rows).render());
             let lopts = LmOptions { trials: 2, max_windows: 40, ..Default::default() };
             println!("{}", table3(&rt, &art, &lopts)?.render());
             println!(
@@ -88,7 +91,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("archs", "architectures", Some("cnn_s,cnn_m,cnn_d,vgg_n"))
                 .opt("configs", "grouping configs", Some("r1c4,r2c2,r2c4"))
                 .opt("trials", "chips per cell", Some("3"))
-                .opt("threads", "threads", Some("1"))
+                .opt("threads", "worker threads (0 = auto-detect)", Some("0"))
                 .opt("layerwise", "Fig 8 output", None)
                 .opt("sweep", "Fig 9 output", None)
                 .opt("unprotected", "no-mitigation rows", None);
@@ -103,7 +106,7 @@ fn main() -> anyhow::Result<()> {
                     .filter_map(|s| GroupConfig::parse(s))
                     .collect(),
                 trials: args.get_usize("trials", 3),
-                threads: args.get_usize("threads", 1),
+                threads: args.get_threads("threads"),
                 include_unprotected: args.get_bool("unprotected"),
             };
             println!("{}", table1(&rt, &art, &opts)?.render());
@@ -130,7 +133,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("configs", "grouping configs", Some("r1c4,r2c2"))
                 .opt("trials", "chips", Some("3"))
                 .opt("windows", "eval windows per stream", Some("60"))
-                .opt("threads", "threads", Some("1"))
+                .opt("threads", "worker threads (0 = auto-detect)", Some("0"))
                 .opt("unprotected", "no-mitigation rows", None);
             let args = cli.parse(rest);
             let art = artifacts_dir();
@@ -142,7 +145,7 @@ fn main() -> anyhow::Result<()> {
                     .filter_map(|s| GroupConfig::parse(s))
                     .collect(),
                 trials: args.get_usize("trials", 3),
-                threads: args.get_usize("threads", 1),
+                threads: args.get_threads("threads"),
                 max_windows: args.get_usize("windows", 60),
                 include_unprotected: args.get_bool("unprotected"),
             };
@@ -154,7 +157,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("sample-complete", "complete-pipeline sample", Some("400000"))
                 .opt("sample-ilp", "ILP-only sample", Some("2000"))
                 .opt("sample-ff", "FF sample", Some("2000"))
-                .opt("threads", "threads", Some("1"))
+                .opt("threads", "worker threads (1 = paper protocol, 0 = auto)", Some("1"))
                 .opt("r2c4", "include R2C4", None);
             let args = cli.parse(rest);
             let opts = CompileTimeOptions {
@@ -162,13 +165,14 @@ fn main() -> anyhow::Result<()> {
                 sample_complete: args.get_usize("sample-complete", 400_000),
                 sample_ilp: args.get_usize("sample-ilp", 2_000),
                 sample_ff: args.get_usize("sample-ff", 2_000),
-                threads: args.get_usize("threads", 1),
+                threads: args.get_threads("threads"),
                 include_r2c4: args.get_bool("r2c4"),
             };
             let (t, rows) = table2(&opts)?;
             println!("{}", t.render());
             println!("{}", fig10a(&rows, &opts.models).render());
             println!("{}", fig10b(&rows, opts.models.last().unwrap()).render());
+            println!("{}", dedup_report(&rows).render());
         }
         "compile" => {
             let cli = Cli::new("compile a synthetic model for one chip")
@@ -176,7 +180,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("config", "grouping config", Some("r2c2"))
                 .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
                 .opt("chip", "chip seed", Some("1"))
-                .opt("threads", "threads", Some("1"))
+                .opt("threads", "worker threads (0 = auto-detect)", Some("0"))
                 .opt("limit", "max weights", None);
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
@@ -188,7 +192,7 @@ fn main() -> anyhow::Result<()> {
                 cfg,
                 method,
                 args.get_usize("limit", usize::MAX),
-                args.get_usize("threads", 1),
+                args.get_threads("threads"),
                 args.get_u64("chip", 1),
             )?;
             println!(
@@ -200,6 +204,15 @@ fn main() -> anyhow::Result<()> {
                 r.total_weights,
                 fmt_dur(r.full_secs)
             );
+            if r.unique_pairs > 0 {
+                println!(
+                    "pattern classes: {} — solver ran on {} unique (pattern, weight) pairs \
+                     ({:.1}x dedup)",
+                    r.unique_patterns,
+                    r.unique_pairs,
+                    r.dedup_ratio()
+                );
+            }
         }
         "energy" => {
             let cli = Cli::new("energy sweep (Fig 11)")

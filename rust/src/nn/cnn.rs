@@ -8,7 +8,6 @@
 //! 4. execute the AOT graph over the test set via PJRT and score accuracy.
 
 use super::data::CifarTest;
-use super::CompiledMatrix;
 use crate::coordinator::{CompileOptions, CompileStats, Method};
 use crate::fault::bank::ChipFaults;
 use crate::fault::FaultRates;
@@ -82,6 +81,9 @@ impl CnnEvaluator {
         opts.threads = threads;
         let mut compile_total = CompileStats::default();
         let mut layer_l1 = Vec::new();
+        // All layers of one chip share a solve cache: (pattern, weight)
+        // pairs recurring across layers are solved once per trial.
+        let mut cc = super::ChipCompiler::new(&chip, &opts);
 
         // ---- compile conv tensors → faulty float weights -----------------
         let mut conv_args: Vec<Vec<f32>> = Vec::new();
@@ -92,9 +94,9 @@ impl CnnEvaluator {
             // HWIO [3,3,cin,cout] → K = 3*3*cin rows, N = cout columns.
             let n = *dims.last().unwrap();
             let k = w.len() / n;
-            let cm = CompiledMatrix::compile(w, k, n, &chip, li as u64, &opts);
+            let cm = cc.compile(w, k, n, li as u64);
             layer_l1.push((wname, cm.fault_l1(&self.cfg)));
-            merge_stats(&mut compile_total, &cm.stats);
+            compile_total.merge_with_wall(&cm.stats);
             conv_args.push(cm.faulty_dequant(&self.cfg));
         }
 
@@ -102,9 +104,9 @@ impl CnnEvaluator {
         let fc = self.bank.get("fc_w")?;
         let n = *fc.dims.last().unwrap();
         let k = fc.f32s.len() / n;
-        let cm = CompiledMatrix::compile(&fc.f32s, k, n, &chip, 1000, &opts);
+        let cm = cc.compile(&fc.f32s, k, n, 1000);
         layer_l1.push(("fc_w".to_string(), cm.fault_l1(&self.cfg)));
-        merge_stats(&mut compile_total, &cm.stats);
+        compile_total.merge_with_wall(&cm.stats);
         let planes = cm.planes(&self.cfg);
         let sigs: Vec<f32> = self.cfg.significances().iter().map(|&s| s as f32).collect();
         let fc_b = &self.bank.get("fc_b")?.f32s;
@@ -143,26 +145,6 @@ impl CnnEvaluator {
     }
 }
 
-fn merge_stats(total: &mut CompileStats, s: &CompileStats) {
-    merge_stats_pub(total, s)
-}
-
-/// Merge compile statistics (shared with the LM evaluator).
-pub fn merge_stats_pub(total: &mut CompileStats, s: &CompileStats) {
-    total.weights += s.weights;
-    total.total_abs_error += s.total_abs_error;
-    total.imperfect += s.imperfect;
-    total.memo_hits += s.memo_hits;
-    total.wall_secs += s.wall_secs;
-    total.clock.merge(&s.clock);
-    for (name, c) in &s.stage_counts {
-        if let Some(e) = total.stage_counts.iter_mut().find(|(n, _)| n == name) {
-            e.1 += c;
-        } else {
-            total.stage_counts.push((name, *c));
-        }
-    }
-}
 
 #[cfg(test)]
 mod tests {

@@ -7,7 +7,6 @@
 //! matrices to IMC arrays; tiny 1-D parameters live in the digital logic).
 
 use super::data::TokenStream;
-use super::CompiledMatrix;
 use crate::coordinator::{CompileOptions, CompileStats, Method};
 use crate::fault::bank::ChipFaults;
 use crate::fault::FaultRates;
@@ -83,6 +82,8 @@ impl LmEvaluator {
         let mut opts = CompileOptions::new(self.cfg, method);
         opts.threads = threads;
         let mut compile_total = CompileStats::default();
+        // One chip-wide solve cache for the trunk and the LM head.
+        let mut cc = super::ChipCompiler::new(&chip, &opts);
 
         // ---- trunk tensors ------------------------------------------------
         let mut trunk: BTreeMap<String, Vec<f32>> = BTreeMap::new();
@@ -91,8 +92,8 @@ impl LmEvaluator {
             if Self::is_mapped(name) {
                 let n = *t.dims.last().unwrap();
                 let k = t.f32s.len() / n;
-                let cm = CompiledMatrix::compile(&t.f32s, k, n, &chip, ti as u64, &opts);
-                super::cnn::merge_stats_pub(&mut compile_total, &cm.stats);
+                let cm = cc.compile(&t.f32s, k, n, ti as u64);
+                compile_total.merge_with_wall(&cm.stats);
                 trunk.insert(name.clone(), cm.faulty_dequant(&self.cfg));
             } else {
                 trunk.insert(name.clone(), t.f32s.clone());
@@ -112,8 +113,8 @@ impl LmEvaluator {
             }
         }
         let q = QuantizedMatrix::quantize_gptq_lite(&head_w, d, v, &self.cfg);
-        let cm = CompiledMatrix::from_quantized(q, &chip, 5000, &opts);
-        super::cnn::merge_stats_pub(&mut compile_total, &cm.stats);
+        let cm = cc.from_quantized(q, 5000);
+        compile_total.merge_with_wall(&cm.stats);
         let planes = cm.planes(&self.cfg);
         let sigs: Vec<f32> = self.cfg.significances().iter().map(|&s| s as f32).collect();
 

@@ -11,7 +11,9 @@ pub mod data;
 pub mod lm;
 pub mod packing;
 
-use crate::coordinator::{compile_tensor, CompileOptions, CompileStats};
+use crate::coordinator::{
+    compile_tensor, compile_tensor_with_cache, CompileOptions, CompileStats, SolveCache,
+};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::Decomposition;
@@ -52,7 +54,41 @@ impl CompiledMatrix {
         let compiled = compile_tensor(&q.w_int, &faults, opts);
         CompiledMatrix { q, decomps: compiled.decomps, faults, stats: compiled.stats }
     }
+}
 
+/// Compiles a model's matrices for one chip through a shared chip-wide
+/// [`SolveCache`], so (pattern, weight) pairs recurring across layers are
+/// solved once per chip rather than once per tensor. Falls back to the
+/// legacy per-weight path when `opts.dedupe` is off.
+pub struct ChipCompiler<'a> {
+    chip: &'a ChipFaults,
+    opts: &'a CompileOptions,
+    cache: Option<SolveCache>,
+}
+
+impl<'a> ChipCompiler<'a> {
+    pub fn new(chip: &'a ChipFaults, opts: &'a CompileOptions) -> ChipCompiler<'a> {
+        ChipCompiler { chip, opts, cache: opts.dedupe.then(|| SolveCache::new(opts.cfg)) }
+    }
+
+    /// Quantize and compile one `[k, n]` float matrix for tensor
+    /// `tensor_id`, reusing the chip's solve cache.
+    pub fn compile(&mut self, w: &[f32], k: usize, n: usize, tensor_id: u64) -> CompiledMatrix {
+        let q = QuantizedMatrix::quantize(w, k, n, &self.opts.cfg);
+        self.from_quantized(q, tensor_id)
+    }
+
+    pub fn from_quantized(&mut self, q: QuantizedMatrix, tensor_id: u64) -> CompiledMatrix {
+        let faults = self.chip.sample_tensor(tensor_id, q.w_int.len(), self.opts.cfg.cells());
+        let compiled = match self.cache.as_mut() {
+            Some(c) => compile_tensor_with_cache(&q.w_int, &faults, self.opts, c),
+            None => compile_tensor(&q.w_int, &faults, self.opts),
+        };
+        CompiledMatrix { q, decomps: compiled.decomps, faults, stats: compiled.stats }
+    }
+}
+
+impl CompiledMatrix {
     /// The faulty integer weights this compilation realizes on-chip.
     pub fn faulty_ints(&self, cfg: &crate::grouping::GroupConfig) -> Vec<i64> {
         self.decomps
@@ -124,6 +160,29 @@ mod tests {
             .map(|(d, f)| d.faulty_value(&cfg, f))
             .collect();
         assert_eq!(eff, faulty_ints);
+    }
+
+    #[test]
+    fn chip_compiler_matches_standalone_and_reuses_cache() {
+        let cfg = GroupConfig::R2C2;
+        let mut rng = Rng::new(4);
+        let (k, n) = (40, 8);
+        let w0: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.5).collect();
+        let w1: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.5).collect();
+        let chip = ChipFaults::new(6, FaultRates::paper_default());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+
+        let mut cc = ChipCompiler::new(&chip, &opts);
+        let a0 = cc.compile(&w0, k, n, 0);
+        let a1 = cc.compile(&w1, k, n, 1);
+        let b0 = CompiledMatrix::compile(&w0, k, n, &chip, 0, &opts);
+        let b1 = CompiledMatrix::compile(&w1, k, n, &chip, 1, &opts);
+        assert_eq!(a0.decomps, b0.decomps);
+        assert_eq!(a1.decomps, b1.decomps);
+        assert_eq!(a0.faults, b0.faults);
+        // Second matrix through the shared cache solves fewer fresh pairs
+        // than the same matrix compiled standalone.
+        assert!(a1.stats.unique_pairs <= b1.stats.unique_pairs);
     }
 
     #[test]

@@ -118,6 +118,27 @@ impl Args {
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+    /// Thread-count option: `0` means auto-detect via
+    /// [`crate::util::pool::default_threads`]; any positive value is taken
+    /// literally. An unparsable value is an error (exit 2) rather than a
+    /// silent fallback — auto-detecting on a typo would break protocols
+    /// that rely on an explicit thread count (e.g. single-thread paper
+    /// timing runs).
+    pub fn get_threads(&self, key: &str) -> usize {
+        let raw = self.get(key);
+        match raw.and_then(|s| s.parse::<usize>().ok()) {
+            Some(0) => crate::util::pool::default_threads(None),
+            Some(n) => n,
+            None => {
+                eprintln!(
+                    "invalid --{key} value {:?}: expected a number (0 = auto-detect)",
+                    raw.unwrap_or("")
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+
     /// Comma-separated list option.
     pub fn get_list(&self, key: &str) -> Vec<String> {
         self.get(key)
@@ -175,6 +196,17 @@ mod tests {
     fn list_option() {
         let a = cli().parse(argv(&["--rates", "0.01, 0.05,0.1"]));
         assert_eq!(a.get_list("rates"), vec!["0.01", "0.05", "0.1"]);
+    }
+
+    #[test]
+    fn threads_zero_auto_detects() {
+        let c = Cli::new("t").opt("threads", "threads (0 = auto)", Some("0"));
+        let auto = c.parse(argv(&[]));
+        assert!(auto.get_threads("threads") >= 1);
+        let fixed = c.parse(argv(&["--threads", "3"]));
+        assert_eq!(fixed.get_threads("threads"), 3);
+        let explicit_auto = c.parse(argv(&["--threads", "0"]));
+        assert!(explicit_auto.get_threads("threads") >= 1);
     }
 
     #[test]

@@ -60,6 +60,65 @@ where
     slots.into_iter().flatten().flatten().collect()
 }
 
+/// Atomic-counter work-stealing map: `n` independent items are handed out
+/// in chunks of `chunk` indices from a shared counter; idle workers steal
+/// the next chunk as soon as they finish one. Results are stitched back in
+/// index order, so output is byte-deterministic regardless of thread count
+/// or scheduling — only wall-clock changes.
+///
+/// Prefer this over [`parallel_map_ranges`] when per-item cost is skewed
+/// (e.g. the compiler's solve phase, where one pattern class may route to
+/// ILP while thousands hit the fast path): static contiguous ranges leave
+/// threads idle behind the slowest range, a shared counter does not.
+pub fn parallel_work_steal<T, F>(n: usize, threads: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunk = chunk.max(1);
+    let threads = threads.max(1).min((n + chunk - 1) / chunk);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let counter = AtomicUsize::new(0);
+    let mut chunks: Vec<(usize, Vec<T>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let counter = &counter;
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                let mut local: Vec<(usize, Vec<T>)> = Vec::new();
+                loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    local.push((start, (start..end).map(f).collect()));
+                }
+                local
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    });
+    chunks.sort_unstable_by_key(|(start, _)| *start);
+    let mut out = Vec::with_capacity(n);
+    for (_, mut c) in chunks {
+        out.append(&mut c);
+    }
+    debug_assert_eq!(out.len(), n);
+    out
+}
+
 /// Parallel fold: apply `f(range) -> A`, combine with `merge`.
 pub fn parallel_fold<A, F, M>(n: usize, threads: usize, f: F, merge: M, init: A) -> A
 where
@@ -137,5 +196,37 @@ mod tests {
     fn empty_input() {
         let out: Vec<usize> = parallel_map_ranges(0, 4, |r| r.collect());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn work_steal_matches_serial_any_threads_and_chunks() {
+        let expect: Vec<usize> = (0..1003).map(|i| i * 3 + 1).collect();
+        for threads in [1usize, 2, 4, 8] {
+            for chunk in [1usize, 7, 64, 5000] {
+                let out = parallel_work_steal(1003, threads, chunk, |i| i * 3 + 1);
+                assert_eq!(out, expect, "threads={threads} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn work_steal_empty_and_single() {
+        let out: Vec<usize> = parallel_work_steal(0, 4, 64, |i| i);
+        assert!(out.is_empty());
+        let out = parallel_work_steal(1, 8, 64, |i| i + 9);
+        assert_eq!(out, vec![9]);
+    }
+
+    #[test]
+    fn work_steal_skewed_items_still_ordered() {
+        // Make early items slow so later chunks finish first; order must
+        // still be by index.
+        let out = parallel_work_steal(64, 4, 4, |i| {
+            if i < 8 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
     }
 }

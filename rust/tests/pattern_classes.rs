@@ -1,0 +1,155 @@
+//! Pattern-class compiler acceptance tests: byte-equivalence with the
+//! legacy per-weight path on a ResNet-20-shaped tensor at paper fault
+//! rates, thread-count invariance, cached-context equivalence, chip-wide
+//! cross-tensor reuse, and the dedup-counter accounting.
+
+use rchg::coordinator::{
+    compile_model, compile_tensor, decompose_one, decompose_with_ctx, CompileOptions, Method,
+    PatternCtx, PipelineOptions,
+};
+use rchg::experiments::compile_time::synthetic_model_weights;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::{FaultRates, GroupFaults};
+use rchg::grouping::GroupConfig;
+use rchg::ilp::IlpStats;
+use rchg::prop_assert;
+use rchg::util::prop::prop_check;
+
+#[test]
+fn resnet20_pattern_class_matches_legacy_across_threads() {
+    // ResNet-20-shaped weights at the paper's published SAF rates: the
+    // dedupe-first core must be byte-identical to the per-weight path for
+    // threads ∈ {1, 4, 8}.
+    for cfg in [GroupConfig::R2C2, GroupConfig::R1C4] {
+        let ws = synthetic_model_weights("resnet20", &cfg, 25_000).unwrap();
+        let chip = ChipFaults::new(1, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let mut legacy = CompileOptions::new(cfg, Method::Complete);
+        legacy.dedupe = false;
+        let base = compile_tensor(&ws, &faults, &legacy);
+        for threads in [1usize, 4, 8] {
+            let mut o = CompileOptions::new(cfg, Method::Complete);
+            o.threads = threads;
+            let out = compile_tensor(&ws, &faults, &o);
+            assert_eq!(out.decomps, base.decomps, "{cfg} decomps diverged at threads={threads}");
+            assert_eq!(out.errors, base.errors, "{cfg} errors diverged at threads={threads}");
+            assert_eq!(out.stats.stage_counts, base.stats.stage_counts, "{cfg} stage census");
+            assert_eq!(out.stats.unique_pairs + out.stats.dedup_hits, ws.len());
+        }
+    }
+}
+
+#[test]
+fn resnet20_dedup_factor_exceeds_five() {
+    // The scaling claim behind the refactor: at paper fault rates the
+    // solver runs on ≥5x fewer unique (pattern, weight) pairs than there
+    // are weights (R2C2's ±30 weight range keeps the pair space tiny).
+    let cfg = GroupConfig::R2C2;
+    let ws = synthetic_model_weights("resnet20", &cfg, 60_000).unwrap();
+    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let out = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+    assert!(out.stats.unique_patterns > 1);
+    assert!(
+        out.stats.dedup_ratio() >= 5.0,
+        "dedup ratio {:.2} < 5 ({} weights, {} unique pairs)",
+        out.stats.dedup_ratio(),
+        ws.len(),
+        out.stats.unique_pairs
+    );
+}
+
+#[test]
+fn cached_pattern_ctx_matches_fresh_build_per_weight() {
+    // Property: a PatternCtx reused across many weights (analysis + tables
+    // built once, cached) yields the same Outcome as a fresh
+    // FaultAnalysis/GroupTables build per (pattern, weight).
+    let opts = PipelineOptions::default();
+    prop_check("cached-ctx-vs-fresh", 150, |rng| {
+        let cfg = [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4][rng.index(3)];
+        let faults =
+            GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.12, p_sa1: 0.12 }, rng);
+        let ctx = PatternCtx::new(cfg, faults.clone());
+        for _ in 0..5 {
+            let w = rng.range_i64(-cfg.max_per_array(), cfg.max_per_array());
+            let mut s1 = IlpStats::default();
+            let mut s2 = IlpStats::default();
+            let cached = decompose_with_ctx(&ctx, w, &opts, &mut s1);
+            let fresh = decompose_one(&cfg, &faults, w, &opts, &mut s2);
+            prop_assert!(
+                cached.decomposition == fresh.decomposition
+                    && cached.error == fresh.error
+                    && cached.stage == fresh.stage,
+                "cached ctx diverged (cfg {cfg}, w {w}, stages {:?} vs {:?})",
+                cached.stage,
+                fresh.stage
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chip_wide_cache_shares_pairs_across_tensors() {
+    // compile_model runs all tensors through one chip-wide SolveCache: the
+    // later tensors' unique-pair counts must reflect cross-tensor reuse,
+    // and outputs must equal the legacy per-tensor compilation.
+    let cfg = GroupConfig::R2C2;
+    let tensors: Vec<(String, Vec<i64>)> = (0..3)
+        .map(|i| {
+            (
+                format!("layer{i}"),
+                synthetic_model_weights("resnet20", &cfg, 8_000).unwrap(),
+            )
+        })
+        .collect();
+    let chip = ChipFaults::new(9, FaultRates::paper_default());
+    let shared = compile_model(&tensors, &chip, &CompileOptions::new(cfg, Method::Complete));
+    let mut legacy_opts = CompileOptions::new(cfg, Method::Complete);
+    legacy_opts.dedupe = false;
+    let legacy = compile_model(&tensors, &chip, &legacy_opts);
+    for ((_, a, fa), (_, b, fb)) in shared.iter().zip(&legacy) {
+        assert_eq!(fa, fb, "fault sampling must be identical");
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+    }
+    // Later tensors solve fewer fresh pairs than the first (cache warm-up).
+    let first = shared[0].1.stats.unique_pairs;
+    let last = shared[2].1.stats.unique_pairs;
+    assert!(
+        last * 10 < first * 7,
+        "chip-wide cache not reused: first tensor solved {first}, third solved {last}"
+    );
+    // Registry gauge is chip-wide: later tensors see at least as many
+    // interned patterns as earlier ones.
+    assert!(shared[2].1.stats.unique_patterns >= shared[0].1.stats.unique_patterns);
+}
+
+#[test]
+fn dedup_invariant_under_thread_count_and_methods() {
+    // unique_pairs is a property of the input, not of the schedule; and
+    // every method (not just Complete) runs through the dedupe core.
+    let cfg = GroupConfig::R1C4;
+    let ws = synthetic_model_weights("resnet20", &cfg, 8_000).unwrap();
+    let chip = ChipFaults::new(2, FaultRates::paper_default());
+    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+    let mut pair_counts = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let mut o = CompileOptions::new(cfg, Method::Complete);
+        o.threads = threads;
+        pair_counts.push(compile_tensor(&ws, &faults, &o).stats.unique_pairs);
+    }
+    assert!(pair_counts.windows(2).all(|w| w[0] == w[1]), "{pair_counts:?}");
+
+    for method in [Method::IlpOnly, Method::Unprotected] {
+        let sample = &ws[..600];
+        let fsample = &faults[..600];
+        let a = compile_tensor(sample, fsample, &CompileOptions::new(cfg, method));
+        let mut legacy = CompileOptions::new(cfg, method);
+        legacy.dedupe = false;
+        let b = compile_tensor(sample, fsample, &legacy);
+        assert_eq!(a.decomps, b.decomps, "{method:?} diverged");
+        assert_eq!(a.errors, b.errors);
+        assert!(a.stats.unique_pairs <= sample.len());
+    }
+}
