@@ -9,7 +9,7 @@
 //! `imc_linear_r2c2` artifact (Pallas kernel inside) and runs a faulty
 //! crossbar MVM whose outputs match the mitigated weights exactly.
 
-use rchg::coordinator::{compile_tensor, decompose_one, CompileOptions, Method, PipelineOptions};
+use rchg::coordinator::{decompose_one, CompileSession, Method, PipelineOptions};
 use rchg::fault::bank::ChipFaults;
 use rchg::fault::{FaultRates, FaultState, GroupFaults};
 use rchg::grouping::{Decomposition, GroupConfig};
@@ -73,19 +73,28 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    println!("\n=== 4. Dedupe-first compilation (pattern classes) ===");
-    // The compiler does not solve weight-by-weight: it interns each group's
-    // fault pattern, dedupes to unique (pattern, weight) pairs, solves each
-    // pair once, and scatters the results back — most weights are cache
-    // hits because realistic SAF rates produce few distinct patterns.
+    println!("\n=== 4. A chip-scoped CompileSession (dedupe-first, warm-startable) ===");
+    // The compiler's entry point is a session bound to one chip. It does
+    // not solve weight-by-weight: it interns each group's fault pattern,
+    // dedupes to unique (pattern, weight) pairs, solves each pair once,
+    // and scatters the results back — most weights are cache hits because
+    // realistic SAF rates produce few distinct patterns. The session owns
+    // that cache, so every tensor of the chip (and every later model
+    // revision) reuses everything solved before.
+    //
+    // Migrating from the old free functions:
+    //   compile_tensor(ws, faults, opts)      → session.compile_with_faults(ws, faults)
+    //   compile_tensor_with_cache(…, cache)   → same (the session owns the cache)
+    //   compile_model(tensors, chip, opts)    → session.compile_model(tensors)
     let cfg = GroupConfig::R2C2;
     let chip = ChipFaults::new(7, FaultRates::paper_default());
+    let mut session =
+        CompileSession::builder(cfg).method(Method::Complete).threads(1).chip(&chip);
     let mut rng = Rng::new(1);
     let n = 30_000;
     let ws: Vec<i64> =
         (0..n).map(|_| rng.range_i64(-cfg.max_per_array(), cfg.max_per_array())).collect();
-    let gf = chip.sample_tensor(0, n, cfg.cells());
-    let compiled = compile_tensor(&ws, &gf, &CompileOptions::new(cfg, Method::Complete));
+    let compiled = session.compile_tensor("conv1", &ws);
     println!(
         "compiled {n} weights via {} pattern classes and {} unique (pattern, weight) \
          pairs — {:.1}x dedup, {} tables built",
@@ -94,6 +103,20 @@ fn main() -> anyhow::Result<()> {
         compiled.stats.dedup_ratio(),
         compiled.stats.tables_built,
     );
+
+    // Persist the warm state and recompile: the chip's fault pattern is
+    // fixed, so a reloaded session solves nothing for an unchanged tensor.
+    let cache_path = std::env::temp_dir().join("rchg_quickstart_session.rcs");
+    session.save(&cache_path)?;
+    let mut warm = CompileSession::load(&cache_path)?;
+    let again = warm.compile_tensor("conv1", &ws);
+    println!(
+        "warm recompile after save/load: {} fresh solves, {} cache hits — byte-identical: {}",
+        again.stats.unique_pairs,
+        again.stats.dedup_hits,
+        again.decomps == compiled.decomps,
+    );
+    std::fs::remove_file(&cache_path).ok();
 
     println!("\n=== 5. End-to-end through the AOT crossbar kernel ===");
     let art = artifacts_dir();

@@ -8,14 +8,15 @@
 //! and cross-checks that the dedupe-first core is byte-identical to the
 //! legacy per-weight path at several thread counts.
 
-use rchg::coordinator::{compile_tensor, CompileOptions, Method};
+use rchg::coordinator::{compile_tensor, CompileOptions, CompileSession, Method};
 use rchg::experiments::compile_time::{
-    dedup_report, fig10a, fig10b, measure, synthetic_model_weights, table2, CompileTimeOptions,
+    dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, synthetic_model_weights,
+    table2, CompileTimeOptions,
 };
 use rchg::fault::bank::ChipFaults;
 use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
-use rchg::util::timer::fmt_dur;
+use rchg::util::timer::{fmt_dur, Timer};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -86,5 +87,42 @@ fn main() -> anyhow::Result<()> {
             fmt_dur(out.stats.wall_secs)
         );
     }
+
+    // Session warm-start: save → load → recompile the same model must skip
+    // ≥90% of solves (it skips all of them — the chip's fault pattern is
+    // fixed) and stay byte-identical to the cold compile.
+    println!("== session warm-start (save → load → recompile)");
+    let tensors = synthetic_model_tensors("resnet20", &cfg, n)?;
+    let warm_chip = ChipFaults::new(3, FaultRates::paper_default());
+    let mut cold = CompileSession::builder(cfg).threads(1).chip(&warm_chip);
+    let t_cold = Timer::start();
+    let cold_out = cold.compile_model(&tensors);
+    let cold_secs = t_cold.secs();
+    let cache_path = std::env::temp_dir().join("rchg_bench_session.rcs");
+    cold.save(&cache_path)?;
+    let mut warm = CompileSession::load(&cache_path)?;
+    let t_warm = Timer::start();
+    let warm_out = warm.compile_model(&tensors);
+    let warm_secs = t_warm.secs();
+    std::fs::remove_file(&cache_path).ok();
+    let cold_solves: usize = cold_out.iter().map(|(_, t, _)| t.stats.unique_pairs).sum();
+    let warm_solves: usize = warm_out.iter().map(|(_, t, _)| t.stats.unique_pairs).sum();
+    for ((_, a, _), (_, b, _)) in cold_out.iter().zip(&warm_out) {
+        assert_eq!(a.decomps, b.decomps, "warm recompile diverged from cold");
+        assert_eq!(a.errors, b.errors);
+    }
+    println!(
+        "  cold: {} solves in {} — warm: {} solves in {} ({:.1}x faster)",
+        cold_solves,
+        fmt_dur(cold_secs),
+        warm_solves,
+        fmt_dur(warm_secs),
+        cold_secs / warm_secs.max(1e-9),
+    );
+    println!(
+        "  warm-start criterion (skip ≥90% of solves): {}",
+        if warm_solves * 10 <= cold_solves { "PASS" } else { "FAIL" }
+    );
+    assert!(warm_solves * 10 <= cold_solves, "warm recompile must skip ≥90% of solves");
     Ok(())
 }

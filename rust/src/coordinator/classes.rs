@@ -115,6 +115,12 @@ impl PatternRegistry {
         faults.iter().map(|f| self.intern(f)).collect()
     }
 
+    /// Interned fault patterns in id order (the session cache serializer
+    /// walks these; re-interning them in order reproduces the same ids).
+    pub fn patterns(&self) -> impl Iterator<Item = &GroupFaults> {
+        self.ctxs.iter().map(|c| &c.faults)
+    }
+
     pub fn ctx(&self, id: PatternId) -> &PatternCtx {
         &self.ctxs[id as usize]
     }
@@ -183,22 +189,37 @@ impl SolveCache {
         pids: &[PatternId],
         weights: &[i64],
     ) -> (Vec<u32>, Vec<(PatternId, i64)>) {
+        let mut fresh: Vec<(PatternId, i64)> = Vec::new();
+        let slots = self.dedupe_pending(pids, weights, &mut fresh);
+        (slots, fresh)
+    }
+
+    /// Batched variant of [`SolveCache::dedupe`]: fresh pairs accumulate
+    /// into a caller-owned `pending` list so several tensors can be
+    /// deduped back-to-back before a single solve + [`SolveCache::absorb`]
+    /// round. Slot numbering continues past both the solved pairs and the
+    /// pending tail, so slots from consecutive calls never collide.
+    pub fn dedupe_pending(
+        &mut self,
+        pids: &[PatternId],
+        weights: &[i64],
+        pending: &mut Vec<(PatternId, i64)>,
+    ) -> Vec<u32> {
         debug_assert_eq!(pids.len(), weights.len());
         let mut slots = Vec::with_capacity(weights.len());
-        let mut fresh: Vec<(PatternId, i64)> = Vec::new();
         for (&pid, &w) in pids.iter().zip(weights.iter()) {
-            let next = (self.solved.len() + fresh.len()) as u32;
+            let next = (self.solved.len() + pending.len()) as u32;
             let slot = match self.index.get(&(pid, w)) {
                 Some(&s) => s,
                 None => {
                     self.index.insert((pid, w), next);
-                    fresh.push((pid, w));
+                    pending.push((pid, w));
                     next
                 }
             };
             slots.push(slot);
         }
-        (slots, fresh)
+        slots
     }
 
     /// Append outcomes for the pairs returned by the latest
@@ -214,6 +235,56 @@ impl SolveCache {
     /// Total unique (pattern, weight) pairs solved through this cache.
     pub fn solved_pairs(&self) -> usize {
         self.solved.len()
+    }
+
+    /// Pipeline options the cached outcomes were solved under (set on the
+    /// first compilation through this cache).
+    pub fn pipeline(&self) -> Option<&PipelineOptions> {
+        self.pipeline.as_ref()
+    }
+
+    /// Solved (pattern-id, weight) pairs in slot order — the serialization
+    /// counterpart of the outcomes returned by [`SolveCache::outcome`].
+    pub fn pairs(&self) -> Vec<(PatternId, i64)> {
+        debug_assert_eq!(self.index.len(), self.solved.len());
+        let mut out = vec![(0 as PatternId, 0i64); self.solved.len()];
+        for (&(pid, w), &slot) in &self.index {
+            out[slot as usize] = (pid, w);
+        }
+        out
+    }
+
+    /// Rebuild a cache from serialized parts: patterns in id order, solved
+    /// pairs in slot order with their outcomes, and the pipeline options
+    /// the outcomes were solved under. Returns `None` when the parts are
+    /// internally inconsistent (duplicate patterns or pairs, pair counts
+    /// disagreeing with outcomes, pattern ids out of range).
+    pub fn from_parts(
+        cfg: GroupConfig,
+        patterns: &[GroupFaults],
+        pairs: Vec<(PatternId, i64)>,
+        outcomes: Vec<Outcome>,
+        pipeline: Option<PipelineOptions>,
+    ) -> Option<SolveCache> {
+        if pairs.len() != outcomes.len() {
+            return None;
+        }
+        let mut registry = PatternRegistry::new(cfg);
+        for (i, p) in patterns.iter().enumerate() {
+            if registry.intern(p) as usize != i {
+                return None; // duplicate pattern in the stream
+            }
+        }
+        let mut index: FnvMap<(PatternId, i64), u32> = FnvMap::default();
+        for (slot, &(pid, w)) in pairs.iter().enumerate() {
+            if (pid as usize) >= registry.len() {
+                return None;
+            }
+            if index.insert((pid, w), slot as u32).is_some() {
+                return None; // duplicate (pattern, weight) pair
+            }
+        }
+        Some(SolveCache { registry, index, solved: outcomes, pipeline })
     }
 }
 
@@ -305,5 +376,79 @@ mod tests {
             cache.outcome(slots2[1]).decomposition,
             Decomposition::encode_ideal(3, &cfg)
         );
+    }
+
+    #[test]
+    fn dedupe_pending_spans_tensors_without_slot_collisions() {
+        let cfg = GroupConfig::R2C2;
+        let mut cache = SolveCache::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let pid = cache.registry.intern(&free);
+        let mut pending = Vec::new();
+        // Two tensors deduped back-to-back before any absorb.
+        let s1 = cache.dedupe_pending(&[pid, pid], &[3, 7], &mut pending);
+        let s2 = cache.dedupe_pending(&[pid, pid, pid], &[7, 9, 3], &mut pending);
+        assert_eq!(s1, vec![0, 1]);
+        assert_eq!(s2, vec![1, 2, 0], "second tensor must reuse pending slots");
+        assert_eq!(pending, vec![(pid, 3), (pid, 7), (pid, 9)]);
+        let outcomes: Vec<Outcome> = pending
+            .iter()
+            .map(|&(_, w)| Outcome {
+                decomposition: Decomposition::encode_ideal(w, &cfg),
+                error: 0,
+                stage: Stage::FastPath,
+            })
+            .collect();
+        cache.absorb(outcomes);
+        assert_eq!(
+            cache.outcome(s2[1]).decomposition,
+            Decomposition::encode_ideal(9, &cfg)
+        );
+    }
+
+    #[test]
+    fn cache_pairs_and_from_parts_roundtrip() {
+        let cfg = GroupConfig::R2C2;
+        let mut cache = SolveCache::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let mut faulty = GroupFaults::free(cfg.cells());
+        faulty.pos[0] = FaultState::Sa1;
+        let a = cache.registry.intern(&free);
+        let b = cache.registry.intern(&faulty);
+        let (slots, fresh) = cache.dedupe(&[a, b, a], &[5, 5, 2]);
+        let outcomes: Vec<Outcome> = fresh
+            .iter()
+            .map(|&(_, w)| Outcome {
+                decomposition: Decomposition::encode_ideal(w, &cfg),
+                error: 0,
+                stage: Stage::FastPath,
+            })
+            .collect();
+        cache.absorb(outcomes);
+        let pairs = cache.pairs();
+        assert_eq!(pairs, vec![(a, 5), (b, 5), (a, 2)]);
+
+        let patterns: Vec<GroupFaults> = cache.registry.patterns().cloned().collect();
+        let saved: Vec<Outcome> =
+            (0..pairs.len() as u32).map(|s| cache.outcome(s).clone()).collect();
+        let mut rebuilt =
+            SolveCache::from_parts(cfg, &patterns, pairs, saved, cache.pipeline().copied())
+                .expect("consistent parts must rebuild");
+        assert_eq!(rebuilt.solved_pairs(), cache.solved_pairs());
+        // The rebuilt cache resolves the same pairs to the same slots.
+        let pids = rebuilt.registry.intern_all(&[free.clone(), faulty, free.clone()]);
+        let (slots2, fresh2) = rebuilt.dedupe(&pids, &[5, 5, 2]);
+        assert!(fresh2.is_empty(), "rebuilt cache must already hold every pair");
+        assert_eq!(slots2, slots);
+
+        // Inconsistent parts are rejected, not mis-assembled.
+        assert!(SolveCache::from_parts(cfg, &[free.clone(), free.clone()], vec![], vec![], None)
+            .is_none());
+        let one = Outcome {
+            decomposition: Decomposition::encode_ideal(1, &cfg),
+            error: 0,
+            stage: Stage::FastPath,
+        };
+        assert!(SolveCache::from_parts(cfg, &[free], vec![(7, 1)], vec![one], None).is_none());
     }
 }

@@ -1,7 +1,10 @@
 //! Per-chip, per-model compilation driver — dedupe-first.
 //!
-//! This is the L3 coordinator proper. The pattern-class core runs four
-//! phases per tensor:
+//! This is the L3 coordinator proper; the public face of it is the
+//! chip-scoped [`CompileSession`] (see [`super::session`]), and the free
+//! functions here remain as deprecated one-shot shims. The pattern-class
+//! core runs four phases per tensor (batched across tensors by
+//! [`compile_batch_with_cache`]):
 //!
 //! 1. **Scan** — intern every group's fault pattern into the chip's
 //!    [`PatternRegistry`]; each class gets one shared [`PatternCtx`]
@@ -20,10 +23,11 @@
 //! retained behind `CompileOptions::dedupe = false` as the equivalence
 //! baseline for tests and ablation benches.
 
-use super::classes::SolveCache;
+use super::classes::{PatternId, SolveCache};
 use super::pipeline::{
     decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage, ALL_STAGES,
 };
+use super::session::CompileSession;
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::{Decomposition, GroupConfig};
@@ -124,16 +128,20 @@ impl CompileStats {
         dedup_ratio_of(self.weights, self.unique_pairs)
     }
 
-    /// Merge statistics of separate compilations, summing wall time too —
-    /// the aggregate the CNN/LM evaluators report per trial.
+    /// Merge statistics of separate compilations, summing wall time too.
+    /// This is the aggregator for **cross-compilation** roll-ups — the
+    /// CNN/LM per-trial totals, session-level stats, and the service's
+    /// per-chip report all use it.
     pub fn merge_with_wall(&mut self, other: &CompileStats) {
         self.merge(other);
         self.wall_secs += other.wall_secs;
     }
 
-    /// Merge per-range/per-tensor statistics. Wall time is deliberately
-    /// not summed — the compiler stamps it from its own timer; callers
-    /// aggregating across compilations add it themselves.
+    /// Merge **intra-compilation** partials (per-range worker stats on
+    /// the legacy path). Wall time is deliberately not summed — the
+    /// compiler stamps it once from its own timer; anything aggregating
+    /// across separate compilations must use
+    /// [`CompileStats::merge_with_wall`] instead.
     pub fn merge(&mut self, other: &CompileStats) {
         self.weights += other.weights;
         for (name, c) in &other.stage_counts {
@@ -211,6 +219,13 @@ impl CompiledTensor {
 
 /// Compile one tensor of quantized integer weights against per-group fault
 /// maps. `weights.len() == faults.len()`.
+///
+/// Deprecated entry point, kept as a one-shot shim for one release: it
+/// routes through a stack-local [`CompileSession`], so nothing is cached
+/// past the call. Prefer building a [`CompileSession`] (per chip) and
+/// compiling every tensor of that chip through it — recurring (pattern,
+/// weight) pairs are then solved once per chip, and the session can be
+/// persisted for warm-start recompiles.
 pub fn compile_tensor(
     weights: &[i64],
     faults: &[GroupFaults],
@@ -219,35 +234,84 @@ pub fn compile_tensor(
     if !opts.dedupe {
         return compile_tensor_per_weight(weights, faults, opts);
     }
-    let mut cache = SolveCache::new(opts.cfg);
-    compile_tensor_with_cache(weights, faults, opts, &mut cache)
+    CompileSession::one_shot(opts).compile_with_faults(weights, faults)
 }
 
 /// Pattern-class compilation against a caller-owned chip-wide cache.
 /// Tensors compiled through the same cache share interned patterns and
 /// solved (pattern, weight) pairs.
+///
+/// Deprecated entry point, kept as a shim for one release: a
+/// [`CompileSession`] owns the cache for you (and can persist it). It is a
+/// batch of one over [`compile_batch_with_cache`].
 pub fn compile_tensor_with_cache(
     weights: &[i64],
     faults: &[GroupFaults],
     opts: &CompileOptions,
     cache: &mut SolveCache,
 ) -> CompiledTensor {
-    assert_eq!(weights.len(), faults.len(), "one fault map per weight group");
+    compile_batch_with_cache(&[TensorJob { weights, faults }], opts, cache)
+        .pop()
+        .expect("batch of one yields one result")
+}
+
+/// One tensor's input to a batched compilation: parallel slices of weights
+/// and their per-group fault maps.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorJob<'a> {
+    pub weights: &'a [i64],
+    pub faults: &'a [GroupFaults],
+}
+
+/// Compile a batch of tensors against one chip-wide cache in a single
+/// scan → dedupe → solve → scatter round: every tensor is scanned and
+/// deduped first (in batch order), then **one** work-stealing fan-out
+/// solves the union of fresh (pattern, weight) pairs, then results are
+/// scattered per tensor. Batching widens the solve phase — a pair shared
+/// by two queued tensors is solved once, and small tensors no longer
+/// leave workers idle between solve phases.
+///
+/// Slot order is fixed by the scan (batch order), so results are
+/// byte-identical to compiling the same tensors one at a time through the
+/// same cache, at any thread count.
+///
+/// Per-tensor statistics: solve time and ILP work are charged to the
+/// tensor that first introduced each fresh pair; the residual batch wall
+/// time (scan/dedupe/scatter) is attributed proportionally to tensor
+/// size, so summing per-tensor `wall_secs` recovers the batch wall at
+/// `threads == 1`.
+pub fn compile_batch_with_cache(
+    jobs: &[TensorJob<'_>],
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+) -> Vec<CompiledTensor> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    for j in jobs {
+        assert_eq!(j.weights.len(), j.faults.len(), "one fault map per weight group");
+    }
     assert_eq!(*cache.registry.cfg(), opts.cfg, "solve cache bound to a different config");
     cache.bind_pipeline(&opts.pipeline);
     let timer = Timer::start();
-    let n = weights.len();
     let threads = opts.threads.max(1);
-    let mut stats = CompileStats::default();
 
-    // Phase 1 — scan: intern each group's fault pattern.
-    let pids = cache.registry.intern_all(faults);
+    // Phases 1+2 per tensor, in batch order — scan: intern each group's
+    // fault pattern; dedupe: collect fresh (pattern, weight) pairs.
+    let mut fresh: Vec<(PatternId, i64)> = Vec::new();
+    let mut tensor_slots: Vec<Vec<u32>> = Vec::with_capacity(jobs.len());
+    let mut fresh_ranges: Vec<std::ops::Range<usize>> = Vec::with_capacity(jobs.len());
+    for j in jobs {
+        let pids = cache.registry.intern_all(j.faults);
+        let start = fresh.len();
+        let slots = cache.dedupe_pending(&pids, j.weights, &mut fresh);
+        tensor_slots.push(slots);
+        fresh_ranges.push(start..fresh.len());
+    }
 
-    // Phase 2 — dedupe: unique (pattern, weight) pairs not already solved.
-    let (slots, fresh) = cache.dedupe(&pids, weights);
-
-    // Phase 3 — solve each fresh pair exactly once (work-stealing; slot
-    // order was fixed by the scan, so output is thread-count independent).
+    // Phase 3 — solve the union of fresh pairs exactly once (work-
+    // stealing; slot order was fixed by the scan, so output is
+    // thread-count independent).
     let registry = &cache.registry;
     let solved: Vec<(Outcome, IlpStats, f64)> =
         parallel_work_steal(fresh.len(), threads, SOLVE_CHUNK, |i| {
@@ -259,47 +323,78 @@ pub fn compile_tensor_with_cache(
             let secs = t.map(|t| t.secs()).unwrap_or(0.0);
             (out, ist, secs)
         });
+
+    // Charge each solved pair to the tensor that introduced it.
+    let mut per_tensor: Vec<CompileStats> = vec![CompileStats::default(); jobs.len()];
+    let mut solve_secs = vec![0f64; jobs.len()];
     let mut outcomes = Vec::with_capacity(solved.len());
-    for (out, ist, secs) in solved {
-        stats.clock.add(out.stage.bucket(), secs);
-        stats.ilp.nodes += ist.nodes;
-        stats.ilp.lp_solves += ist.lp_solves;
+    let mut ti = 0usize;
+    for (i, (out, ist, secs)) in solved.into_iter().enumerate() {
+        while !fresh_ranges[ti].contains(&i) {
+            ti += 1;
+        }
+        let st = &mut per_tensor[ti];
+        st.clock.add(out.stage.bucket(), secs);
+        st.ilp.nodes += ist.nodes;
+        st.ilp.lp_solves += ist.lp_solves;
+        solve_secs[ti] += secs;
         outcomes.push(out);
     }
-    stats.unique_pairs = outcomes.len();
     cache.absorb(outcomes);
 
-    // Phase 4 — scatter solved pairs back to weight indices.
-    let mut decomps = Vec::with_capacity(n);
-    let mut errors = Vec::with_capacity(n);
-    let mut counts: HashMap<&'static str, usize> = HashMap::new();
-    for &slot in &slots {
-        let out = cache.outcome(slot);
-        *counts.entry(out.stage.name()).or_insert(0) += 1;
-        if out.error != 0 {
-            stats.imperfect += 1;
-            stats.total_abs_error += out.error.unsigned_abs();
+    // Phase 4 — scatter solved pairs back to each tensor's weight indices.
+    let mut scattered: Vec<(Vec<Decomposition>, Vec<i64>, HashMap<&'static str, usize>)> =
+        Vec::with_capacity(jobs.len());
+    for (ti, j) in jobs.iter().enumerate() {
+        let n = j.weights.len();
+        let stats = &mut per_tensor[ti];
+        let mut decomps = Vec::with_capacity(n);
+        let mut errors = Vec::with_capacity(n);
+        let mut counts: HashMap<&'static str, usize> = HashMap::new();
+        for &slot in &tensor_slots[ti] {
+            let out = cache.outcome(slot);
+            *counts.entry(out.stage.name()).or_insert(0) += 1;
+            if out.error != 0 {
+                stats.imperfect += 1;
+                stats.total_abs_error += out.error.unsigned_abs();
+            }
+            decomps.push(out.decomposition.clone());
+            errors.push(out.error);
         }
-        decomps.push(out.decomposition.clone());
-        errors.push(out.error);
+        scattered.push((decomps, errors, counts));
     }
 
-    stats.weights = n;
-    stats.dedup_hits = n - stats.unique_pairs;
-    stats.unique_patterns = cache.registry.len();
-    stats.tables_built = cache.registry.tables_built();
-    stats.stage_counts = ALL_STAGES
-        .iter()
-        .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
-        .collect();
-    stats.wall_secs = timer.secs();
-    CompiledTensor { cfg: opts.cfg, decomps, errors, stats }
+    let wall = timer.secs();
+    let total_weights: usize = jobs.iter().map(|j| j.weights.len()).sum();
+    let total_solve: f64 = solve_secs.iter().sum();
+    let overhead = (wall - total_solve).max(0.0);
+    let mut results = Vec::with_capacity(jobs.len());
+    for (ti, (decomps, errors, counts)) in scattered.into_iter().enumerate() {
+        let mut stats = std::mem::take(&mut per_tensor[ti]);
+        let n = decomps.len();
+        stats.weights = n;
+        stats.unique_pairs = fresh_ranges[ti].len();
+        stats.dedup_hits = n - stats.unique_pairs;
+        stats.unique_patterns = cache.registry.len();
+        stats.tables_built = cache.registry.tables_built();
+        stats.stage_counts = ALL_STAGES
+            .iter()
+            .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
+            .collect();
+        stats.wall_secs = if total_weights == 0 {
+            0.0
+        } else {
+            solve_secs[ti] + overhead * n as f64 / total_weights as f64
+        };
+        results.push(CompiledTensor { cfg: opts.cfg, decomps, errors, stats });
+    }
+    results
 }
 
 /// Legacy per-weight compilation: contiguous ranges across threads with
 /// thread-local memoization. Kept as the equivalence baseline for the
 /// pattern-class core (`CompileOptions::dedupe = false`).
-fn compile_tensor_per_weight(
+pub(crate) fn compile_tensor_per_weight(
     weights: &[i64],
     faults: &[GroupFaults],
     opts: &CompileOptions,
@@ -402,25 +497,18 @@ fn compile_range(
 /// On the pattern-class path all tensors share one chip-wide [`SolveCache`]
 /// — a (pattern, weight) pair recurring across layers is solved exactly
 /// once for the whole model.
+///
+/// Deprecated entry point, kept as a shim for one release: it builds a
+/// throwaway [`CompileSession`] internally, so the chip-wide cache dies
+/// with the call. Prefer `CompileSession::builder(cfg)…chip(chip)` — the
+/// session keeps the cache alive across model revisions and can persist
+/// it (`save`/`load`) for warm-start recompiles.
 pub fn compile_model(
     tensors: &[(String, Vec<i64>)],
     chip: &ChipFaults,
     opts: &CompileOptions,
 ) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
-    let sizes: Vec<usize> = tensors.iter().map(|(_, ws)| ws.len()).collect();
-    let all_faults = chip.sample_model(&sizes, opts.cfg.cells());
-    let mut cache = opts.dedupe.then(|| SolveCache::new(opts.cfg));
-    tensors
-        .iter()
-        .zip(all_faults)
-        .map(|((name, ws), faults)| {
-            let compiled = match cache.as_mut() {
-                Some(c) => compile_tensor_with_cache(ws, &faults, opts, c),
-                None => compile_tensor(ws, &faults, opts),
-            };
-            (name.clone(), compiled, faults)
-        })
-        .collect()
+    CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip).compile_model(tensors)
 }
 
 #[cfg(test)]

@@ -1,17 +1,23 @@
 //! L3 coordinator: the paper's compilation pipeline (§V, Fig 7), the
-//! pattern-class registry that dedupes it, and the per-chip/per-model
-//! compilation driver around both.
+//! pattern-class registry that dedupes it, the chip-scoped
+//! [`CompileSession`] API (with persistent warm-start) wrapped around
+//! both, and the multi-chip [`CompileService`] batching front-end.
 
 pub mod classes;
 pub mod compiler;
 pub mod pipeline;
+pub mod service;
+pub mod session;
 
 pub use classes::{PatternCtx, PatternId, PatternRegistry, SolveCache};
 pub use compiler::{
-    compile_model, compile_tensor, compile_tensor_with_cache, CompileOptions, CompileStats,
-    CompiledTensor,
+    compile_batch_with_cache, compile_model, compile_tensor, compile_tensor_with_cache,
+    CompileOptions, CompileStats, CompiledTensor, TensorJob,
 };
 pub use pipeline::{decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage};
+pub use service::{CompileService, JobResult, ServiceOptions};
+pub use session::{CompileSession, SessionBuilder};
 
-/// Convenience alias: the full compiler entry point.
+/// Convenience alias kept for source compatibility; new code should build
+/// a [`CompileSession`] instead of carrying bare options around.
 pub type Compiler = compiler::CompileOptions;

@@ -1,0 +1,300 @@
+//! `CompileService` — a batched compile front-end over many chips.
+//!
+//! A deployment fleet compiles the same (or revised) models for many
+//! physical chips, each with its own fault pattern. The service queues
+//! jobs from any number of chips behind a single
+//! [`CompileService::enqueue`]/[`CompileService::run`] API, keeps **one
+//! warm [`CompileSession`] per chip seed**, and shards chips across the
+//! existing work-stealing pool on `run` — each chip's jobs drain through
+//! its session as one batch (single solve fan-out over the union of fresh
+//! pairs), and chips run concurrently.
+//!
+//! With a `cache_dir` configured, sessions are loaded from / saved to
+//! per-chip cache files around every `run`, so a service restarted on the
+//! same fleet starts warm: recompiling an unchanged model performs zero
+//! fresh solves. Cache files whose key (chip seed, fault rates, grouping
+//! config, pipeline fingerprint) does not match the service configuration
+//! are ignored and rebuilt, never silently reused.
+//!
+//! Results are byte-deterministic: job results come back in enqueue
+//! order, and neither the thread count nor the chip sharding changes a
+//! single output byte (per-chip slot order is fixed by enqueue order).
+
+use super::compiler::{CompileOptions, CompiledTensor};
+use super::session::CompileSession;
+use crate::fault::bank::ChipFaults;
+use crate::fault::FaultRates;
+use crate::util::pool::parallel_work_steal;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Service configuration: compile options shared by every chip (threads =
+/// total worker budget across chips), the fleet's fault rates, and an
+/// optional directory for persistent per-chip session caches.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    pub opts: CompileOptions,
+    pub rates: FaultRates,
+    pub cache_dir: Option<PathBuf>,
+}
+
+struct QueuedJob {
+    job_id: u64,
+    chip_seed: u64,
+    name: String,
+    weights: Vec<i64>,
+}
+
+/// One compiled job, tagged with its identity.
+pub struct JobResult {
+    pub job_id: u64,
+    pub chip_seed: u64,
+    pub name: String,
+    pub tensor: CompiledTensor,
+}
+
+/// Multi-chip batching compile service. See the module docs.
+pub struct CompileService {
+    sopts: ServiceOptions,
+    sessions: BTreeMap<u64, CompileSession>,
+    queue: Vec<QueuedJob>,
+    next_job: u64,
+    persist_errors: Vec<String>,
+}
+
+impl CompileService {
+    pub fn new(sopts: ServiceOptions) -> CompileService {
+        CompileService {
+            sopts,
+            sessions: BTreeMap::new(),
+            queue: Vec::new(),
+            next_job: 0,
+            persist_errors: Vec::new(),
+        }
+    }
+
+    /// Queue one named tensor for `chip_seed`; returns the job id its
+    /// [`JobResult`] will carry. The name keys the tensor's chip region
+    /// (see [`CompileSession::tensor_id_of`]), so re-enqueueing the same
+    /// name on a warm chip is pure cache hits.
+    pub fn enqueue(&mut self, chip_seed: u64, name: &str, weights: Vec<i64>) -> u64 {
+        let job_id = self.next_job;
+        self.next_job += 1;
+        self.queue.push(QueuedJob { job_id, chip_seed, name: name.to_string(), weights });
+        job_id
+    }
+
+    /// Jobs queued and not yet run.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The warm session of one chip, if it exists yet.
+    pub fn session(&self, chip_seed: u64) -> Option<&CompileSession> {
+        self.sessions.get(&chip_seed)
+    }
+
+    /// Warm sessions currently held, keyed by chip seed.
+    pub fn sessions(&self) -> impl Iterator<Item = (&u64, &CompileSession)> {
+        self.sessions.iter()
+    }
+
+    /// Cache file of one chip under `dir`, keyed by the full session cache
+    /// key — chip seed, grouping config, method, plus a fingerprint of the
+    /// fault rates and remaining pipeline tunables — so differently
+    /// configured services over one directory never clobber each other's
+    /// warm state.
+    fn cache_path(dir: &Path, opts: &CompileOptions, rates: &FaultRates, chip_seed: u64) -> PathBuf {
+        let mut key = Vec::with_capacity(26);
+        key.extend_from_slice(&rates.p_sa0.to_bits().to_le_bytes());
+        key.extend_from_slice(&rates.p_sa1.to_bits().to_le_bytes());
+        key.extend_from_slice(&opts.pipeline.table_value_limit.to_le_bytes());
+        key.push(opts.pipeline.sparsest as u8);
+        key.push(opts.cfg.levels);
+        let fingerprint = crate::util::prop::fnv1a(&key);
+        let name = format!(
+            "chip-{chip_seed}-{}-{:?}-{fingerprint:016x}.rcs",
+            opts.cfg.name(),
+            opts.pipeline.method
+        );
+        dir.join(name.to_ascii_lowercase())
+    }
+
+    /// A session for `chip_seed`: warm from the in-memory map, else warm
+    /// from the cache dir (if the stored key matches), else cold.
+    fn obtain_session(&mut self, chip_seed: u64) -> CompileSession {
+        if let Some(s) = self.sessions.remove(&chip_seed) {
+            return s;
+        }
+        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
+        if let Some(dir) = &self.sopts.cache_dir {
+            let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
+            if let Ok(mut s) = CompileSession::load(&path) {
+                if s.matches(&chip, &self.sopts.opts) {
+                    s.set_time_stages(self.sopts.opts.time_stages);
+                    return s;
+                }
+            }
+        }
+        CompileSession::builder(self.sopts.opts.cfg)
+            .options(self.sopts.opts.clone())
+            .chip(&chip)
+    }
+
+    /// Compile every queued job. Jobs are grouped per chip (one warm
+    /// session per chip seed), chips are sharded across the work-stealing
+    /// pool, and each chip's jobs drain as one batch. Results come back
+    /// in enqueue order; outputs are independent of thread count and
+    /// sharding. With a `cache_dir`, every touched session is persisted
+    /// after the batch.
+    pub fn run(&mut self) -> Result<Vec<JobResult>> {
+        let queue = std::mem::take(&mut self.queue);
+        if queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Group jobs by chip, chips ordered by first appearance.
+        let mut order: Vec<u64> = Vec::new();
+        let mut by_chip: BTreeMap<u64, Vec<QueuedJob>> = BTreeMap::new();
+        for job in queue {
+            if !by_chip.contains_key(&job.chip_seed) {
+                order.push(job.chip_seed);
+            }
+            by_chip.entry(job.chip_seed).or_default().push(job);
+        }
+        let n_chips = order.len();
+        let total_threads = self.sopts.opts.threads.max(1);
+        let outer = total_threads.min(n_chips);
+        let inner = (total_threads / outer).max(1);
+
+        // Move each chip's session + jobs into a cell the pool can claim;
+        // every cell is taken by exactly one worker.
+        let mut cells: Vec<Mutex<Option<(u64, CompileSession, Vec<QueuedJob>)>>> =
+            Vec::with_capacity(n_chips);
+        for seed in &order {
+            let mut session = self.obtain_session(*seed);
+            session.set_threads(inner);
+            cells.push(Mutex::new(Some((*seed, session, by_chip.remove(seed).unwrap()))));
+        }
+        let done: Vec<(u64, CompileSession, Vec<JobResult>)> =
+            parallel_work_steal(n_chips, outer, 1, |i| {
+                let (seed, mut session, jobs) = cells[i]
+                    .lock()
+                    .expect("service cell lock poisoned")
+                    .take()
+                    .expect("each service cell is claimed once");
+                let mut metas = Vec::with_capacity(jobs.len());
+                for job in jobs {
+                    let QueuedJob { job_id, name, weights, .. } = job;
+                    session.submit(&name, weights);
+                    metas.push((job_id, name));
+                }
+                let compiled = session.drain();
+                let results = metas
+                    .into_iter()
+                    .zip(compiled)
+                    .map(|((job_id, name), (_, tensor))| JobResult {
+                        job_id,
+                        chip_seed: seed,
+                        name,
+                        tensor,
+                    })
+                    .collect();
+                (seed, session, results)
+            });
+
+        // Reinsert every session and assemble the results first, THEN
+        // persist best-effort: a full disk or unwritable cache dir must
+        // never throw away a batch of compiled results (the warm sessions
+        // stay in memory either way). Failures are reported via
+        // [`CompileService::persist_errors`]; legacy (`dedupe = false`)
+        // sessions have nothing to persist and are skipped silently.
+        let mut results: Vec<JobResult> = Vec::new();
+        self.persist_errors.clear();
+        for (seed, mut session, rs) in done {
+            session.set_threads(total_threads);
+            if let Some(dir) = &self.sopts.cache_dir {
+                if session.persistable() {
+                    let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, seed);
+                    if let Err(e) = session.save(&path) {
+                        self.persist_errors.push(format!("chip {seed}: {e:#}"));
+                    }
+                }
+            }
+            self.sessions.insert(seed, session);
+            results.extend(rs);
+        }
+        results.sort_by_key(|r| r.job_id);
+        Ok(results)
+    }
+
+    /// Cache files the latest [`CompileService::run`] failed to write
+    /// (empty on a clean run). Warm state is still held in memory, so a
+    /// later `run` retries persisting automatically.
+    pub fn persist_errors(&self) -> &[String] {
+        &self.persist_errors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+    use crate::grouping::GroupConfig;
+    use crate::util::prng::Rng;
+
+    fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.range_i64(-max, max)).collect()
+    }
+
+    #[test]
+    fn service_results_in_enqueue_order_and_match_sessions() {
+        let cfg = GroupConfig::R2C2;
+        let mut opts = CompileOptions::new(cfg, Method::Complete);
+        opts.threads = 4;
+        let mut service = CompileService::new(ServiceOptions {
+            opts: opts.clone(),
+            rates: FaultRates::paper_default(),
+            cache_dir: None,
+        });
+        let w0 = random_weights(1_500, cfg.max_per_array(), 1);
+        let w1 = random_weights(900, cfg.max_per_array(), 2);
+        // Interleaved enqueue across two chips.
+        let j0 = service.enqueue(7, "a", w0.clone());
+        let j1 = service.enqueue(8, "a", w0.clone());
+        let j2 = service.enqueue(7, "b", w1.clone());
+        assert_eq!(service.pending(), 3);
+        let results = service.run().unwrap();
+        assert_eq!(service.pending(), 0);
+        assert_eq!(
+            results.iter().map(|r| r.job_id).collect::<Vec<_>>(),
+            vec![j0, j1, j2]
+        );
+        // Each result equals a standalone per-chip session compile.
+        for r in &results {
+            let chip = ChipFaults::new(r.chip_seed, FaultRates::paper_default());
+            let mut solo = CompileSession::builder(cfg).chip(&chip);
+            // Replay this chip's jobs in order up to r.
+            for pre in results.iter().filter(|p| p.chip_seed == r.chip_seed) {
+                let ws = if pre.name == "a" { &w0 } else { &w1 };
+                let out = solo.compile_tensor(&pre.name, ws);
+                if pre.job_id == r.job_id {
+                    assert_eq!(out.decomps, r.tensor.decomps);
+                    assert_eq!(out.errors, r.tensor.errors);
+                    break;
+                }
+            }
+        }
+        // Warm sessions are retained: re-running the same jobs solves nothing.
+        service.enqueue(7, "a", w0.clone());
+        service.enqueue(8, "a", w0);
+        service.enqueue(7, "b", w1);
+        let warm = service.run().unwrap();
+        assert!(warm.iter().all(|r| r.tensor.stats.unique_pairs == 0));
+        for (a, b) in results.iter().zip(&warm) {
+            assert_eq!(a.tensor.decomps, b.tensor.decomps);
+        }
+    }
+}

@@ -1,0 +1,686 @@
+//! `CompileSession` — the chip-scoped compiler API.
+//!
+//! A physical chip has one fixed SAF pattern, and compilation is a
+//! *recurring* per-chip operation: every model revision deployed to the
+//! chip is recompiled against the same fault maps. The session is the
+//! object that makes this cheap. It owns the chip identity
+//! ([`ChipFaults`]), the compile options, and the chip-wide pattern-class
+//! state ([`SolveCache`]: interned fault patterns + solved (pattern,
+//! weight) pairs), so every tensor compiled through it reuses everything
+//! solved before — within a tensor, across tensors, and (via
+//! [`CompileSession::save`]/[`CompileSession::load`]) across process
+//! lifetimes.
+//!
+//! ```text
+//! let chip = ChipFaults::new(seed, FaultRates::paper_default());
+//! let mut session = CompileSession::builder(GroupConfig::R2C2)
+//!     .method(Method::Complete)
+//!     .threads(8)
+//!     .chip(&chip);
+//! let compiled = session.compile_tensor("conv1", &weights); // cold
+//! session.save(path)?;                                      // persist
+//! // …later, possibly another process, same chip…
+//! let mut warm = CompileSession::load(path)?;
+//! let again = warm.compile_tensor("conv1", &weights);       // zero solves
+//! ```
+//!
+//! ## Migration from the free-function API
+//!
+//! | old entry point                              | session method            |
+//! |----------------------------------------------|---------------------------|
+//! | `compile_tensor(ws, faults, opts)`           | `session.compile_with_faults(ws, faults)` |
+//! | `compile_tensor_with_cache(ws, f, opts, c)`  | same — the session owns the cache |
+//! | `compile_model(tensors, chip, opts)`         | `session.compile_model(tensors)` |
+//! | `nn::ChipCompiler::new(chip, opts)`          | unchanged (thin adapter over a session) |
+//!
+//! The free functions remain as deprecated-documented one-shot shims for
+//! one release; they route through a stack-local session and cache
+//! nothing past the call.
+//!
+//! ## Tensor identity
+//!
+//! A tensor's chip region (and therefore its fault maps) is keyed by a
+//! `tensor_id`. [`CompileSession::compile_tensor`] derives it from the
+//! tensor *name* (FNV-1a), so recompiling `"conv1"` in any later session
+//! of the same chip hits the same fault maps — that is what makes
+//! warm-start recompiles exact. [`CompileSession::compile_model`] uses
+//! sequential ids `0..n` (the historical `compile_model` protocol), and
+//! [`CompileSession::compile_tensor_at`] takes an explicit id.
+//!
+//! ## Persistence format
+//!
+//! `save` writes a versioned little-endian binary: magic/version header,
+//! the cache key (chip seed + fault rates, [`GroupConfig`], pipeline
+//! fingerprint = method + table limit + sparsest), the interned patterns
+//! in id order, the solved pairs in slot order with their outcomes, and a
+//! trailing FNV-1a checksum over everything before it. `load` verifies
+//! the checksum before parsing and rejects truncated, corrupted,
+//! version-mismatched, or internally inconsistent files with an error —
+//! never a silently wrong cache.
+
+use super::classes::SolveCache;
+use super::compiler::{
+    compile_batch_with_cache, compile_tensor_per_weight, compile_tensor_with_cache,
+    CompileOptions, CompileStats, CompiledTensor, TensorJob,
+};
+use super::pipeline::{Method, Outcome, PipelineOptions, Stage};
+use crate::fault::bank::ChipFaults;
+use crate::fault::{FaultRates, FaultState, GroupFaults};
+use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::util::prop::fnv1a;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Magic marker of the session cache format ("RCSS").
+pub const SESSION_MAGIC: u32 = 0x5243_5353;
+/// Current session cache format version.
+pub const SESSION_VERSION: u32 = 1;
+
+/// A tensor queued via [`CompileSession::submit`], compiled on
+/// [`CompileSession::drain`].
+struct QueuedTensor {
+    name: String,
+    tensor_id: u64,
+    weights: Vec<i64>,
+}
+
+/// Chip-scoped compiler session: one per (chip, grouping config,
+/// pipeline). See the module docs for the full story.
+pub struct CompileSession {
+    opts: CompileOptions,
+    /// `None` for detached sessions (explicit fault maps only).
+    chip: Option<ChipFaults>,
+    /// `None` on the legacy per-weight path (`dedupe = false`).
+    cache: Option<SolveCache>,
+    stats: CompileStats,
+    tensors: usize,
+    queue: Vec<QueuedTensor>,
+}
+
+/// Builder for [`CompileSession`] — finish with
+/// [`SessionBuilder::chip`] (chip-scoped) or [`SessionBuilder::detached`]
+/// (explicit fault maps only).
+pub struct SessionBuilder {
+    opts: CompileOptions,
+}
+
+impl SessionBuilder {
+    /// Decomposition method (default [`Method::Complete`]).
+    pub fn method(mut self, m: Method) -> SessionBuilder {
+        self.opts.pipeline.method = m;
+        self
+    }
+
+    /// Worker threads for the solve fan-out (default 1, the paper's
+    /// single-thread protocol). Thread count never changes results.
+    pub fn threads(mut self, t: usize) -> SessionBuilder {
+        self.opts.threads = t.max(1);
+        self
+    }
+
+    /// Full pipeline tunables (method, table limit, sparsest mode).
+    pub fn pipeline(mut self, p: PipelineOptions) -> SessionBuilder {
+        self.opts.pipeline = p;
+        self
+    }
+
+    /// Toggle the dedupe-first pattern-class core (default on). Off
+    /// selects the legacy per-weight path — no cache, no persistence.
+    pub fn dedupe(mut self, on: bool) -> SessionBuilder {
+        self.opts.dedupe = on;
+        self
+    }
+
+    /// Charge wall time to per-stage buckets (default on; see
+    /// [`CompileOptions::time_stages`]).
+    pub fn time_stages(mut self, on: bool) -> SessionBuilder {
+        self.opts.time_stages = on;
+        self
+    }
+
+    /// Replace the options wholesale (migration helper for callers that
+    /// already carry a [`CompileOptions`]).
+    pub fn options(mut self, opts: CompileOptions) -> SessionBuilder {
+        self.opts = opts;
+        self
+    }
+
+    /// Bind the session to a chip: tensors compiled by name/id sample
+    /// their fault maps from this chip's fault universe.
+    pub fn chip(self, chip: &ChipFaults) -> CompileSession {
+        CompileSession::from_opts(self.opts, Some(chip.clone()))
+    }
+
+    /// A session without a chip binding — only
+    /// [`CompileSession::compile_with_faults`] works; `save` is refused
+    /// (there is no chip identity to key the cache by).
+    pub fn detached(self) -> CompileSession {
+        CompileSession::from_opts(self.opts, None)
+    }
+}
+
+impl CompileSession {
+    /// Start building a session for one grouping configuration.
+    pub fn builder(cfg: GroupConfig) -> SessionBuilder {
+        SessionBuilder { opts: CompileOptions::new(cfg, Method::Complete) }
+    }
+
+    fn from_opts(opts: CompileOptions, chip: Option<ChipFaults>) -> CompileSession {
+        let cache = opts.dedupe.then(|| SolveCache::new(opts.cfg));
+        CompileSession {
+            opts,
+            chip,
+            cache,
+            stats: CompileStats::default(),
+            tensors: 0,
+            queue: Vec::new(),
+        }
+    }
+
+    /// Stack-local session for the deprecated one-shot shims: detached,
+    /// nothing outlives the call, no extra allocation beyond the cache the
+    /// one-shot path needs anyway.
+    pub(crate) fn one_shot(opts: &CompileOptions) -> CompileSession {
+        CompileSession::from_opts(opts.clone(), None)
+    }
+
+    /// The chip this session compiles for (`None` when detached).
+    pub fn chip(&self) -> Option<&ChipFaults> {
+        self.chip.as_ref()
+    }
+
+    pub fn options(&self) -> &CompileOptions {
+        &self.opts
+    }
+
+    /// Statistics accumulated over every compilation in this session
+    /// (wall time summed across compiles — `merge_with_wall` semantics).
+    pub fn stats(&self) -> &CompileStats {
+        &self.stats
+    }
+
+    /// Tensors compiled so far (including drained batches).
+    pub fn tensors_compiled(&self) -> usize {
+        self.tensors
+    }
+
+    /// Unique (pattern, weight) pairs solved through this session's cache.
+    pub fn solved_pairs(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.solved_pairs())
+    }
+
+    /// Distinct fault-pattern classes interned so far.
+    pub fn pattern_classes(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.registry.len())
+    }
+
+    /// Adjust worker threads (never changes results, only wall clock).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.opts.threads = threads.max(1);
+    }
+
+    /// Toggle per-stage wall-time accounting.
+    pub fn set_time_stages(&mut self, on: bool) {
+        self.opts.time_stages = on;
+    }
+
+    /// Whether this session's cache key matches (chip seed + rates,
+    /// grouping config, pipeline fingerprint, dedupe mode). Used to
+    /// validate loaded caches before reusing them — a legacy
+    /// (`dedupe = false`) configuration must never adopt a pattern-class
+    /// cache, or baseline timings would silently run warm.
+    pub fn matches(&self, chip: &ChipFaults, opts: &CompileOptions) -> bool {
+        match &self.chip {
+            Some(c) => {
+                c.chip_seed == chip.chip_seed
+                    && c.rates == chip.rates
+                    && self.opts.cfg == opts.cfg
+                    && self.opts.pipeline == opts.pipeline
+                    && self.opts.dedupe == opts.dedupe
+            }
+            None => false,
+        }
+    }
+
+    /// Whether this session carries a persistable cache (a chip identity
+    /// plus the pattern-class cache; legacy `dedupe = false` sessions and
+    /// detached sessions have nothing to save).
+    pub fn persistable(&self) -> bool {
+        self.chip.is_some() && self.cache.is_some() && self.opts.cfg.cells() <= 16
+    }
+
+    /// Deterministic tensor id of a named tensor — FNV-1a of the name, so
+    /// the same name addresses the same chip region in every session.
+    pub fn tensor_id_of(name: &str) -> u64 {
+        fnv1a(name.as_bytes())
+    }
+
+    /// Fault maps of tensor `tensor_id` on this session's chip.
+    ///
+    /// Panics on a detached session (no chip to sample from).
+    pub fn sample_faults(&self, tensor_id: u64, n_groups: usize) -> Vec<GroupFaults> {
+        let chip = self.chip.as_ref().expect("detached session has no chip to sample faults");
+        chip.sample_tensor(tensor_id, n_groups, self.opts.cfg.cells())
+    }
+
+    /// Compile one tensor against caller-supplied fault maps. This is the
+    /// core every other compile method funnels into; it is also the
+    /// migration target of the old `compile_tensor` /
+    /// `compile_tensor_with_cache` free functions.
+    pub fn compile_with_faults(
+        &mut self,
+        weights: &[i64],
+        faults: &[GroupFaults],
+    ) -> CompiledTensor {
+        let out = match self.cache.as_mut() {
+            Some(cache) => compile_tensor_with_cache(weights, faults, &self.opts, cache),
+            None => compile_tensor_per_weight(weights, faults, &self.opts),
+        };
+        self.stats.merge_with_wall(&out.stats);
+        self.tensors += 1;
+        out
+    }
+
+    /// Compile a named tensor: the name keys the chip region (see
+    /// [`CompileSession::tensor_id_of`]), so recompiling the same name in
+    /// a warm session reuses every previously solved pair.
+    pub fn compile_tensor(&mut self, name: &str, weights: &[i64]) -> CompiledTensor {
+        self.compile_tensor_at(Self::tensor_id_of(name), weights)
+    }
+
+    /// Compile a tensor at an explicit chip tensor id.
+    pub fn compile_tensor_at(&mut self, tensor_id: u64, weights: &[i64]) -> CompiledTensor {
+        let faults = self.sample_faults(tensor_id, weights.len());
+        self.compile_with_faults(weights, &faults)
+    }
+
+    /// Compile a whole model; tensor `i` occupies chip region `i` (the
+    /// historical `compile_model` protocol, so results are byte-identical
+    /// to it). Returns `(name, compiled, fault maps)` in input order.
+    pub fn compile_model(
+        &mut self,
+        tensors: &[(String, Vec<i64>)],
+    ) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
+        tensors
+            .iter()
+            .enumerate()
+            .map(|(i, (name, ws))| {
+                let faults = self.sample_faults(i as u64, ws.len());
+                let compiled = self.compile_with_faults(ws, &faults);
+                (name.clone(), compiled, faults)
+            })
+            .collect()
+    }
+
+    /// Queue a named tensor for the next [`CompileSession::drain`].
+    pub fn submit(&mut self, name: &str, weights: Vec<i64>) {
+        self.queue.push(QueuedTensor {
+            tensor_id: Self::tensor_id_of(name),
+            name: name.to_string(),
+            weights,
+        });
+    }
+
+    /// Tensors queued and not yet drained.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Compile every queued tensor in submit order as **one batch**: one
+    /// scan/dedupe pass per tensor against the shared cache, then a single
+    /// work-stealing solve over the union of fresh pairs, then per-tensor
+    /// scatter. Results are byte-identical to compiling the tensors one at
+    /// a time in the same order — batching only widens the solve phase.
+    pub fn drain(&mut self) -> Vec<(String, CompiledTensor)> {
+        let queue = std::mem::take(&mut self.queue);
+        if queue.is_empty() {
+            return Vec::new();
+        }
+        let cells = self.opts.cfg.cells();
+        let chip = self.chip.as_ref().expect("detached session cannot drain (no chip)");
+        let all_faults: Vec<Vec<GroupFaults>> = queue
+            .iter()
+            .map(|q| chip.sample_tensor(q.tensor_id, q.weights.len(), cells))
+            .collect();
+        let results = match self.cache.as_mut() {
+            Some(cache) => {
+                let jobs: Vec<TensorJob<'_>> = queue
+                    .iter()
+                    .zip(&all_faults)
+                    .map(|(q, f)| TensorJob { weights: &q.weights, faults: f })
+                    .collect();
+                compile_batch_with_cache(&jobs, &self.opts, cache)
+            }
+            None => queue
+                .iter()
+                .zip(&all_faults)
+                .map(|(q, f)| compile_tensor_per_weight(&q.weights, f, &self.opts))
+                .collect(),
+        };
+        for t in &results {
+            self.stats.merge_with_wall(&t.stats);
+        }
+        self.tensors += results.len();
+        queue.into_iter().zip(results).map(|(q, t)| (q.name, t)).collect()
+    }
+
+    // ---- persistence ----------------------------------------------------
+
+    /// Serialize the session's warm state (interned patterns + solved
+    /// pairs, keyed by chip seed, grouping config, and pipeline
+    /// fingerprint) to a versioned, checksummed binary file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("write session cache {}", path.display()))
+    }
+
+    /// Serialize to the session cache format (see module docs).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let chip = self
+            .chip
+            .as_ref()
+            .ok_or_else(|| anyhow!("detached session has no chip identity to persist"))?;
+        let cache = self
+            .cache
+            .as_ref()
+            .ok_or_else(|| anyhow!("legacy (dedupe = off) session has no cache to persist"))?;
+        let cells = self.opts.cfg.cells();
+        // Mirror of the load-side bound: `pattern_key` interning supports
+        // at most 16 cells per array (2 arrays × 2 bits each in a u64), so
+        // refuse to write a file the reader would reject.
+        if cells == 0 || cells > 16 {
+            bail!("config {} has {cells} cells per array; the session cache supports at most 16", self.opts.cfg);
+        }
+        let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let pairs = cache.pairs();
+
+        let mut buf: Vec<u8> =
+            Vec::with_capacity(64 + cache.registry.len() * 2 * cells + pairs.len() * (21 + 2 * cells));
+        push_u32(&mut buf, SESSION_MAGIC);
+        push_u32(&mut buf, SESSION_VERSION);
+        push_u64(&mut buf, chip.chip_seed);
+        push_u64(&mut buf, chip.rates.p_sa0.to_bits());
+        push_u64(&mut buf, chip.rates.p_sa1.to_bits());
+        push_u32(&mut buf, self.opts.cfg.rows as u32);
+        push_u32(&mut buf, self.opts.cfg.cols as u32);
+        push_u32(&mut buf, self.opts.cfg.levels as u32);
+        buf.push(pipeline.method.code());
+        buf.push(pipeline.sparsest as u8);
+        push_i64(&mut buf, pipeline.table_value_limit);
+        push_u32(&mut buf, cells as u32);
+        push_u32(&mut buf, cache.registry.len() as u32);
+        push_u32(&mut buf, pairs.len() as u32);
+        for pat in cache.registry.patterns() {
+            for f in pat.pos.iter().chain(&pat.neg) {
+                buf.push(*f as u8);
+            }
+        }
+        for (slot, &(pid, w)) in pairs.iter().enumerate() {
+            let out = cache.outcome(slot as u32);
+            push_u32(&mut buf, pid);
+            push_i64(&mut buf, w);
+            push_i64(&mut buf, out.error);
+            buf.push(out.stage.code());
+            buf.extend_from_slice(&out.decomposition.pos.cells);
+            buf.extend_from_slice(&out.decomposition.neg.cells);
+        }
+        let sum = fnv1a(&buf);
+        push_u64(&mut buf, sum);
+        Ok(buf)
+    }
+
+    /// Load a previously saved session. The rehydrated session starts
+    /// warm: every (pattern, weight) pair solved before saving is a cache
+    /// hit. Threads default to 1 — tune with
+    /// [`CompileSession::set_threads`] (thread count never changes
+    /// results).
+    pub fn load(path: &Path) -> Result<CompileSession> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read session cache {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parse session cache {}", path.display()))
+    }
+
+    /// Parse the session cache format, verifying the trailing checksum
+    /// first and rejecting any malformed input with an error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<CompileSession> {
+        if bytes.len() < 16 {
+            bail!("truncated session cache ({} bytes)", bytes.len());
+        }
+        let (payload, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        if fnv1a(payload) != stored {
+            bail!("session cache checksum mismatch (corrupted or truncated file)");
+        }
+        let mut r = Reader::new(payload);
+        let magic = r.u32()?;
+        if magic != SESSION_MAGIC {
+            bail!("bad session cache magic {magic:#010x}");
+        }
+        let version = r.u32()?;
+        if version != SESSION_VERSION {
+            bail!("unsupported session cache version {version} (this build reads {SESSION_VERSION})");
+        }
+        let chip_seed = r.u64()?;
+        let p_sa0 = f64::from_bits(r.u64()?);
+        let p_sa1 = f64::from_bits(r.u64()?);
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let levels = r.u32()?;
+        if rows == 0 || cols == 0 || !(2..=255).contains(&levels) {
+            bail!("bad grouping config R{rows}C{cols}@{levels} in session cache");
+        }
+        let cfg = GroupConfig::new(rows, cols, levels as u8);
+        let method = Method::from_code(r.u8()?)
+            .ok_or_else(|| anyhow!("bad method code in session cache"))?;
+        let sparsest = r.u8()? != 0;
+        let table_value_limit = r.i64()?;
+        let pipeline = PipelineOptions { method, table_value_limit, sparsest };
+        let cells = r.u32()? as usize;
+        if cells != cfg.cells() || cells == 0 || cells > 16 {
+            bail!("cell count {cells} disagrees with config {cfg}");
+        }
+        let n_patterns = r.u32()? as usize;
+        let n_pairs = r.u32()? as usize;
+        let expected =
+            n_patterns as u64 * (2 * cells) as u64 + n_pairs as u64 * (21 + 2 * cells) as u64;
+        if r.remaining() as u64 != expected {
+            bail!(
+                "session cache payload size mismatch ({} bytes left, {expected} expected)",
+                r.remaining()
+            );
+        }
+        let mut patterns = Vec::with_capacity(n_patterns);
+        for _ in 0..n_patterns {
+            let pos = r.fault_states(cells)?;
+            let neg = r.fault_states(cells)?;
+            patterns.push(GroupFaults { pos, neg });
+        }
+        let mut pairs = Vec::with_capacity(n_pairs);
+        let mut outcomes = Vec::with_capacity(n_pairs);
+        for _ in 0..n_pairs {
+            let pid = r.u32()?;
+            if pid as usize >= n_patterns {
+                bail!("pattern id {pid} out of range ({n_patterns} patterns)");
+            }
+            let w = r.i64()?;
+            let error = r.i64()?;
+            let stage = Stage::from_code(r.u8()?)
+                .ok_or_else(|| anyhow!("bad stage code in session cache"))?;
+            let pos = Bitmap { cells: r.bytes(cells)?.to_vec() };
+            let neg = Bitmap { cells: r.bytes(cells)?.to_vec() };
+            if pos.cells.iter().chain(&neg.cells).any(|&v| v as u32 >= levels) {
+                bail!("cell value exceeds {levels} levels in session cache");
+            }
+            pairs.push((pid, w));
+            outcomes.push(Outcome { decomposition: Decomposition { pos, neg }, error, stage });
+        }
+        let cache = SolveCache::from_parts(cfg, &patterns, pairs, outcomes, Some(pipeline))
+            .ok_or_else(|| {
+                anyhow!("inconsistent session cache (duplicate patterns or solved pairs)")
+            })?;
+        let chip = ChipFaults::new(chip_seed, FaultRates { p_sa0, p_sa1 });
+        let mut opts = CompileOptions::new(cfg, method);
+        opts.pipeline = pipeline;
+        Ok(CompileSession {
+            opts,
+            chip: Some(chip),
+            cache: Some(cache),
+            stats: CompileStats::default(),
+            tensors: 0,
+            queue: Vec::new(),
+        })
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn push_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over the cache payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated session cache");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn fault_states(&mut self, n: usize) -> Result<Vec<FaultState>> {
+        self.bytes(n)?
+            .iter()
+            .map(|&b| FaultState::from_u8(b).ok_or_else(|| anyhow!("bad fault state byte {b}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.range_i64(-max, max)).collect()
+    }
+
+    #[test]
+    fn session_equals_one_shot_compiles() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(5, FaultRates::paper_default());
+        let ws = random_weights(2_000, cfg.max_per_array(), 3);
+        let mut session = CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
+        let a = session.compile_tensor_at(0, &ws);
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let b = super::super::compiler::compile_tensor(
+            &ws,
+            &faults,
+            &CompileOptions::new(cfg, Method::Complete),
+        );
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(session.tensors_compiled(), 1);
+        assert_eq!(session.stats().weights, ws.len());
+    }
+
+    #[test]
+    fn named_tensors_are_region_stable() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(9, FaultRates::paper_default());
+        let ws = random_weights(1_200, cfg.max_per_array(), 8);
+        let mut s1 = CompileSession::builder(cfg).chip(&chip);
+        let a = s1.compile_tensor("conv1", &ws);
+        // A brand-new session of the same chip sees the same region.
+        let mut s2 = CompileSession::builder(cfg).chip(&chip);
+        let b = s2.compile_tensor("conv1", &ws);
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+        // Recompiling the same name in-session is pure cache hits.
+        let again = s1.compile_tensor("conv1", &ws);
+        assert_eq!(again.stats.unique_pairs, 0);
+        assert_eq!(again.stats.dedup_hits, ws.len());
+        assert_eq!(again.decomps, a.decomps);
+    }
+
+    #[test]
+    fn bytes_roundtrip_preserves_cache() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(21, FaultRates::paper_default());
+        let ws = random_weights(3_000, cfg.max_per_array(), 4);
+        let mut cold = CompileSession::builder(cfg).chip(&chip);
+        let first = cold.compile_tensor("t0", &ws);
+        let bytes = cold.to_bytes().unwrap();
+        let mut warm = CompileSession::from_bytes(&bytes).unwrap();
+        assert!(warm.matches(&chip, cold.options()));
+        assert_eq!(warm.solved_pairs(), cold.solved_pairs());
+        assert_eq!(warm.pattern_classes(), cold.pattern_classes());
+        let again = warm.compile_tensor("t0", &ws);
+        assert_eq!(again.stats.unique_pairs, 0, "warm recompile must not solve");
+        assert_eq!(again.decomps, first.decomps);
+        assert_eq!(again.errors, first.errors);
+    }
+
+    #[test]
+    fn detached_and_legacy_sessions_refuse_to_persist() {
+        let cfg = GroupConfig::R1C4;
+        let detached = CompileSession::builder(cfg).detached();
+        assert!(!detached.persistable());
+        assert!(detached.to_bytes().is_err());
+        let chip = ChipFaults::new(1, FaultRates::paper_default());
+        let legacy = CompileSession::builder(cfg).dedupe(false).chip(&chip);
+        assert!(!legacy.persistable());
+        assert!(legacy.to_bytes().is_err());
+        // A legacy session is also never mistaken for a warm pattern-class
+        // cache of the same chip.
+        let mut pattern_opts = CompileOptions::new(cfg, Method::Complete);
+        pattern_opts.dedupe = true;
+        assert!(!legacy.matches(&chip, &pattern_opts));
+        // Save/load symmetry: configs the cache format cannot represent
+        // (> 16 cells per array) are refused at save time, not at load.
+        let big = GroupConfig::new(4, 8, 4);
+        let wide = CompileSession::builder(big).chip(&chip);
+        assert!(!wide.persistable());
+        assert!(wide.to_bytes().is_err());
+    }
+}

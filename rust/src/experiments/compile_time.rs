@@ -10,13 +10,21 @@
 //! weight sample and extrapolated linearly to the full model — both the
 //! measured sample time and the extrapolation are reported. The complete
 //! pipeline is fast enough to run at full scale.
+//!
+//! For the dedupe-first path the linear extrapolation is *pessimistic*:
+//! solve time scales with unique (pattern, weight) pairs, which grow
+//! sublinearly in weights (the pair space saturates). `measure` therefore
+//! also fits a power law to the sample's unique-pair growth (a cheap
+//! scan-only pass) and reports a dedup-aware estimate next to the linear
+//! one in the `dedup_report` table.
 
 use super::Table;
 use crate::arrays::models::{by_name, total_params};
-use crate::coordinator::{compile_tensor, CompileOptions, Method};
+use crate::coordinator::{CompileOptions, CompileSession, Method, PatternId, PatternRegistry};
 use crate::fault::bank::ChipFaults;
-use crate::fault::FaultRates;
+use crate::fault::{FaultRates, GroupFaults};
 use crate::grouping::GroupConfig;
+use crate::util::fnv::FnvMap;
 use crate::util::prng::Rng;
 use crate::util::timer::{fmt_dur, Timer};
 use anyhow::{anyhow, Result};
@@ -38,6 +46,95 @@ pub fn synthetic_model_weights(model: &str, cfg: &GroupConfig, limit: usize) -> 
         .collect())
 }
 
+/// The same synthetic weights split into per-layer tensors `(name,
+/// weights)` — the shape `CompileSession::compile_model` and the batch
+/// service consume. Truncated at `limit` total weights (the final layer
+/// may be partial; layers past the limit are dropped).
+pub fn synthetic_model_tensors(
+    model: &str,
+    cfg: &GroupConfig,
+    limit: usize,
+) -> Result<Vec<(String, Vec<i64>)>> {
+    let layers = by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
+    let ws = synthetic_model_weights(model, cfg, limit)?;
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for layer in &layers {
+        if start >= ws.len() {
+            break;
+        }
+        let end = (start + layer.params()).min(ws.len());
+        out.push((layer.name.clone(), ws[start..end].to_vec()));
+        start = end;
+    }
+    Ok(out)
+}
+
+/// Unique (pattern, weight) pair counts at prefix checkpoints of one
+/// tensor — a scan-only pass (pattern interning + hashing, no solving)
+/// used to fit the sublinear pair-growth curve.
+pub fn pair_growth_checkpoints(
+    cfg: &GroupConfig,
+    weights: &[i64],
+    faults: &[GroupFaults],
+    points: usize,
+) -> Vec<(usize, usize)> {
+    debug_assert_eq!(weights.len(), faults.len());
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let points = points.clamp(1, n);
+    let mut marks: Vec<usize> = (1..=points).map(|i| n * i / points).collect();
+    marks.dedup();
+    let mut registry = PatternRegistry::new(*cfg);
+    let mut seen: FnvMap<(PatternId, i64), ()> = FnvMap::default();
+    let mut out = Vec::with_capacity(marks.len());
+    let mut mi = 0;
+    for i in 0..n {
+        let pid = registry.intern(&faults[i]);
+        seen.insert((pid, weights[i]), ());
+        if mi < marks.len() && i + 1 == marks[mi] {
+            out.push((i + 1, seen.len()));
+            mi += 1;
+        }
+    }
+    out
+}
+
+/// Least-squares power-law fit `pairs(n) ≈ a·n^b` on log-log axes.
+/// Returns `(a, b)`; degenerate inputs fall back to the linear model
+/// through the last point (`b = 1`).
+pub fn fit_power_law(points: &[(usize, usize)]) -> (f64, f64) {
+    let linear_fallback = |points: &[(usize, usize)]| match points.last() {
+        Some(&(n, p)) if n > 0 => (p as f64 / n as f64, 1.0),
+        _ => (1.0, 1.0),
+    };
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(n, p)| *n > 0 && *p > 0)
+        .map(|&(n, p)| ((n as f64).ln(), (p as f64).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return linear_fallback(points);
+    }
+    let m = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|(x, _)| x).sum();
+    let sy: f64 = pts.iter().map(|(_, y)| y).sum();
+    let sxx: f64 = pts.iter().map(|(x, _)| x * x).sum();
+    let sxy: f64 = pts.iter().map(|(x, y)| x * y).sum();
+    let denom = m * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return linear_fallback(points);
+    }
+    let b = (m * sxy - sx * sy) / denom;
+    let a = ((sy - b * sx) / m).exp();
+    if !a.is_finite() || !b.is_finite() {
+        return linear_fallback(points);
+    }
+    (a, b)
+}
+
 #[derive(Clone, Debug)]
 pub struct CompileTimeRow {
     pub method: Method,
@@ -48,6 +145,16 @@ pub struct CompileTimeRow {
     pub measured_secs: f64,
     /// Linear extrapolation to the full model.
     pub full_secs: f64,
+    /// Dedup-aware extrapolation: solve time scaled by the fitted
+    /// unique-pair growth (sublinear), scan/dedupe/scatter overhead
+    /// scaled linearly. Equals `full_secs` for non-dedupe rows and
+    /// `measured_secs` for full-scale runs.
+    pub full_secs_dedup: f64,
+    /// Unique pairs the power-law fit predicts at full model scale.
+    pub predicted_pairs_full: usize,
+    /// Fitted pair-growth exponent `b` in `pairs(n) ≈ a·n^b` (1.0 when
+    /// no fit ran).
+    pub pair_growth_exp: f64,
     /// Stage-bucket breakdown (cond / fawd / cvm / ff), seconds, measured.
     pub breakdown: Vec<(String, f64)>,
     /// Distinct fault-pattern classes seen in the sample.
@@ -79,7 +186,6 @@ pub fn measure(
     let total_weights = total_params(&layers);
     let ws = synthetic_model_weights(model, &cfg, sample)?;
     let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
-    let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
     let mut opts = CompileOptions::new(cfg, method);
     opts.threads = threads;
     // Baselines (FF, ILP-only, unprotected) reproduce the paper's
@@ -92,10 +198,37 @@ pub fn measure(
     if std::env::var("RCHG_TIME_STAGES").as_deref() == Ok("0") {
         opts.time_stages = false;
     }
+    let mut session = CompileSession::builder(cfg).options(opts.clone()).chip(&chip);
+    let faults = session.sample_faults(0, ws.len());
     let timer = Timer::start();
-    let out = compile_tensor(&ws, &faults, &opts);
+    let out = session.compile_with_faults(&ws, &faults);
     let measured = timer.secs();
     let full = measured * total_weights as f64 / ws.len() as f64;
+
+    // Dedup-aware extrapolation (complete pipeline only): solve time
+    // scales with unique pairs — fit their sublinear growth over the
+    // sample and project to full scale; the linear part (scan, dedupe,
+    // scatter) keeps scaling with weights.
+    let (full_secs_dedup, predicted_pairs_full, pair_growth_exp) = if !opts.dedupe
+        || out.stats.unique_pairs == 0
+    {
+        (full, out.stats.unique_pairs, 1.0)
+    } else if ws.len() >= total_weights {
+        (measured, out.stats.unique_pairs, 1.0)
+    } else {
+        let checkpoints = pair_growth_checkpoints(&cfg, &ws, &faults, 4);
+        let (a, b) = fit_power_law(&checkpoints);
+        let pred = (a * (total_weights as f64).powf(b))
+            .round()
+            .clamp(out.stats.unique_pairs as f64, total_weights as f64)
+            as usize;
+        let solve_secs = out.stats.clock.total().min(measured);
+        let overhead = measured - solve_secs;
+        let est = overhead * total_weights as f64 / ws.len() as f64
+            + solve_secs * pred as f64 / out.stats.unique_pairs as f64;
+        (est, pred, b)
+    };
+
     Ok(CompileTimeRow {
         method,
         cfg,
@@ -104,6 +237,9 @@ pub fn measure(
         total_weights,
         measured_secs: measured,
         full_secs: full,
+        full_secs_dedup,
+        predicted_pairs_full,
+        pair_growth_exp,
         breakdown: out
             .stats
             .clock
@@ -208,11 +344,25 @@ pub fn fig10a(rows: &[CompileTimeRow], models: &[String]) -> Table {
 }
 
 /// Pattern-class dedup report: how far the dedupe-first core collapses
-/// each (config, model) cell's workload before the solver ever runs.
+/// each (config, model) cell's workload before the solver ever runs, and
+/// what that does to the full-model extrapolation — the linear estimate
+/// scales everything with weights; the dedup-aware estimate scales solve
+/// time with the fitted (sublinear, exponent `b`) unique-pair growth.
 pub fn dedup_report(rows: &[CompileTimeRow]) -> Table {
     let mut t = Table::new(
-        "Pattern-class dedup — complete pipeline (sampled weights vs solver invocations)",
-        &["config", "model", "weights", "patterns", "unique pairs", "dedup"],
+        "Pattern-class dedup — complete pipeline (sample → full-model extrapolation)",
+        &[
+            "config",
+            "model",
+            "weights",
+            "patterns",
+            "unique pairs",
+            "dedup",
+            "pred pairs",
+            "b",
+            "linear est",
+            "dedup-aware est",
+        ],
     );
     for r in rows.iter().filter(|r| r.method == Method::Complete && r.unique_pairs > 0) {
         t.row(vec![
@@ -222,6 +372,10 @@ pub fn dedup_report(rows: &[CompileTimeRow]) -> Table {
             r.unique_patterns.to_string(),
             r.unique_pairs.to_string(),
             format!("{:.1}x", r.dedup_ratio()),
+            r.predicted_pairs_full.to_string(),
+            format!("{:.2}", r.pair_growth_exp),
+            fmt_dur(r.full_secs),
+            fmt_dur(r.full_secs_dedup),
         ]);
     }
     t
@@ -281,6 +435,79 @@ mod tests {
         assert_eq!(r.unique_pairs + r.dedup_hits, r.sampled_weights);
         assert!(r.unique_patterns > 0);
         assert!(r.dedup_ratio() > 1.0, "R2C2 at 5k weights must dedupe");
+    }
+
+    #[test]
+    fn model_tensors_split_matches_flat_weights() {
+        let cfg = GroupConfig::R2C2;
+        let limit = 10_000;
+        let tensors = synthetic_model_tensors("resnet20", &cfg, limit).unwrap();
+        let flat = synthetic_model_weights("resnet20", &cfg, limit).unwrap();
+        let total: usize = tensors.iter().map(|(_, w)| w.len()).sum();
+        assert_eq!(total, flat.len());
+        let rejoined: Vec<i64> = tensors.iter().flat_map(|(_, w)| w.iter().copied()).collect();
+        assert_eq!(rejoined, flat, "tensor split must preserve weight order");
+        // Layer names are unique (they key chip regions in the service).
+        let mut names: Vec<&str> = tensors.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), tensors.len());
+        // Unlimited split covers every layer exactly.
+        let full = synthetic_model_tensors("resnet20", &cfg, usize::MAX).unwrap();
+        let full_total: usize = full.iter().map(|(_, w)| w.len()).sum();
+        assert_eq!(full_total, total_params(&by_name("resnet20").unwrap()));
+    }
+
+    #[test]
+    fn power_law_fit_recovers_exponent() {
+        let pts: Vec<(usize, usize)> =
+            [100usize, 400, 2_500, 10_000].iter().map(|&n| (n, (n as f64).sqrt() as usize)).collect();
+        let (a, b) = fit_power_law(&pts);
+        assert!((b - 0.5).abs() < 0.05, "fitted b = {b}");
+        assert!(a > 0.0);
+        // Degenerate inputs fall back to linear.
+        assert_eq!(fit_power_law(&[]), (1.0, 1.0));
+        assert_eq!(fit_power_law(&[(10, 5)]), (0.5, 1.0));
+    }
+
+    #[test]
+    fn pair_growth_checkpoints_monotone_and_scan_only() {
+        let cfg = GroupConfig::R2C2;
+        let ws = synthetic_model_weights("resnet20", &cfg, 8_000).unwrap();
+        let chip = ChipFaults::new(1, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let cps = pair_growth_checkpoints(&cfg, &ws, &faults, 4);
+        assert_eq!(cps.len(), 4);
+        assert_eq!(cps.last().unwrap().0, ws.len());
+        assert!(cps.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1));
+        // Final checkpoint agrees with the compiler's own dedup counter.
+        let r = measure("resnet20", cfg, Method::Complete, 8_000, 1, 1).unwrap();
+        assert_eq!(cps.last().unwrap().1, r.unique_pairs);
+    }
+
+    #[test]
+    fn dedup_aware_extrapolation_is_sublinear() {
+        let r = measure("resnet20", GroupConfig::R2C2, Method::Complete, 20_000, 1, 1).unwrap();
+        assert!(r.sampled_weights < r.total_weights);
+        // Pair growth saturates, so the fitted exponent is < 1 and the
+        // dedup-aware estimate undercuts the linear one.
+        assert!(
+            r.pair_growth_exp < 1.0,
+            "R2C2 pair growth should be sublinear, got b = {}",
+            r.pair_growth_exp
+        );
+        assert!(
+            r.full_secs_dedup < r.full_secs,
+            "dedup-aware {} not below linear {}",
+            r.full_secs_dedup,
+            r.full_secs
+        );
+        assert!(r.predicted_pairs_full >= r.unique_pairs);
+        assert!(r.predicted_pairs_full <= r.total_weights);
+        // Baseline rows keep the linear estimate.
+        let ff = measure("resnet20", GroupConfig::R1C4, Method::OriginalFf, 500, 1, 1).unwrap();
+        assert_eq!(ff.full_secs_dedup, ff.full_secs);
+        assert_eq!(ff.pair_growth_exp, 1.0);
     }
 
     #[test]

@@ -52,6 +52,16 @@ impl FaultState {
     pub fn is_fault(self) -> bool {
         !matches!(self, FaultState::Free)
     }
+
+    /// Inverse of the `repr(u8)` discriminant (session cache deserializer).
+    pub fn from_u8(b: u8) -> Option<FaultState> {
+        match b {
+            0 => Some(FaultState::Free),
+            1 => Some(FaultState::Sa0),
+            2 => Some(FaultState::Sa1),
+            _ => None,
+        }
+    }
 }
 
 /// SA0/SA1 occurrence rates.

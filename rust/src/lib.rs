@@ -17,7 +17,39 @@
 //! * **L1 (python/compile/kernels/)** — Pallas crossbar-MVM kernel
 //!   (bit-sliced MACs + shift-and-add + pos/neg subtraction).
 //!
-//! ## Dedupe-first compilation
+//! ## Compile sessions (the public API)
+//!
+//! Compilation is chip-scoped and recurring: a physical chip's SAF
+//! pattern is fixed, and every model revision deployed to it is
+//! recompiled against the same fault maps. The entry point is therefore a
+//! [`coordinator::CompileSession`] — built per chip via
+//! `CompileSession::builder(cfg).method(…).threads(…).chip(&chip)` — that
+//! owns the pattern-class state and accumulates per-session statistics:
+//!
+//! * `compile_tensor(name, weights)` / `compile_model(tensors)` /
+//!   `compile_with_faults(weights, faults)` — everything compiled through
+//!   one session shares solved work;
+//! * `submit(name, weights)` + `drain()` — batch mode: one work-stealing
+//!   solve fan-out over the union of all queued tensors' fresh pairs;
+//! * `save(path)` / `CompileSession::load(path)` — persistent warm-start:
+//!   the interned patterns and solved pairs are serialized (keyed by chip
+//!   seed, [`grouping::GroupConfig`], and pipeline fingerprint, with a
+//!   checksum), so recompiling a revised model on the same chip starts
+//!   warm — an unchanged tensor performs **zero** fresh solves.
+//!
+//! Above sessions sits [`coordinator::CompileService`]: a batched compile
+//! front-end over many chips (one warm session per chip seed, chips
+//! sharded across the work-stealing pool, optional cache directory),
+//! surfaced as `rchg serve-batch`.
+//!
+//! Migrating from the deprecated free functions (kept as one-shot shims
+//! for one release): `compile_tensor(ws, f, opts)` →
+//! `session.compile_with_faults(ws, f)`; `compile_tensor_with_cache` →
+//! the same (the session owns the cache); `compile_model(tensors, chip,
+//! opts)` → `session.compile_model(tensors)`; [`nn::ChipCompiler`] keeps
+//! its surface and is now a thin adapter over a session.
+//!
+//! ## Dedupe-first compilation (the core underneath)
 //!
 //! The compiler's unit of work is a **pattern class**, not a weight. A
 //! compilation runs four phases ([`coordinator::compiler`]):
@@ -28,8 +60,8 @@
 //!   [`coordinator::PatternCtx`] whose `FaultAnalysis`/`GroupTables` are
 //!   built lazily, at most once, and shared across threads.
 //! 2. **Dedupe** — collapse the tensor to unique (pattern, weight) pairs
-//!   against a chip-wide [`coordinator::SolveCache`]; tensors of one chip
-//!   reuse each other's solved pairs (`compile_model`).
+//!   against the session's chip-wide [`coordinator::SolveCache`]; tensors
+//!   of one chip reuse each other's solved pairs.
 //! 3. **Solve** — run the staged pipeline (Fig 7) once per unique pair,
 //!   fanned out over an atomic-counter work-stealing scheduler
 //!   ([`util::pool::parallel_work_steal`]); slot order is fixed by the
@@ -39,10 +71,11 @@
 //! At the paper's published SAF rates most groups are fault-free or share
 //! a low-cardinality pattern, so unique pairs ≪ weights and the solver
 //! does 5–20× less work than per-weight iteration
-//! (`CompileStats::dedup_ratio`).
+//! (`CompileStats::dedup_ratio`) — and a warm session does no solver work
+//! at all on unchanged tensors.
 //!
-//! Start with [`coordinator::Compiler`] (the paper's contribution) or the
-//! `examples/` directory.
+//! Start with [`coordinator::CompileSession`] or the `examples/`
+//! directory (`quickstart` walks a save/load warm-start).
 
 pub mod arrays;
 pub mod baseline;

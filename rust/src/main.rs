@@ -4,6 +4,7 @@
 //!
 //!   rchg tables                 regenerate every paper table/figure (fast set)
 //!   rchg compile …              compile a model's weights for a chip
+//!   rchg serve-batch …          batched compile service over many chips
 //!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
 //!   rchg eval-lm …              LM perplexity under SAFs  (Table III)
 //!   rchg compile-time …         compilation-time study    (Table II/Fig 10)
@@ -12,18 +13,21 @@
 //!   rchg info                   runtime + artifact info
 
 use rchg::arrays::MapperPolicy;
-use rchg::coordinator::Method;
+use rchg::coordinator::{CompileOptions, CompileService, CompileStats, Method, ServiceOptions};
 use rchg::energy::EnergyParams;
 use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
 use rchg::experiments::compile_time::{
-    dedup_report, fig10a, fig10b, measure, table2, CompileTimeOptions,
+    dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, table2, CompileTimeOptions,
 };
 use rchg::experiments::hw::{fig6, fig11};
 use rchg::experiments::lm::{table3, LmOptions};
+use rchg::experiments::Table;
+use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
 use rchg::runtime::{artifacts_dir, Runtime};
 use rchg::util::cli::Cli;
-use rchg::util::timer::fmt_dur;
+use rchg::util::timer::{fmt_dur, Timer};
+use std::collections::BTreeMap;
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
@@ -196,22 +200,99 @@ fn main() -> anyhow::Result<()> {
                 args.get_u64("chip", 1),
             )?;
             println!(
-                "compiled {} weights of {} ({}) in {} — full model {} weights ≈ {}",
+                "compiled {} weights of {} ({}) in {} — full model {} weights ≈ {} linear, \
+                 ≈ {} dedup-aware",
                 r.sampled_weights,
                 r.model,
                 cfg.name(),
                 fmt_dur(r.measured_secs),
                 r.total_weights,
-                fmt_dur(r.full_secs)
+                fmt_dur(r.full_secs),
+                fmt_dur(r.full_secs_dedup)
             );
             if r.unique_pairs > 0 {
                 println!(
                     "pattern classes: {} — solver ran on {} unique (pattern, weight) pairs \
-                     ({:.1}x dedup)",
+                     ({:.1}x dedup); fitted pair growth n^{:.2} → {} pairs at full scale",
                     r.unique_patterns,
                     r.unique_pairs,
-                    r.dedup_ratio()
+                    r.dedup_ratio(),
+                    r.pair_growth_exp,
+                    r.predicted_pairs_full
                 );
+            }
+        }
+        "serve-batch" => {
+            let cli = Cli::new("batched compile service: many chips, one warm session each")
+                .opt("chips", "chip seeds", Some("1,2,3,4"))
+                .opt("model", "layer-shape model", Some("resnet20"))
+                .opt("config", "grouping config", Some("r2c2"))
+                .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
+                .opt("limit", "max weights per chip", Some("60000"))
+                .opt("threads", "total worker threads (0 = auto-detect)", Some("0"))
+                .opt("cache-dir", "persist per-chip session caches (cross-run warm-start)", None)
+                .opt("rounds", "batch rounds; round 2+ recompiles warm", Some("2"));
+            let args = cli.parse(rest);
+            let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
+                .ok_or_else(|| anyhow::anyhow!("bad config"))?;
+            let method = Method::parse(args.get_str("method", "complete"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let seeds: Vec<u64> =
+                args.get_list("chips").iter().filter_map(|s| s.parse().ok()).collect();
+            if seeds.is_empty() {
+                anyhow::bail!("no chip seeds given");
+            }
+            let tensors = synthetic_model_tensors(
+                args.get_str("model", "resnet20"),
+                &cfg,
+                args.get_usize("limit", 60_000),
+            )?;
+            let mut opts = CompileOptions::new(cfg, method);
+            opts.threads = args.get_threads("threads");
+            let mut service = CompileService::new(ServiceOptions {
+                opts,
+                rates: FaultRates::paper_default(),
+                cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+            });
+            for round in 1..=args.get_usize("rounds", 2).max(1) {
+                for &seed in &seeds {
+                    for (name, ws) in &tensors {
+                        service.enqueue(seed, name, ws.clone());
+                    }
+                }
+                let timer = Timer::start();
+                let results = service.run()?;
+                let secs = timer.secs();
+                for e in service.persist_errors() {
+                    eprintln!("warning: session cache not persisted — {e}");
+                }
+                let mut per_chip: BTreeMap<u64, CompileStats> = BTreeMap::new();
+                for r in &results {
+                    per_chip.entry(r.chip_seed).or_default().merge_with_wall(&r.tensor.stats);
+                }
+                let fresh: usize = per_chip.values().map(|s| s.unique_pairs).sum();
+                let mut t = Table::new(
+                    &format!(
+                        "serve-batch round {round} — {} jobs / {} chips in {}{}",
+                        results.len(),
+                        per_chip.len(),
+                        fmt_dur(secs),
+                        if fresh == 0 { " (warm: every solve cached)" } else { "" },
+                    ),
+                    &["chip", "tensors", "weights", "classes", "fresh solves", "cache hits", "dedup"],
+                );
+                for (seed, st) in &per_chip {
+                    t.row(vec![
+                        seed.to_string(),
+                        tensors.len().to_string(),
+                        st.weights.to_string(),
+                        st.unique_patterns.to_string(),
+                        st.unique_pairs.to_string(),
+                        st.dedup_hits.to_string(),
+                        format!("{:.1}x", st.dedup_ratio()),
+                    ]);
+                }
+                println!("{}", t.render());
             }
         }
         "energy" => {
@@ -255,6 +336,7 @@ fn main() -> anyhow::Result<()> {
                  \x20 info             runtime + artifact info\n\
                  \x20 tables           regenerate all paper tables/figures (fast set)\n\
                  \x20 compile          compile a model for one chip (timing)\n\
+                 \x20 serve-batch      batched compile service over many chips (warm sessions)\n\
                  \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
                  \x20 eval-lm          Table III\n\
                  \x20 compile-time     Table II / Fig 10\n\

@@ -11,9 +11,7 @@ pub mod data;
 pub mod lm;
 pub mod packing;
 
-use crate::coordinator::{
-    compile_tensor, compile_tensor_with_cache, CompileOptions, CompileStats, SolveCache,
-};
+use crate::coordinator::{CompileOptions, CompileSession, CompileStats};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::Decomposition;
@@ -32,6 +30,11 @@ pub struct CompiledMatrix {
 impl CompiledMatrix {
     /// Quantize `[k, n]` float weights and compile them against the chip's
     /// fault map for tensor `tensor_id`.
+    ///
+    /// One-shot compat constructor: it runs a throwaway
+    /// [`CompileSession`], so nothing is cached across calls. Compiling
+    /// several matrices for one chip should go through [`ChipCompiler`]
+    /// (or a [`CompileSession`] directly) instead.
     pub fn compile(
         w: &[f32],
         k: usize,
@@ -50,41 +53,52 @@ impl CompiledMatrix {
         tensor_id: u64,
         opts: &CompileOptions,
     ) -> CompiledMatrix {
-        let faults = chip.sample_tensor(tensor_id, q.w_int.len(), opts.cfg.cells());
-        let compiled = compile_tensor(&q.w_int, &faults, opts);
+        let mut session = CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip);
+        Self::via_session(&mut session, q, tensor_id)
+    }
+
+    /// Quantized matrix through a caller's warm session.
+    fn via_session(
+        session: &mut CompileSession,
+        q: QuantizedMatrix,
+        tensor_id: u64,
+    ) -> CompiledMatrix {
+        let faults = session.sample_faults(tensor_id, q.w_int.len());
+        let compiled = session.compile_with_faults(&q.w_int, &faults);
         CompiledMatrix { q, decomps: compiled.decomps, faults, stats: compiled.stats }
     }
 }
 
-/// Compiles a model's matrices for one chip through a shared chip-wide
-/// [`SolveCache`], so (pattern, weight) pairs recurring across layers are
-/// solved once per chip rather than once per tensor. Falls back to the
-/// legacy per-weight path when `opts.dedupe` is off.
-pub struct ChipCompiler<'a> {
-    chip: &'a ChipFaults,
-    opts: &'a CompileOptions,
-    cache: Option<SolveCache>,
+/// Compiles a model's matrices for one chip — a thin adapter over a
+/// chip-scoped [`CompileSession`], so (pattern, weight) pairs recurring
+/// across layers are solved once per chip rather than once per tensor
+/// (the session falls back to the legacy per-weight path when
+/// `opts.dedupe` is off).
+pub struct ChipCompiler {
+    session: CompileSession,
 }
 
-impl<'a> ChipCompiler<'a> {
-    pub fn new(chip: &'a ChipFaults, opts: &'a CompileOptions) -> ChipCompiler<'a> {
-        ChipCompiler { chip, opts, cache: opts.dedupe.then(|| SolveCache::new(opts.cfg)) }
+impl ChipCompiler {
+    pub fn new(chip: &ChipFaults, opts: &CompileOptions) -> ChipCompiler {
+        ChipCompiler {
+            session: CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip),
+        }
+    }
+
+    /// The underlying session (per-trial compile statistics, persistence).
+    pub fn session(&self) -> &CompileSession {
+        &self.session
     }
 
     /// Quantize and compile one `[k, n]` float matrix for tensor
     /// `tensor_id`, reusing the chip's solve cache.
     pub fn compile(&mut self, w: &[f32], k: usize, n: usize, tensor_id: u64) -> CompiledMatrix {
-        let q = QuantizedMatrix::quantize(w, k, n, &self.opts.cfg);
+        let q = QuantizedMatrix::quantize(w, k, n, &self.session.options().cfg);
         self.from_quantized(q, tensor_id)
     }
 
     pub fn from_quantized(&mut self, q: QuantizedMatrix, tensor_id: u64) -> CompiledMatrix {
-        let faults = self.chip.sample_tensor(tensor_id, q.w_int.len(), self.opts.cfg.cells());
-        let compiled = match self.cache.as_mut() {
-            Some(c) => compile_tensor_with_cache(&q.w_int, &faults, self.opts, c),
-            None => compile_tensor(&q.w_int, &faults, self.opts),
-        };
-        CompiledMatrix { q, decomps: compiled.decomps, faults, stats: compiled.stats }
+        CompiledMatrix::via_session(&mut self.session, q, tensor_id)
     }
 }
 

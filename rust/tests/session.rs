@@ -1,0 +1,248 @@
+//! CompileSession acceptance tests: byte-identity with the PR 1
+//! `compile_tensor_with_cache` path at threads {1, 4, 8}, save → load →
+//! recompile round-trips (warm-start performs zero fresh solves and
+//! matches cold output byte-for-byte), clean rejection of corrupted or
+//! version-mismatched cache files, submit/drain batch equivalence, and
+//! the multi-chip compile service.
+
+use rchg::coordinator::{
+    compile_tensor_with_cache, CompileOptions, CompileService, CompileSession, Method,
+    ServiceOptions, SolveCache,
+};
+use rchg::experiments::compile_time::synthetic_model_tensors;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rchg_session_test_{name}"))
+}
+
+#[test]
+fn session_matches_pr1_cache_path_across_threads() {
+    // Acceptance: CompileSession compiles ResNet-20-shaped tensors
+    // byte-identically to the caller-threaded SolveCache path at threads
+    // {1, 4, 8}.
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors("resnet20", &cfg, 12_000).unwrap();
+    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    for threads in [1usize, 4, 8] {
+        let mut opts = CompileOptions::new(cfg, Method::Complete);
+        opts.threads = threads;
+        let mut cache = SolveCache::new(cfg);
+        let mut reference = Vec::new();
+        for (i, (_, ws)) in tensors.iter().enumerate() {
+            let faults = chip.sample_tensor(i as u64, ws.len(), cfg.cells());
+            reference.push(compile_tensor_with_cache(ws, &faults, &opts, &mut cache));
+        }
+        let mut session = CompileSession::builder(cfg)
+            .method(Method::Complete)
+            .threads(threads)
+            .chip(&chip);
+        let out = session.compile_model(&tensors);
+        assert_eq!(out.len(), reference.len());
+        for ((name, s, _), r) in out.iter().zip(&reference) {
+            assert_eq!(s.decomps, r.decomps, "{name} decomps diverged at threads={threads}");
+            assert_eq!(s.errors, r.errors, "{name} errors diverged at threads={threads}");
+            assert_eq!(s.stats.unique_pairs, r.stats.unique_pairs);
+            assert_eq!(s.stats.stage_counts, r.stats.stage_counts);
+        }
+        assert_eq!(session.solved_pairs(), cache.solved_pairs());
+    }
+}
+
+#[test]
+fn save_load_warm_start_zero_fresh_solves_byte_identical() {
+    // Acceptance: a save/load warm-start recompile of the same model
+    // performs zero fresh solves while matching cold output byte-for-byte.
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors("resnet20", &cfg, 10_000).unwrap();
+    let chip = ChipFaults::new(7, FaultRates::paper_default());
+    let mut cold = CompileSession::builder(cfg).chip(&chip);
+    let cold_out = cold.compile_model(&tensors);
+    let path = tmp("warm_roundtrip.rcs");
+    cold.save(&path).unwrap();
+
+    let mut warm = CompileSession::load(&path).unwrap();
+    assert!(warm.matches(&chip, cold.options()));
+    assert_eq!(warm.solved_pairs(), cold.solved_pairs());
+    let warm_out = warm.compile_model(&tensors);
+    for ((_, a, fa), (_, b, fb)) in cold_out.iter().zip(&warm_out) {
+        assert_eq!(fa, fb, "fault sampling must be identical after reload");
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(b.stats.unique_pairs, 0, "warm recompile must perform zero fresh solves");
+        assert_eq!(b.stats.dedup_hits, b.stats.weights);
+    }
+    // The cache grew by nothing.
+    assert_eq!(warm.solved_pairs(), cold.solved_pairs());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn warm_start_survives_a_second_generation() {
+    // save → load → compile a *revised* model (one tensor changed) → save
+    // → load again: only the revision costs solves, and the second
+    // generation still matches a cold compile byte-for-byte.
+    let cfg = GroupConfig::R2C2;
+    let mut tensors = synthetic_model_tensors("resnet20", &cfg, 8_000).unwrap();
+    let chip = ChipFaults::new(13, FaultRates::paper_default());
+    let mut gen0 = CompileSession::builder(cfg).chip(&chip);
+    let _ = gen0.compile_model(&tensors);
+    let path = tmp("generations.rcs");
+    gen0.save(&path).unwrap();
+
+    // Revise one tensor (weights shifted into the config's range).
+    for w in tensors[1].1.iter_mut() {
+        *w = (*w + 1).clamp(-cfg.max_per_array(), cfg.max_per_array());
+    }
+    let mut gen1 = CompileSession::load(&path).unwrap();
+    let revised = gen1.compile_model(&tensors);
+    let unchanged_solves: usize = revised
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != 1)
+        .map(|(_, (_, t, _))| t.stats.unique_pairs)
+        .sum();
+    assert_eq!(unchanged_solves, 0, "unchanged tensors must be pure cache hits");
+    gen1.save(&path).unwrap();
+
+    let mut cold = CompileSession::builder(cfg).chip(&chip);
+    let cold_out = cold.compile_model(&tensors);
+    for ((_, a, _), (_, b, _)) in revised.iter().zip(&cold_out) {
+        assert_eq!(a.decomps, b.decomps);
+        assert_eq!(a.errors, b.errors);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupted_or_mismatched_cache_files_rejected() {
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors("resnet20", &cfg, 3_000).unwrap();
+    let chip = ChipFaults::new(2, FaultRates::paper_default());
+    let mut s = CompileSession::builder(cfg).chip(&chip);
+    let _ = s.compile_model(&tensors);
+    let good = s.to_bytes().unwrap();
+    assert!(CompileSession::from_bytes(&good).is_ok());
+
+    // Truncation at any interesting boundary.
+    assert!(CompileSession::from_bytes(&[]).is_err());
+    assert!(CompileSession::from_bytes(&good[..8]).is_err());
+    assert!(CompileSession::from_bytes(&good[..good.len() - 3]).is_err());
+    assert!(CompileSession::from_bytes(&good[..good.len() / 2]).is_err());
+
+    // A flipped bit mid-payload fails the checksum.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    assert!(CompileSession::from_bytes(&flipped).is_err());
+
+    // Wrong magic (checksum recomputed so only the magic is at fault).
+    let refresh = |mut bytes: Vec<u8>| -> Vec<u8> {
+        let n = bytes.len();
+        let sum = rchg::util::prop::fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    };
+    let mut magic = good.clone();
+    magic[0] ^= 0xFF;
+    assert!(CompileSession::from_bytes(&refresh(magic)).is_err());
+
+    // Future format version is rejected, not misparsed.
+    let mut vers = good.clone();
+    vers[4] = 99;
+    assert!(CompileSession::from_bytes(&refresh(vers)).is_err());
+}
+
+#[test]
+fn submit_drain_batch_matches_sequential_compiles() {
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors("resnet20", &cfg, 8_000).unwrap();
+    let chip = ChipFaults::new(4, FaultRates::paper_default());
+
+    let mut batched = CompileSession::builder(cfg).threads(4).chip(&chip);
+    for (name, ws) in &tensors {
+        batched.submit(name, ws.clone());
+    }
+    assert_eq!(batched.pending(), tensors.len());
+    let out = batched.drain();
+    assert_eq!(batched.pending(), 0);
+    assert_eq!(out.len(), tensors.len());
+
+    let mut sequential = CompileSession::builder(cfg).threads(1).chip(&chip);
+    let total: usize = tensors.iter().map(|(_, w)| w.len()).sum();
+    for ((name, ws), (bname, bt)) in tensors.iter().zip(&out) {
+        assert_eq!(name, bname);
+        let st = sequential.compile_tensor(name, ws);
+        assert_eq!(st.decomps, bt.decomps, "batched drain diverged on {name}");
+        assert_eq!(st.errors, bt.errors);
+        assert_eq!(st.stats.stage_counts, bt.stats.stage_counts);
+        assert_eq!(st.stats.unique_pairs, bt.stats.unique_pairs);
+    }
+    // Session-level accounting covers the whole batch.
+    assert_eq!(batched.stats().weights, total);
+    assert_eq!(batched.tensors_compiled(), tensors.len());
+    assert_eq!(batched.solved_pairs(), sequential.solved_pairs());
+}
+
+#[test]
+fn service_batches_many_chips_and_warm_starts_from_cache_dir() {
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors("resnet20", &cfg, 6_000).unwrap();
+    let seeds = [11u64, 12, 13];
+    let dir = tmp("service_cache_dir");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut opts = CompileOptions::new(cfg, Method::Complete);
+    opts.threads = 4;
+
+    let mut service = CompileService::new(ServiceOptions {
+        opts: opts.clone(),
+        rates: FaultRates::paper_default(),
+        cache_dir: Some(dir.clone()),
+    });
+    for &seed in &seeds {
+        for (name, ws) in &tensors {
+            service.enqueue(seed, name, ws.clone());
+        }
+    }
+    let round1 = service.run().unwrap();
+    assert_eq!(round1.len(), seeds.len() * tensors.len());
+    assert!(round1.windows(2).all(|w| w[0].job_id < w[1].job_id), "enqueue order");
+
+    // Each chip's results equal a standalone per-chip session.
+    for (ci, &seed) in seeds.iter().enumerate() {
+        let chip = ChipFaults::new(seed, FaultRates::paper_default());
+        let mut standalone = CompileSession::builder(cfg).chip(&chip);
+        for (ti, (name, ws)) in tensors.iter().enumerate() {
+            let want = standalone.compile_tensor(name, ws);
+            let got = &round1[ci * tensors.len() + ti];
+            assert_eq!(got.chip_seed, seed);
+            assert_eq!(&got.name, name);
+            assert_eq!(got.tensor.decomps, want.decomps, "chip {seed} tensor {name}");
+            assert_eq!(got.tensor.errors, want.errors);
+        }
+    }
+
+    // A *fresh* service over the same cache dir starts warm: zero fresh
+    // solves, byte-identical output.
+    let mut fresh = CompileService::new(ServiceOptions {
+        opts,
+        rates: FaultRates::paper_default(),
+        cache_dir: Some(dir.clone()),
+    });
+    for &seed in &seeds {
+        for (name, ws) in &tensors {
+            fresh.enqueue(seed, name, ws.clone());
+        }
+    }
+    let round2 = fresh.run().unwrap();
+    let fresh_solves: usize = round2.iter().map(|r| r.tensor.stats.unique_pairs).sum();
+    assert_eq!(fresh_solves, 0, "cache-dir warm start must skip every solve");
+    for (a, b) in round1.iter().zip(&round2) {
+        assert_eq!(a.tensor.decomps, b.tensor.decomps);
+        assert_eq!(a.tensor.errors, b.tensor.errors);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
