@@ -82,10 +82,14 @@ fn main() -> anyhow::Result<()> {
     // that cache, so every tensor of the chip (and every later model
     // revision) reuses everything solved before.
     //
-    // Migrating from the old free functions:
+    // The old free functions (compile_tensor / compile_tensor_with_cache /
+    // compile_model) are gone — sessions are the only compile surface:
     //   compile_tensor(ws, faults, opts)      → session.compile_with_faults(ws, faults)
     //   compile_tensor_with_cache(…, cache)   → same (the session owns the cache)
     //   compile_model(tensors, chip, opts)    → session.compile_model(tensors)
+    // Under the hood the session now solves each fault pattern ONCE for
+    // its whole weight range (a dense per-pattern table, bounded by an
+    // LRU memory budget) instead of once per (pattern, weight) pair.
     let cfg = GroupConfig::R2C2;
     let chip = ChipFaults::new(7, FaultRates::paper_default());
     let mut session =

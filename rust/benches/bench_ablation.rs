@@ -3,12 +3,21 @@
 //! table-vs-ILP crossover, and the remapping baseline comparison.
 
 use rchg::baseline::remap::remap_compile;
-use rchg::coordinator::{compile_tensor, CompileOptions, Method};
+use rchg::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method};
 use rchg::experiments::compile_time::synthetic_model_weights;
 use rchg::fault::bank::ChipFaults;
-use rchg::fault::FaultRates;
+use rchg::fault::{FaultRates, GroupFaults};
 use rchg::grouping::GroupConfig;
 use rchg::util::timer::{fmt_dur, Timer};
+
+/// One-shot compile via a throwaway detached session (the removed free
+/// function's surface; keeps the ablation timings one-shot by design).
+fn compile_tensor(ws: &[i64], faults: &[GroupFaults], opts: &CompileOptions) -> CompiledTensor {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .detached()
+        .compile_with_faults(ws, faults)
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");

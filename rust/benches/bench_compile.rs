@@ -8,15 +8,24 @@
 //! and cross-checks that the dedupe-first core is byte-identical to the
 //! legacy per-weight path at several thread counts.
 
-use rchg::coordinator::{compile_tensor, CompileOptions, CompileSession, Method};
+use rchg::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method, SolveTier};
 use rchg::experiments::compile_time::{
     dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, synthetic_model_weights,
     table2, CompileTimeOptions,
 };
 use rchg::fault::bank::ChipFaults;
-use rchg::fault::FaultRates;
+use rchg::fault::{FaultRates, GroupFaults};
 use rchg::grouping::GroupConfig;
 use rchg::util::timer::{fmt_dur, Timer};
+
+/// One-shot compile via a throwaway detached session (the removed free
+/// function's surface).
+fn compile_tensor(ws: &[i64], faults: &[GroupFaults], opts: &CompileOptions) -> CompiledTensor {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .detached()
+        .compile_with_faults(ws, faults)
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -87,6 +96,51 @@ fn main() -> anyhow::Result<()> {
             fmt_dur(out.stats.wall_secs)
         );
     }
+
+    // Pattern-table criterion: on the BatchTable tier the fresh solve
+    // unit is a pattern (one full-range table build), not a (pattern,
+    // weight) pair — the per-pattern sweep count must drop ≥2x vs the
+    // pair-cache baseline on R2C2, with bounded resident table memory.
+    println!("== pattern-table tier vs pair-cache baseline (resnet20 {n} weights, R2C2)");
+    let mut table_opts = CompileOptions::new(cfg, Method::Complete);
+    table_opts.threads = 1;
+    let mut pair_opts = table_opts.clone();
+    pair_opts.tier = SolveTier::PerWeight;
+    let t_table = Timer::start();
+    let table_out = compile_tensor(&ws, &faults, &table_opts);
+    let table_secs = t_table.secs();
+    let t_pair = Timer::start();
+    let pair_out = compile_tensor(&ws, &faults, &pair_opts);
+    let pair_secs = t_pair.secs();
+    assert_eq!(table_out.decomps, pair_out.decomps, "tiers must be byte-identical");
+    assert_eq!(table_out.errors, pair_out.errors);
+    let table_sweeps = table_out.stats.pattern_tables_built;
+    let pair_sweeps = pair_out.stats.unique_pairs;
+    println!(
+        "  BatchTable: {} table builds in {} — PerWeight: {} pair sweeps in {}",
+        table_sweeps,
+        fmt_dur(table_secs),
+        pair_sweeps,
+        fmt_dur(pair_secs),
+    );
+    println!(
+        "  resident table memory: {} bytes (budget {}), evictions {}",
+        table_out.stats.resident_table_bytes,
+        table_opts.table_memory_bytes,
+        table_out.stats.table_evictions,
+    );
+    println!(
+        "  pattern-table criterion (≥2x fewer fresh solve sweeps): {}",
+        if table_sweeps * 2 <= pair_sweeps { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        table_sweeps * 2 <= pair_sweeps,
+        "pattern tables must sweep ≥2x less than the pair cache ({table_sweeps} vs {pair_sweeps})"
+    );
+    assert!(
+        table_out.stats.resident_table_bytes <= table_opts.table_memory_bytes,
+        "resident table memory exceeds the budget"
+    );
 
     // Session warm-start: save → load → recompile the same model must skip
     // ≥90% of solves (it skips all of them — the chip's fault pattern is

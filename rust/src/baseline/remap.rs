@@ -69,10 +69,21 @@ pub fn remap_compile(weights: &[i64], faults: &[GroupFaults], cfg: &GroupConfig)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{compile_tensor, CompileOptions, Method};
+    use crate::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method};
     use crate::fault::bank::ChipFaults;
     use crate::fault::FaultRates;
     use crate::util::prng::Rng;
+
+    fn compile_tensor(
+        ws: &[i64],
+        faults: &[GroupFaults],
+        opts: &CompileOptions,
+    ) -> CompiledTensor {
+        CompileSession::builder(opts.cfg)
+            .options(opts.clone())
+            .detached()
+            .compile_with_faults(ws, faults)
+    }
 
     fn workload(cfg: &GroupConfig, n: usize, seed: u64) -> (Vec<i64>, Vec<GroupFaults>) {
         let mut rng = Rng::new(seed);

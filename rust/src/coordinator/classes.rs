@@ -10,12 +10,17 @@
 //! built at most once per class, lazily, and shared across worker threads.
 //!
 //! [`SolveCache`] extends the dedup one level further: a chip-wide
-//! (pattern, weight) → [`Outcome`] cache. Tensors compiled through the
-//! same cache (see `compile_model`) reuse each other's solved pairs, so a
-//! pattern+weight combination recurring in layer 17 of a model costs a
-//! hash lookup, not a solve. Both structures are deterministic: pattern
-//! ids and solve slots are assigned in first-seen scan order, independent
-//! of thread count.
+//! pattern → [`PatternSolution`] store. On the `BatchTable` tier a
+//! pattern is solved **once for its entire weight range** (dense table
+//! indexed by shifted weight — every weight of every later tensor is an
+//! O(1) lookup); on the `PerWeight` tier individually solved (weight →
+//! outcome) entries accumulate per pattern. Resident solution memory is
+//! bounded: [`SolveCache::begin_batch`] evicts least-recently-used
+//! pattern solutions (deterministically — by last-used batch epoch, then
+//! pattern id) until the configured byte budget fits. Everything is
+//! deterministic: pattern ids are assigned in first-seen scan order,
+//! independent of thread count, and eviction only ever costs re-solves,
+//! never changes an output byte.
 
 use super::pipeline::{Outcome, PipelineOptions};
 use crate::decompose::GroupTables;
@@ -140,31 +145,111 @@ impl PatternRegistry {
     }
 }
 
-/// Chip-wide (pattern, weight) → [`Outcome`] solve cache.
+/// Default resident-memory budget for per-pattern solution tables
+/// (`CompileOptions::table_memory_bytes`): comfortably holds every
+/// pattern a paper-scale model produces on R1C4/R2C2/R2C4 while bounding
+/// pathological fleets (huge weight ranges × many chips) — the ROADMAP's
+/// "cache grows without limit" item.
+pub const DEFAULT_TABLE_MEMORY_BYTES: usize = 256 << 20;
+
+/// Estimated resident bytes of one cached [`Outcome`] (two cell vectors
+/// plus error/stage). An estimate, not an allocator measurement — the
+/// budget is a guard rail, not an accounting ledger.
+fn outcome_bytes(cells: usize) -> usize {
+    2 * (24 + cells) + 16
+}
+
+/// Solved outcomes of one pattern class.
+///
+/// `Table` is the `BatchTable` tier's unit: dense full-range solutions
+/// indexed by shifted weight (`w + max_per_array`), built by one batch
+/// solve — every representable weight is an O(1) lookup forever after.
+/// `Pairs` is the `PerWeight` tier's unit: individually solved entries
+/// for methods/configs where full enumeration is the wrong trade (ILP
+/// methods, >16-cell or huge-range configs).
+#[derive(Clone, Debug)]
+pub enum PatternSolution {
+    /// Dense full-range table, `outcomes[w + max_per_array]`.
+    Table(Vec<Outcome>),
+    /// Individually solved weight → outcome entries.
+    Pairs(FnvMap<i64, Outcome>),
+}
+
+impl PatternSolution {
+    /// Number of solved entries resident in this solution.
+    pub fn len(&self) -> usize {
+        match self {
+            PatternSolution::Table(t) => t.len(),
+            PatternSolution::Pairs(m) => m.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn estimated_bytes(&self, cells: usize) -> usize {
+        match self {
+            PatternSolution::Table(t) => 24 + t.len() * outcome_bytes(cells),
+            PatternSolution::Pairs(m) => 48 + m.len() * (outcome_bytes(cells) + 16),
+        }
+    }
+}
+
+/// One pattern's resident solution plus its cache bookkeeping.
+#[derive(Clone, Debug)]
+struct SolutionSlot {
+    solution: PatternSolution,
+    /// Batch epoch of the last lookup or install — the LRU eviction key.
+    last_used: u64,
+    /// Served or freshly solved at least once in this cache's lifetime.
+    /// Entries loaded from a warm-start file start `false`; the session
+    /// serializer skips never-hit slots so cache files stop growing
+    /// monotonically across model revisions.
+    hit: bool,
+    /// Estimated resident bytes of the solution payload.
+    bytes: usize,
+}
+
+/// Chip-wide pattern → [`PatternSolution`] solve cache with a bounded
+/// memory footprint.
 ///
 /// One `SolveCache` per chip: every tensor compiled through it shares the
-/// pattern registry and the solved pairs of all tensors before it. Slots
-/// are assigned in first-seen order, so the cache contents — and every
-/// compilation drawing on them — are byte-deterministic regardless of
-/// thread count.
+/// pattern registry and the solutions of all tensors before it. A weight
+/// whose pattern already carries a full-range table costs a dense-vector
+/// read — even if that exact weight was never compiled before. Eviction
+/// (LRU by batch epoch, ties by pattern id) keeps resident solution bytes
+/// under [`SolveCache::table_memory_bytes`]; an evicted pattern is simply
+/// re-solved on next use, bit-for-bit identically.
 #[derive(Clone, Debug)]
 pub struct SolveCache {
     pub registry: PatternRegistry,
-    index: FnvMap<(PatternId, i64), u32>,
-    solved: Vec<Outcome>,
+    /// Per-pattern solutions, indexed by [`PatternId`].
+    slots: Vec<Option<SolutionSlot>>,
     /// Pipeline options the cached outcomes were solved under; set on
     /// first use. Outcomes are keyed by (pattern, weight) only, so mixing
     /// pipelines in one cache would silently serve stale solutions.
     pipeline: Option<PipelineOptions>,
+    /// `cfg.max_per_array()` — the shift that indexes full-range tables.
+    max_w: i64,
+    /// Current batch epoch (see [`SolveCache::begin_batch`]).
+    epoch: u64,
+    resident_bytes: usize,
+    table_memory_bytes: usize,
+    evictions: u64,
 }
 
 impl SolveCache {
     pub fn new(cfg: GroupConfig) -> SolveCache {
         SolveCache {
             registry: PatternRegistry::new(cfg),
-            index: FnvMap::default(),
-            solved: Vec::new(),
+            slots: Vec::new(),
             pipeline: None,
+            max_w: cfg.max_per_array(),
+            epoch: 0,
+            resident_bytes: 0,
+            table_memory_bytes: DEFAULT_TABLE_MEMORY_BYTES,
+            evictions: 0,
         }
     }
 
@@ -180,111 +265,228 @@ impl SolveCache {
         }
     }
 
-    /// Map every (pattern-id, weight) to a solve slot, collecting the
-    /// pairs not yet solved. Returns the per-weight slot assignment plus
-    /// the fresh pairs in slot order; the caller must solve them and pass
-    /// the outcomes to [`SolveCache::absorb`] before resolving slots.
-    pub fn dedupe(
-        &mut self,
-        pids: &[PatternId],
-        weights: &[i64],
-    ) -> (Vec<u32>, Vec<(PatternId, i64)>) {
-        let mut fresh: Vec<(PatternId, i64)> = Vec::new();
-        let slots = self.dedupe_pending(pids, weights, &mut fresh);
-        (slots, fresh)
-    }
-
-    /// Batched variant of [`SolveCache::dedupe`]: fresh pairs accumulate
-    /// into a caller-owned `pending` list so several tensors can be
-    /// deduped back-to-back before a single solve + [`SolveCache::absorb`]
-    /// round. Slot numbering continues past both the solved pairs and the
-    /// pending tail, so slots from consecutive calls never collide.
-    pub fn dedupe_pending(
-        &mut self,
-        pids: &[PatternId],
-        weights: &[i64],
-        pending: &mut Vec<(PatternId, i64)>,
-    ) -> Vec<u32> {
-        debug_assert_eq!(pids.len(), weights.len());
-        let mut slots = Vec::with_capacity(weights.len());
-        for (&pid, &w) in pids.iter().zip(weights.iter()) {
-            let next = (self.solved.len() + pending.len()) as u32;
-            let slot = match self.index.get(&(pid, w)) {
-                Some(&s) => s,
-                None => {
-                    self.index.insert((pid, w), next);
-                    pending.push((pid, w));
-                    next
-                }
-            };
-            slots.push(slot);
-        }
-        slots
-    }
-
-    /// Append outcomes for the pairs returned by the latest
-    /// [`SolveCache::dedupe`], in the same order.
-    pub fn absorb(&mut self, outcomes: Vec<Outcome>) {
-        self.solved.extend(outcomes);
-    }
-
-    pub fn outcome(&self, slot: u32) -> &Outcome {
-        &self.solved[slot as usize]
-    }
-
-    /// Total unique (pattern, weight) pairs solved through this cache.
-    pub fn solved_pairs(&self) -> usize {
-        self.solved.len()
-    }
-
     /// Pipeline options the cached outcomes were solved under (set on the
     /// first compilation through this cache).
     pub fn pipeline(&self) -> Option<&PipelineOptions> {
         self.pipeline.as_ref()
     }
 
-    /// Solved (pattern-id, weight) pairs in slot order — the serialization
-    /// counterpart of the outcomes returned by [`SolveCache::outcome`].
-    pub fn pairs(&self) -> Vec<(PatternId, i64)> {
-        debug_assert_eq!(self.index.len(), self.solved.len());
-        let mut out = vec![(0 as PatternId, 0i64); self.solved.len()];
-        for (&(pid, w), &slot) in &self.index {
-            out[slot as usize] = (pid, w);
-        }
-        out
+    /// Resident-memory budget for pattern solutions, in (estimated) bytes.
+    pub fn table_memory_bytes(&self) -> usize {
+        self.table_memory_bytes
     }
 
-    /// Rebuild a cache from serialized parts: patterns in id order, solved
-    /// pairs in slot order with their outcomes, and the pipeline options
-    /// the outcomes were solved under. Returns `None` when the parts are
-    /// internally inconsistent (duplicate patterns or pairs, pair counts
-    /// disagreeing with outcomes, pattern ids out of range).
+    /// Adjust the memory budget; takes effect at the next
+    /// [`SolveCache::begin_batch`].
+    pub fn set_table_memory_bytes(&mut self, bytes: usize) {
+        self.table_memory_bytes = bytes.max(1);
+    }
+
+    /// Start a compilation batch: advance the LRU epoch and evict
+    /// least-recently-used pattern solutions until the resident estimate
+    /// fits the budget. Called once per `compile_batch_with_cache` round,
+    /// so everything touched *within* a batch stays resident through its
+    /// scatter phase (a single batch may therefore overshoot the budget;
+    /// it is trimmed at the next batch boundary).
+    pub fn begin_batch(&mut self) {
+        self.epoch += 1;
+        if self.resident_bytes <= self.table_memory_bytes {
+            return;
+        }
+        // Deterministic LRU: (last-used epoch, pattern id) ascending. Only
+        // slots from earlier epochs are candidates; at this point (epoch
+        // just advanced) that is every slot.
+        let mut cands: Vec<(u64, u32)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(pid, s)| {
+                s.as_ref()
+                    .filter(|s| s.last_used < self.epoch)
+                    .map(|s| (s.last_used, pid as u32))
+            })
+            .collect();
+        cands.sort_unstable();
+        for (_, pid) in cands {
+            if self.resident_bytes <= self.table_memory_bytes {
+                break;
+            }
+            if let Some(slot) = self.slots[pid as usize].take() {
+                self.resident_bytes -= slot.bytes.min(self.resident_bytes);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    fn ensure_slots(&mut self) {
+        if self.slots.len() < self.registry.len() {
+            self.slots.resize_with(self.registry.len(), || None);
+        }
+    }
+
+    /// Mark pattern `pid` used in the current epoch and report whether
+    /// weight `w` already has a resident solution. The scan/dedupe phase
+    /// calls this once per weight; `false` means the pair needs fresh
+    /// solve work this batch.
+    pub fn touch(&mut self, pid: PatternId, w: i64) -> bool {
+        self.ensure_slots();
+        match &mut self.slots[pid as usize] {
+            Some(slot) => {
+                slot.hit = true;
+                slot.last_used = self.epoch;
+                match &slot.solution {
+                    PatternSolution::Table(t) => {
+                        debug_assert_eq!(t.len() as i64, 2 * self.max_w + 1);
+                        w.abs() <= self.max_w
+                    }
+                    PatternSolution::Pairs(m) => m.contains_key(&w),
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// The resident outcome for (pattern, weight), if any.
+    pub fn get(&self, pid: PatternId, w: i64) -> Option<&Outcome> {
+        let slot = self.slots.get(pid as usize)?.as_ref()?;
+        match &slot.solution {
+            PatternSolution::Table(t) => {
+                let i = w + self.max_w;
+                if (0..t.len() as i64).contains(&i) {
+                    Some(&t[i as usize])
+                } else {
+                    None
+                }
+            }
+            PatternSolution::Pairs(m) => m.get(&w),
+        }
+    }
+
+    /// Install a freshly batch-solved full-range table for `pid`
+    /// (replacing any sparse entries — the outcomes are identical, the
+    /// table strictly supersedes them).
+    pub fn install_table(&mut self, pid: PatternId, outcomes: Vec<Outcome>) {
+        debug_assert_eq!(outcomes.len() as i64, 2 * self.max_w + 1);
+        self.ensure_slots();
+        let cells = self.registry.cfg().cells();
+        let solution = PatternSolution::Table(outcomes);
+        let bytes = solution.estimated_bytes(cells);
+        if let Some(old) = self.slots[pid as usize].take() {
+            self.resident_bytes -= old.bytes.min(self.resident_bytes);
+        }
+        self.resident_bytes += bytes;
+        self.slots[pid as usize] =
+            Some(SolutionSlot { solution, last_used: self.epoch, hit: true, bytes });
+    }
+
+    /// Install freshly solved per-weight entries (the `PerWeight` tier's
+    /// absorb step).
+    pub fn install_pairs(&mut self, entries: Vec<(PatternId, i64, Outcome)>) {
+        self.ensure_slots();
+        let cells = self.registry.cfg().cells();
+        let per_entry = outcome_bytes(cells) + 16;
+        for (pid, w, out) in entries {
+            if self.slots[pid as usize].is_none() {
+                // Account for the fresh slot's base footprint so eviction
+                // (which subtracts the full slot.bytes) stays in balance.
+                self.resident_bytes += 48;
+            }
+            let slot = self.slots[pid as usize].get_or_insert_with(|| SolutionSlot {
+                solution: PatternSolution::Pairs(FnvMap::default()),
+                last_used: self.epoch,
+                hit: true,
+                bytes: 48,
+            });
+            slot.hit = true;
+            slot.last_used = self.epoch;
+            match &mut slot.solution {
+                PatternSolution::Pairs(m) => {
+                    if m.insert(w, out).is_none() {
+                        slot.bytes += per_entry;
+                        self.resident_bytes += per_entry;
+                    }
+                }
+                PatternSolution::Table(_) => {
+                    unreachable!("a full table is never a solve miss")
+                }
+            }
+        }
+    }
+
+    /// Total solved entries resident across every pattern (full-range
+    /// table entries count individually).
+    pub fn solved_pairs(&self) -> usize {
+        self.slots
+            .iter()
+            .filter_map(|s| s.as_ref())
+            .map(|s| s.solution.len())
+            .sum()
+    }
+
+    /// Estimated resident bytes of all pattern solutions.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Pattern solutions evicted so far to honor the memory budget.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// The serializable warm state, in pattern-id order: (fault pattern,
+    /// solution) for every slot that is non-empty **and was hit** in this
+    /// cache's lifetime. Entries loaded from an earlier file but never
+    /// used since are dropped — that is what keeps warm-start files from
+    /// growing monotonically across model revisions.
+    pub fn save_parts(&self) -> Vec<(&GroupFaults, &PatternSolution)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(pid, s)| {
+                let slot = s.as_ref()?;
+                if !slot.hit || slot.solution.is_empty() {
+                    return None;
+                }
+                Some((&self.registry.ctx(pid as PatternId).faults, &slot.solution))
+            })
+            .collect()
+    }
+
+    /// Rebuild a cache from serialized parts. Returns `None` when the
+    /// parts are internally inconsistent (duplicate patterns, empty
+    /// solutions, or full-range tables of the wrong length for `cfg`).
+    /// Rehydrated slots start with `hit = false` (see
+    /// [`SolveCache::save_parts`]).
     pub fn from_parts(
         cfg: GroupConfig,
-        patterns: &[GroupFaults],
-        pairs: Vec<(PatternId, i64)>,
-        outcomes: Vec<Outcome>,
+        parts: Vec<(GroupFaults, PatternSolution)>,
         pipeline: Option<PipelineOptions>,
     ) -> Option<SolveCache> {
-        if pairs.len() != outcomes.len() {
-            return None;
-        }
-        let mut registry = PatternRegistry::new(cfg);
-        for (i, p) in patterns.iter().enumerate() {
-            if registry.intern(p) as usize != i {
+        let mut cache = SolveCache::new(cfg);
+        cache.pipeline = pipeline;
+        let cells = cfg.cells();
+        for (i, (pattern, solution)) in parts.into_iter().enumerate() {
+            if cache.registry.intern(&pattern) as usize != i {
                 return None; // duplicate pattern in the stream
             }
-        }
-        let mut index: FnvMap<(PatternId, i64), u32> = FnvMap::default();
-        for (slot, &(pid, w)) in pairs.iter().enumerate() {
-            if (pid as usize) >= registry.len() {
+            if solution.is_empty() {
                 return None;
             }
-            if index.insert((pid, w), slot as u32).is_some() {
-                return None; // duplicate (pattern, weight) pair
+            if let PatternSolution::Table(t) = &solution {
+                if t.len() as i64 != 2 * cache.max_w + 1 {
+                    return None;
+                }
             }
+            let bytes = solution.estimated_bytes(cells);
+            cache.resident_bytes += bytes;
+            cache.slots.push(Some(SolutionSlot {
+                solution,
+                last_used: 0,
+                hit: false,
+                bytes,
+            }));
         }
-        Some(SolveCache { registry, index, solved: outcomes, pipeline })
+        Some(cache)
     }
 }
 
@@ -348,66 +550,100 @@ mod tests {
         }
     }
 
-    #[test]
-    fn solve_cache_slots_and_absorb_roundtrip() {
-        let cfg = GroupConfig::R2C2;
-        let mut cache = SolveCache::new(cfg);
-        let free = GroupFaults::free(cfg.cells());
-        let pids = vec![cache.registry.intern(&free); 4];
-        let weights = [3i64, 7, 3, 7];
-        let (slots, fresh) = cache.dedupe(&pids, &weights);
-        assert_eq!(fresh, vec![(0, 3), (0, 7)]);
-        assert_eq!(slots, vec![0, 1, 0, 1]);
-        let outcomes: Vec<Outcome> = fresh
-            .iter()
-            .map(|&(_, w)| Outcome {
-                decomposition: Decomposition::encode_ideal(w, &cfg),
-                error: 0,
-                stage: Stage::FastPath,
-            })
-            .collect();
-        cache.absorb(outcomes);
-        assert_eq!(cache.solved_pairs(), 2);
-        // Second tensor through the same cache: all hits.
-        let (slots2, fresh2) = cache.dedupe(&pids[..2], &[7, 3]);
-        assert!(fresh2.is_empty());
-        assert_eq!(slots2, vec![1, 0]);
-        assert_eq!(
-            cache.outcome(slots2[1]).decomposition,
-            Decomposition::encode_ideal(3, &cfg)
-        );
+    fn ideal_outcome(cfg: &GroupConfig, w: i64) -> Outcome {
+        Outcome {
+            decomposition: Decomposition::encode_ideal(w, cfg),
+            error: 0,
+            stage: Stage::FastPath,
+        }
+    }
+
+    fn full_table(cfg: &GroupConfig) -> Vec<Outcome> {
+        let maxv = cfg.max_per_array();
+        (-maxv..=maxv).map(|w| ideal_outcome(cfg, w)).collect()
     }
 
     #[test]
-    fn dedupe_pending_spans_tensors_without_slot_collisions() {
+    fn table_install_makes_every_weight_resident() {
         let cfg = GroupConfig::R2C2;
         let mut cache = SolveCache::new(cfg);
         let free = GroupFaults::free(cfg.cells());
         let pid = cache.registry.intern(&free);
-        let mut pending = Vec::new();
-        // Two tensors deduped back-to-back before any absorb.
-        let s1 = cache.dedupe_pending(&[pid, pid], &[3, 7], &mut pending);
-        let s2 = cache.dedupe_pending(&[pid, pid, pid], &[7, 9, 3], &mut pending);
-        assert_eq!(s1, vec![0, 1]);
-        assert_eq!(s2, vec![1, 2, 0], "second tensor must reuse pending slots");
-        assert_eq!(pending, vec![(pid, 3), (pid, 7), (pid, 9)]);
-        let outcomes: Vec<Outcome> = pending
-            .iter()
-            .map(|&(_, w)| Outcome {
-                decomposition: Decomposition::encode_ideal(w, &cfg),
-                error: 0,
-                stage: Stage::FastPath,
-            })
-            .collect();
-        cache.absorb(outcomes);
-        assert_eq!(
-            cache.outcome(s2[1]).decomposition,
-            Decomposition::encode_ideal(9, &cfg)
-        );
+        cache.begin_batch();
+        assert!(!cache.touch(pid, 3), "nothing resident before install");
+        assert!(cache.get(pid, 3).is_none());
+        cache.install_table(pid, full_table(&cfg));
+        // EVERY representable weight is now an O(1) hit — including ones
+        // never requested before.
+        for w in [-30i64, -7, 0, 3, 30] {
+            assert!(cache.touch(pid, w), "w={w} must be resident");
+            assert_eq!(
+                cache.get(pid, w).unwrap().decomposition,
+                Decomposition::encode_ideal(w, &cfg)
+            );
+        }
+        assert_eq!(cache.solved_pairs(), 61);
+        assert!(cache.resident_bytes() > 0);
     }
 
     #[test]
-    fn cache_pairs_and_from_parts_roundtrip() {
+    fn pairs_install_is_per_weight() {
+        let cfg = GroupConfig::R2C2;
+        let mut cache = SolveCache::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let pid = cache.registry.intern(&free);
+        cache.begin_batch();
+        cache.install_pairs(vec![(pid, 3, ideal_outcome(&cfg, 3)), (pid, 7, ideal_outcome(&cfg, 7))]);
+        assert!(cache.touch(pid, 3));
+        assert!(cache.touch(pid, 7));
+        assert!(!cache.touch(pid, 9), "unsolved weight is not resident on the pairs tier");
+        assert_eq!(cache.solved_pairs(), 2);
+        // Duplicate install of the same weight does not double-count.
+        let before = cache.resident_bytes();
+        cache.install_pairs(vec![(pid, 3, ideal_outcome(&cfg, 3))]);
+        assert_eq!(cache.resident_bytes(), before);
+        assert_eq!(cache.solved_pairs(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_honors_budget_deterministically() {
+        let cfg = GroupConfig::R2C2;
+        let mut cache = SolveCache::new(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let mut f1 = GroupFaults::free(cfg.cells());
+        f1.pos[0] = FaultState::Sa1;
+        let mut f2 = GroupFaults::free(cfg.cells());
+        f2.neg[1] = FaultState::Sa0;
+        let a = cache.registry.intern(&free);
+        let b = cache.registry.intern(&f1);
+        let c = cache.registry.intern(&f2);
+
+        cache.begin_batch();
+        cache.install_table(a, full_table(&cfg));
+        cache.begin_batch();
+        cache.install_table(b, full_table(&cfg));
+        cache.begin_batch();
+        // Touch `a` so it is the most recently used despite oldest install.
+        assert!(cache.touch(a, 0));
+        cache.install_table(c, full_table(&cfg));
+        let one_table = cache.resident_bytes() / 3;
+
+        // Budget for two tables: the LRU victim must be `b` (oldest
+        // last-used epoch), not `a` (touched) or `c` (newest).
+        cache.set_table_memory_bytes(2 * one_table + one_table / 2);
+        cache.begin_batch();
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.get(b, 0).is_none(), "LRU victim must be b");
+        assert!(cache.get(a, 0).is_some());
+        assert!(cache.get(c, 0).is_some());
+        assert!(cache.resident_bytes() <= 2 * one_table + one_table / 2);
+        // A re-install after eviction works (re-solve path).
+        cache.install_table(b, full_table(&cfg));
+        assert!(cache.get(b, 0).is_some());
+    }
+
+    #[test]
+    fn save_parts_skips_never_hit_and_roundtrips() {
         let cfg = GroupConfig::R2C2;
         let mut cache = SolveCache::new(cfg);
         let free = GroupFaults::free(cfg.cells());
@@ -415,40 +651,40 @@ mod tests {
         faulty.pos[0] = FaultState::Sa1;
         let a = cache.registry.intern(&free);
         let b = cache.registry.intern(&faulty);
-        let (slots, fresh) = cache.dedupe(&[a, b, a], &[5, 5, 2]);
-        let outcomes: Vec<Outcome> = fresh
-            .iter()
-            .map(|&(_, w)| Outcome {
-                decomposition: Decomposition::encode_ideal(w, &cfg),
-                error: 0,
-                stage: Stage::FastPath,
-            })
-            .collect();
-        cache.absorb(outcomes);
-        let pairs = cache.pairs();
-        assert_eq!(pairs, vec![(a, 5), (b, 5), (a, 2)]);
+        cache.begin_batch();
+        cache.install_table(a, full_table(&cfg));
+        cache.install_pairs(vec![(b, 5, ideal_outcome(&cfg, 5))]);
 
-        let patterns: Vec<GroupFaults> = cache.registry.patterns().cloned().collect();
-        let saved: Vec<Outcome> =
-            (0..pairs.len() as u32).map(|s| cache.outcome(s).clone()).collect();
-        let mut rebuilt =
-            SolveCache::from_parts(cfg, &patterns, pairs, saved, cache.pipeline().copied())
-                .expect("consistent parts must rebuild");
-        assert_eq!(rebuilt.solved_pairs(), cache.solved_pairs());
-        // The rebuilt cache resolves the same pairs to the same slots.
-        let pids = rebuilt.registry.intern_all(&[free.clone(), faulty, free.clone()]);
-        let (slots2, fresh2) = rebuilt.dedupe(&pids, &[5, 5, 2]);
-        assert!(fresh2.is_empty(), "rebuilt cache must already hold every pair");
-        assert_eq!(slots2, slots);
+        let parts: Vec<(GroupFaults, PatternSolution)> = cache
+            .save_parts()
+            .into_iter()
+            .map(|(p, s)| (p.clone(), s.clone()))
+            .collect();
+        assert_eq!(parts.len(), 2, "both freshly solved patterns are saved");
+
+        let mut warm = SolveCache::from_parts(cfg, parts, cache.pipeline().copied())
+            .expect("consistent parts must rebuild");
+        assert_eq!(warm.solved_pairs(), cache.solved_pairs());
+        let pid_a = warm.registry.intern(&free);
+        assert_eq!(warm.get(pid_a, 3).unwrap().decomposition, Decomposition::encode_ideal(3, &cfg));
+
+        // Never-hit slots are dropped at the next save: only the table we
+        // actually touched after reload survives.
+        warm.begin_batch();
+        assert!(warm.touch(pid_a, 3));
+        let second = warm.save_parts();
+        assert_eq!(second.len(), 1, "never-hit warm entries must be skipped");
+        assert_eq!(second[0].0, &free);
 
         // Inconsistent parts are rejected, not mis-assembled.
-        assert!(SolveCache::from_parts(cfg, &[free.clone(), free.clone()], vec![], vec![], None)
-            .is_none());
-        let one = Outcome {
-            decomposition: Decomposition::encode_ideal(1, &cfg),
-            error: 0,
-            stage: Stage::FastPath,
-        };
-        assert!(SolveCache::from_parts(cfg, &[free], vec![(7, 1)], vec![one], None).is_none());
+        let dup = vec![
+            (free.clone(), PatternSolution::Table(full_table(&cfg))),
+            (free.clone(), PatternSolution::Table(full_table(&cfg))),
+        ];
+        assert!(SolveCache::from_parts(cfg, dup, None).is_none());
+        let short = vec![(free.clone(), PatternSolution::Table(vec![ideal_outcome(&cfg, 0)]))];
+        assert!(SolveCache::from_parts(cfg, short, None).is_none());
+        let empty = vec![(free, PatternSolution::Pairs(crate::util::fnv::FnvMap::default()))];
+        assert!(SolveCache::from_parts(cfg, empty, None).is_none());
     }
 }

@@ -1,34 +1,41 @@
-//! Per-chip, per-model compilation driver — dedupe-first.
+//! Per-chip, per-model compilation driver — solve-once-per-pattern.
 //!
 //! This is the L3 coordinator proper; the public face of it is the
-//! chip-scoped [`CompileSession`] (see [`super::session`]), and the free
-//! functions here remain as deprecated one-shot shims. The pattern-class
-//! core runs four phases per tensor (batched across tensors by
-//! [`compile_batch_with_cache`]):
+//! chip-scoped [`super::CompileSession`] (see [`super::session`]). The
+//! pattern-class core runs four phases per batch
+//! ([`compile_batch_with_cache`]):
 //!
 //! 1. **Scan** — intern every group's fault pattern into the chip's
-//!    [`PatternRegistry`]; each class gets one shared [`PatternCtx`]
-//!    (lazy `FaultAnalysis` + `GroupTables`).
-//! 2. **Dedupe** — collapse the tensor to its unique (pattern, weight)
-//!    pairs against the chip-wide [`SolveCache`]; pairs already solved by
-//!    an earlier tensor of the same chip are reused outright.
-//! 3. **Solve** — decompose each fresh pair exactly once, fanned out over
-//!    an atomic-counter work-stealing scheduler
-//!    ([`crate::util::pool::parallel_work_steal`]). Slot order is fixed by
-//!    the scan, so results are byte-deterministic at any thread count.
-//! 4. **Scatter** — map solved pairs back to weight indices and aggregate
-//!    stage counts/timings for the Table II / Fig 10 reports.
+//!    [`super::PatternRegistry`]; each class gets one shared
+//!    [`super::PatternCtx`] (lazy `FaultAnalysis` + `GroupTables`).
+//! 2. **Dedupe** — resolve every (pattern, weight) request against the
+//!    chip-wide [`SolveCache`]; anything already resident (solved by an
+//!    earlier tensor, batch, or session generation) is reused outright.
+//! 3. **Solve** — on the [`SolveTier::BatchTable`] tier the fresh work
+//!    unit is a **pattern**: each missing pattern is solved once for its
+//!    whole weight range ([`super::pipeline::solve_full_range`]) and
+//!    installed as a dense table; on [`SolveTier::PerWeight`] (the paper
+//!    baselines' cost model, and intractable configs) each missing pair
+//!    is solved individually. Both fan out over the atomic-counter
+//!    work-stealing scheduler ([`crate::util::pool::parallel_work_steal`]);
+//!    work order is fixed by the scan, so results are byte-deterministic
+//!    at any thread count.
+//! 4. **Scatter** — O(1) cache lookups map every weight back to its
+//!    outcome and aggregate stage counts/timings for the Table II /
+//!    Fig 10 reports.
 //!
 //! The legacy per-weight path (contiguous ranges + thread-local memo) is
 //! retained behind `CompileOptions::dedupe = false` as the equivalence
-//! baseline for tests and ablation benches.
+//! baseline for tests and ablation benches. The old free-function entry
+//! points (`compile_tensor`, `compile_tensor_with_cache`, `compile_model`)
+//! are gone — build a [`super::CompileSession`] (see its module docs for
+//! the migration table).
 
-use super::classes::{PatternId, SolveCache};
+use super::classes::{PatternId, SolveCache, DEFAULT_TABLE_MEMORY_BYTES};
 use super::pipeline::{
-    decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage, ALL_STAGES,
+    decompose_one, decompose_with_ctx, solve_full_range, Method, Outcome, PipelineOptions,
+    SolveTier, Stage, ALL_STAGES,
 };
-use super::session::CompileSession;
-use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::{Decomposition, GroupConfig};
 use crate::ilp::IlpStats;
@@ -67,6 +74,16 @@ pub struct CompileOptions {
     /// Charge wall time to per-stage buckets (Fig 10b). Two clock reads per
     /// solve; disable for pure-throughput runs (§Perf).
     pub time_stages: bool,
+    /// Requested solve-backend tier (see [`CompileOptions::effective_tier`]
+    /// for the gate that actually applies it). Default
+    /// [`SolveTier::BatchTable`]: solve each fault pattern once for its
+    /// whole weight range.
+    pub tier: SolveTier,
+    /// Resident-memory budget (estimated bytes) for per-pattern solution
+    /// tables in the chip's [`SolveCache`]; least-recently-used patterns
+    /// are evicted at batch boundaries once the estimate exceeds it.
+    /// Eviction costs re-solves, never correctness.
+    pub table_memory_bytes: usize,
 }
 
 impl CompileOptions {
@@ -78,6 +95,27 @@ impl CompileOptions {
             dedupe: true,
             memoize: true,
             time_stages: true,
+            tier: SolveTier::default(),
+            table_memory_bytes: DEFAULT_TABLE_MEMORY_BYTES,
+        }
+    }
+
+    /// The tier this compilation actually runs. [`SolveTier::BatchTable`]
+    /// applies only where enumerating the whole weight range per pattern
+    /// is the right trade: the Complete method on table-tractable configs
+    /// (range within the pipeline's table limit, ≤ 16 cells per array).
+    /// Everything else — the paper-protocol baselines (FF, ILP-only,
+    /// unprotected) and intractable configs — keeps the per-weight cost
+    /// model, cached in bounded per-pattern maps.
+    pub fn effective_tier(&self) -> SolveTier {
+        if self.tier == SolveTier::BatchTable
+            && self.pipeline.method == Method::Complete
+            && self.cfg.max_per_array() <= self.pipeline.table_value_limit
+            && self.cfg.cells() <= 16
+        {
+            SolveTier::BatchTable
+        } else {
+            SolveTier::PerWeight
         }
     }
 }
@@ -105,6 +143,16 @@ pub struct CompileStats {
     /// Pattern classes that materialized decomposition tables (chip-wide
     /// snapshot at the end of this compilation).
     pub tables_built: usize,
+    /// Full-range pattern solution tables batch-solved by this compilation
+    /// — the number of solve *sweeps* on the `BatchTable` tier (the
+    /// pair-cache baseline sweeps once per unique pair instead).
+    pub pattern_tables_built: usize,
+    /// Pattern solutions evicted so far to honor the memory budget
+    /// (chip-wide gauge).
+    pub table_evictions: u64,
+    /// Estimated resident bytes of pattern solutions (chip-wide gauge at
+    /// the end of this compilation).
+    pub resident_table_bytes: usize,
     pub ilp: IlpStats,
     /// Σ |w − w̃| over all weights (integer domain).
     pub total_abs_error: u64,
@@ -157,6 +205,9 @@ impl CompileStats {
         // (growing) registry, so the merged value is the latest snapshot.
         self.unique_patterns = self.unique_patterns.max(other.unique_patterns);
         self.tables_built = self.tables_built.max(other.tables_built);
+        self.table_evictions = self.table_evictions.max(other.table_evictions);
+        self.resident_table_bytes = self.resident_table_bytes.max(other.resident_table_bytes);
+        self.pattern_tables_built += other.pattern_tables_built;
         self.unique_pairs += other.unique_pairs;
         self.dedup_hits += other.dedup_hits;
         self.ilp.nodes += other.ilp.nodes;
@@ -175,7 +226,7 @@ impl CompileStats {
             self.total_abs_error,
             self.memo_hits,
         );
-        if self.unique_pairs > 0 {
+        if self.unique_pairs > 0 || self.dedup_hits > 0 {
             s.push_str(&format!(
                 "patterns={} unique_pairs={} dedup_hits={} ({:.1}x dedup) tables_built={}\n",
                 self.unique_patterns,
@@ -183,6 +234,10 @@ impl CompileStats {
                 self.dedup_hits,
                 self.dedup_ratio(),
                 self.tables_built,
+            ));
+            s.push_str(&format!(
+                "pattern_tables={} resident_table_bytes={} evictions={}\n",
+                self.pattern_tables_built, self.resident_table_bytes, self.table_evictions,
             ));
         }
         for (name, c) in &self.stage_counts {
@@ -217,44 +272,6 @@ impl CompiledTensor {
     }
 }
 
-/// Compile one tensor of quantized integer weights against per-group fault
-/// maps. `weights.len() == faults.len()`.
-///
-/// Deprecated entry point, kept as a one-shot shim for one release: it
-/// routes through a stack-local [`CompileSession`], so nothing is cached
-/// past the call. Prefer building a [`CompileSession`] (per chip) and
-/// compiling every tensor of that chip through it — recurring (pattern,
-/// weight) pairs are then solved once per chip, and the session can be
-/// persisted for warm-start recompiles.
-pub fn compile_tensor(
-    weights: &[i64],
-    faults: &[GroupFaults],
-    opts: &CompileOptions,
-) -> CompiledTensor {
-    if !opts.dedupe {
-        return compile_tensor_per_weight(weights, faults, opts);
-    }
-    CompileSession::one_shot(opts).compile_with_faults(weights, faults)
-}
-
-/// Pattern-class compilation against a caller-owned chip-wide cache.
-/// Tensors compiled through the same cache share interned patterns and
-/// solved (pattern, weight) pairs.
-///
-/// Deprecated entry point, kept as a shim for one release: a
-/// [`CompileSession`] owns the cache for you (and can persist it). It is a
-/// batch of one over [`compile_batch_with_cache`].
-pub fn compile_tensor_with_cache(
-    weights: &[i64],
-    faults: &[GroupFaults],
-    opts: &CompileOptions,
-    cache: &mut SolveCache,
-) -> CompiledTensor {
-    compile_batch_with_cache(&[TensorJob { weights, faults }], opts, cache)
-        .pop()
-        .expect("batch of one yields one result")
-}
-
 /// One tensor's input to a batched compilation: parallel slices of weights
 /// and their per-group fault maps.
 #[derive(Clone, Copy, Debug)]
@@ -266,20 +283,28 @@ pub struct TensorJob<'a> {
 /// Compile a batch of tensors against one chip-wide cache in a single
 /// scan → dedupe → solve → scatter round: every tensor is scanned and
 /// deduped first (in batch order), then **one** work-stealing fan-out
-/// solves the union of fresh (pattern, weight) pairs, then results are
-/// scattered per tensor. Batching widens the solve phase — a pair shared
+/// solves the union of fresh work, then results are scattered per tensor
+/// by O(1) cache lookups. Batching widens the solve phase — work shared
 /// by two queued tensors is solved once, and small tensors no longer
 /// leave workers idle between solve phases.
 ///
-/// Slot order is fixed by the scan (batch order), so results are
+/// The fresh work unit depends on [`CompileOptions::effective_tier`]:
+/// `BatchTable` fans out one [`solve_full_range`] build per missing
+/// *pattern* (every weight of that pattern — requested now or by any
+/// later tensor — becomes a table read); `PerWeight` fans out one
+/// [`decompose_with_ctx`] per missing *pair* (the paper baselines' cost
+/// model). Work order is fixed by the scan (batch order), so results are
 /// byte-identical to compiling the same tensors one at a time through the
-/// same cache, at any thread count.
+/// same cache, at any thread count — and identical across tiers.
 ///
-/// Per-tensor statistics: solve time and ILP work are charged to the
-/// tensor that first introduced each fresh pair; the residual batch wall
-/// time (scan/dedupe/scatter) is attributed proportionally to tensor
-/// size, so summing per-tensor `wall_secs` recovers the batch wall at
-/// `threads == 1`.
+/// Per-tensor statistics: solve time, table builds and ILP work are
+/// charged to the tensor that first introduced each fresh pattern/pair;
+/// the residual batch wall time (scan/dedupe/scatter) is attributed
+/// proportionally to tensor size, so summing per-tensor `wall_secs`
+/// recovers the batch wall at `threads == 1`. `unique_pairs` counts the
+/// distinct (pattern, weight) requests that were not already resident —
+/// on a warm cache it is 0 even for weight values never compiled before,
+/// because their pattern's table already answers them.
 pub fn compile_batch_with_cache(
     jobs: &[TensorJob<'_>],
     opts: &CompileOptions,
@@ -293,56 +318,92 @@ pub fn compile_batch_with_cache(
     }
     assert_eq!(*cache.registry.cfg(), opts.cfg, "solve cache bound to a different config");
     cache.bind_pipeline(&opts.pipeline);
+    cache.set_table_memory_bytes(opts.table_memory_bytes);
+    cache.begin_batch();
     let timer = Timer::start();
     let threads = opts.threads.max(1);
+    let tier = opts.effective_tier();
 
     // Phases 1+2 per tensor, in batch order — scan: intern each group's
-    // fault pattern; dedupe: collect fresh (pattern, weight) pairs.
-    let mut fresh: Vec<(PatternId, i64)> = Vec::new();
-    let mut tensor_slots: Vec<Vec<u32>> = Vec::with_capacity(jobs.len());
-    let mut fresh_ranges: Vec<std::ops::Range<usize>> = Vec::with_capacity(jobs.len());
-    for j in jobs {
-        let pids = cache.registry.intern_all(j.faults);
-        let start = fresh.len();
-        let slots = cache.dedupe_pending(&pids, j.weights, &mut fresh);
-        tensor_slots.push(slots);
-        fresh_ranges.push(start..fresh.len());
-    }
-
-    // Phase 3 — solve the union of fresh pairs exactly once (work-
-    // stealing; slot order was fixed by the scan, so output is
-    // thread-count independent).
-    let registry = &cache.registry;
-    let solved: Vec<(Outcome, IlpStats, f64)> =
-        parallel_work_steal(fresh.len(), threads, SOLVE_CHUNK, |i| {
-            let (pid, w) = fresh[i];
-            let ctx = registry.ctx(pid);
-            let mut ist = IlpStats::default();
-            let t = opts.time_stages.then(Timer::start);
-            let out = decompose_with_ctx(ctx, w, &opts.pipeline, &mut ist);
-            let secs = t.map(|t| t.secs()).unwrap_or(0.0);
-            (out, ist, secs)
-        });
-
-    // Charge each solved pair to the tensor that introduced it.
+    // fault pattern; dedupe: mark resident requests as hits, collect the
+    // fresh work (patterns or pairs, by tier) with the tensor that
+    // introduced each unit.
     let mut per_tensor: Vec<CompileStats> = vec![CompileStats::default(); jobs.len()];
-    let mut solve_secs = vec![0f64; jobs.len()];
-    let mut outcomes = Vec::with_capacity(solved.len());
-    let mut ti = 0usize;
-    for (i, (out, ist, secs)) in solved.into_iter().enumerate() {
-        while !fresh_ranges[ti].contains(&i) {
-            ti += 1;
-        }
+    let mut tensor_pids: Vec<Vec<PatternId>> = Vec::with_capacity(jobs.len());
+    let mut batch_seen: FnvMap<(PatternId, i64), ()> = FnvMap::default();
+    let mut queued_patterns: FnvMap<PatternId, ()> = FnvMap::default();
+    let mut fresh_patterns: Vec<(PatternId, usize)> = Vec::new();
+    let mut fresh_pairs: Vec<(PatternId, i64, usize)> = Vec::new();
+    for (ti, j) in jobs.iter().enumerate() {
+        let pids = cache.registry.intern_all(j.faults);
         let st = &mut per_tensor[ti];
-        st.clock.add(out.stage.bucket(), secs);
-        st.ilp.nodes += ist.nodes;
-        st.ilp.lp_solves += ist.lp_solves;
-        solve_secs[ti] += secs;
-        outcomes.push(out);
+        for (&pid, &w) in pids.iter().zip(j.weights.iter()) {
+            if cache.touch(pid, w) || batch_seen.insert((pid, w), ()).is_some() {
+                st.dedup_hits += 1;
+                continue;
+            }
+            st.unique_pairs += 1;
+            match tier {
+                SolveTier::BatchTable => {
+                    if queued_patterns.insert(pid, ()).is_none() {
+                        fresh_patterns.push((pid, ti));
+                    }
+                }
+                SolveTier::PerWeight => fresh_pairs.push((pid, w, ti)),
+            }
+        }
+        tensor_pids.push(pids);
     }
-    cache.absorb(outcomes);
 
-    // Phase 4 — scatter solved pairs back to each tensor's weight indices.
+    // Phase 3 — solve the fresh work exactly once (work-stealing; work
+    // order was fixed by the scan, so output is thread-count independent).
+    let mut solve_secs = vec![0f64; jobs.len()];
+    match tier {
+        SolveTier::BatchTable => {
+            let registry = &cache.registry;
+            let built: Vec<(Vec<Outcome>, StageClock, f64)> =
+                parallel_work_steal(fresh_patterns.len(), threads, 1, |i| {
+                    let (pid, _) = fresh_patterns[i];
+                    let t = opts.time_stages.then(Timer::start);
+                    let (outs, clock) =
+                        solve_full_range(registry.ctx(pid), &opts.pipeline, opts.time_stages);
+                    let secs = t.map(|t| t.secs()).unwrap_or(0.0);
+                    (outs, clock, secs)
+                });
+            for (&(pid, ti), (outs, clock, secs)) in fresh_patterns.iter().zip(built) {
+                let st = &mut per_tensor[ti];
+                st.clock.merge(&clock);
+                st.pattern_tables_built += 1;
+                solve_secs[ti] += secs;
+                cache.install_table(pid, outs);
+            }
+        }
+        SolveTier::PerWeight => {
+            let registry = &cache.registry;
+            let solved: Vec<(Outcome, IlpStats, f64)> =
+                parallel_work_steal(fresh_pairs.len(), threads, SOLVE_CHUNK, |i| {
+                    let (pid, w, _) = fresh_pairs[i];
+                    let ctx = registry.ctx(pid);
+                    let mut ist = IlpStats::default();
+                    let t = opts.time_stages.then(Timer::start);
+                    let out = decompose_with_ctx(ctx, w, &opts.pipeline, &mut ist);
+                    let secs = t.map(|t| t.secs()).unwrap_or(0.0);
+                    (out, ist, secs)
+                });
+            let mut entries = Vec::with_capacity(solved.len());
+            for (&(pid, w, ti), (out, ist, secs)) in fresh_pairs.iter().zip(solved) {
+                let st = &mut per_tensor[ti];
+                st.clock.add(out.stage.bucket(), secs);
+                st.ilp.nodes += ist.nodes;
+                st.ilp.lp_solves += ist.lp_solves;
+                solve_secs[ti] += secs;
+                entries.push((pid, w, out));
+            }
+            cache.install_pairs(entries);
+        }
+    }
+
+    // Phase 4 — scatter: O(1) lookups map every weight to its outcome.
     let mut scattered: Vec<(Vec<Decomposition>, Vec<i64>, HashMap<&'static str, usize>)> =
         Vec::with_capacity(jobs.len());
     for (ti, j) in jobs.iter().enumerate() {
@@ -351,8 +412,8 @@ pub fn compile_batch_with_cache(
         let mut decomps = Vec::with_capacity(n);
         let mut errors = Vec::with_capacity(n);
         let mut counts: HashMap<&'static str, usize> = HashMap::new();
-        for &slot in &tensor_slots[ti] {
-            let out = cache.outcome(slot);
+        for (&pid, &w) in tensor_pids[ti].iter().zip(j.weights.iter()) {
+            let out = cache.get(pid, w).expect("every request was resident or solved this batch");
             *counts.entry(out.stage.name()).or_insert(0) += 1;
             if out.error != 0 {
                 stats.imperfect += 1;
@@ -373,10 +434,11 @@ pub fn compile_batch_with_cache(
         let mut stats = std::mem::take(&mut per_tensor[ti]);
         let n = decomps.len();
         stats.weights = n;
-        stats.unique_pairs = fresh_ranges[ti].len();
-        stats.dedup_hits = n - stats.unique_pairs;
+        debug_assert_eq!(stats.unique_pairs + stats.dedup_hits, n);
         stats.unique_patterns = cache.registry.len();
         stats.tables_built = cache.registry.tables_built();
+        stats.table_evictions = cache.evictions();
+        stats.resident_table_bytes = cache.resident_bytes();
         stats.stage_counts = ALL_STAGES
             .iter()
             .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
@@ -491,35 +553,40 @@ fn compile_range(
     (out, stats)
 }
 
-/// Compile a whole model (a list of named integer-weight tensors) against a
-/// chip's fault bank. Returns per-tensor results in input order.
-///
-/// On the pattern-class path all tensors share one chip-wide [`SolveCache`]
-/// — a (pattern, weight) pair recurring across layers is solved exactly
-/// once for the whole model.
-///
-/// Deprecated entry point, kept as a shim for one release: it builds a
-/// throwaway [`CompileSession`] internally, so the chip-wide cache dies
-/// with the call. Prefer `CompileSession::builder(cfg)…chip(chip)` — the
-/// session keeps the cache alive across model revisions and can persist
-/// it (`save`/`load`) for warm-start recompiles.
-pub fn compile_model(
-    tensors: &[(String, Vec<i64>)],
-    chip: &ChipFaults,
-    opts: &CompileOptions,
-) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
-    CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip).compile_model(tensors)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::session::CompileSession;
+    use crate::fault::bank::ChipFaults;
     use crate::fault::FaultRates;
     use crate::util::prng::Rng;
 
     fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
         let mut rng = Rng::new(seed);
         (0..n).map(|_| rng.range_i64(-max, max)).collect()
+    }
+
+    /// One-shot compile against explicit fault maps (the old free-function
+    /// surface, now a detached throwaway session).
+    fn compile_tensor(
+        weights: &[i64],
+        faults: &[GroupFaults],
+        opts: &CompileOptions,
+    ) -> CompiledTensor {
+        CompileSession::builder(opts.cfg)
+            .options(opts.clone())
+            .detached()
+            .compile_with_faults(weights, faults)
+    }
+
+    /// One-shot model compile against a chip (the old `compile_model`
+    /// surface, now a throwaway chip session).
+    fn compile_model(
+        tensors: &[(String, Vec<i64>)],
+        chip: &ChipFaults,
+        opts: &CompileOptions,
+    ) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
+        CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip).compile_model(tensors)
     }
 
     #[test]
@@ -609,18 +676,80 @@ mod tests {
         let f0 = chip.sample_tensor(0, ws0.len(), cfg.cells());
         let f1 = chip.sample_tensor(1, ws1.len(), cfg.cells());
         let mut cache = SolveCache::new(cfg);
-        let a = compile_tensor_with_cache(&ws0, &f0, &opts, &mut cache);
-        let solved_after_first = cache.solved_pairs();
-        let b = compile_tensor_with_cache(&ws1, &f1, &opts, &mut cache);
-        // The second tensor reuses the first tensor's solved pairs: it adds
-        // far fewer fresh pairs than it has weights.
+        let a = compile_batch_with_cache(&[TensorJob { weights: &ws0, faults: &f0 }], &opts, &mut cache)
+            .pop()
+            .unwrap();
+        let b = compile_batch_with_cache(&[TensorJob { weights: &ws1, faults: &f1 }], &opts, &mut cache)
+            .pop()
+            .unwrap();
+        // The second tensor reuses the first tensor's pattern tables: it
+        // needs far fewer fresh solves than it has weights, and builds far
+        // fewer tables than the first.
         assert!(b.stats.unique_pairs < ws1.len() / 2, "cross-tensor reuse missing");
-        assert_eq!(cache.solved_pairs(), solved_after_first + b.stats.unique_pairs);
+        assert!(b.stats.pattern_tables_built < a.stats.pattern_tables_built);
         // And results are identical to standalone compilation.
         let standalone = compile_tensor(&ws1, &f1, &opts);
         assert_eq!(b.decomps, standalone.decomps);
         assert_eq!(b.errors, standalone.errors);
-        let _ = a;
+    }
+
+    #[test]
+    fn tiers_are_byte_identical_and_tables_amortize() {
+        let cfg = GroupConfig::R2C2;
+        let ws = random_weights(4_000, cfg.max_per_array(), 33);
+        let chip = ChipFaults::new(6, FaultRates::paper_default());
+        let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+        let batch = compile_tensor(&ws, &faults, &CompileOptions::new(cfg, Method::Complete));
+        let mut pw = CompileOptions::new(cfg, Method::Complete);
+        pw.tier = SolveTier::PerWeight;
+        let per_weight = compile_tensor(&ws, &faults, &pw);
+        assert_eq!(batch.decomps, per_weight.decomps);
+        assert_eq!(batch.errors, per_weight.errors);
+        assert_eq!(batch.stats.stage_counts, per_weight.stats.stage_counts);
+        assert_eq!(batch.stats.unique_pairs, per_weight.stats.unique_pairs);
+        // Fresh solve sweeps: one table build per pattern vs one
+        // value-table sweep per unique pair — ≥2x fewer on R2C2.
+        assert!(batch.stats.pattern_tables_built > 0);
+        assert!(
+            batch.stats.pattern_tables_built * 2 <= per_weight.stats.unique_pairs,
+            "table builds {} not ≥2x below pair sweeps {}",
+            batch.stats.pattern_tables_built,
+            per_weight.stats.unique_pairs
+        );
+        assert_eq!(per_weight.stats.pattern_tables_built, 0);
+        // Baselines are gated off the BatchTable tier automatically.
+        let ilp = CompileOptions::new(cfg, Method::IlpOnly);
+        assert_eq!(ilp.effective_tier(), SolveTier::PerWeight);
+        assert_eq!(
+            CompileOptions::new(cfg, Method::Complete).effective_tier(),
+            SolveTier::BatchTable
+        );
+    }
+
+    #[test]
+    fn warm_table_serves_never_seen_weights_without_solving() {
+        // The tentpole payoff over pair caching: once a pattern's table is
+        // resident, weight values never compiled before are pure lookups.
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(12, FaultRates::paper_default());
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let f = chip.sample_tensor(0, 3_000, cfg.cells());
+        let base = random_weights(3_000, cfg.max_per_array(), 9);
+        let neg: Vec<i64> = base.iter().map(|w| -w.abs()).collect();
+        let pos: Vec<i64> = base.iter().map(|w| w.abs()).collect();
+        let mut cache = SolveCache::new(cfg);
+        let a = compile_batch_with_cache(&[TensorJob { weights: &neg, faults: &f }], &opts, &mut cache)
+            .pop()
+            .unwrap();
+        assert!(a.stats.unique_pairs > 0);
+        let b = compile_batch_with_cache(&[TensorJob { weights: &pos, faults: &f }], &opts, &mut cache)
+            .pop()
+            .unwrap();
+        assert_eq!(b.stats.unique_pairs, 0, "pattern tables must answer never-seen weights");
+        assert_eq!(b.stats.pattern_tables_built, 0);
+        let standalone = compile_tensor(&pos, &f, &opts);
+        assert_eq!(b.decomps, standalone.decomps);
+        assert_eq!(b.errors, standalone.errors);
     }
 
     #[test]

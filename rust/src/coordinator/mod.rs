@@ -1,5 +1,6 @@
 //! L3 coordinator: the paper's compilation pipeline (§V, Fig 7), the
-//! pattern-class registry that dedupes it, the chip-scoped
+//! pattern-class registry and per-pattern solution tables that dedupe it
+//! (solve once per pattern, not per weight), the chip-scoped
 //! [`CompileSession`] API (with persistent warm-start) wrapped around
 //! both, and the multi-chip [`CompileService`] batching front-end.
 
@@ -9,12 +10,17 @@ pub mod pipeline;
 pub mod service;
 pub mod session;
 
-pub use classes::{PatternCtx, PatternId, PatternRegistry, SolveCache};
-pub use compiler::{
-    compile_batch_with_cache, compile_model, compile_tensor, compile_tensor_with_cache,
-    CompileOptions, CompileStats, CompiledTensor, TensorJob,
+pub use classes::{
+    PatternCtx, PatternId, PatternRegistry, PatternSolution, SolveCache,
+    DEFAULT_TABLE_MEMORY_BYTES,
 };
-pub use pipeline::{decompose_one, decompose_with_ctx, Method, Outcome, PipelineOptions, Stage};
+pub use compiler::{
+    compile_batch_with_cache, CompileOptions, CompileStats, CompiledTensor, TensorJob,
+};
+pub use pipeline::{
+    decompose_one, decompose_with_ctx, solve_full_range, Method, Outcome, PipelineOptions,
+    SolveTier, Stage,
+};
 pub use service::{CompileService, JobResult, ServiceOptions};
 pub use session::{CompileSession, SessionBuilder};
 

@@ -133,7 +133,11 @@ impl CompileService {
             let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
             if let Ok(mut s) = CompileSession::load(&path) {
                 if s.matches(&chip, &self.sopts.opts) {
+                    // Execution knobs are not part of the cache key — apply
+                    // the service's configuration to the rehydrated session.
                     s.set_time_stages(self.sopts.opts.time_stages);
+                    s.set_solve_tier(self.sopts.opts.tier);
+                    s.set_table_memory_bytes(self.sopts.opts.table_memory_bytes);
                     return s;
                 }
             }

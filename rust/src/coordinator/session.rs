@@ -24,18 +24,14 @@
 //! let again = warm.compile_tensor("conv1", &weights);       // zero solves
 //! ```
 //!
-//! ## Migration from the free-function API
+//! ## Migration from the free-function API (removed)
 //!
 //! | old entry point                              | session method            |
 //! |----------------------------------------------|---------------------------|
-//! | `compile_tensor(ws, faults, opts)`           | `session.compile_with_faults(ws, faults)` |
+//! | `compile_tensor(ws, faults, opts)`           | `session.compile_with_faults(ws, faults)` (`.detached()` when there is no chip) |
 //! | `compile_tensor_with_cache(ws, f, opts, c)`  | same — the session owns the cache |
 //! | `compile_model(tensors, chip, opts)`         | `session.compile_model(tensors)` |
 //! | `nn::ChipCompiler::new(chip, opts)`          | unchanged (thin adapter over a session) |
-//!
-//! The free functions remain as deprecated-documented one-shot shims for
-//! one release; they route through a stack-local session and cache
-//! nothing past the call.
 //!
 //! ## Tensor identity
 //!
@@ -44,37 +40,48 @@
 //! tensor *name* (FNV-1a), so recompiling `"conv1"` in any later session
 //! of the same chip hits the same fault maps — that is what makes
 //! warm-start recompiles exact. [`CompileSession::compile_model`] uses
-//! sequential ids `0..n` (the historical `compile_model` protocol), and
+//! sequential ids `0..n` (the historical protocol), and
 //! [`CompileSession::compile_tensor_at`] takes an explicit id.
 //!
-//! ## Persistence format
+//! ## Persistence format ("RCSS" v2)
 //!
 //! `save` writes a versioned little-endian binary: magic/version header,
 //! the cache key (chip seed + fault rates, [`GroupConfig`], pipeline
-//! fingerprint = method + table limit + sparsest), the interned patterns
-//! in id order, the solved pairs in slot order with their outcomes, and a
-//! trailing FNV-1a checksum over everything before it. `load` verifies
-//! the checksum before parsing and rejects truncated, corrupted,
-//! version-mismatched, or internally inconsistent files with an error —
-//! never a silently wrong cache.
+//! fingerprint = method + table limit + sparsest), then **per-pattern
+//! solutions** — for each saved pattern its fault bytes, a tier tag, and
+//! either a dense full-range table (one entry per representable weight,
+//! the weight implicit in the index) or the individually solved (weight,
+//! outcome) entries sorted by weight — and a trailing FNV-1a checksum
+//! over everything before it. Patterns with no solved entries, and
+//! entries loaded from an earlier file but never hit since, are skipped,
+//! so warm-start files do not grow monotonically across model revisions.
+//! `load` verifies the checksum before parsing and rejects truncated,
+//! corrupted, version-mismatched (including v1), or internally
+//! inconsistent files with an error — never a silently wrong cache.
 
-use super::classes::SolveCache;
+use super::classes::{PatternSolution, SolveCache};
 use super::compiler::{
-    compile_batch_with_cache, compile_tensor_per_weight, compile_tensor_with_cache,
-    CompileOptions, CompileStats, CompiledTensor, TensorJob,
+    compile_batch_with_cache, compile_tensor_per_weight, CompileOptions, CompileStats,
+    CompiledTensor, TensorJob,
 };
-use super::pipeline::{Method, Outcome, PipelineOptions, Stage};
+use super::pipeline::{Method, Outcome, PipelineOptions, SolveTier, Stage};
 use crate::fault::bank::ChipFaults;
 use crate::fault::{FaultRates, FaultState, GroupFaults};
 use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::util::fnv::FnvMap;
 use crate::util::prop::fnv1a;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 /// Magic marker of the session cache format ("RCSS").
 pub const SESSION_MAGIC: u32 = 0x5243_5353;
-/// Current session cache format version.
-pub const SESSION_VERSION: u32 = 1;
+/// Current session cache format version (v2 = per-pattern solution
+/// tables; v1 pair files are rejected with a clean version error).
+pub const SESSION_VERSION: u32 = 2;
+
+/// Per-pattern solution tags in the v2 format.
+const TAG_TABLE: u8 = 0;
+const TAG_PAIRS: u8 = 1;
 
 /// A tensor queued via [`CompileSession::submit`], compiled on
 /// [`CompileSession::drain`].
@@ -131,6 +138,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Solve-backend tier (default [`SolveTier::BatchTable`]: one solve
+    /// per pattern for its whole weight range). The tier never changes
+    /// outputs, only where solve time is spent — see
+    /// [`CompileOptions::effective_tier`] for the gate.
+    pub fn solve_tier(mut self, tier: SolveTier) -> SessionBuilder {
+        self.opts.tier = tier;
+        self
+    }
+
+    /// Resident-memory budget for per-pattern solution tables, in bytes
+    /// (default [`super::classes::DEFAULT_TABLE_MEMORY_BYTES`]).
+    /// Least-recently-used patterns are evicted at batch boundaries once
+    /// the estimate exceeds it; eviction costs re-solves, never changes
+    /// outputs.
+    pub fn table_memory_bytes(mut self, bytes: usize) -> SessionBuilder {
+        self.opts.table_memory_bytes = bytes.max(1);
+        self
+    }
+
     /// Charge wall time to per-stage buckets (default on; see
     /// [`CompileOptions::time_stages`]).
     pub fn time_stages(mut self, on: bool) -> SessionBuilder {
@@ -177,13 +203,6 @@ impl CompileSession {
         }
     }
 
-    /// Stack-local session for the deprecated one-shot shims: detached,
-    /// nothing outlives the call, no extra allocation beyond the cache the
-    /// one-shot path needs anyway.
-    pub(crate) fn one_shot(opts: &CompileOptions) -> CompileSession {
-        CompileSession::from_opts(opts.clone(), None)
-    }
-
     /// The chip this session compiles for (`None` when detached).
     pub fn chip(&self) -> Option<&ChipFaults> {
         self.chip.as_ref()
@@ -222,6 +241,18 @@ impl CompileSession {
     /// Toggle per-stage wall-time accounting.
     pub fn set_time_stages(&mut self, on: bool) {
         self.opts.time_stages = on;
+    }
+
+    /// Adjust the solve-backend tier (never changes outputs, only where
+    /// solve time is spent).
+    pub fn set_solve_tier(&mut self, tier: SolveTier) {
+        self.opts.tier = tier;
+    }
+
+    /// Adjust the pattern-solution memory budget (applies from the next
+    /// compilation batch; eviction never changes outputs).
+    pub fn set_table_memory_bytes(&mut self, bytes: usize) {
+        self.opts.table_memory_bytes = bytes.max(1);
     }
 
     /// Whether this session's cache key matches (chip seed + rates,
@@ -265,7 +296,7 @@ impl CompileSession {
 
     /// Compile one tensor against caller-supplied fault maps. This is the
     /// core every other compile method funnels into; it is also the
-    /// migration target of the old `compile_tensor` /
+    /// migration target of the removed `compile_tensor` /
     /// `compile_tensor_with_cache` free functions.
     pub fn compile_with_faults(
         &mut self,
@@ -273,7 +304,9 @@ impl CompileSession {
         faults: &[GroupFaults],
     ) -> CompiledTensor {
         let out = match self.cache.as_mut() {
-            Some(cache) => compile_tensor_with_cache(weights, faults, &self.opts, cache),
+            Some(cache) => compile_batch_with_cache(&[TensorJob { weights, faults }], &self.opts, cache)
+                .pop()
+                .expect("batch of one yields one result"),
             None => compile_tensor_per_weight(weights, faults, &self.opts),
         };
         self.stats.merge_with_wall(&out.stats);
@@ -378,7 +411,10 @@ impl CompileSession {
             .with_context(|| format!("write session cache {}", path.display()))
     }
 
-    /// Serialize to the session cache format (see module docs).
+    /// Serialize to the session cache format v2 (see module docs). Only
+    /// non-empty, hit pattern solutions are written — warm entries loaded
+    /// from an earlier file but never used since are dropped, so files do
+    /// not grow monotonically across model revisions.
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
         let chip = self
             .chip
@@ -396,10 +432,18 @@ impl CompileSession {
             bail!("config {} has {cells} cells per array; the session cache supports at most 16", self.opts.cfg);
         }
         let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
-        let pairs = cache.pairs();
+        let parts = cache.save_parts();
 
+        let push_outcome = |buf: &mut Vec<u8>, out: &Outcome| {
+            push_i64(buf, out.error);
+            buf.push(out.stage.code());
+            buf.extend_from_slice(&out.decomposition.pos.cells);
+            buf.extend_from_slice(&out.decomposition.neg.cells);
+        };
+
+        let entries: usize = parts.iter().map(|(_, s)| s.len()).sum();
         let mut buf: Vec<u8> =
-            Vec::with_capacity(64 + cache.registry.len() * 2 * cells + pairs.len() * (21 + 2 * cells));
+            Vec::with_capacity(80 + parts.len() * (2 * cells + 5) + entries * (17 + 2 * cells));
         push_u32(&mut buf, SESSION_MAGIC);
         push_u32(&mut buf, SESSION_VERSION);
         push_u64(&mut buf, chip.chip_seed);
@@ -412,21 +456,32 @@ impl CompileSession {
         buf.push(pipeline.sparsest as u8);
         push_i64(&mut buf, pipeline.table_value_limit);
         push_u32(&mut buf, cells as u32);
-        push_u32(&mut buf, cache.registry.len() as u32);
-        push_u32(&mut buf, pairs.len() as u32);
-        for pat in cache.registry.patterns() {
-            for f in pat.pos.iter().chain(&pat.neg) {
+        push_u32(&mut buf, parts.len() as u32);
+        for (pattern, solution) in parts {
+            for f in pattern.pos.iter().chain(&pattern.neg) {
                 buf.push(*f as u8);
             }
-        }
-        for (slot, &(pid, w)) in pairs.iter().enumerate() {
-            let out = cache.outcome(slot as u32);
-            push_u32(&mut buf, pid);
-            push_i64(&mut buf, w);
-            push_i64(&mut buf, out.error);
-            buf.push(out.stage.code());
-            buf.extend_from_slice(&out.decomposition.pos.cells);
-            buf.extend_from_slice(&out.decomposition.neg.cells);
+            match solution {
+                PatternSolution::Table(t) => {
+                    buf.push(TAG_TABLE);
+                    // Length implicit: 2·max_per_array + 1 entries, the
+                    // weight implicit in the index — smaller and faster
+                    // than v1's per-pair (pid, w) framing.
+                    for out in t {
+                        push_outcome(&mut buf, out);
+                    }
+                }
+                PatternSolution::Pairs(m) => {
+                    buf.push(TAG_PAIRS);
+                    push_u32(&mut buf, m.len() as u32);
+                    let mut ws: Vec<i64> = m.keys().copied().collect();
+                    ws.sort_unstable();
+                    for w in ws {
+                        push_i64(&mut buf, w);
+                        push_outcome(&mut buf, &m[&w]);
+                    }
+                }
+            }
         }
         let sum = fnv1a(&buf);
         push_u64(&mut buf, sum);
@@ -446,7 +501,8 @@ impl CompileSession {
     }
 
     /// Parse the session cache format, verifying the trailing checksum
-    /// first and rejecting any malformed input with an error.
+    /// first and rejecting any malformed input — including v1 pair-cache
+    /// files — with an error.
     pub fn from_bytes(bytes: &[u8]) -> Result<CompileSession> {
         if bytes.len() < 16 {
             bail!("truncated session cache ({} bytes)", bytes.len());
@@ -463,7 +519,10 @@ impl CompileSession {
         }
         let version = r.u32()?;
         if version != SESSION_VERSION {
-            bail!("unsupported session cache version {version} (this build reads {SESSION_VERSION})");
+            bail!(
+                "unsupported session cache version {version} (this build reads \
+                 {SESSION_VERSION}; v1 pair caches must be rebuilt)"
+            );
         }
         let chip_seed = r.u64()?;
         let p_sa0 = f64::from_bits(r.u64()?);
@@ -484,30 +543,25 @@ impl CompileSession {
         if cells != cfg.cells() || cells == 0 || cells > 16 {
             bail!("cell count {cells} disagrees with config {cfg}");
         }
+        // Checked range computation: a corrupt header must not overflow
+        // `max_per_array` or provoke absurd table allocations.
+        let max_w = (levels as i64)
+            .checked_pow(cols as u32)
+            .and_then(|p| p.checked_sub(1))
+            .and_then(|p| p.checked_mul(rows as i64))
+            .filter(|&m| m > 0 && m <= (1 << 24))
+            .ok_or_else(|| anyhow!("unreasonable weight range in session cache"))?;
+        debug_assert_eq!(max_w, cfg.max_per_array());
+        let table_len = (2 * max_w + 1) as usize;
+        let outcome_len = 9 + 2 * cells;
         let n_patterns = r.u32()? as usize;
-        let n_pairs = r.u32()? as usize;
-        let expected =
-            n_patterns as u64 * (2 * cells) as u64 + n_pairs as u64 * (21 + 2 * cells) as u64;
-        if r.remaining() as u64 != expected {
-            bail!(
-                "session cache payload size mismatch ({} bytes left, {expected} expected)",
-                r.remaining()
-            );
+        // Sanity cap before allocating: every pattern costs at least its
+        // fault bytes plus a tag.
+        if r.remaining() < n_patterns * (2 * cells + 1) {
+            bail!("session cache truncated ({n_patterns} patterns declared)");
         }
-        let mut patterns = Vec::with_capacity(n_patterns);
-        for _ in 0..n_patterns {
-            let pos = r.fault_states(cells)?;
-            let neg = r.fault_states(cells)?;
-            patterns.push(GroupFaults { pos, neg });
-        }
-        let mut pairs = Vec::with_capacity(n_pairs);
-        let mut outcomes = Vec::with_capacity(n_pairs);
-        for _ in 0..n_pairs {
-            let pid = r.u32()?;
-            if pid as usize >= n_patterns {
-                bail!("pattern id {pid} out of range ({n_patterns} patterns)");
-            }
-            let w = r.i64()?;
+
+        let read_outcome = |r: &mut Reader<'_>| -> Result<Outcome> {
             let error = r.i64()?;
             let stage = Stage::from_code(r.u8()?)
                 .ok_or_else(|| anyhow!("bad stage code in session cache"))?;
@@ -516,13 +570,53 @@ impl CompileSession {
             if pos.cells.iter().chain(&neg.cells).any(|&v| v as u32 >= levels) {
                 bail!("cell value exceeds {levels} levels in session cache");
             }
-            pairs.push((pid, w));
-            outcomes.push(Outcome { decomposition: Decomposition { pos, neg }, error, stage });
+            Ok(Outcome { decomposition: Decomposition { pos, neg }, error, stage })
+        };
+
+        let mut parts: Vec<(GroupFaults, PatternSolution)> = Vec::with_capacity(n_patterns);
+        for _ in 0..n_patterns {
+            let pos = r.fault_states(cells)?;
+            let neg = r.fault_states(cells)?;
+            let pattern = GroupFaults { pos, neg };
+            let solution = match r.u8()? {
+                TAG_TABLE => {
+                    if r.remaining() < table_len * outcome_len {
+                        bail!("session cache truncated inside a pattern table");
+                    }
+                    let mut outcomes = Vec::with_capacity(table_len);
+                    for _ in 0..table_len {
+                        outcomes.push(read_outcome(&mut r)?);
+                    }
+                    PatternSolution::Table(outcomes)
+                }
+                TAG_PAIRS => {
+                    let n = r.u32()? as usize;
+                    if n == 0 {
+                        bail!("empty pattern solution in session cache");
+                    }
+                    if r.remaining() < n * outcome_len {
+                        bail!("session cache truncated inside pattern pairs");
+                    }
+                    let mut m: FnvMap<i64, Outcome> = FnvMap::default();
+                    for _ in 0..n {
+                        let w = r.i64()?;
+                        let out = read_outcome(&mut r)?;
+                        if m.insert(w, out).is_some() {
+                            bail!("duplicate solved weight {w} in session cache");
+                        }
+                    }
+                    PatternSolution::Pairs(m)
+                }
+                t => bail!("bad pattern solution tag {t} in session cache"),
+            };
+            parts.push((pattern, solution));
         }
-        let cache = SolveCache::from_parts(cfg, &patterns, pairs, outcomes, Some(pipeline))
-            .ok_or_else(|| {
-                anyhow!("inconsistent session cache (duplicate patterns or solved pairs)")
-            })?;
+        if r.remaining() != 0 {
+            bail!("session cache has {} trailing bytes", r.remaining());
+        }
+        let cache = SolveCache::from_parts(cfg, parts, Some(pipeline)).ok_or_else(|| {
+            anyhow!("inconsistent session cache (duplicate patterns or malformed solutions)")
+        })?;
         let chip = ChipFaults::new(chip_seed, FaultRates { p_sa0, p_sa1 });
         let mut opts = CompileOptions::new(cfg, method);
         opts.pipeline = pipeline;
@@ -613,11 +707,10 @@ mod tests {
         let mut session = CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
         let a = session.compile_tensor_at(0, &ws);
         let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
-        let b = super::super::compiler::compile_tensor(
-            &ws,
-            &faults,
-            &CompileOptions::new(cfg, Method::Complete),
-        );
+        let b = CompileSession::builder(cfg)
+            .method(Method::Complete)
+            .detached()
+            .compile_with_faults(&ws, &faults);
         assert_eq!(a.decomps, b.decomps);
         assert_eq!(a.errors, b.errors);
         assert_eq!(session.tensors_compiled(), 1);
@@ -659,6 +752,56 @@ mod tests {
         assert_eq!(again.stats.unique_pairs, 0, "warm recompile must not solve");
         assert_eq!(again.decomps, first.decomps);
         assert_eq!(again.errors, first.errors);
+    }
+
+    #[test]
+    fn v2_cache_answers_never_compiled_weights_with_zero_solves() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(31, FaultRates::paper_default());
+        let base = random_weights(2_000, cfg.max_per_array(), 6);
+        let neg: Vec<i64> = base.iter().map(|w| -w.abs()).collect();
+        let pos: Vec<i64> = base.iter().map(|w| w.abs()).collect();
+        let mut cold = CompileSession::builder(cfg).chip(&chip);
+        let _ = cold.compile_tensor("t", &neg);
+        let bytes = cold.to_bytes().unwrap();
+        let mut warm = CompileSession::from_bytes(&bytes).unwrap();
+        // Same chip region, weight values never compiled before: the
+        // per-pattern tables answer them without a single fresh solve —
+        // the v1 pair cache would have re-solved every one.
+        let out = warm.compile_tensor("t", &pos);
+        assert_eq!(out.stats.unique_pairs, 0);
+        let mut check = CompileSession::builder(cfg).chip(&chip);
+        let want = check.compile_tensor("t", &pos);
+        assert_eq!(out.decomps, want.decomps);
+        assert_eq!(out.errors, want.errors);
+    }
+
+    #[test]
+    fn save_drops_entries_never_hit_since_load() {
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(32, FaultRates::paper_default());
+        let ws = random_weights(3_000, cfg.max_per_array(), 7);
+        let mut gen0 = CompileSession::builder(cfg).chip(&chip);
+        let _ = gen0.compile_tensor("a", &ws);
+        let _ = gen0.compile_tensor("b", &ws);
+        let full = gen0.to_bytes().unwrap();
+        // Reload and touch only tensor "a": the next save keeps a's
+        // patterns (hit since load) and drops anything exclusive to "b" —
+        // warm files shrink back to what is actually used instead of
+        // growing monotonically across revisions.
+        let mut gen1 = CompileSession::from_bytes(&full).unwrap();
+        let _ = gen1.compile_tensor("a", &ws);
+        let pruned = gen1.to_bytes().unwrap();
+        assert!(
+            pruned.len() < full.len(),
+            "stale warm entries must be dropped ({} vs {} bytes)",
+            pruned.len(),
+            full.len()
+        );
+        // The pruned file still warm-starts tensor "a" with zero solves.
+        let mut warm = CompileSession::from_bytes(&pruned).unwrap();
+        let again = warm.compile_tensor("a", &ws);
+        assert_eq!(again.stats.unique_pairs, 0);
     }
 
     #[test]

@@ -18,4 +18,4 @@ pub mod ilp_forms;
 pub mod table;
 
 pub use ilp_forms::{cvm_ilp, fawd_ilp};
-pub use table::{GroupTables, ValueTable};
+pub use table::{DiffTable, GroupTables, ValueTable};

@@ -207,6 +207,127 @@ impl ValueTable {
     }
 }
 
+/// Dense best-pair table over every achievable difference `a − b` of one
+/// group's two arrays — the batch-extraction companion of [`GroupTables`].
+///
+/// [`GroupTables::fawd`] and [`GroupTables::cvm`] sweep the positive
+/// array's value list once *per target weight*. When a pattern class is
+/// solved for its whole weight range (the compiler's `BatchTable` tier),
+/// that per-target sweep is wasted work: one `O(|pos| · |neg|)` pass over
+/// the cross product answers **every** target in `O(1)` afterwards. The
+/// table records, per difference, the minimum combined ℓ1 cost and the
+/// smallest positive-array value attaining it — exactly the pair the
+/// per-target sweeps select (see `fawd_pair`/`cvm_pair` for the
+/// tie-breaking proof sketch), so batch extraction is byte-identical to
+/// the per-weight algorithms.
+#[derive(Clone, Debug)]
+pub struct DiffTable {
+    /// Smallest achievable difference (`pos.min − neg.max`).
+    min_diff: i64,
+    /// `cost[d − min_diff] == INF` ⇔ difference `d` unachievable; else the
+    /// minimum combined ℓ1 cost over pairs on that diagonal.
+    cost: Vec<u32>,
+    /// Smallest positive-array value among the min-cost pairs of each
+    /// difference (the value the per-target sweeps pick first).
+    best_a: Vec<i64>,
+    /// `prev[i]` = index of the nearest achievable difference ≤ `i`
+    /// (`u32::MAX` when none).
+    prev: Vec<u32>,
+    /// `next[i]` = index of the nearest achievable difference ≥ `i`
+    /// (`u32::MAX` when none).
+    next: Vec<u32>,
+}
+
+const NO_DIFF: u32 = u32::MAX;
+
+impl DiffTable {
+    /// Smallest achievable difference.
+    pub fn min_diff(&self) -> i64 {
+        self.min_diff
+    }
+
+    /// Largest achievable difference.
+    pub fn max_diff(&self) -> i64 {
+        self.min_diff + self.cost.len() as i64 - 1
+    }
+
+    /// The pair `(a, b)` that [`GroupTables::fawd`] selects for target
+    /// `w`: on the diagonal `a − b = w`, minimum combined ℓ1 cost, ties
+    /// broken toward the smallest `a` (the sweep visits `a` ascending and
+    /// only replaces on strictly lower cost). `None` when no exact pair
+    /// exists.
+    pub fn fawd_pair(&self, w: i64) -> Option<(i64, i64)> {
+        if w < self.min_diff || w > self.max_diff() {
+            return None;
+        }
+        let i = (w - self.min_diff) as usize;
+        if self.cost[i] == INF {
+            return None;
+        }
+        let a = self.best_a[i];
+        Some((a, a - w))
+    }
+
+    /// The pair [`GroupTables::cvm`] selects for target `w`, plus its
+    /// error `|w − (a − b)|`.
+    ///
+    /// Tie-breaking replicates the per-target sweep exactly. The sweep
+    /// visits pairs in order of ascending `a`, and for one `a` considers
+    /// the two neighbours of the ideal `b = a − w` — the `d > w` candidate
+    /// before the `d ≤ w` one — keeping the first pair that minimizes
+    /// `(err, cost)`. For the winning difference (nearest achievable to
+    /// `w`) the sweep provably visits *every* pair on that diagonal, so
+    /// the winner is: minimum error; then minimum cost; then smallest `a`;
+    /// and at a full tie between the low and high neighbouring
+    /// differences, the high side (visited first within an `a`).
+    pub fn cvm_pair(&self, w: i64) -> (i64, i64, i64) {
+        if let Some((a, b)) = self.fawd_pair(w) {
+            return (a, b, 0);
+        }
+        let n = self.cost.len();
+        let (lo, hi) = if w < self.min_diff {
+            (None, Some(self.next[0] as usize))
+        } else if w > self.max_diff() {
+            (Some(self.prev[n - 1] as usize), None)
+        } else {
+            let i = (w - self.min_diff) as usize;
+            let lo = if self.prev[i] == NO_DIFF { None } else { Some(self.prev[i] as usize) };
+            let hi = if self.next[i] == NO_DIFF { None } else { Some(self.next[i] as usize) };
+            (lo, hi)
+        };
+        let diff_of = |i: usize| self.min_diff + i as i64;
+        let pick = |i: usize| {
+            let d = diff_of(i);
+            let a = self.best_a[i];
+            (a, a - d, (w - d).abs())
+        };
+        match (lo, hi) {
+            (Some(l), None) => pick(l),
+            (None, Some(h)) => pick(h),
+            (Some(l), Some(h)) => {
+                let err_lo = w - diff_of(l);
+                let err_hi = diff_of(h) - w;
+                if err_lo < err_hi {
+                    pick(l)
+                } else if err_hi < err_lo {
+                    pick(h)
+                } else {
+                    // Equal error: lower cost wins; then smaller `a`; at a
+                    // full tie the high side is visited first per `a`.
+                    let (cl, al) = (self.cost[l], self.best_a[l]);
+                    let (ch, ah) = (self.cost[h], self.best_a[h]);
+                    if ch < cl || (ch == cl && ah <= al) {
+                        pick(h)
+                    } else {
+                        pick(l)
+                    }
+                }
+            }
+            (None, None) => unreachable!("a fault-map diff table is never empty"),
+        }
+    }
+}
+
 /// Per-group decomposition tables for both arrays.
 #[derive(Clone, Debug)]
 pub struct GroupTables {
@@ -278,6 +399,86 @@ impl GroupTables {
                 neg: self.neg.witness_with_faults(b, cfg, &faults.neg),
             },
             best_err,
+        )
+    }
+
+    /// Build the dense difference table for batch extraction: one
+    /// `O(|pos| · |neg|)` pass that lets every subsequent FAWD/CVM query
+    /// be answered in `O(1)` via [`GroupTables::fawd_from`] /
+    /// [`GroupTables::cvm_from`].
+    pub fn diff_table(&self) -> DiffTable {
+        let min_diff = self.pos.min_value() - self.neg.max_value();
+        let max_diff = self.pos.max_value() - self.neg.min_value();
+        let n = (max_diff - min_diff + 1) as usize;
+        let mut cost = vec![INF; n];
+        let mut best_a = vec![0i64; n];
+        // `a` ascending with a strict `<` update keeps, per difference, the
+        // minimum cost and the smallest `a` attaining it — the same pair
+        // the per-target sweeps select.
+        for &a in self.pos.values() {
+            let ca = self.pos.cost_of(a).expect("pos value achievable");
+            for &b in self.neg.values() {
+                let i = (a - b - min_diff) as usize;
+                let c = ca + self.neg.cost_of(b).expect("neg value achievable");
+                if c < cost[i] {
+                    cost[i] = c;
+                    best_a[i] = a;
+                }
+            }
+        }
+        let mut prev = vec![NO_DIFF; n];
+        let mut last = NO_DIFF;
+        for (i, p) in prev.iter_mut().enumerate() {
+            if cost[i] != INF {
+                last = i as u32;
+            }
+            *p = last;
+        }
+        let mut next = vec![NO_DIFF; n];
+        let mut nxt = NO_DIFF;
+        for (i, q) in next.iter_mut().enumerate().rev() {
+            if cost[i] != INF {
+                nxt = i as u32;
+            }
+            *q = nxt;
+        }
+        DiffTable { min_diff, cost, best_a, prev, next }
+    }
+
+    /// [`GroupTables::fawd`] answered from a prebuilt [`DiffTable`]:
+    /// identical pair selection, `O(1)` per target plus witness
+    /// backtracking.
+    pub fn fawd_from(
+        &self,
+        dt: &DiffTable,
+        cfg: &GroupConfig,
+        faults: &GroupFaults,
+        w: i64,
+    ) -> Option<Decomposition> {
+        let (a, b) = dt.fawd_pair(w)?;
+        Some(Decomposition {
+            pos: self.pos.witness_with_faults(a, cfg, &faults.pos),
+            neg: self.neg.witness_with_faults(b, cfg, &faults.neg),
+        })
+    }
+
+    /// [`GroupTables::cvm`] answered from a prebuilt [`DiffTable`]:
+    /// identical pair selection, `O(1)` per target plus witness
+    /// backtracking.
+    pub fn cvm_from(
+        &self,
+        dt: &DiffTable,
+        cfg: &GroupConfig,
+        faults: &GroupFaults,
+        w: i64,
+    ) -> (Decomposition, i64) {
+        let (a, b, err) = dt.cvm_pair(w);
+        (
+            Decomposition {
+                pos: self.pos.witness_with_faults(a, cfg, &faults.pos),
+                neg: self.neg.witness_with_faults(b, cfg, &faults.neg),
+            },
+            err,
         )
     }
 }
@@ -385,6 +586,62 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn diff_table_matches_sweeps_for_every_target() {
+        // The batch-extraction contract: for EVERY target in (and slightly
+        // beyond) the representable range, the DiffTable-answered FAWD and
+        // CVM must return byte-identical decompositions and errors to the
+        // per-target sweeps — including tie-breaking.
+        prop_check("diff-table-identity", 120, |rng| {
+            let cfg = [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::new(2, 3, 4)]
+                [rng.index(3)];
+            let faults =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.2, p_sa1: 0.2 }, rng);
+            let tables = GroupTables::build(&cfg, &faults);
+            let dt = tables.diff_table();
+            let maxv = cfg.max_per_array();
+            for w in -maxv - 2..=maxv + 2 {
+                let sweep_fawd = tables.fawd(&cfg, &faults, w);
+                let batch_fawd = tables.fawd_from(&dt, &cfg, &faults, w);
+                prop_assert!(
+                    sweep_fawd == batch_fawd,
+                    "fawd diverged at w={w} (cfg {cfg}, faults {faults:?})"
+                );
+                let (sd, se) = tables.cvm(&cfg, &faults, w);
+                let (bd, be) = tables.cvm_from(&dt, &cfg, &faults, w);
+                prop_assert!(se == be, "cvm error diverged at w={w}: sweep {se} vs batch {be}");
+                prop_assert!(
+                    sd == bd,
+                    "cvm decomposition diverged at w={w} (cfg {cfg}, faults {faults:?})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diff_table_bounds_and_exactness() {
+        let cfg = GroupConfig::R2C2;
+        let free = GroupTables::build(&cfg, &GroupFaults::free(cfg.cells()));
+        let dt = free.diff_table();
+        // Fault-free R2C2: both arrays achieve 0..=30, so diffs span ±30
+        // and every diff in between is achievable (FAWD always exact).
+        assert_eq!(dt.min_diff(), -30);
+        assert_eq!(dt.max_diff(), 30);
+        for w in -30..=30 {
+            let (a, b) = dt.fawd_pair(w).expect("fault-free diffs are dense");
+            assert_eq!(a - b, w);
+            let (ca, cb, err) = dt.cvm_pair(w);
+            assert_eq!(err, 0);
+            assert_eq!(ca - cb, w);
+        }
+        assert!(dt.fawd_pair(31).is_none());
+        assert!(dt.fawd_pair(-31).is_none());
+        // Out-of-range targets clamp to the nearest extreme.
+        assert_eq!(dt.cvm_pair(35).2, 5);
+        assert_eq!(dt.cvm_pair(-33).2, 3);
     }
 
     #[test]

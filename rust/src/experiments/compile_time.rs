@@ -159,11 +159,19 @@ pub struct CompileTimeRow {
     pub breakdown: Vec<(String, f64)>,
     /// Distinct fault-pattern classes seen in the sample.
     pub unique_patterns: usize,
-    /// Unique (pattern, weight) pairs the solver actually ran on — the
+    /// Unique (pattern, weight) pairs that needed fresh solve work — the
     /// pattern-class dedup makes this ≪ `sampled_weights`.
     pub unique_pairs: usize,
     /// Weights served from the solve cache instead of a fresh solve.
     pub dedup_hits: usize,
+    /// Full-range pattern tables batch-solved (`BatchTable` tier solve
+    /// sweeps; 0 on per-weight rows).
+    pub pattern_tables: usize,
+    /// Estimated resident bytes of per-pattern solution tables at the end
+    /// of the run.
+    pub resident_table_bytes: usize,
+    /// Pattern solutions evicted to honor the session memory budget.
+    pub table_evictions: u64,
 }
 
 impl CompileTimeRow {
@@ -250,6 +258,9 @@ pub fn measure(
         unique_patterns: out.stats.unique_patterns,
         unique_pairs: out.stats.unique_pairs,
         dedup_hits: out.stats.dedup_hits,
+        pattern_tables: out.stats.pattern_tables_built,
+        resident_table_bytes: out.stats.resident_table_bytes,
+        table_evictions: out.stats.table_evictions,
     })
 }
 

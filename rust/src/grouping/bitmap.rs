@@ -106,9 +106,9 @@ fn encode_magnitude(mut mag: i64, cfg: &GroupConfig) -> Bitmap {
     let cap_per_col = (cfg.levels as i64 - 1) * cfg.rows as i64;
     for col in 0..cfg.cols {
         let sig = (cfg.levels as i64).pow((cfg.cols - 1 - col) as u32);
-        // Take as many units of this significance as available/needed.
-        let lower_cap = cap_per_col * (sig - 1) / (cfg.levels as i64 - 1) * 1; // r*(sig-1)
-        // capacity of all lower columns combined: r*(L-1)*(sig-1)/(L-1) = r*(sig-1)
+        // Take as many units of this significance as available/needed;
+        // capacity of all lower columns combined is r·(L−1)·(sig−1)/(L−1)
+        // = r·(sig−1).
         let lower_max = cfg.rows as i64 * (sig - 1);
         let mut take = mag / sig;
         if take > cap_per_col {
@@ -128,7 +128,6 @@ fn encode_magnitude(mut mag: i64, cfg: &GroupConfig) -> Bitmap {
             take -= v;
         }
         debug_assert_eq!(take, 0);
-        let _ = lower_cap;
     }
     debug_assert_eq!(mag, 0);
     bm

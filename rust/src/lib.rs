@@ -32,24 +32,26 @@
 //! * `submit(name, weights)` + `drain()` — batch mode: one work-stealing
 //!   solve fan-out over the union of all queued tensors' fresh pairs;
 //! * `save(path)` / `CompileSession::load(path)` — persistent warm-start:
-//!   the interned patterns and solved pairs are serialized (keyed by chip
-//!   seed, [`grouping::GroupConfig`], and pipeline fingerprint, with a
-//!   checksum), so recompiling a revised model on the same chip starts
-//!   warm — an unchanged tensor performs **zero** fresh solves.
+//!   the interned patterns and their solution tables are serialized
+//!   ("RCSS" v2, keyed by chip seed, [`grouping::GroupConfig`], and
+//!   pipeline fingerprint, with a checksum), so recompiling a revised
+//!   model on the same chip starts warm — an unchanged tensor performs
+//!   **zero** fresh solves, and so does a *changed* tensor whose new
+//!   weight values hit already-tabled patterns.
 //!
 //! Above sessions sits [`coordinator::CompileService`]: a batched compile
 //! front-end over many chips (one warm session per chip seed, chips
 //! sharded across the work-stealing pool, optional cache directory),
 //! surfaced as `rchg serve-batch`.
 //!
-//! Migrating from the deprecated free functions (kept as one-shot shims
-//! for one release): `compile_tensor(ws, f, opts)` →
-//! `session.compile_with_faults(ws, f)`; `compile_tensor_with_cache` →
-//! the same (the session owns the cache); `compile_model(tensors, chip,
-//! opts)` → `session.compile_model(tensors)`; [`nn::ChipCompiler`] keeps
-//! its surface and is now a thin adapter over a session.
+//! The old free functions are **removed**: `compile_tensor(ws, f, opts)`
+//! → `session.compile_with_faults(ws, f)` (use `.detached()` when there
+//! is no chip); `compile_tensor_with_cache` → the same (the session owns
+//! the cache); `compile_model(tensors, chip, opts)` →
+//! `session.compile_model(tensors)`; [`nn::ChipCompiler`] keeps its
+//! surface and is a thin adapter over a session.
 //!
-//! ## Dedupe-first compilation (the core underneath)
+//! ## Solve-once-per-pattern compilation (the core underneath)
 //!
 //! The compiler's unit of work is a **pattern class**, not a weight. A
 //! compilation runs four phases ([`coordinator::compiler`]):
@@ -59,20 +61,34 @@
 //!   [`coordinator::PatternRegistry`]; each class carries one shared
 //!   [`coordinator::PatternCtx`] whose `FaultAnalysis`/`GroupTables` are
 //!   built lazily, at most once, and shared across threads.
-//! 2. **Dedupe** — collapse the tensor to unique (pattern, weight) pairs
-//!   against the session's chip-wide [`coordinator::SolveCache`]; tensors
-//!   of one chip reuse each other's solved pairs.
-//! 3. **Solve** — run the staged pipeline (Fig 7) once per unique pair,
-//!   fanned out over an atomic-counter work-stealing scheduler
-//!   ([`util::pool::parallel_work_steal`]); slot order is fixed by the
-//!   scan, so results are byte-deterministic at any thread count.
-//! 4. **Scatter** — map solved pairs back to weight indices.
+//! 2. **Dedupe** — resolve every (pattern, weight) request against the
+//!   session's chip-wide [`coordinator::SolveCache`]; anything resident
+//!   (from any earlier tensor, batch, or session generation) is a hit.
+//! 3. **Solve** — on the default [`coordinator::SolveTier::BatchTable`]
+//!   tier each missing *pattern* is solved **once for its whole weight
+//!   range** ([`coordinator::solve_full_range`]: one shared
+//!   [`decompose::DiffTable`] pass instead of one value-table sweep per
+//!   weight) and installed as a dense [`coordinator::PatternSolution`]
+//!   table; the paper-protocol baselines (FF, ILP-only) and intractable
+//!   configs keep the per-weight cost model
+//!   ([`coordinator::SolveTier::PerWeight`], bounded per-pattern maps).
+//!   Fan-out runs on an atomic-counter work-stealing scheduler
+//!   ([`util::pool::parallel_work_steal`]); work order is fixed by the
+//!   scan, so results are byte-deterministic at any thread count and
+//!   across tiers.
+//! 4. **Scatter** — O(1) table lookups map every weight back to its
+//!   outcome.
 //!
 //! At the paper's published SAF rates most groups are fault-free or share
-//! a low-cardinality pattern, so unique pairs ≪ weights and the solver
-//! does 5–20× less work than per-weight iteration
-//! (`CompileStats::dedup_ratio`) — and a warm session does no solver work
-//! at all on unchanged tensors.
+//! a low-cardinality pattern, and weight ranges are small and dense (61
+//! values on R2C2, 511 on R1C4), so one table build amortizes across
+//! every weight of the class — the solver sweeps ≥2× less than even the
+//! pair-cache design, and a warm session does no solve work at all for
+//! any weight of a known pattern. Resident table memory is bounded
+//! (`CompileOptions::table_memory_bytes`, default
+//! [`coordinator::DEFAULT_TABLE_MEMORY_BYTES`]): least-recently-used
+//! patterns are evicted deterministically at batch boundaries and simply
+//! re-solved if they recur.
 //!
 //! Start with [`coordinator::CompileSession`] or the `examples/`
 //! directory (`quickstart` walks a save/load warm-start).

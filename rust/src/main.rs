@@ -212,13 +212,20 @@ fn main() -> anyhow::Result<()> {
             );
             if r.unique_pairs > 0 {
                 println!(
-                    "pattern classes: {} — solver ran on {} unique (pattern, weight) pairs \
+                    "pattern classes: {} — {} fresh (pattern, weight) requests \
                      ({:.1}x dedup); fitted pair growth n^{:.2} → {} pairs at full scale",
                     r.unique_patterns,
                     r.unique_pairs,
                     r.dedup_ratio(),
                     r.pair_growth_exp,
                     r.predicted_pairs_full
+                );
+                println!(
+                    "pattern tables: {} batch-solved — resident {:.1} MiB, {} evicted \
+                     (bounded session cache)",
+                    r.pattern_tables,
+                    r.resident_table_bytes as f64 / (1 << 20) as f64,
+                    r.table_evictions
                 );
             }
         }

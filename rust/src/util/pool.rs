@@ -81,7 +81,7 @@ where
         return Vec::new();
     }
     let chunk = chunk.max(1);
-    let threads = threads.max(1).min((n + chunk - 1) / chunk);
+    let threads = threads.max(1).min(n.div_ceil(chunk));
     if threads == 1 {
         return (0..n).map(f).collect();
     }

@@ -2,7 +2,7 @@
 //! pack → execute flow, cross-method agreement at model scale, chip
 //! determinism, and failure injection on the runtime loading path.
 
-use rchg::coordinator::{compile_tensor, CompileOptions, Method, Stage};
+use rchg::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method, Stage};
 use rchg::fault::bank::ChipFaults;
 use rchg::fault::{FaultRates, GroupFaults};
 use rchg::grouping::{Decomposition, FaultAnalysis, GroupConfig};
@@ -14,6 +14,15 @@ use rchg::util::prng::Rng;
 fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {
     let mut rng = Rng::new(seed);
     (0..n).map(|_| rng.range_i64(-max, max)).collect()
+}
+
+/// One-shot compile against explicit fault maps (the removed free
+/// function's surface, via a throwaway detached session).
+fn compile_tensor(ws: &[i64], faults: &[GroupFaults], opts: &CompileOptions) -> CompiledTensor {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .detached()
+        .compile_with_faults(ws, faults)
 }
 
 #[test]

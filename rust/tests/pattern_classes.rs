@@ -4,7 +4,7 @@
 //! cross-tensor reuse, and the dedup-counter accounting.
 
 use rchg::coordinator::{
-    compile_model, compile_tensor, decompose_one, decompose_with_ctx, CompileOptions, Method,
+    decompose_one, decompose_with_ctx, CompileOptions, CompileSession, CompiledTensor, Method,
     PatternCtx, PipelineOptions,
 };
 use rchg::experiments::compile_time::synthetic_model_weights;
@@ -14,6 +14,25 @@ use rchg::grouping::GroupConfig;
 use rchg::ilp::IlpStats;
 use rchg::prop_assert;
 use rchg::util::prop::prop_check;
+
+/// One-shot compile against explicit fault maps (the removed free
+/// function's surface, via a throwaway detached session).
+fn compile_tensor(ws: &[i64], faults: &[GroupFaults], opts: &CompileOptions) -> CompiledTensor {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .detached()
+        .compile_with_faults(ws, faults)
+}
+
+/// One-shot model compile for a chip (the removed free function's
+/// surface, via a throwaway chip session).
+fn compile_model(
+    tensors: &[(String, Vec<i64>)],
+    chip: &ChipFaults,
+    opts: &CompileOptions,
+) -> Vec<(String, CompiledTensor, Vec<GroupFaults>)> {
+    CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip).compile_model(tensors)
+}
 
 #[test]
 fn resnet20_pattern_class_matches_legacy_across_threads() {

@@ -1,0 +1,128 @@
+//! Pattern-solution-table acceptance tests: the `BatchTable` tier (solve
+//! once per pattern, dense full-range tables) must be byte-identical to
+//! the per-weight pipeline for every method on R2C2/R1C4 across threads
+//! {1, 4, 8}; a single pattern table must decode every representable
+//! weight correctly under random fault states; and the memory bound must
+//! evict deterministically without changing one output byte.
+
+use rchg::coordinator::{
+    solve_full_range, CompileOptions, CompileSession, CompiledTensor, Method, PatternCtx,
+    PipelineOptions, SolveTier,
+};
+use rchg::experiments::compile_time::synthetic_model_weights;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::{FaultRates, GroupFaults};
+use rchg::grouping::GroupConfig;
+use rchg::prop_assert;
+use rchg::util::prop::prop_check;
+
+fn compile(ws: &[i64], faults: &[GroupFaults], opts: &CompileOptions) -> CompiledTensor {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .detached()
+        .compile_with_faults(ws, faults)
+}
+
+#[test]
+fn batch_table_matches_per_weight_for_all_methods_and_threads() {
+    // Acceptance: BatchTable output is byte-identical to the per-weight
+    // pipeline for every method on R2C2/R1C4 at threads {1, 4, 8}. For
+    // the baselines the tier gate routes both runs to per-weight solving
+    // (the paper's cost model) — identity still must hold.
+    for cfg in [GroupConfig::R2C2, GroupConfig::R1C4] {
+        let chip = ChipFaults::new(3, FaultRates::paper_default());
+        let methods: &[(Method, usize)] = if cfg == GroupConfig::R1C4 {
+            &[
+                (Method::Complete, 20_000),
+                (Method::IlpOnly, 400),
+                (Method::OriginalFf, 300),
+                (Method::Unprotected, 2_000),
+            ]
+        } else {
+            &[(Method::Complete, 20_000), (Method::IlpOnly, 400), (Method::Unprotected, 2_000)]
+        };
+        for &(method, n) in methods {
+            let ws = synthetic_model_weights("resnet20", &cfg, n).unwrap();
+            let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
+            let mut pw = CompileOptions::new(cfg, method);
+            pw.tier = SolveTier::PerWeight;
+            let base = compile(&ws, &faults, &pw);
+            for threads in [1usize, 4, 8] {
+                let mut bt = CompileOptions::new(cfg, method);
+                bt.tier = SolveTier::BatchTable;
+                bt.threads = threads;
+                let out = compile(&ws, &faults, &bt);
+                assert_eq!(
+                    out.decomps, base.decomps,
+                    "{cfg} {method:?} decomps diverged at threads={threads}"
+                );
+                assert_eq!(
+                    out.errors, base.errors,
+                    "{cfg} {method:?} errors diverged at threads={threads}"
+                );
+                assert_eq!(
+                    out.stats.stage_counts, base.stats.stage_counts,
+                    "{cfg} {method:?} stage census diverged at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_weight_decodes_from_one_pattern_table() {
+    // Acceptance: one pattern table answers the FULL weight range
+    // [-max, +max] correctly under random fault states — each entry
+    // decodes to within its recorded error, and the error equals the
+    // per-weight pipeline's.
+    prop_check("pattern-table-full-range", 80, |rng| {
+        let cfg = [GroupConfig::R2C2, GroupConfig::R1C4][rng.index(2)];
+        let faults =
+            GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.15, p_sa1: 0.15 }, rng);
+        let ctx = PatternCtx::new(cfg, faults.clone());
+        let popts = PipelineOptions::default();
+        let (table, _clock) = solve_full_range(&ctx, &popts, false);
+        let maxv = cfg.max_per_array();
+        prop_assert!(table.len() as i64 == 2 * maxv + 1, "table must span the whole range");
+        for w in -maxv..=maxv {
+            let out = &table[(w + maxv) as usize];
+            let decoded = out.decomposition.faulty_value(&cfg, &faults);
+            prop_assert!(
+                (w - decoded).abs() == out.error,
+                "w={w} decodes to {decoded} but the table recorded error {} (cfg {cfg})",
+                out.error
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memory_bound_evicts_without_changing_outputs() {
+    // The ROADMAP cache-bound item: a tiny table budget forces evictions
+    // across batches, yet every output stays byte-identical to the
+    // unbounded run and the resident estimate respects the budget at
+    // batch boundaries.
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(17, FaultRates::paper_default());
+    let tensors: Vec<Vec<i64>> = (0..4)
+        .map(|i| synthetic_model_weights("resnet20", &cfg, 4_000 + 7 * i).unwrap())
+        .collect();
+
+    let mut unbounded = CompileSession::builder(cfg).chip(&chip);
+    let mut bounded = CompileSession::builder(cfg).table_memory_bytes(64 << 10).chip(&chip);
+    let mut evictions_seen = 0u64;
+    for (i, ws) in tensors.iter().enumerate() {
+        let name = format!("t{i}");
+        let a = unbounded.compile_tensor(&name, ws);
+        let b = bounded.compile_tensor(&name, ws);
+        assert_eq!(a.decomps, b.decomps, "eviction changed outputs on {name}");
+        assert_eq!(a.errors, b.errors);
+        evictions_seen = evictions_seen.max(b.stats.table_evictions);
+    }
+    assert!(evictions_seen > 0, "a 64 KiB budget must evict on resnet20-scale work");
+    assert_eq!(unbounded.stats().table_evictions, 0, "default budget must not evict here");
+    // The bounded session re-solves what it evicted: more fresh solves in
+    // total, never fewer.
+    assert!(bounded.stats().unique_pairs >= unbounded.stats().unique_pairs);
+}

@@ -1,13 +1,13 @@
-//! CompileSession acceptance tests: byte-identity with the PR 1
-//! `compile_tensor_with_cache` path at threads {1, 4, 8}, save → load →
-//! recompile round-trips (warm-start performs zero fresh solves and
-//! matches cold output byte-for-byte), clean rejection of corrupted or
+//! CompileSession acceptance tests: byte-identity with the caller-owned
+//! SolveCache path at threads {1, 4, 8}, save → load → recompile
+//! round-trips (warm-start performs zero fresh solves and matches cold
+//! output byte-for-byte), clean rejection of corrupted, v1, or
 //! version-mismatched cache files, submit/drain batch equivalence, and
 //! the multi-chip compile service.
 
 use rchg::coordinator::{
-    compile_tensor_with_cache, CompileOptions, CompileService, CompileSession, Method,
-    ServiceOptions, SolveCache,
+    compile_batch_with_cache, CompileOptions, CompileService, CompileSession, Method,
+    ServiceOptions, SolveCache, TensorJob,
 };
 use rchg::experiments::compile_time::synthetic_model_tensors;
 use rchg::fault::bank::ChipFaults;
@@ -20,7 +20,7 @@ fn tmp(name: &str) -> PathBuf {
 }
 
 #[test]
-fn session_matches_pr1_cache_path_across_threads() {
+fn session_matches_caller_cache_path_across_threads() {
     // Acceptance: CompileSession compiles ResNet-20-shaped tensors
     // byte-identically to the caller-threaded SolveCache path at threads
     // {1, 4, 8}.
@@ -34,7 +34,15 @@ fn session_matches_pr1_cache_path_across_threads() {
         let mut reference = Vec::new();
         for (i, (_, ws)) in tensors.iter().enumerate() {
             let faults = chip.sample_tensor(i as u64, ws.len(), cfg.cells());
-            reference.push(compile_tensor_with_cache(ws, &faults, &opts, &mut cache));
+            reference.push(
+                compile_batch_with_cache(
+                    &[TensorJob { weights: ws, faults: &faults }],
+                    &opts,
+                    &mut cache,
+                )
+                .pop()
+                .unwrap(),
+            );
         }
         let mut session = CompileSession::builder(cfg)
             .method(Method::Complete)
@@ -154,6 +162,16 @@ fn corrupted_or_mismatched_cache_files_rejected() {
     let mut vers = good.clone();
     vers[4] = 99;
     assert!(CompileSession::from_bytes(&refresh(vers)).is_err());
+
+    // v1 pair-cache files are rejected with a clean version error, not
+    // misparsed as v2 pattern tables.
+    let mut v1 = good.clone();
+    v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+    let err = match CompileSession::from_bytes(&refresh(v1)) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("v1 file must be rejected"),
+    };
+    assert!(err.contains("version 1"), "{err}");
 }
 
 #[test]
