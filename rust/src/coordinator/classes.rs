@@ -413,6 +413,17 @@ impl SolveCache {
         }
     }
 
+    /// The resident solution of pattern `pid` **if it was touched in the
+    /// current batch epoch** (scanned, served, or freshly solved since the
+    /// last [`SolveCache::begin_batch`]). This is the shard-fragment
+    /// extractor's view: a shard ships exactly the solutions the current
+    /// batch produced or re-used, never stale residents from earlier
+    /// batches.
+    pub fn solution_if_current(&self, pid: PatternId) -> Option<&PatternSolution> {
+        let slot = self.slots.get(pid as usize)?.as_ref()?;
+        (slot.last_used == self.epoch).then_some(&slot.solution)
+    }
+
     /// Total solved entries resident across every pattern (full-range
     /// table entries count individually).
     pub fn solved_pairs(&self) -> usize {

@@ -313,6 +313,42 @@ pub fn compile_batch_with_cache(
     if jobs.is_empty() {
         return Vec::new();
     }
+    compile_batch_inner(jobs, opts, cache)
+}
+
+/// Result of the scan + dedupe phases of one batch: per-tensor partial
+/// stats, every weight's interned pattern id, and the fresh work this
+/// batch must solve. Shared by the full compile
+/// ([`compile_batch_with_cache`]) and the sharded solve
+/// ([`super::CompileSession::solve_shard`]), which filters the fresh work
+/// to its pattern-id range before solving.
+pub(super) struct BatchScan {
+    pub(super) per_tensor: Vec<CompileStats>,
+    pub(super) tensor_pids: Vec<Vec<PatternId>>,
+    /// Missing patterns in first-seen scan order, with the tensor index
+    /// that introduced each ([`SolveTier::BatchTable`] work units).
+    pub(super) fresh_patterns: Vec<(PatternId, usize)>,
+    /// Missing (pattern, weight) requests in scan order, with the tensor
+    /// index that introduced each ([`SolveTier::PerWeight`] work units).
+    /// On the `BatchTable` tier this is filled only when the caller asked
+    /// for it (`collect_pairs`, the shard path's in-range re-count) — the
+    /// normal compile never materializes per-pair entries there.
+    pub(super) fresh_pairs: Vec<(PatternId, i64, usize)>,
+    pub(super) tier: SolveTier,
+}
+
+/// Phases 1+2 per tensor, in batch order — scan: intern each group's
+/// fault pattern; dedupe: mark resident requests as hits, collect the
+/// fresh work (patterns or pairs, by tier) with the tensor that
+/// introduced each unit. Also starts the batch (pipeline binding, memory
+/// budget, LRU epoch) on the cache. `collect_pairs` forces per-pair
+/// collection on the `BatchTable` tier too (see [`BatchScan::fresh_pairs`]).
+pub(super) fn scan_batch(
+    jobs: &[TensorJob<'_>],
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+    collect_pairs: bool,
+) -> BatchScan {
     for j in jobs {
         assert_eq!(j.weights.len(), j.faults.len(), "one fault map per weight group");
     }
@@ -320,14 +356,9 @@ pub fn compile_batch_with_cache(
     cache.bind_pipeline(&opts.pipeline);
     cache.set_table_memory_bytes(opts.table_memory_bytes);
     cache.begin_batch();
-    let timer = Timer::start();
-    let threads = opts.threads.max(1);
     let tier = opts.effective_tier();
+    let want_pairs = collect_pairs || tier == SolveTier::PerWeight;
 
-    // Phases 1+2 per tensor, in batch order — scan: intern each group's
-    // fault pattern; dedupe: mark resident requests as hits, collect the
-    // fresh work (patterns or pairs, by tier) with the tensor that
-    // introduced each unit.
     let mut per_tensor: Vec<CompileStats> = vec![CompileStats::default(); jobs.len()];
     let mut tensor_pids: Vec<Vec<PatternId>> = Vec::with_capacity(jobs.len());
     let mut batch_seen: FnvMap<(PatternId, i64), ()> = FnvMap::default();
@@ -343,23 +374,34 @@ pub fn compile_batch_with_cache(
                 continue;
             }
             st.unique_pairs += 1;
-            match tier {
-                SolveTier::BatchTable => {
-                    if queued_patterns.insert(pid, ()).is_none() {
-                        fresh_patterns.push((pid, ti));
-                    }
-                }
-                SolveTier::PerWeight => fresh_pairs.push((pid, w, ti)),
+            if want_pairs {
+                fresh_pairs.push((pid, w, ti));
+            }
+            if tier == SolveTier::BatchTable && queued_patterns.insert(pid, ()).is_none() {
+                fresh_patterns.push((pid, ti));
             }
         }
         tensor_pids.push(pids);
     }
+    BatchScan { per_tensor, tensor_pids, fresh_patterns, fresh_pairs, tier }
+}
 
-    // Phase 3 — solve the fresh work exactly once (work-stealing; work
-    // order was fixed by the scan, so output is thread-count independent).
-    let mut solve_secs = vec![0f64; jobs.len()];
-    match tier {
+/// Phase 3 — solve the scan's fresh work exactly once and install the
+/// results into the cache (work-stealing fan-out; work order was fixed by
+/// the scan, so output is thread-count independent). Solve wall time and
+/// table/ILP work are charged to the per-tensor stats of the tensor that
+/// introduced each unit; returns solve seconds per tensor.
+pub(super) fn solve_fresh(
+    scan: &mut BatchScan,
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+) -> Vec<f64> {
+    let threads = opts.threads.max(1);
+    let per_tensor = &mut scan.per_tensor;
+    let mut solve_secs = vec![0f64; per_tensor.len()];
+    match scan.tier {
         SolveTier::BatchTable => {
+            let fresh_patterns = &scan.fresh_patterns;
             let registry = &cache.registry;
             let built: Vec<(Vec<Outcome>, StageClock, f64)> =
                 parallel_work_steal(fresh_patterns.len(), threads, 1, |i| {
@@ -379,6 +421,7 @@ pub fn compile_batch_with_cache(
             }
         }
         SolveTier::PerWeight => {
+            let fresh_pairs = &scan.fresh_pairs;
             let registry = &cache.registry;
             let solved: Vec<(Outcome, IlpStats, f64)> =
                 parallel_work_steal(fresh_pairs.len(), threads, SOLVE_CHUNK, |i| {
@@ -402,6 +445,18 @@ pub fn compile_batch_with_cache(
             cache.install_pairs(entries);
         }
     }
+    solve_secs
+}
+
+fn compile_batch_inner(
+    jobs: &[TensorJob<'_>],
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+) -> Vec<CompiledTensor> {
+    let timer = Timer::start();
+    let mut scan = scan_batch(jobs, opts, cache, false);
+    let solve_secs = solve_fresh(&mut scan, opts, cache);
+    let BatchScan { mut per_tensor, tensor_pids, .. } = scan;
 
     // Phase 4 — scatter: O(1) lookups map every weight to its outcome.
     let mut scattered: Vec<(Vec<Decomposition>, Vec<i64>, HashMap<&'static str, usize>)> =

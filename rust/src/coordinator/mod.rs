@@ -1,14 +1,22 @@
 //! L3 coordinator: the paper's compilation pipeline (§V, Fig 7), the
 //! pattern-class registry and per-pattern solution tables that dedupe it
 //! (solve once per pattern, not per weight), the chip-scoped
-//! [`CompileSession`] API (with persistent warm-start) wrapped around
+//! [`CompileSession`] API (with persistent warm-start and a
+//! [`ShardPlan`]-partitioned distributed solve phase) wrapped around
 //! both, and the multi-chip [`CompileService`] batching front-end.
+//!
+//! The full scan → intern → dedupe → solve → scatter walkthrough, the
+//! on-disk byte layouts (RCSS session caches, RCSF shard fragments), and
+//! the determinism contract live in `docs/ARCHITECTURE.md` at the
+//! repository root.
 
 pub mod classes;
 pub mod compiler;
+pub(crate) mod persist;
 pub mod pipeline;
 pub mod service;
 pub mod session;
+pub mod shard;
 
 pub use classes::{
     PatternCtx, PatternId, PatternRegistry, PatternSolution, SolveCache,
@@ -21,8 +29,9 @@ pub use pipeline::{
     decompose_one, decompose_with_ctx, solve_full_range, Method, Outcome, PipelineOptions,
     SolveTier, Stage,
 };
-pub use service::{CompileService, JobResult, ServiceOptions};
+pub use service::{CompileService, JobResult, ServiceOptions, TableBudget};
 pub use session::{CompileSession, SessionBuilder};
+pub use shard::{ShardFragment, ShardPlan, FRAGMENT_MAGIC, FRAGMENT_VERSION};
 
 /// Convenience alias kept for source compatibility; new code should build
 /// a [`CompileSession`] instead of carrying bare options around.

@@ -1,0 +1,371 @@
+//! Shared on-disk framing for the coordinator's warm-state files.
+//!
+//! Two file formats are built from the codecs here and share every byte of
+//! their framing:
+//!
+//! * the **session cache** ("RCSS" v2, [`super::session`]) — one chip's
+//!   full warm solve state;
+//! * the **shard fragment** ("RCSF" v1, [`super::shard`]) — one shard's
+//!   partial solve state from a [`super::ShardPlan`]-partitioned solve,
+//!   mergeable back into a session cache byte-identical to an unsharded
+//!   compile.
+//!
+//! Both are versioned little-endian binaries that open with the same
+//! **cache key** ([`write_key`]/[`read_key`]: chip seed + fault rates,
+//! [`GroupConfig`], pipeline fingerprint), carry per-pattern
+//! [`PatternSolution`]s in pattern-id order, and close with a trailing
+//! FNV-1a checksum over everything before it ([`seal`]/[`unseal`]). The
+//! checksum is verified *before* any parsing, so a truncated or corrupted
+//! file is rejected without ever touching the decoder.
+//!
+//! Everything here is `pub(crate)`: the public surface is
+//! `CompileSession::{save,load,to_bytes,from_bytes}` and
+//! `ShardFragment::{save,load,to_bytes,from_bytes}`.
+
+use super::classes::PatternSolution;
+use super::pipeline::{Method, Outcome, PipelineOptions, Stage};
+use crate::fault::bank::ChipFaults;
+use crate::fault::{FaultRates, FaultState, GroupFaults};
+use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::util::fnv::FnvMap;
+use crate::util::prop::fnv1a;
+use anyhow::{anyhow, bail, Result};
+
+/// Per-pattern solution tags shared by the RCSS v2 and RCSF formats.
+pub(crate) const TAG_TABLE: u8 = 0;
+pub(crate) const TAG_PAIRS: u8 = 1;
+/// Fragment-only tag: a pattern in the shard's range with no solution in
+/// this fragment (already resident before the shard solved, or empty).
+pub(crate) const TAG_EMPTY: u8 = 2;
+
+pub(crate) fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+pub(crate) fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+pub(crate) fn push_i64(buf: &mut Vec<u8>, v: i64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append the trailing FNV-1a checksum, sealing the payload.
+pub(crate) fn seal(mut buf: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a(&buf);
+    push_u64(&mut buf, sum);
+    buf
+}
+
+/// Verify the trailing checksum and return the payload it covers. This
+/// runs before any parsing: corruption anywhere in the file is caught
+/// here, never inside the decoder.
+pub(crate) fn unseal(bytes: &[u8]) -> Result<&[u8]> {
+    if bytes.len() < 16 {
+        bail!("truncated cache file ({} bytes)", bytes.len());
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(payload) != stored {
+        bail!("cache checksum mismatch (corrupted or truncated file)");
+    }
+    Ok(payload)
+}
+
+/// The identity a warm-state file is keyed by: the chip (seed + fault
+/// rates), the grouping configuration, and the pipeline fingerprint
+/// (method + table limit + sparsest). Two files with equal keys hold
+/// interchangeable solve state; everything else must be rebuilt, never
+/// silently adopted.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct CacheKey {
+    pub chip: ChipFaults,
+    pub cfg: GroupConfig,
+    pub pipeline: PipelineOptions,
+}
+
+impl CacheKey {
+    pub(crate) fn new(chip: &ChipFaults, cfg: GroupConfig, pipeline: PipelineOptions) -> CacheKey {
+        CacheKey { chip: chip.clone(), cfg, pipeline }
+    }
+
+    pub(crate) fn cells(&self) -> usize {
+        self.cfg.cells()
+    }
+
+    /// Human-readable mismatch description, or `None` when keys agree —
+    /// the error message of every "wrong file for this session" rejection.
+    pub(crate) fn mismatch(&self, other: &CacheKey) -> Option<String> {
+        if self.chip.chip_seed != other.chip.chip_seed {
+            return Some(format!(
+                "chip seed {} != {}",
+                other.chip.chip_seed, self.chip.chip_seed
+            ));
+        }
+        if self.chip.rates != other.chip.rates {
+            return Some("fault rates differ".into());
+        }
+        if self.cfg != other.cfg {
+            return Some(format!("grouping config {} != {}", other.cfg, self.cfg));
+        }
+        if self.pipeline != other.pipeline {
+            return Some("pipeline fingerprint (method/table limit/sparsest) differs".into());
+        }
+        None
+    }
+}
+
+/// Serialize the cache key. Byte layout (all little-endian) is shared by
+/// RCSS v2 and RCSF v1 and must never be reordered:
+/// `chip_seed u64 · p_sa0 u64 · p_sa1 u64 · rows u32 · cols u32 ·
+/// levels u32 · method u8 · sparsest u8 · table_value_limit i64 ·
+/// cells u32`.
+pub(crate) fn write_key(buf: &mut Vec<u8>, key: &CacheKey) {
+    push_u64(buf, key.chip.chip_seed);
+    push_u64(buf, key.chip.rates.p_sa0.to_bits());
+    push_u64(buf, key.chip.rates.p_sa1.to_bits());
+    push_u32(buf, key.cfg.rows as u32);
+    push_u32(buf, key.cfg.cols as u32);
+    push_u32(buf, key.cfg.levels as u32);
+    buf.push(key.pipeline.method.code());
+    buf.push(key.pipeline.sparsest as u8);
+    push_i64(buf, key.pipeline.table_value_limit);
+    push_u32(buf, key.cfg.cells() as u32);
+}
+
+/// Parse and validate a cache key (see [`write_key`] for the layout). A
+/// corrupt header must not overflow `max_per_array` or provoke absurd
+/// table allocations, so the weight range is recomputed with checked
+/// arithmetic and bounded.
+pub(crate) fn read_key(r: &mut Reader<'_>) -> Result<CacheKey> {
+    let chip_seed = r.u64()?;
+    let p_sa0 = f64::from_bits(r.u64()?);
+    let p_sa1 = f64::from_bits(r.u64()?);
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let levels = r.u32()?;
+    if rows == 0 || cols == 0 || !(2..=255).contains(&levels) {
+        bail!("bad grouping config R{rows}C{cols}@{levels} in cache file");
+    }
+    let cfg = GroupConfig::new(rows, cols, levels as u8);
+    let method =
+        Method::from_code(r.u8()?).ok_or_else(|| anyhow!("bad method code in cache file"))?;
+    let sparsest = r.u8()? != 0;
+    let table_value_limit = r.i64()?;
+    let pipeline = PipelineOptions { method, table_value_limit, sparsest };
+    let cells = r.u32()? as usize;
+    if cells != cfg.cells() || cells == 0 || cells > 16 {
+        bail!("cell count {cells} disagrees with config {cfg}");
+    }
+    (levels as i64)
+        .checked_pow(cols as u32)
+        .and_then(|p| p.checked_sub(1))
+        .and_then(|p| p.checked_mul(rows as i64))
+        .filter(|&m| m > 0 && m <= (1 << 24))
+        .ok_or_else(|| anyhow!("unreasonable weight range in cache file"))?;
+    let chip = ChipFaults::new(chip_seed, FaultRates { p_sa0, p_sa1 });
+    Ok(CacheKey { chip, cfg, pipeline })
+}
+
+/// Dense-table length of one full-range pattern solution under `cfg`.
+pub(crate) fn table_len(cfg: &GroupConfig) -> usize {
+    (2 * cfg.max_per_array() + 1) as usize
+}
+
+/// Serialized size of one [`Outcome`]: error i64 + stage u8 + two cell
+/// bitmaps.
+pub(crate) fn outcome_len(cells: usize) -> usize {
+    9 + 2 * cells
+}
+
+pub(crate) fn push_outcome(buf: &mut Vec<u8>, out: &Outcome) {
+    push_i64(buf, out.error);
+    buf.push(out.stage.code());
+    buf.extend_from_slice(&out.decomposition.pos.cells);
+    buf.extend_from_slice(&out.decomposition.neg.cells);
+}
+
+pub(crate) fn read_outcome(r: &mut Reader<'_>, cells: usize, levels: u8) -> Result<Outcome> {
+    let error = r.i64()?;
+    let stage =
+        Stage::from_code(r.u8()?).ok_or_else(|| anyhow!("bad stage code in cache file"))?;
+    let pos = Bitmap { cells: r.bytes(cells)?.to_vec() };
+    let neg = Bitmap { cells: r.bytes(cells)?.to_vec() };
+    if pos.cells.iter().chain(&neg.cells).any(|&v| v >= levels) {
+        bail!("cell value exceeds {levels} levels in cache file");
+    }
+    Ok(Outcome { decomposition: Decomposition { pos, neg }, error, stage })
+}
+
+/// Serialize one pattern's fault bytes followed by its solution. The
+/// solution body is tagged: [`TAG_TABLE`] is a dense full-range table with
+/// implicit length ([`table_len`]) and the weight implicit in the index;
+/// [`TAG_PAIRS`] is a count followed by (weight, outcome) entries sorted
+/// by weight. `None` writes [`TAG_EMPTY`] (fragment files only).
+pub(crate) fn write_pattern_solution(
+    buf: &mut Vec<u8>,
+    pattern: &GroupFaults,
+    solution: Option<&PatternSolution>,
+) {
+    for f in pattern.pos.iter().chain(&pattern.neg) {
+        buf.push(*f as u8);
+    }
+    match solution {
+        Some(PatternSolution::Table(t)) => {
+            buf.push(TAG_TABLE);
+            for out in t {
+                push_outcome(buf, out);
+            }
+        }
+        Some(PatternSolution::Pairs(m)) => {
+            buf.push(TAG_PAIRS);
+            push_u32(buf, m.len() as u32);
+            let mut ws: Vec<i64> = m.keys().copied().collect();
+            ws.sort_unstable();
+            for w in ws {
+                push_i64(buf, w);
+                push_outcome(buf, &m[&w]);
+            }
+        }
+        None => buf.push(TAG_EMPTY),
+    }
+}
+
+/// Parse one pattern + solution written by [`write_pattern_solution`].
+/// `allow_empty` admits [`TAG_EMPTY`] (fragments); the session cache
+/// rejects it — a saved session never carries unsolved patterns.
+pub(crate) fn read_pattern_solution(
+    r: &mut Reader<'_>,
+    key: &CacheKey,
+    allow_empty: bool,
+) -> Result<(GroupFaults, Option<PatternSolution>)> {
+    let cells = key.cells();
+    let levels = key.cfg.levels;
+    let pos = r.fault_states(cells)?;
+    let neg = r.fault_states(cells)?;
+    let pattern = GroupFaults { pos, neg };
+    let o_len = outcome_len(cells);
+    let solution = match r.u8()? {
+        TAG_TABLE => {
+            let t_len = table_len(&key.cfg);
+            if r.remaining() < t_len * o_len {
+                bail!("cache file truncated inside a pattern table");
+            }
+            let mut outcomes = Vec::with_capacity(t_len);
+            for _ in 0..t_len {
+                outcomes.push(read_outcome(r, cells, levels)?);
+            }
+            Some(PatternSolution::Table(outcomes))
+        }
+        TAG_PAIRS => {
+            let n = r.u32()? as usize;
+            if n == 0 {
+                bail!("empty pattern solution in cache file");
+            }
+            if r.remaining() < n * o_len {
+                bail!("cache file truncated inside pattern pairs");
+            }
+            let mut m: FnvMap<i64, Outcome> = FnvMap::default();
+            for _ in 0..n {
+                let w = r.i64()?;
+                let out = read_outcome(r, cells, levels)?;
+                if m.insert(w, out).is_some() {
+                    bail!("duplicate solved weight {w} in cache file");
+                }
+            }
+            Some(PatternSolution::Pairs(m))
+        }
+        TAG_EMPTY if allow_empty => None,
+        t => bail!("bad pattern solution tag {t} in cache file"),
+    };
+    Ok((pattern, solution))
+}
+
+/// Bounds-checked little-endian reader over a sealed payload.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated cache file");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn fault_states(&mut self, n: usize) -> Result<Vec<FaultState>> {
+        self.bytes(n)?
+            .iter()
+            .map(|&b| FaultState::from_u8(b).ok_or_else(|| anyhow!("bad fault state byte {b}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_unseal_roundtrip_and_rejection() {
+        let payload = vec![1u8, 2, 3, 4, 5, 6, 7, 8, 9];
+        let sealed = seal(payload.clone());
+        assert_eq!(unseal(&sealed).unwrap(), &payload[..]);
+        // Any flipped byte (payload or checksum) is caught before parsing.
+        for i in 0..sealed.len() {
+            let mut bad = sealed.clone();
+            bad[i] ^= 0x40;
+            assert!(unseal(&bad).is_err(), "flip at {i} must be rejected");
+        }
+        assert!(unseal(&sealed[..sealed.len() - 1]).is_err());
+        assert!(unseal(&[]).is_err());
+    }
+
+    #[test]
+    fn key_roundtrip_and_mismatch_reporting() {
+        let chip = ChipFaults::new(42, FaultRates::paper_default());
+        let key = CacheKey::new(&chip, GroupConfig::R2C2, PipelineOptions::default());
+        let mut buf = Vec::new();
+        write_key(&mut buf, &key);
+        let mut r = Reader::new(&buf);
+        let back = read_key(&mut r).unwrap();
+        assert_eq!(back, key);
+        assert_eq!(r.remaining(), 0);
+        assert!(key.mismatch(&back).is_none());
+
+        let other = CacheKey::new(
+            &ChipFaults::new(43, FaultRates::paper_default()),
+            GroupConfig::R2C2,
+            PipelineOptions::default(),
+        );
+        assert!(key.mismatch(&other).unwrap().contains("chip seed"));
+        let other_cfg =
+            CacheKey::new(&chip, GroupConfig::R1C4, PipelineOptions::default());
+        assert!(key.mismatch(&other_cfg).unwrap().contains("config"));
+    }
+}

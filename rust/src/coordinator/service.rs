@@ -16,6 +16,12 @@
 //! config, pipeline fingerprint) does not match the service configuration
 //! are ignored and rebuilt, never silently reused.
 //!
+//! Resident pattern-table memory is budgeted fleet-wide via
+//! [`TableBudget`]: one global cap (fixed, or auto-sized from system RAM)
+//! split evenly across live sessions and re-derived as chips join — so a
+//! service over a thousand chips does not hold a thousand full-size
+//! caches. Budget pressure only ever costs re-solves, never output bytes.
+//!
 //! Results are byte-deterministic: job results come back in enqueue
 //! order, and neither the thread count nor the chip sharding changes a
 //! single output byte (per-chip slot order is fixed by enqueue order).
@@ -30,13 +36,58 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+/// How the service budgets resident pattern-table memory across chips.
+///
+/// One warm session per chip means N chips hold N solve caches; a cap
+/// that is correct for one session (`CompileOptions::table_memory_bytes`)
+/// multiplies by the fleet size. `Fleet` and `Auto` instead treat the cap
+/// as a **global** budget split evenly across live sessions, re-derived
+/// on every [`CompileService::run`] as chips join. Shrinking a session's
+/// budget only ever costs re-solves (LRU eviction at batch boundaries),
+/// never a single output byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableBudget {
+    /// Every session keeps its own `CompileOptions::table_memory_bytes`
+    /// (the historical behavior; total memory grows with the fleet).
+    PerSession,
+    /// One fleet-wide cap in bytes, split evenly across live sessions
+    /// (at least 1 byte each — a degenerate budget degrades to
+    /// re-solving, not to failure).
+    Fleet(usize),
+    /// Fleet-wide cap sized from the machine: half of physical RAM when
+    /// detectable ([`crate::util::mem::system_memory_bytes`]), else the
+    /// per-session default
+    /// [`crate::coordinator::DEFAULT_TABLE_MEMORY_BYTES`].
+    Auto,
+}
+
+impl TableBudget {
+    /// The fleet-wide cap this policy implies, or `None` for
+    /// [`TableBudget::PerSession`].
+    pub fn fleet_bytes(&self) -> Option<usize> {
+        match self {
+            TableBudget::PerSession => None,
+            TableBudget::Fleet(bytes) => Some((*bytes).max(1)),
+            TableBudget::Auto => Some(
+                crate::util::mem::system_memory_bytes()
+                    .map(|ram| (ram / 2).max(1))
+                    .unwrap_or(super::classes::DEFAULT_TABLE_MEMORY_BYTES),
+            ),
+        }
+    }
+}
+
 /// Service configuration: compile options shared by every chip (threads =
-/// total worker budget across chips), the fleet's fault rates, and an
-/// optional directory for persistent per-chip session caches.
+/// total worker budget across chips), the fleet's fault rates, the
+/// pattern-table memory policy, and an optional directory for persistent
+/// per-chip session caches.
 #[derive(Clone, Debug)]
 pub struct ServiceOptions {
     pub opts: CompileOptions,
     pub rates: FaultRates,
+    /// Resident pattern-table memory policy across the fleet (default
+    /// behavior of older services: [`TableBudget::PerSession`]).
+    pub table_budget: TableBudget,
     pub cache_dir: Option<PathBuf>,
 }
 
@@ -56,12 +107,36 @@ pub struct JobResult {
 }
 
 /// Multi-chip batching compile service. See the module docs.
+///
+/// ```
+/// use rchg::coordinator::{CompileOptions, CompileService, Method, ServiceOptions, TableBudget};
+/// use rchg::fault::FaultRates;
+/// use rchg::grouping::GroupConfig;
+///
+/// let mut service = CompileService::new(ServiceOptions {
+///     opts: CompileOptions::new(GroupConfig::R2C2, Method::Complete),
+///     rates: FaultRates::paper_default(),
+///     table_budget: TableBudget::Fleet(64 << 20),
+///     cache_dir: None,
+/// });
+/// let weights: Vec<i64> = (-10..=10).collect();
+/// let job_a = service.enqueue(1, "conv1", weights.clone()); // chip 1
+/// let job_b = service.enqueue(2, "conv1", weights);         // chip 2
+/// let results = service.run()?;
+/// assert_eq!(results.len(), 2);
+/// assert_eq!(results[0].job_id, job_a);
+/// assert_eq!(results[1].job_id, job_b);
+/// // The fleet cap was split across the two live chip sessions.
+/// assert_eq!(service.applied_table_budget(), Some(32 << 20));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct CompileService {
     sopts: ServiceOptions,
     sessions: BTreeMap<u64, CompileSession>,
     queue: Vec<QueuedJob>,
     next_job: u64,
     persist_errors: Vec<String>,
+    per_chip_budget: Option<usize>,
 }
 
 impl CompileService {
@@ -72,7 +147,16 @@ impl CompileService {
             queue: Vec::new(),
             next_job: 0,
             persist_errors: Vec::new(),
+            per_chip_budget: None,
         }
+    }
+
+    /// The per-chip pattern-table budget the latest
+    /// [`CompileService::run`] applied under a fleet-wide
+    /// [`TableBudget`], or `None` before the first run / under
+    /// [`TableBudget::PerSession`].
+    pub fn applied_table_budget(&self) -> Option<usize> {
+        self.per_chip_budget
     }
 
     /// Queue one named tensor for `chip_seed`; returns the job id its
@@ -172,6 +256,16 @@ impl CompileService {
         let outer = total_threads.min(n_chips);
         let inner = (total_threads / outer).max(1);
 
+        // Under a fleet-wide table budget, split the cap evenly across
+        // every session live after this run (retained + newly joined) and
+        // apply it to the sessions this batch touches. Sessions idle this
+        // round trim to the new budget the next time they run a batch.
+        self.per_chip_budget = self.sopts.table_budget.fleet_bytes().map(|total| {
+            let mut live: std::collections::BTreeSet<u64> = self.sessions.keys().copied().collect();
+            live.extend(order.iter().copied());
+            (total / live.len().max(1)).max(1)
+        });
+
         // Move each chip's session + jobs into a cell the pool can claim;
         // every cell is taken by exactly one worker.
         let mut cells: Vec<Mutex<Option<(u64, CompileSession, Vec<QueuedJob>)>>> =
@@ -179,6 +273,9 @@ impl CompileService {
         for seed in &order {
             let mut session = self.obtain_session(*seed);
             session.set_threads(inner);
+            if let Some(budget) = self.per_chip_budget {
+                session.set_table_memory_bytes(budget);
+            }
             cells.push(Mutex::new(Some((*seed, session, by_chip.remove(seed).unwrap()))));
         }
         let done: Vec<(u64, CompileSession, Vec<JobResult>)> =
@@ -261,6 +358,7 @@ mod tests {
         let mut service = CompileService::new(ServiceOptions {
             opts: opts.clone(),
             rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
             cache_dir: None,
         });
         let w0 = random_weights(1_500, cfg.max_per_array(), 1);
@@ -300,5 +398,45 @@ mod tests {
         for (a, b) in results.iter().zip(&warm) {
             assert_eq!(a.tensor.decomps, b.tensor.decomps);
         }
+        // Historical policy: no fleet budget was derived or applied.
+        assert_eq!(service.applied_table_budget(), None);
+    }
+
+    #[test]
+    fn fleet_budget_splits_across_live_sessions() {
+        let cfg = GroupConfig::R2C2;
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let total = 64 << 20;
+        let mut service = CompileService::new(ServiceOptions {
+            opts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::Fleet(total),
+            cache_dir: None,
+        });
+        let ws = random_weights(800, cfg.max_per_array(), 5);
+        service.enqueue(1, "a", ws.clone());
+        service.enqueue(2, "a", ws.clone());
+        let _ = service.run().unwrap();
+        assert_eq!(service.applied_table_budget(), Some(total / 2));
+        for (_, s) in service.sessions() {
+            assert_eq!(s.options().table_memory_bytes, total / 2);
+        }
+        // A third chip joining re-derives the split over all live sessions.
+        service.enqueue(3, "a", ws);
+        let _ = service.run().unwrap();
+        assert_eq!(service.applied_table_budget(), Some(total / 3));
+        assert_eq!(
+            service.session(3).unwrap().options().table_memory_bytes,
+            total / 3
+        );
+        // Outputs never depend on the budget: results above were computed
+        // under an eviction-pressured cap and still match a standalone
+        // session (covered by eviction tests in `classes.rs`; here we
+        // just confirm the accounting).
+        assert_eq!(service.sessions().count(), 3);
+
+        // The auto policy always derives *some* positive fleet cap.
+        assert!(TableBudget::Auto.fleet_bytes().unwrap() > 0);
+        assert_eq!(TableBudget::PerSession.fleet_bytes(), None);
     }
 }

@@ -58,17 +58,32 @@
 //! `load` verifies the checksum before parsing and rejects truncated,
 //! corrupted, version-mismatched (including v1), or internally
 //! inconsistent files with an error — never a silently wrong cache.
+//! The framing codecs are shared with the shard-fragment format (the
+//! crate-internal `persist` module); `docs/ARCHITECTURE.md` documents the
+//! exact byte layouts.
+//!
+//! ## Distributed solve (sharding)
+//!
+//! One big chip's solve phase can fan out across processes or machines:
+//! [`CompileSession::solve_shard`] runs the full scan but solves only one
+//! [`super::ShardPlan`] pattern-id range, returning a mergeable
+//! [`super::ShardFragment`]; [`CompileSession::merge_fragments`] (or
+//! [`CompileSession::from_fragments`]) reassembles the complete warm
+//! cache byte-identically to an unsharded compile. See [`super::shard`].
 
-use super::classes::{PatternSolution, SolveCache};
+use super::classes::SolveCache;
 use super::compiler::{
     compile_batch_with_cache, compile_tensor_per_weight, CompileOptions, CompileStats,
     CompiledTensor, TensorJob,
 };
-use super::pipeline::{Method, Outcome, PipelineOptions, SolveTier, Stage};
+use super::persist::{
+    push_u32, read_key, read_pattern_solution, seal, unseal, write_key, write_pattern_solution,
+    CacheKey, Reader,
+};
+use super::pipeline::{Method, PipelineOptions, SolveTier};
 use crate::fault::bank::ChipFaults;
-use crate::fault::{FaultRates, FaultState, GroupFaults};
-use crate::grouping::{Bitmap, Decomposition, GroupConfig};
-use crate::util::fnv::FnvMap;
+use crate::fault::GroupFaults;
+use crate::grouping::GroupConfig;
 use crate::util::prop::fnv1a;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
@@ -79,34 +94,66 @@ pub const SESSION_MAGIC: u32 = 0x5243_5353;
 /// tables; v1 pair files are rejected with a clean version error).
 pub const SESSION_VERSION: u32 = 2;
 
-/// Per-pattern solution tags in the v2 format.
-const TAG_TABLE: u8 = 0;
-const TAG_PAIRS: u8 = 1;
-
 /// A tensor queued via [`CompileSession::submit`], compiled on
-/// [`CompileSession::drain`].
-struct QueuedTensor {
-    name: String,
-    tensor_id: u64,
-    weights: Vec<i64>,
+/// [`CompileSession::drain`] (or scanned by
+/// [`CompileSession::solve_shard`]).
+pub(super) struct QueuedTensor {
+    pub(super) name: String,
+    pub(super) tensor_id: u64,
+    pub(super) weights: Vec<i64>,
 }
 
 /// Chip-scoped compiler session: one per (chip, grouping config,
 /// pipeline). See the module docs for the full story.
+///
+/// ```
+/// use rchg::coordinator::CompileSession;
+/// use rchg::fault::bank::ChipFaults;
+/// use rchg::fault::FaultRates;
+/// use rchg::grouping::GroupConfig;
+///
+/// let chip = ChipFaults::new(7, FaultRates::paper_default());
+/// let mut session = CompileSession::builder(GroupConfig::R2C2).chip(&chip);
+/// let weights: Vec<i64> = (-15..=15).collect();
+/// let compiled = session.compile_tensor("conv1", &weights);
+/// assert_eq!(compiled.decomps.len(), weights.len());
+///
+/// // Recompiling the same tensor is pure cache hits: zero fresh solves.
+/// let again = session.compile_tensor("conv1", &weights);
+/// assert_eq!(again.stats.unique_pairs, 0);
+/// assert_eq!(again.decomps, compiled.decomps);
+/// ```
 pub struct CompileSession {
-    opts: CompileOptions,
+    pub(super) opts: CompileOptions,
     /// `None` for detached sessions (explicit fault maps only).
-    chip: Option<ChipFaults>,
+    pub(super) chip: Option<ChipFaults>,
     /// `None` on the legacy per-weight path (`dedupe = false`).
-    cache: Option<SolveCache>,
-    stats: CompileStats,
-    tensors: usize,
-    queue: Vec<QueuedTensor>,
+    pub(super) cache: Option<SolveCache>,
+    pub(super) stats: CompileStats,
+    pub(super) tensors: usize,
+    pub(super) queue: Vec<QueuedTensor>,
 }
 
 /// Builder for [`CompileSession`] — finish with
 /// [`SessionBuilder::chip`] (chip-scoped) or [`SessionBuilder::detached`]
 /// (explicit fault maps only).
+///
+/// ```
+/// use rchg::coordinator::{CompileSession, Method, SolveTier};
+/// use rchg::fault::bank::ChipFaults;
+/// use rchg::fault::FaultRates;
+/// use rchg::grouping::GroupConfig;
+///
+/// let chip = ChipFaults::new(1, FaultRates::paper_default());
+/// let session = CompileSession::builder(GroupConfig::R2C2)
+///     .method(Method::Complete)
+///     .threads(4)
+///     .solve_tier(SolveTier::BatchTable)
+///     .table_memory_bytes(64 << 20)
+///     .chip(&chip);
+/// assert_eq!(session.options().threads, 4);
+/// assert!(session.persistable());
+/// ```
 pub struct SessionBuilder {
     opts: CompileOptions,
 }
@@ -432,60 +479,24 @@ impl CompileSession {
             bail!("config {} has {cells} cells per array; the session cache supports at most 16", self.opts.cfg);
         }
         let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let key = CacheKey::new(chip, self.opts.cfg, pipeline);
         let parts = cache.save_parts();
-
-        let push_outcome = |buf: &mut Vec<u8>, out: &Outcome| {
-            push_i64(buf, out.error);
-            buf.push(out.stage.code());
-            buf.extend_from_slice(&out.decomposition.pos.cells);
-            buf.extend_from_slice(&out.decomposition.neg.cells);
-        };
 
         let entries: usize = parts.iter().map(|(_, s)| s.len()).sum();
         let mut buf: Vec<u8> =
             Vec::with_capacity(80 + parts.len() * (2 * cells + 5) + entries * (17 + 2 * cells));
         push_u32(&mut buf, SESSION_MAGIC);
         push_u32(&mut buf, SESSION_VERSION);
-        push_u64(&mut buf, chip.chip_seed);
-        push_u64(&mut buf, chip.rates.p_sa0.to_bits());
-        push_u64(&mut buf, chip.rates.p_sa1.to_bits());
-        push_u32(&mut buf, self.opts.cfg.rows as u32);
-        push_u32(&mut buf, self.opts.cfg.cols as u32);
-        push_u32(&mut buf, self.opts.cfg.levels as u32);
-        buf.push(pipeline.method.code());
-        buf.push(pipeline.sparsest as u8);
-        push_i64(&mut buf, pipeline.table_value_limit);
-        push_u32(&mut buf, cells as u32);
+        write_key(&mut buf, &key);
         push_u32(&mut buf, parts.len() as u32);
         for (pattern, solution) in parts {
-            for f in pattern.pos.iter().chain(&pattern.neg) {
-                buf.push(*f as u8);
-            }
-            match solution {
-                PatternSolution::Table(t) => {
-                    buf.push(TAG_TABLE);
-                    // Length implicit: 2·max_per_array + 1 entries, the
-                    // weight implicit in the index — smaller and faster
-                    // than v1's per-pair (pid, w) framing.
-                    for out in t {
-                        push_outcome(&mut buf, out);
-                    }
-                }
-                PatternSolution::Pairs(m) => {
-                    buf.push(TAG_PAIRS);
-                    push_u32(&mut buf, m.len() as u32);
-                    let mut ws: Vec<i64> = m.keys().copied().collect();
-                    ws.sort_unstable();
-                    for w in ws {
-                        push_i64(&mut buf, w);
-                        push_outcome(&mut buf, &m[&w]);
-                    }
-                }
-            }
+            // Per-pattern framing: fault bytes, then the tagged solution —
+            // for tables the length is implicit (2·max_per_array + 1
+            // entries, the weight implicit in the index), smaller and
+            // faster than v1's per-pair (pid, w) framing.
+            write_pattern_solution(&mut buf, pattern, Some(solution));
         }
-        let sum = fnv1a(&buf);
-        push_u64(&mut buf, sum);
-        Ok(buf)
+        Ok(seal(buf))
     }
 
     /// Load a previously saved session. The rehydrated session starts
@@ -504,14 +515,7 @@ impl CompileSession {
     /// first and rejecting any malformed input — including v1 pair-cache
     /// files — with an error.
     pub fn from_bytes(bytes: &[u8]) -> Result<CompileSession> {
-        if bytes.len() < 16 {
-            bail!("truncated session cache ({} bytes)", bytes.len());
-        }
-        let (payload, tail) = bytes.split_at(bytes.len() - 8);
-        let stored = u64::from_le_bytes(tail.try_into().unwrap());
-        if fnv1a(payload) != stored {
-            bail!("session cache checksum mismatch (corrupted or truncated file)");
-        }
+        let payload = unseal(bytes)?;
         let mut r = Reader::new(payload);
         let magic = r.u32()?;
         if magic != SESSION_MAGIC {
@@ -524,105 +528,30 @@ impl CompileSession {
                  {SESSION_VERSION}; v1 pair caches must be rebuilt)"
             );
         }
-        let chip_seed = r.u64()?;
-        let p_sa0 = f64::from_bits(r.u64()?);
-        let p_sa1 = f64::from_bits(r.u64()?);
-        let rows = r.u32()? as usize;
-        let cols = r.u32()? as usize;
-        let levels = r.u32()?;
-        if rows == 0 || cols == 0 || !(2..=255).contains(&levels) {
-            bail!("bad grouping config R{rows}C{cols}@{levels} in session cache");
-        }
-        let cfg = GroupConfig::new(rows, cols, levels as u8);
-        let method = Method::from_code(r.u8()?)
-            .ok_or_else(|| anyhow!("bad method code in session cache"))?;
-        let sparsest = r.u8()? != 0;
-        let table_value_limit = r.i64()?;
-        let pipeline = PipelineOptions { method, table_value_limit, sparsest };
-        let cells = r.u32()? as usize;
-        if cells != cfg.cells() || cells == 0 || cells > 16 {
-            bail!("cell count {cells} disagrees with config {cfg}");
-        }
-        // Checked range computation: a corrupt header must not overflow
-        // `max_per_array` or provoke absurd table allocations.
-        let max_w = (levels as i64)
-            .checked_pow(cols as u32)
-            .and_then(|p| p.checked_sub(1))
-            .and_then(|p| p.checked_mul(rows as i64))
-            .filter(|&m| m > 0 && m <= (1 << 24))
-            .ok_or_else(|| anyhow!("unreasonable weight range in session cache"))?;
-        debug_assert_eq!(max_w, cfg.max_per_array());
-        let table_len = (2 * max_w + 1) as usize;
-        let outcome_len = 9 + 2 * cells;
+        let key = read_key(&mut r)?;
+        let cells = key.cells();
         let n_patterns = r.u32()? as usize;
         // Sanity cap before allocating: every pattern costs at least its
         // fault bytes plus a tag.
         if r.remaining() < n_patterns * (2 * cells + 1) {
             bail!("session cache truncated ({n_patterns} patterns declared)");
         }
-
-        let read_outcome = |r: &mut Reader<'_>| -> Result<Outcome> {
-            let error = r.i64()?;
-            let stage = Stage::from_code(r.u8()?)
-                .ok_or_else(|| anyhow!("bad stage code in session cache"))?;
-            let pos = Bitmap { cells: r.bytes(cells)?.to_vec() };
-            let neg = Bitmap { cells: r.bytes(cells)?.to_vec() };
-            if pos.cells.iter().chain(&neg.cells).any(|&v| v as u32 >= levels) {
-                bail!("cell value exceeds {levels} levels in session cache");
-            }
-            Ok(Outcome { decomposition: Decomposition { pos, neg }, error, stage })
-        };
-
-        let mut parts: Vec<(GroupFaults, PatternSolution)> = Vec::with_capacity(n_patterns);
+        let mut parts = Vec::with_capacity(n_patterns);
         for _ in 0..n_patterns {
-            let pos = r.fault_states(cells)?;
-            let neg = r.fault_states(cells)?;
-            let pattern = GroupFaults { pos, neg };
-            let solution = match r.u8()? {
-                TAG_TABLE => {
-                    if r.remaining() < table_len * outcome_len {
-                        bail!("session cache truncated inside a pattern table");
-                    }
-                    let mut outcomes = Vec::with_capacity(table_len);
-                    for _ in 0..table_len {
-                        outcomes.push(read_outcome(&mut r)?);
-                    }
-                    PatternSolution::Table(outcomes)
-                }
-                TAG_PAIRS => {
-                    let n = r.u32()? as usize;
-                    if n == 0 {
-                        bail!("empty pattern solution in session cache");
-                    }
-                    if r.remaining() < n * outcome_len {
-                        bail!("session cache truncated inside pattern pairs");
-                    }
-                    let mut m: FnvMap<i64, Outcome> = FnvMap::default();
-                    for _ in 0..n {
-                        let w = r.i64()?;
-                        let out = read_outcome(&mut r)?;
-                        if m.insert(w, out).is_some() {
-                            bail!("duplicate solved weight {w} in session cache");
-                        }
-                    }
-                    PatternSolution::Pairs(m)
-                }
-                t => bail!("bad pattern solution tag {t} in session cache"),
-            };
-            parts.push((pattern, solution));
+            let (pattern, solution) = read_pattern_solution(&mut r, &key, false)?;
+            parts.push((pattern, solution.expect("session entries are never empty")));
         }
         if r.remaining() != 0 {
             bail!("session cache has {} trailing bytes", r.remaining());
         }
-        let cache = SolveCache::from_parts(cfg, parts, Some(pipeline)).ok_or_else(|| {
+        let cache = SolveCache::from_parts(key.cfg, parts, Some(key.pipeline)).ok_or_else(|| {
             anyhow!("inconsistent session cache (duplicate patterns or malformed solutions)")
         })?;
-        let chip = ChipFaults::new(chip_seed, FaultRates { p_sa0, p_sa1 });
-        let mut opts = CompileOptions::new(cfg, method);
-        opts.pipeline = pipeline;
+        let mut opts = CompileOptions::new(key.cfg, key.pipeline.method);
+        opts.pipeline = key.pipeline;
         Ok(CompileSession {
             opts,
-            chip: Some(chip),
+            chip: Some(key.chip),
             cache: Some(cache),
             stats: CompileStats::default(),
             tensors: 0,
@@ -631,67 +560,10 @@ impl CompileSession {
     }
 }
 
-fn push_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-fn push_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-fn push_i64(buf: &mut Vec<u8>, v: i64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-/// Bounds-checked little-endian reader over the cache payload.
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Reader<'a> {
-        Reader { buf, pos: 0 }
-    }
-
-    fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
-    }
-
-    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        if n > self.remaining() {
-            bail!("truncated session cache");
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.bytes(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
-    }
-
-    fn i64(&mut self) -> Result<i64> {
-        Ok(i64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
-    }
-
-    fn fault_states(&mut self, n: usize) -> Result<Vec<FaultState>> {
-        self.bytes(n)?
-            .iter()
-            .map(|&b| FaultState::from_u8(b).ok_or_else(|| anyhow!("bad fault state byte {b}")))
-            .collect()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::FaultRates;
     use crate::util::prng::Rng;
 
     fn random_weights(n: usize, max: i64, seed: u64) -> Vec<i64> {

@@ -1,0 +1,512 @@
+//! Shard-solve: partition one chip's solve phase into mergeable
+//! pattern-range shards.
+//!
+//! `CompileService` already fans *chips* out across workers, but one big
+//! chip's compile was still a single-process job. Sharding splits the
+//! expensive phase — the solve — across processes or machines while
+//! keeping every byte of the output identical to an unsharded compile:
+//!
+//! 1. Every shard runs the same deterministic **scan**: it interns the
+//!    full tensor set's fault patterns, so all shards agree on the
+//!    pattern registry (ids are first-seen scan order, independent of
+//!    thread count). The scan is cheap — solve time dominates.
+//! 2. A [`ShardPlan`] deterministically partitions the pattern-id space
+//!    `0..n_patterns` into K contiguous ranges; shard `k` solves **only**
+//!    the fresh work whose pattern id falls in range `k` and serializes
+//!    the result as a [`ShardFragment`] ("RCSF", the same framing and
+//!    checksum as the RCSS session cache).
+//! 3. A coordinator calls [`CompileSession::merge_fragments`] with all K
+//!    fragments: the ranges tile the registry exactly, so the reassembled
+//!    [`super::SolveCache`] — and therefore the RCSS file saved from it,
+//!    and every tensor compiled against it — is **byte-identical** to
+//!    what a single process would have produced, for any K.
+//!
+//! Fragments are keyed by the same chip/config/pipeline fingerprint as
+//! the session cache; a fragment from the wrong chip, grouping config, or
+//! pipeline is rejected, never silently merged.
+//!
+//! The CLI surface is `rchg shard-solve --shard k/K` (run K times,
+//! anywhere) and `rchg merge-shards` (reassemble + save the warm RCSS).
+//!
+//! ```
+//! use rchg::coordinator::{CompileSession, ShardPlan};
+//! use rchg::fault::bank::ChipFaults;
+//! use rchg::fault::FaultRates;
+//! use rchg::grouping::GroupConfig;
+//!
+//! let cfg = GroupConfig::R2C2;
+//! let chip = ChipFaults::new(3, FaultRates::paper_default());
+//! let weights: Vec<i64> = (0..256).map(|i| (i % 61) - 30).collect();
+//!
+//! // Unsharded reference: one process does everything.
+//! let mut solo = CompileSession::builder(cfg).chip(&chip);
+//! let want = solo.compile_tensor("fc", &weights);
+//!
+//! // Sharded: two independent sessions each scan everything but solve
+//! // only their half of the pattern-id space…
+//! let plan = ShardPlan::new(2);
+//! let fragments: Vec<_> = (0..2)
+//!     .map(|k| {
+//!         let mut shard = CompileSession::builder(cfg).chip(&chip);
+//!         shard.submit("fc", weights.clone());
+//!         shard.solve_shard(&plan, k).unwrap()
+//!     })
+//!     .collect();
+//!
+//! // …and a coordinator merges the fragments back into a warm session
+//! // that compiles the model without a single fresh solve.
+//! let mut merged = CompileSession::builder(cfg).chip(&chip);
+//! merged.merge_fragments(&fragments).unwrap();
+//! let got = merged.compile_tensor("fc", &weights);
+//! assert_eq!(got.stats.unique_pairs, 0, "merged cache answers everything");
+//! assert_eq!(got.decomps, want.decomps);
+//! assert_eq!(got.errors, want.errors);
+//! assert_eq!(merged.to_bytes().unwrap(), solo.to_bytes().unwrap());
+//! ```
+
+use super::classes::{PatternId, PatternSolution};
+use super::compiler::{scan_batch, solve_fresh, CompileOptions, TensorJob};
+use super::persist::{
+    push_u32, read_key, read_pattern_solution, seal, table_len, unseal, write_key,
+    write_pattern_solution, CacheKey, Reader,
+};
+use super::session::CompileSession;
+use crate::fault::GroupFaults;
+use anyhow::{anyhow, bail, Context, Result};
+use std::ops::Range;
+use std::path::Path;
+
+/// Magic marker of the shard fragment format ("RCSF").
+pub const FRAGMENT_MAGIC: u32 = 0x5243_5346;
+/// Current shard fragment format version.
+pub const FRAGMENT_VERSION: u32 = 1;
+
+/// Deterministic K-way partition of a chip's pattern-id space.
+///
+/// The plan is just the shard count: the concrete ranges depend only on
+/// `(shards, n_patterns)`, so independent processes that scanned the same
+/// tensor set derive identical partitions without coordinating. Ranges
+/// are contiguous, near-equal (the first `n % K` shards get one extra
+/// pattern) and tile `0..n_patterns` exactly; with more shards than
+/// patterns the surplus shards get empty ranges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    shards: usize,
+}
+
+impl ShardPlan {
+    /// A plan with `shards` shards (clamped to at least 1).
+    pub fn new(shards: usize) -> ShardPlan {
+        ShardPlan { shards: shards.max(1) }
+    }
+
+    /// Number of shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The contiguous pattern-id range shard `shard` solves out of
+    /// `n_patterns` interned patterns.
+    ///
+    /// ```
+    /// use rchg::coordinator::ShardPlan;
+    /// let plan = ShardPlan::new(4);
+    /// let ranges: Vec<_> = (0..4).map(|k| plan.range(k, 10)).collect();
+    /// assert_eq!(ranges, vec![0..3, 3..6, 6..8, 8..10]);
+    /// ```
+    pub fn range(&self, shard: usize, n_patterns: usize) -> Range<usize> {
+        assert!(shard < self.shards, "shard {shard} out of 0..{}", self.shards);
+        let base = n_patterns / self.shards;
+        let extra = n_patterns % self.shards;
+        let start = shard * base + shard.min(extra);
+        start..start + base + usize::from(shard < extra)
+    }
+}
+
+/// One shard's solved slice of a chip's pattern space: an RCSS-compatible
+/// *partial* solve cache, keyed by the same chip/config/pipeline
+/// fingerprint, carrying every pattern of its range in id order (with or
+/// without a solution) so K fragments concatenate back into the full
+/// registry. Produced by [`CompileSession::solve_shard`], consumed by
+/// [`CompileSession::merge_fragments`].
+#[derive(Clone, Debug)]
+pub struct ShardFragment {
+    pub(super) key: CacheKey,
+    pub(super) shard: u32,
+    pub(super) shards: u32,
+    /// Patterns in the full registry after the scan (shared by all
+    /// fragments of one plan).
+    pub(super) n_patterns: u32,
+    /// First pattern id of this fragment's range.
+    pub(super) start: u32,
+    /// Every in-range pattern in id order; `None` marks a pattern this
+    /// shard did not solve (already resident before the batch, or never
+    /// requested).
+    pub(super) parts: Vec<(GroupFaults, Option<PatternSolution>)>,
+}
+
+impl ShardFragment {
+    /// Shard index within the plan (0-based).
+    pub fn shard(&self) -> usize {
+        self.shard as usize
+    }
+
+    /// Total shards in the plan this fragment belongs to.
+    pub fn shards(&self) -> usize {
+        self.shards as usize
+    }
+
+    /// Chip seed of the session this fragment was solved for.
+    pub fn chip_seed(&self) -> u64 {
+        self.key.chip.chip_seed
+    }
+
+    /// The pattern-id range this fragment covers.
+    pub fn range(&self) -> Range<usize> {
+        self.start as usize..self.start as usize + self.parts.len()
+    }
+
+    /// Patterns in the full registry the plan was derived from.
+    pub fn total_patterns(&self) -> usize {
+        self.n_patterns as usize
+    }
+
+    /// In-range patterns that carry a solution in this fragment.
+    pub fn solved_patterns(&self) -> usize {
+        self.parts.iter().filter(|(_, s)| s.is_some()).count()
+    }
+
+    /// Serialize to the RCSF v1 format: the RCSS cache-key header, the
+    /// shard framing (`shard · shards · n_patterns · start · len`), the
+    /// per-pattern solutions in id order (same byte layout as RCSS v2,
+    /// plus an *empty* tag for unsolved patterns), and the trailing
+    /// FNV-1a checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        push_u32(&mut buf, FRAGMENT_MAGIC);
+        push_u32(&mut buf, FRAGMENT_VERSION);
+        write_key(&mut buf, &self.key);
+        push_u32(&mut buf, self.shard);
+        push_u32(&mut buf, self.shards);
+        push_u32(&mut buf, self.n_patterns);
+        push_u32(&mut buf, self.start);
+        push_u32(&mut buf, self.parts.len() as u32);
+        for (pattern, solution) in &self.parts {
+            write_pattern_solution(&mut buf, pattern, solution.as_ref());
+        }
+        seal(buf)
+    }
+
+    /// Parse a fragment, verifying the trailing checksum first and
+    /// rejecting malformed input — wrong magic/version, inconsistent
+    /// shard framing, or a range that disagrees with the deterministic
+    /// [`ShardPlan`] — with an error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ShardFragment> {
+        let payload = unseal(bytes)?;
+        let mut r = Reader::new(payload);
+        let magic = r.u32()?;
+        if magic != FRAGMENT_MAGIC {
+            bail!("bad shard fragment magic {magic:#010x}");
+        }
+        let version = r.u32()?;
+        if version != FRAGMENT_VERSION {
+            bail!("unsupported shard fragment version {version} (this build reads {FRAGMENT_VERSION})");
+        }
+        let key = read_key(&mut r)?;
+        let shard = r.u32()?;
+        let shards = r.u32()?;
+        let n_patterns = r.u32()?;
+        let start = r.u32()?;
+        let len = r.u32()? as usize;
+        if shards == 0 || shard >= shards {
+            bail!("bad shard index {shard} of {shards} in fragment");
+        }
+        let plan = ShardPlan::new(shards as usize);
+        let want = plan.range(shard as usize, n_patterns as usize);
+        if start as usize != want.start || len != want.len() {
+            bail!(
+                "fragment covers patterns {start}..{} but a {shards}-way plan over \
+                 {n_patterns} patterns assigns {want:?} to shard {shard}",
+                start as usize + len
+            );
+        }
+        // Sanity cap before allocating: every pattern costs at least its
+        // fault bytes plus a tag.
+        if r.remaining() < len * (2 * key.cells() + 1) {
+            bail!("shard fragment truncated ({len} patterns declared)");
+        }
+        let mut parts = Vec::with_capacity(len);
+        for _ in 0..len {
+            parts.push(read_pattern_solution(&mut r, &key, true)?);
+        }
+        if r.remaining() != 0 {
+            bail!("shard fragment has {} trailing bytes", r.remaining());
+        }
+        Ok(ShardFragment { key, shard, shards, n_patterns, start, parts })
+    }
+
+    /// Write the fragment to `path` (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write shard fragment {}", path.display()))
+    }
+
+    /// Read a fragment written by [`ShardFragment::save`].
+    pub fn load(path: &Path) -> Result<ShardFragment> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read shard fragment {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parse shard fragment {}", path.display()))
+    }
+}
+
+impl CompileSession {
+    /// Build a warm session directly from a complete fragment set: the
+    /// session identity (chip, grouping config, pipeline) comes from the
+    /// fragment key, so a merge coordinator needs no configuration beyond
+    /// the fragments themselves. Equivalent to building a matching
+    /// session and calling [`CompileSession::merge_fragments`].
+    pub fn from_fragments(fragments: &[ShardFragment]) -> Result<CompileSession> {
+        let first = fragments
+            .first()
+            .ok_or_else(|| anyhow!("no shard fragments to merge"))?;
+        let mut opts = CompileOptions::new(first.key.cfg, first.key.pipeline.method);
+        opts.pipeline = first.key.pipeline;
+        let mut session =
+            CompileSession::builder(first.key.cfg).options(opts).chip(&first.key.chip);
+        session.merge_fragments(fragments)?;
+        Ok(session)
+    }
+
+    /// Run shard `shard` of `plan` over every tensor queued via
+    /// [`CompileSession::submit`]: scan + intern the **full** tensor set
+    /// (so all shards derive the identical pattern registry), then solve
+    /// only the fresh work whose pattern id falls in this shard's range.
+    /// Consumes the queue, like [`CompileSession::drain`], but returns a
+    /// [`ShardFragment`] instead of compiled tensors — sharding
+    /// distributes the solve phase; compilation output comes from
+    /// [`CompileSession::drain`] on a session that merged all K fragments
+    /// (or from this session itself, which keeps its shard's solutions
+    /// warm).
+    ///
+    /// Session statistics account the shard's own work: `unique_pairs`
+    /// counts only in-range fresh requests and `weights` stays 0 (no
+    /// tensor outputs are produced here).
+    pub fn solve_shard(&mut self, plan: &ShardPlan, shard: usize) -> Result<ShardFragment> {
+        if shard >= plan.shards() {
+            bail!("shard {shard} out of range for a {}-way plan", plan.shards());
+        }
+        let chip = self
+            .chip
+            .clone()
+            .ok_or_else(|| anyhow!("detached session has no chip to shard-solve for"))?;
+        if self.cache.is_none() {
+            bail!("legacy (dedupe = off) session cannot shard-solve");
+        }
+        let cells = self.opts.cfg.cells();
+        if cells == 0 || cells > 16 {
+            bail!(
+                "config {} has {cells} cells per array; shard fragments support at most 16",
+                self.opts.cfg
+            );
+        }
+        if self.queue.is_empty() {
+            bail!("no tensors queued — submit() the tensor set before solve_shard()");
+        }
+        let queue = std::mem::take(&mut self.queue);
+        let all_faults: Vec<Vec<GroupFaults>> = queue
+            .iter()
+            .map(|q| chip.sample_tensor(q.tensor_id, q.weights.len(), cells))
+            .collect();
+        let jobs: Vec<TensorJob<'_>> = queue
+            .iter()
+            .zip(&all_faults)
+            .map(|(q, f)| TensorJob { weights: &q.weights, faults: f })
+            .collect();
+        let cache = self.cache.as_mut().expect("checked above");
+        let mut scan = scan_batch(&jobs, &self.opts, cache, true);
+        let n_patterns = cache.registry.len();
+        let range = plan.range(shard, n_patterns);
+
+        // Keep only this shard's slice of the fresh work, and re-count the
+        // per-tensor fresh-request stats to match what is actually solved.
+        let in_range = |pid: PatternId| range.contains(&(pid as usize));
+        for st in &mut scan.per_tensor {
+            st.unique_pairs = 0;
+        }
+        scan.fresh_patterns.retain(|&(pid, _)| in_range(pid));
+        scan.fresh_pairs.retain(|&(pid, _, _)| in_range(pid));
+        for &(_, _, ti) in &scan.fresh_pairs {
+            scan.per_tensor[ti].unique_pairs += 1;
+        }
+        let solve_secs = solve_fresh(&mut scan, &self.opts, cache);
+
+        let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let parts: Vec<(GroupFaults, Option<PatternSolution>)> = range
+            .clone()
+            .map(|pid| {
+                let pid = pid as PatternId;
+                let pattern = cache.registry.ctx(pid).faults.clone();
+                (pattern, cache.solution_if_current(pid).cloned())
+            })
+            .collect();
+        for (ti, mut st) in scan.per_tensor.into_iter().enumerate() {
+            st.wall_secs = solve_secs[ti];
+            self.stats.merge_with_wall(&st);
+        }
+        Ok(ShardFragment {
+            key: CacheKey::new(&chip, self.opts.cfg, pipeline),
+            shard: shard as u32,
+            shards: plan.shards() as u32,
+            n_patterns: n_patterns as u32,
+            start: range.start as u32,
+            parts,
+        })
+    }
+
+    /// Merge a complete K-shard fragment set into this session's solve
+    /// cache, reassembling a warm cache **byte-identical** to what a
+    /// single-process compile of the same tensor set would hold — the
+    /// registry is rebuilt in fragment order (= scan order), every
+    /// solution is installed, and a subsequent [`CompileSession::save`]
+    /// writes the same RCSS bytes an unsharded session would.
+    ///
+    /// Returns the number of pattern solutions installed. Fails — without
+    /// touching half-merged state where detectable up front — when a
+    /// fragment's chip/config/pipeline fingerprint does not match this
+    /// session, the set is incomplete or duplicated, fragments disagree on
+    /// the plan, or the pattern order disagrees with this session's
+    /// registry.
+    pub fn merge_fragments(&mut self, fragments: &[ShardFragment]) -> Result<usize> {
+        let chip = self
+            .chip
+            .clone()
+            .ok_or_else(|| anyhow!("detached session cannot merge shard fragments"))?;
+        let cache = self
+            .cache
+            .as_mut()
+            .ok_or_else(|| anyhow!("legacy (dedupe = off) session cannot merge shard fragments"))?;
+        let first = match fragments.first() {
+            Some(f) => f,
+            None => bail!("no shard fragments to merge"),
+        };
+        let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let key = CacheKey::new(&chip, self.opts.cfg, pipeline);
+        let (shards, n_patterns) = (first.shards, first.n_patterns);
+        // Size check before the plan-sized allocation: a corrupt or
+        // hostile `shards` header must produce a clean error, not a
+        // multi-gigabyte `vec![None; shards]`.
+        if fragments.len() != shards as usize {
+            bail!(
+                "incomplete shard set: {} fragment(s) for a {shards}-way plan \
+                 (missing or duplicated shards)",
+                fragments.len()
+            );
+        }
+        let mut by_shard: Vec<Option<&ShardFragment>> = vec![None; shards as usize];
+        for f in fragments {
+            if let Some(why) = key.mismatch(&f.key) {
+                bail!(
+                    "shard fragment {}/{} does not belong to this session: {why}",
+                    f.shard + 1,
+                    f.shards
+                );
+            }
+            if f.shards != shards || f.n_patterns != n_patterns {
+                bail!(
+                    "fragments disagree on the shard plan: {}-way over {} patterns vs \
+                     {shards}-way over {n_patterns}",
+                    f.shards,
+                    f.n_patterns
+                );
+            }
+            let slot = &mut by_shard[f.shard as usize];
+            if slot.replace(f).is_some() {
+                bail!("duplicate fragment for shard {}/{shards}", f.shard + 1);
+            }
+        }
+        // At this point the set is complete: the count matched the plan
+        // and duplicates bailed above, so every slot is filled.
+        let plan = ShardPlan::new(shards as usize);
+        cache.bind_pipeline(&pipeline);
+        let t_len = table_len(&self.opts.cfg);
+        let mut installed = 0usize;
+        let mut expected: PatternId = 0;
+        for (k, f) in by_shard.iter().enumerate() {
+            let f = f.expect("completeness checked above");
+            let want = plan.range(k, n_patterns as usize);
+            if f.range() != want {
+                bail!(
+                    "fragment {}/{shards} covers patterns {:?} but the plan assigns {want:?}",
+                    k + 1,
+                    f.range()
+                );
+            }
+            for (pattern, solution) in &f.parts {
+                let pid = cache.registry.intern(pattern);
+                if pid != expected {
+                    bail!(
+                        "fragment pattern {expected} interned as id {pid}: the fragment \
+                         set disagrees with this session's registry (different tensor \
+                         set or duplicate patterns)"
+                    );
+                }
+                expected += 1;
+                match solution {
+                    Some(PatternSolution::Table(t)) => {
+                        if t.len() != t_len {
+                            bail!(
+                                "pattern {pid} table has {} entries, config {} needs {t_len}",
+                                t.len(),
+                                self.opts.cfg
+                            );
+                        }
+                        cache.install_table(pid, t.clone());
+                        installed += 1;
+                    }
+                    Some(PatternSolution::Pairs(m)) => {
+                        let mut entries: Vec<_> =
+                            m.iter().map(|(&w, o)| (pid, w, o.clone())).collect();
+                        entries.sort_unstable_by_key(|&(_, w, _)| w);
+                        cache.install_pairs(entries);
+                        installed += 1;
+                    }
+                    None => {}
+                }
+            }
+        }
+        Ok(installed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_ranges_tile_exactly() {
+        for shards in 1..=9usize {
+            let plan = ShardPlan::new(shards);
+            for n in [0usize, 1, 2, 7, 64, 1000] {
+                let mut next = 0usize;
+                for k in 0..shards {
+                    let r = plan.range(k, n);
+                    assert_eq!(r.start, next, "gap/overlap at shard {k} of {shards}, n={n}");
+                    assert!(r.len() <= n / shards + 1);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "{shards} shards must tile 0..{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_clamps_zero_shards() {
+        let plan = ShardPlan::new(0);
+        assert_eq!(plan.shards(), 1);
+        assert_eq!(plan.range(0, 5), 0..5);
+    }
+}

@@ -14,7 +14,7 @@ use crate::util::prng::Rng;
 /// One chip's fault universe: seeds + rates. Group fault maps are drawn
 /// lazily per (tensor, group index), so arbitrarily large models never
 /// materialize a full chip map.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChipFaults {
     pub chip_seed: u64,
     pub rates: FaultRates,

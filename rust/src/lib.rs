@@ -41,8 +41,18 @@
 //!
 //! Above sessions sits [`coordinator::CompileService`]: a batched compile
 //! front-end over many chips (one warm session per chip seed, chips
-//! sharded across the work-stealing pool, optional cache directory),
-//! surfaced as `rchg serve-batch`.
+//! sharded across the work-stealing pool, optional cache directory, and a
+//! fleet-wide pattern-table memory budget via
+//! [`coordinator::TableBudget`] — fixed or auto-sized from system RAM,
+//! split across live sessions), surfaced as `rchg serve-batch`.
+//!
+//! *One* chip's solve phase also distributes: a [`coordinator::ShardPlan`]
+//! partitions the chip's pattern-id space into K contiguous ranges,
+//! [`coordinator::CompileSession::solve_shard`] solves one range into a
+//! serializable [`coordinator::ShardFragment`], and
+//! [`coordinator::CompileSession::merge_fragments`] reassembles a warm
+//! cache **byte-identical** to an unsharded compile — surfaced as
+//! `rchg shard-solve --shard k/K` and `rchg merge-shards`.
 //!
 //! The old free functions are **removed**: `compile_tensor(ws, f, opts)`
 //! → `session.compile_with_faults(ws, f)` (use `.detached()` when there
@@ -91,7 +101,12 @@
 //! re-solved if they recur.
 //!
 //! Start with [`coordinator::CompileSession`] or the `examples/`
-//! directory (`quickstart` walks a save/load warm-start).
+//! directory (`quickstart` walks a save/load warm-start). The end-to-end
+//! architecture walkthrough — pipeline phases, the RCSS/RCSF on-disk byte
+//! layouts, and the determinism contract (byte-identity across thread
+//! counts, solve tiers, and shard counts) — lives in
+//! `docs/ARCHITECTURE.md` at the repository root; the top-level
+//! `README.md` has the CLI quickstart.
 
 pub mod arrays;
 pub mod baseline;

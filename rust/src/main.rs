@@ -5,6 +5,8 @@
 //!   rchg tables                 regenerate every paper table/figure (fast set)
 //!   rchg compile …              compile a model's weights for a chip
 //!   rchg serve-batch …          batched compile service over many chips
+//!   rchg shard-solve …          solve shard k/K of one chip's compile
+//!   rchg merge-shards …         reassemble shard fragments into a warm cache
 //!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
 //!   rchg eval-lm …              LM perplexity under SAFs  (Table III)
 //!   rchg compile-time …         compilation-time study    (Table II/Fig 10)
@@ -13,7 +15,10 @@
 //!   rchg info                   runtime + artifact info
 
 use rchg::arrays::MapperPolicy;
-use rchg::coordinator::{CompileOptions, CompileService, CompileStats, Method, ServiceOptions};
+use rchg::coordinator::{
+    CompileOptions, CompileService, CompileSession, CompileStats, Method, ServiceOptions,
+    ShardFragment, ShardPlan, TableBudget,
+};
 use rchg::energy::EnergyParams;
 use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
 use rchg::experiments::compile_time::{
@@ -238,6 +243,11 @@ fn main() -> anyhow::Result<()> {
                 .opt("limit", "max weights per chip", Some("60000"))
                 .opt("threads", "total worker threads (0 = auto-detect)", Some("0"))
                 .opt("cache-dir", "persist per-chip session caches (cross-run warm-start)", None)
+                .opt(
+                    "table-budget",
+                    "pattern-table memory: per-session | auto | fleet bytes (suffix k/m/g ok)",
+                    Some("per-session"),
+                )
                 .opt("rounds", "batch rounds; round 2+ recompiles warm", Some("2"));
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
@@ -249,6 +259,15 @@ fn main() -> anyhow::Result<()> {
             if seeds.is_empty() {
                 anyhow::bail!("no chip seeds given");
             }
+            let table_budget = match args.get_str("table-budget", "per-session") {
+                "per-session" => TableBudget::PerSession,
+                "auto" => TableBudget::Auto,
+                s => TableBudget::Fleet(
+                    rchg::util::mem::parse_size_bytes(s).ok_or_else(|| {
+                        anyhow::anyhow!("bad --table-budget {s:?} (per-session | auto | bytes)")
+                    })?,
+                ),
+            };
             let tensors = synthetic_model_tensors(
                 args.get_str("model", "resnet20"),
                 &cfg,
@@ -259,6 +278,7 @@ fn main() -> anyhow::Result<()> {
             let mut service = CompileService::new(ServiceOptions {
                 opts,
                 rates: FaultRates::paper_default(),
+                table_budget,
                 cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
             });
             for round in 1..=args.get_usize("rounds", 2).max(1) {
@@ -300,6 +320,114 @@ fn main() -> anyhow::Result<()> {
                     ]);
                 }
                 println!("{}", t.render());
+                if let Some(budget) = service.applied_table_budget() {
+                    println!(
+                        "per-chip table budget: {:.1} MiB ({} live sessions under the fleet cap)",
+                        budget as f64 / (1 << 20) as f64,
+                        service.sessions().count(),
+                    );
+                }
+            }
+        }
+        "shard-solve" => {
+            let cli = Cli::new("solve shard k/K of one chip's compile (fan one chip out)")
+                .opt("model", "layer-shape model", Some("resnet20"))
+                .opt("config", "grouping config", Some("r2c2"))
+                .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
+                .opt("chip", "chip seed", Some("1"))
+                .opt("limit", "max weights", Some("60000"))
+                .opt("threads", "worker threads (0 = auto-detect)", Some("0"))
+                .opt("shard", "shard index as k/K, 1-based (e.g. 2/4)", Some("1/1"))
+                .opt("out", "fragment path (default shards/chip-<seed>-<k>of<K>.rcsf)", None);
+            let args = cli.parse(rest);
+            let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
+                .ok_or_else(|| anyhow::anyhow!("bad config"))?;
+            let method = Method::parse(args.get_str("method", "complete"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let (k, total) = parse_shard_spec(args.get_str("shard", "1/1"))?;
+            let seed = args.get_u64("chip", 1);
+            let tensors = synthetic_model_tensors(
+                args.get_str("model", "resnet20"),
+                &cfg,
+                args.get_usize("limit", 60_000),
+            )?;
+            let chip = rchg::fault::bank::ChipFaults::new(seed, FaultRates::paper_default());
+            let mut session = CompileSession::builder(cfg)
+                .method(method)
+                .threads(args.get_threads("threads"))
+                .chip(&chip);
+            for (name, ws) in &tensors {
+                session.submit(name, ws.clone());
+            }
+            let plan = ShardPlan::new(total);
+            let timer = Timer::start();
+            let fragment = session.solve_shard(&plan, k - 1)?;
+            let path = args
+                .get("out")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| {
+                    std::path::PathBuf::from(format!("shards/chip-{seed}-{k}of{total}.rcsf"))
+                });
+            fragment.save(&path)?;
+            println!(
+                "shard {k}/{total} of chip {seed}: solved {} of {} pattern classes \
+                 (ids {:?} of {}) in {} → {}",
+                fragment.solved_patterns(),
+                fragment.range().len(),
+                fragment.range(),
+                fragment.total_patterns(),
+                fmt_dur(timer.secs()),
+                path.display(),
+            );
+        }
+        "merge-shards" => {
+            let cli = Cli::new("reassemble shard fragments into one warm session cache")
+                .opt("frags", "comma-separated fragment paths (all K shards)", None)
+                .opt("out", "merged session cache path", Some("shards/merged.rcs"))
+                .opt("verify-model", "recompile this model after merging; must solve nothing", None)
+                .opt("limit", "max weights for --verify-model", Some("60000"));
+            let args = cli.parse(rest);
+            let paths = args.get_list("frags");
+            if paths.is_empty() {
+                anyhow::bail!("no fragments given — pass --frags a.rcsf,b.rcsf,…");
+            }
+            let fragments: Vec<ShardFragment> = paths
+                .iter()
+                .map(|p| ShardFragment::load(std::path::Path::new(p)))
+                .collect::<anyhow::Result<_>>()?;
+            // The fragment key carries the whole session identity, so the
+            // merge coordinator needs no model/config flags at all.
+            let mut session = CompileSession::from_fragments(&fragments)?;
+            let out = std::path::PathBuf::from(args.get_str("out", "shards/merged.rcs"));
+            session.save(&out)?;
+            println!(
+                "merged {} fragments: {} pattern classes, {} solved pairs → {}",
+                fragments.len(),
+                session.pattern_classes(),
+                session.solved_pairs(),
+                out.display(),
+            );
+            if let Some(model) = args.get("verify-model") {
+                let cfg = session.options().cfg;
+                let tensors =
+                    synthetic_model_tensors(model, &cfg, args.get_usize("limit", 60_000))?;
+                for (name, ws) in &tensors {
+                    session.submit(name, ws.clone());
+                }
+                let compiled = session.drain();
+                let fresh: usize =
+                    compiled.iter().map(|(_, t)| t.stats.unique_pairs).sum();
+                let weights: usize = compiled.iter().map(|(_, t)| t.decomps.len()).sum();
+                println!(
+                    "verify: {} tensors / {} weights recompiled with {} fresh solves{}",
+                    compiled.len(),
+                    weights,
+                    fresh,
+                    if fresh == 0 { " (fully warm)" } else { " — fragments did not cover the model!" },
+                );
+                if fresh > 0 {
+                    anyhow::bail!("merged cache was not warm for {model}");
+                }
             }
         }
         "energy" => {
@@ -344,6 +472,8 @@ fn main() -> anyhow::Result<()> {
                  \x20 tables           regenerate all paper tables/figures (fast set)\n\
                  \x20 compile          compile a model for one chip (timing)\n\
                  \x20 serve-batch      batched compile service over many chips (warm sessions)\n\
+                 \x20 shard-solve      solve shard k/K of one chip's compile (fan one chip out)\n\
+                 \x20 merge-shards     reassemble shard fragments into a warm session cache\n\
                  \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
                  \x20 eval-lm          Table III\n\
                  \x20 compile-time     Table II / Fig 10\n\
@@ -354,4 +484,16 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse the `--shard k/K` spec (1-based index, e.g. `2/4`).
+fn parse_shard_spec(s: &str) -> anyhow::Result<(usize, usize)> {
+    let bad = || anyhow::anyhow!("bad --shard {s:?}: expected k/K with 1 <= k <= K, e.g. 2/4");
+    let (k, total) = s.split_once('/').ok_or_else(bad)?;
+    let k: usize = k.trim().parse().map_err(|_| bad())?;
+    let total: usize = total.trim().parse().map_err(|_| bad())?;
+    if k == 0 || total == 0 || k > total {
+        return Err(bad());
+    }
+    Ok((k, total))
 }

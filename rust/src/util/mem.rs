@@ -1,0 +1,78 @@
+//! System-memory detection for the `auto` table-budget mode.
+//!
+//! The compile service can size its fleet-wide pattern-table budget from
+//! the machine's physical RAM ([`crate::coordinator::TableBudget::Auto`]).
+//! Detection is best-effort: on Linux it parses `MemTotal` from
+//! `/proc/meminfo`; elsewhere (or on a malformed file) it reports `None`
+//! and the caller falls back to a fixed default. No external crates — the
+//! container has none to offer.
+
+/// Physical memory of this machine in bytes, if detectable.
+pub fn system_memory_bytes() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        parse_meminfo(&std::fs::read_to_string("/proc/meminfo").ok()?)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Extract `MemTotal` (reported in kB) from `/proc/meminfo` content.
+#[cfg_attr(not(target_os = "linux"), allow(dead_code))]
+fn parse_meminfo(meminfo: &str) -> Option<usize> {
+    let line = meminfo.lines().find(|l| l.starts_with("MemTotal:"))?;
+    let kb: usize = line.split_whitespace().nth(1)?.parse().ok()?;
+    kb.checked_mul(1024)
+}
+
+/// Parse a human byte-size string: a plain integer is bytes; `k`/`m`/`g`
+/// or `kib`/`mib`/`gib` suffixes (case-insensitive) scale by 2^10/20/30.
+/// Used by the CLI's `--table-budget` option.
+pub fn parse_size_bytes(s: &str) -> Option<usize> {
+    let s = s.trim().to_ascii_lowercase();
+    let split = s.find(|c: char| !c.is_ascii_digit()).unwrap_or(s.len());
+    let (digits, suffix) = s.split_at(split);
+    let shift: u32 = match suffix {
+        "" => 0,
+        "k" | "kib" => 10,
+        "m" | "mib" => 20,
+        "g" | "gib" => 30,
+        _ => return None,
+    };
+    let n: usize = digits.parse().ok()?;
+    n.checked_shl(shift).filter(|&v| v >> shift == n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meminfo_parsing() {
+        let sample = "MemTotal:       16384256 kB\nMemFree:         1234 kB\n";
+        assert_eq!(parse_meminfo(sample), Some(16384256 * 1024));
+        assert_eq!(parse_meminfo("garbage"), None);
+        assert_eq!(parse_meminfo("MemTotal: not-a-number kB"), None);
+    }
+
+    #[test]
+    fn size_strings() {
+        assert_eq!(parse_size_bytes("1024"), Some(1024));
+        assert_eq!(parse_size_bytes("64k"), Some(64 << 10));
+        assert_eq!(parse_size_bytes("512MiB"), Some(512 << 20));
+        assert_eq!(parse_size_bytes("2g"), Some(2 << 30));
+        assert_eq!(parse_size_bytes("2GIB"), Some(2 << 30));
+        assert_eq!(parse_size_bytes(""), None);
+        assert_eq!(parse_size_bytes("12x"), None);
+        assert_eq!(parse_size_bytes("auto"), None);
+    }
+
+    #[test]
+    fn detection_is_sane_on_linux() {
+        if let Some(bytes) = system_memory_bytes() {
+            assert!(bytes > 1 << 20, "machines have more than a MiB of RAM");
+        }
+    }
+}

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod fnv;
 pub mod io;
 pub mod json;
+pub mod mem;
 pub mod pool;
 pub mod prng;
 pub mod prop;

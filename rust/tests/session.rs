@@ -7,7 +7,7 @@
 
 use rchg::coordinator::{
     compile_batch_with_cache, CompileOptions, CompileService, CompileSession, Method,
-    ServiceOptions, SolveCache, TensorJob,
+    ServiceOptions, SolveCache, TableBudget, TensorJob,
 };
 use rchg::experiments::compile_time::synthetic_model_tensors;
 use rchg::fault::bank::ChipFaults;
@@ -218,6 +218,7 @@ fn service_batches_many_chips_and_warm_starts_from_cache_dir() {
     let mut service = CompileService::new(ServiceOptions {
         opts: opts.clone(),
         rates: FaultRates::paper_default(),
+        table_budget: TableBudget::PerSession,
         cache_dir: Some(dir.clone()),
     });
     for &seed in &seeds {
@@ -248,6 +249,7 @@ fn service_batches_many_chips_and_warm_starts_from_cache_dir() {
     let mut fresh = CompileService::new(ServiceOptions {
         opts,
         rates: FaultRates::paper_default(),
+        table_budget: TableBudget::PerSession,
         cache_dir: Some(dir.clone()),
     });
     for &seed in &seeds {

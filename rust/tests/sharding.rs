@@ -1,0 +1,279 @@
+//! Shard-solve acceptance tests: merged K-shard fragments reassemble a
+//! solve cache whose compiled bitmaps AND saved RCSS bytes are identical
+//! to a single-process compile for K ∈ {1, 2, 4, 8}; fragments survive a
+//! serialization round-trip; and fragments from a mismatched chip,
+//! config, or pipeline fingerprint — or an incomplete/duplicated shard
+//! set — are rejected cleanly.
+
+use rchg::coordinator::{CompileSession, CompiledTensor, Method, ShardFragment, ShardPlan};
+use rchg::experiments::compile_time::synthetic_model_tensors;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+
+fn model(cfg: &GroupConfig, limit: usize) -> Vec<(String, Vec<i64>)> {
+    synthetic_model_tensors("resnet20", cfg, limit).unwrap()
+}
+
+/// One unsharded compile: (per-tensor outputs, saved RCSS bytes).
+fn compile_solo(
+    cfg: GroupConfig,
+    chip: &ChipFaults,
+    method: Method,
+    tensors: &[(String, Vec<i64>)],
+) -> (Vec<(String, CompiledTensor)>, Vec<u8>) {
+    let mut session = CompileSession::builder(cfg).method(method).chip(chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    let out = session.drain();
+    (out, session.to_bytes().unwrap())
+}
+
+/// Solve all K shards in independent sessions (as separate processes
+/// would), round-tripping every fragment through its byte serialization.
+fn solve_shards(
+    cfg: GroupConfig,
+    chip: &ChipFaults,
+    method: Method,
+    tensors: &[(String, Vec<i64>)],
+    shards: usize,
+    threads: usize,
+) -> Vec<ShardFragment> {
+    let plan = ShardPlan::new(shards);
+    (0..shards)
+        .map(|k| {
+            let mut session =
+                CompileSession::builder(cfg).method(method).threads(threads).chip(chip);
+            for (name, ws) in tensors {
+                session.submit(name, ws.clone());
+            }
+            let fragment = session.solve_shard(&plan, k).unwrap();
+            ShardFragment::from_bytes(&fragment.to_bytes()).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn merged_shards_match_single_process_for_k_1_2_4_8() {
+    // Acceptance: for K ∈ {1, 2, 4, 8}, merging K fragments yields (a)
+    // compiled bitmaps byte-identical to the unsharded session, (b) zero
+    // fresh solves on the merged cache, and (c) an RCSS save byte-equal
+    // to the unsharded session's save.
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(21, FaultRates::paper_default());
+    let tensors = model(&cfg, 8_000);
+    let (solo_out, solo_bytes) = compile_solo(cfg, &chip, Method::Complete, &tensors);
+
+    for shards in [1usize, 2, 4, 8] {
+        let fragments = solve_shards(cfg, &chip, Method::Complete, &tensors, shards, 2);
+        // The shard ranges tile the registry: every pattern is owned by
+        // exactly one shard, and the per-fragment registry slices agree.
+        let n_patterns = fragments[0].total_patterns();
+        let covered: usize = fragments.iter().map(|f| f.range().len()).sum();
+        assert_eq!(covered, n_patterns, "K={shards} ranges must tile the registry");
+        let solved: usize = fragments.iter().map(|f| f.solved_patterns()).sum();
+        assert_eq!(solved, n_patterns, "a cold compile solves every pattern once");
+
+        let mut merged = CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
+        let installed = merged.merge_fragments(&fragments).unwrap();
+        assert_eq!(installed, n_patterns);
+
+        // (c) the merged warm state is byte-identical to the unsharded
+        // session's save — before compiling anything through it.
+        assert_eq!(
+            merged.to_bytes().unwrap(),
+            solo_bytes,
+            "K={shards} merged RCSS bytes diverged from the single-process save"
+        );
+
+        // (a)+(b): compiling the model through the merged cache solves
+        // nothing fresh and reproduces the unsharded output bitmaps.
+        for (name, ws) in &tensors {
+            merged.submit(name, ws.clone());
+        }
+        let out = merged.drain();
+        assert_eq!(out.len(), solo_out.len());
+        for ((name, got), (solo_name, want)) in out.iter().zip(&solo_out) {
+            assert_eq!(name, solo_name);
+            assert_eq!(got.stats.unique_pairs, 0, "K={shards} merged cache must be warm");
+            assert_eq!(got.decomps, want.decomps, "K={shards} bitmaps diverged on {name}");
+            assert_eq!(got.errors, want.errors, "K={shards} errors diverged on {name}");
+        }
+        // And the save after recompiling is unchanged too.
+        assert_eq!(merged.to_bytes().unwrap(), solo_bytes);
+    }
+}
+
+#[test]
+fn from_fragments_builds_the_session_from_the_key_alone() {
+    // The fragment key carries the whole session identity: a coordinator
+    // can rebuild the warm session with no other configuration.
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(33, FaultRates::paper_default());
+    let tensors = model(&cfg, 5_000);
+    let (solo_out, solo_bytes) = compile_solo(cfg, &chip, Method::Complete, &tensors);
+
+    let fragments = solve_shards(cfg, &chip, Method::Complete, &tensors, 3, 1);
+    let mut merged = CompileSession::from_fragments(&fragments).unwrap();
+    assert!(merged.matches(&chip, merged.options()));
+    assert_eq!(merged.to_bytes().unwrap(), solo_bytes);
+    for (name, ws) in &tensors {
+        merged.submit(name, ws.clone());
+    }
+    for ((_, got), (_, want)) in merged.drain().iter().zip(&solo_out) {
+        assert_eq!(got.stats.unique_pairs, 0);
+        assert_eq!(got.decomps, want.decomps);
+    }
+}
+
+#[test]
+fn per_weight_tier_shards_identically() {
+    // The PerWeight tier (paper-protocol baselines) shards by pattern-id
+    // range too: pairs of in-range patterns are solved, everything merges
+    // back byte-identically. Small tensor set — ILP solves are expensive.
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(5, FaultRates::paper_default());
+    let tensors = vec![("t0".to_string(), (-30..=30).chain(-30..=30).collect::<Vec<i64>>())];
+    let (solo_out, solo_bytes) = compile_solo(cfg, &chip, Method::IlpOnly, &tensors);
+
+    let fragments = solve_shards(cfg, &chip, Method::IlpOnly, &tensors, 2, 1);
+    let mut merged = CompileSession::builder(cfg).method(Method::IlpOnly).chip(&chip);
+    merged.merge_fragments(&fragments).unwrap();
+    assert_eq!(merged.to_bytes().unwrap(), solo_bytes);
+    for (name, ws) in &tensors {
+        merged.submit(name, ws.clone());
+    }
+    for ((_, got), (_, want)) in merged.drain().iter().zip(&solo_out) {
+        assert_eq!(got.stats.unique_pairs, 0);
+        assert_eq!(got.decomps, want.decomps);
+        assert_eq!(got.errors, want.errors);
+    }
+}
+
+#[test]
+fn thread_count_never_changes_fragments() {
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(9, FaultRates::paper_default());
+    let tensors = model(&cfg, 4_000);
+    let a = solve_shards(cfg, &chip, Method::Complete, &tensors, 4, 1);
+    let b = solve_shards(cfg, &chip, Method::Complete, &tensors, 4, 8);
+    for (fa, fb) in a.iter().zip(&b) {
+        assert_eq!(fa.to_bytes(), fb.to_bytes(), "fragments must be thread-count invariant");
+    }
+}
+
+#[test]
+fn mismatched_fingerprints_and_broken_sets_are_rejected() {
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(21, FaultRates::paper_default());
+    let tensors = model(&cfg, 3_000);
+    let fragments = solve_shards(cfg, &chip, Method::Complete, &tensors, 2, 1);
+
+    // Wrong chip: same config/pipeline, different seed.
+    let other_chip = ChipFaults::new(22, FaultRates::paper_default());
+    let mut wrong_chip = CompileSession::builder(cfg).chip(&other_chip);
+    let err = wrong_chip.merge_fragments(&fragments).unwrap_err().to_string();
+    assert!(err.contains("chip seed"), "unhelpful error: {err}");
+
+    // Wrong grouping config.
+    let mut wrong_cfg = CompileSession::builder(GroupConfig::R1C4).chip(&chip);
+    assert!(wrong_cfg.merge_fragments(&fragments).is_err());
+
+    // Wrong pipeline fingerprint (different method).
+    let mut wrong_method = CompileSession::builder(cfg).method(Method::IlpOnly).chip(&chip);
+    let err = wrong_method.merge_fragments(&fragments).unwrap_err().to_string();
+    assert!(err.contains("pipeline"), "unhelpful error: {err}");
+
+    // Incomplete set: one of two shards.
+    let mut incomplete = CompileSession::builder(cfg).chip(&chip);
+    let err = incomplete.merge_fragments(&fragments[..1]).unwrap_err().to_string();
+    assert!(err.contains("missing"), "unhelpful error: {err}");
+
+    // Duplicated shard.
+    let dup = vec![fragments[0].clone(), fragments[0].clone()];
+    let mut duplicated = CompileSession::builder(cfg).chip(&chip);
+    assert!(duplicated.merge_fragments(&dup).is_err());
+
+    // Fragments from different plans never mix.
+    let three_way = solve_shards(cfg, &chip, Method::Complete, &tensors, 3, 1);
+    let mixed = vec![fragments[0].clone(), three_way[1].clone()];
+    let mut mixed_session = CompileSession::builder(cfg).chip(&chip);
+    let err = mixed_session.merge_fragments(&mixed).unwrap_err().to_string();
+    assert!(err.contains("plan"), "unhelpful error: {err}");
+
+    // A detached session has no chip identity to merge into.
+    let mut detached = CompileSession::builder(cfg).detached();
+    assert!(detached.merge_fragments(&fragments).is_err());
+
+    // And the merge succeeds once everything lines up — the rejections
+    // above were not spurious.
+    let mut ok = CompileSession::builder(cfg).chip(&chip);
+    assert!(ok.merge_fragments(&fragments).is_ok());
+}
+
+#[test]
+fn corrupted_fragment_bytes_are_rejected() {
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(2, FaultRates::paper_default());
+    let tensors = model(&cfg, 2_000);
+    let good = solve_shards(cfg, &chip, Method::Complete, &tensors, 2, 1)[0].to_bytes();
+    assert!(ShardFragment::from_bytes(&good).is_ok());
+
+    assert!(ShardFragment::from_bytes(&[]).is_err());
+    assert!(ShardFragment::from_bytes(&good[..8]).is_err());
+    assert!(ShardFragment::from_bytes(&good[..good.len() - 3]).is_err());
+    assert!(ShardFragment::from_bytes(&good[..good.len() / 2]).is_err());
+
+    // A flipped bit mid-payload fails the checksum.
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x40;
+    assert!(ShardFragment::from_bytes(&flipped).is_err());
+
+    // Wrong magic / future version (checksum recomputed so only the
+    // header field is at fault): an RCSS session file is not a fragment.
+    let refresh = |mut bytes: Vec<u8>| -> Vec<u8> {
+        let n = bytes.len();
+        let sum = rchg::util::prop::fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    };
+    let mut magic = good.clone();
+    magic[0] ^= 0xFF;
+    assert!(ShardFragment::from_bytes(&refresh(magic)).is_err());
+    let mut vers = good.clone();
+    vers[4] = 99;
+    assert!(ShardFragment::from_bytes(&refresh(vers)).is_err());
+
+    // A session cache is not a fragment and vice versa.
+    let mut session = CompileSession::builder(cfg).chip(&chip);
+    let _ = session.compile_tensor("t", &[0, 1, 2]);
+    let rcss = session.to_bytes().unwrap();
+    assert!(ShardFragment::from_bytes(&rcss).is_err());
+    assert!(CompileSession::from_bytes(&good).is_err());
+}
+
+#[test]
+fn solve_shard_guards_its_preconditions() {
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    let plan = ShardPlan::new(2);
+
+    // Shard index out of range.
+    let mut s = CompileSession::builder(cfg).chip(&chip);
+    s.submit("t", vec![1, 2, 3]);
+    assert!(s.solve_shard(&plan, 2).is_err());
+
+    // Nothing submitted.
+    let mut empty = CompileSession::builder(cfg).chip(&chip);
+    assert!(empty.solve_shard(&plan, 0).is_err());
+
+    // Detached and legacy sessions cannot shard-solve.
+    let mut detached = CompileSession::builder(cfg).detached();
+    detached.submit("t", vec![1]);
+    assert!(detached.solve_shard(&plan, 0).is_err());
+    let mut legacy = CompileSession::builder(cfg).dedupe(false).chip(&chip);
+    legacy.submit("t", vec![1]);
+    assert!(legacy.solve_shard(&plan, 0).is_err());
+}
