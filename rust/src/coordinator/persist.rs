@@ -18,9 +18,16 @@
 //! checksum is verified *before* any parsing, so a truncated or corrupted
 //! file is rejected without ever touching the decoder.
 //!
+//! The network fabric's wire protocol ("RCWP" v1, [`crate::net`]) is the
+//! third consumer of these codecs: shard-job payloads open with the same
+//! cache-key layout, shard results travel as verbatim RCSF fragment
+//! bytes, and session fetches as verbatim RCSS files — one codec across
+//! disk and wire.
+//!
 //! Everything here is `pub(crate)`: the public surface is
-//! `CompileSession::{save,load,to_bytes,from_bytes}` and
-//! `ShardFragment::{save,load,to_bytes,from_bytes}`.
+//! `CompileSession::{save,load,to_bytes,from_bytes}`,
+//! `ShardFragment::{save,load,to_bytes,from_bytes}`, and the
+//! [`crate::net::protocol`] payload codecs built on top.
 
 use super::classes::PatternSolution;
 use super::pipeline::{Method, Outcome, PipelineOptions, Stage};

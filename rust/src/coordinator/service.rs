@@ -18,9 +18,13 @@
 //!
 //! Resident pattern-table memory is budgeted fleet-wide via
 //! [`TableBudget`]: one global cap (fixed, or auto-sized from system RAM)
-//! split evenly across live sessions and re-derived as chips join — so a
-//! service over a thousand chips does not hold a thousand full-size
-//! caches. Budget pressure only ever costs re-solves, never output bytes.
+//! split across live sessions **proportionally to each session's interned
+//! pattern count** (a chip with 10× the fault-pattern diversity gets 10×
+//! the table budget), re-derived on every run as chips join; when no
+//! session has interned anything yet the split degrades to even shares.
+//! So a service over a thousand chips does not hold a thousand full-size
+//! caches, and the cap lands where the patterns are. Budget pressure only
+//! ever costs re-solves, never output bytes.
 //!
 //! Results are byte-deterministic: job results come back in enqueue
 //! order, and neither the thread count nor the chip sharding changes a
@@ -41,18 +45,19 @@ use std::sync::Mutex;
 /// One warm session per chip means N chips hold N solve caches; a cap
 /// that is correct for one session (`CompileOptions::table_memory_bytes`)
 /// multiplies by the fleet size. `Fleet` and `Auto` instead treat the cap
-/// as a **global** budget split evenly across live sessions, re-derived
-/// on every [`CompileService::run`] as chips join. Shrinking a session's
-/// budget only ever costs re-solves (LRU eviction at batch boundaries),
-/// never a single output byte.
+/// as a **global** budget split across live sessions proportionally to
+/// each session's interned pattern count (even shares when no counts
+/// exist yet), re-derived on every [`CompileService::run`] as chips
+/// join. Shrinking a session's budget only ever costs re-solves (LRU
+/// eviction at batch boundaries), never a single output byte.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TableBudget {
     /// Every session keeps its own `CompileOptions::table_memory_bytes`
     /// (the historical behavior; total memory grows with the fleet).
     PerSession,
-    /// One fleet-wide cap in bytes, split evenly across live sessions
-    /// (at least 1 byte each — a degenerate budget degrades to
-    /// re-solving, not to failure).
+    /// One fleet-wide cap in bytes, split across live sessions in
+    /// proportion to their interned pattern counts (at least 1 byte each
+    /// — a degenerate budget degrades to re-solving, not to failure).
     Fleet(usize),
     /// Fleet-wide cap sized from the machine: half of physical RAM when
     /// detectable ([`crate::util::mem::system_memory_bytes`]), else the
@@ -126,8 +131,11 @@ pub struct JobResult {
 /// assert_eq!(results.len(), 2);
 /// assert_eq!(results[0].job_id, job_a);
 /// assert_eq!(results[1].job_id, job_b);
-/// // The fleet cap was split across the two live chip sessions.
-/// assert_eq!(service.applied_table_budget(), Some(32 << 20));
+/// // The fleet cap is in force, split across the two live sessions
+/// // (evenly here: neither had interned patterns when the run began).
+/// assert_eq!(service.applied_table_budget(), Some(64 << 20));
+/// assert_eq!(service.session_table_budget(1), Some(32 << 20));
+/// assert_eq!(service.session_table_budget(2), Some(32 << 20));
 /// # Ok::<(), anyhow::Error>(())
 /// ```
 pub struct CompileService {
@@ -136,7 +144,8 @@ pub struct CompileService {
     queue: Vec<QueuedJob>,
     next_job: u64,
     persist_errors: Vec<String>,
-    per_chip_budget: Option<usize>,
+    fleet_cap: Option<usize>,
+    applied_budgets: BTreeMap<u64, usize>,
 }
 
 impl CompileService {
@@ -147,16 +156,31 @@ impl CompileService {
             queue: Vec::new(),
             next_job: 0,
             persist_errors: Vec::new(),
-            per_chip_budget: None,
+            fleet_cap: None,
+            applied_budgets: BTreeMap::new(),
         }
     }
 
-    /// The per-chip pattern-table budget the latest
+    /// The fleet-wide pattern-table cap the latest
     /// [`CompileService::run`] applied under a fleet-wide
     /// [`TableBudget`], or `None` before the first run / under
-    /// [`TableBudget::PerSession`].
+    /// [`TableBudget::PerSession`]. Per-chip shares are reported by
+    /// [`CompileService::session_table_budget`].
     pub fn applied_table_budget(&self) -> Option<usize> {
-        self.per_chip_budget
+        self.fleet_cap
+    }
+
+    /// The pattern-table budget the latest split derived for one chip's
+    /// session: the fleet cap weighted by the session's interned pattern
+    /// count when the split was last re-derived (on every
+    /// [`CompileService::run`] — after cache-dir warm-starts load, so a
+    /// disk-warm chip weighs its real count — and on every
+    /// [`CompileService::install_session`]). A chip with nothing
+    /// interned yet is weighted as one pattern, which also makes the
+    /// all-new fleet split exactly even. `None` before the first split,
+    /// under [`TableBudget::PerSession`], or for an unknown chip.
+    pub fn session_table_budget(&self, chip_seed: u64) -> Option<usize> {
+        self.applied_budgets.get(&chip_seed).copied()
     }
 
     /// Queue one named tensor for `chip_seed`; returns the job id its
@@ -206,29 +230,54 @@ impl CompileService {
         dir.join(name.to_ascii_lowercase())
     }
 
+    /// Rehydrate one chip's session from the cache dir, if a file with a
+    /// matching key exists. Execution knobs are not part of the cache
+    /// key, so the service's configuration is applied to the loaded
+    /// session.
+    fn load_from_cache_dir(&self, chip_seed: u64) -> Option<CompileSession> {
+        let dir = self.sopts.cache_dir.as_ref()?;
+        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
+        let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
+        let mut s = CompileSession::load(&path).ok()?;
+        if !s.matches(&chip, &self.sopts.opts) {
+            return None;
+        }
+        s.set_time_stages(self.sopts.opts.time_stages);
+        s.set_solve_tier(self.sopts.opts.tier);
+        s.set_table_memory_bytes(self.sopts.opts.table_memory_bytes);
+        Some(s)
+    }
+
     /// A session for `chip_seed`: warm from the in-memory map, else warm
     /// from the cache dir (if the stored key matches), else cold.
     fn obtain_session(&mut self, chip_seed: u64) -> CompileSession {
         if let Some(s) = self.sessions.remove(&chip_seed) {
             return s;
         }
-        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
-        if let Some(dir) = &self.sopts.cache_dir {
-            let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
-            if let Ok(mut s) = CompileSession::load(&path) {
-                if s.matches(&chip, &self.sopts.opts) {
-                    // Execution knobs are not part of the cache key — apply
-                    // the service's configuration to the rehydrated session.
-                    s.set_time_stages(self.sopts.opts.time_stages);
-                    s.set_solve_tier(self.sopts.opts.tier);
-                    s.set_table_memory_bytes(self.sopts.opts.table_memory_bytes);
-                    return s;
-                }
-            }
+        if let Some(s) = self.load_from_cache_dir(chip_seed) {
+            return s;
         }
+        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
         CompileSession::builder(self.sopts.opts.cfg)
             .options(self.sopts.opts.clone())
             .chip(&chip)
+    }
+
+    /// Verbatim RCSS bytes of `chip_seed`'s cache-dir file, when one
+    /// exists and is keyed for this service's configuration
+    /// (parse-validated, so a stale or corrupt file reads as absent
+    /// rather than being served). This — not
+    /// [`CompileSession::to_bytes`] on a freshly loaded session, whose
+    /// save semantics drop entries never hit since load — is how a
+    /// restarted service serves a chip's warm cache it has not compiled
+    /// with yet.
+    pub fn cached_session_bytes(&self, chip_seed: u64) -> Option<Vec<u8>> {
+        let dir = self.sopts.cache_dir.as_ref()?;
+        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
+        let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
+        let bytes = std::fs::read(&path).ok()?;
+        let s = CompileSession::from_bytes(&bytes).ok()?;
+        s.matches(&chip, &self.sopts.opts).then_some(bytes)
     }
 
     /// Compile every queued job. Jobs are grouped per chip (one warm
@@ -256,28 +305,28 @@ impl CompileService {
         let outer = total_threads.min(n_chips);
         let inner = (total_threads / outer).max(1);
 
-        // Under a fleet-wide table budget, split the cap evenly across
-        // every session live after this run (retained + newly joined) and
-        // apply it to the sessions this batch touches. Sessions idle this
-        // round trim to the new budget the next time they run a batch.
-        self.per_chip_budget = self.sopts.table_budget.fleet_bytes().map(|total| {
-            let mut live: std::collections::BTreeSet<u64> = self.sessions.keys().copied().collect();
-            live.extend(order.iter().copied());
-            (total / live.len().max(1)).max(1)
-        });
+        // Obtain every participating session *before* deriving the fleet
+        // budget split, so a session warm-started from the cache dir
+        // carries its real interned pattern count into the weighting
+        // instead of being treated as empty.
+        let mut obtained: Vec<(u64, CompileSession, Vec<QueuedJob>)> = order
+            .iter()
+            .map(|seed| (*seed, self.obtain_session(*seed), by_chip.remove(seed).unwrap()))
+            .collect();
+        let joining: Vec<(u64, usize)> =
+            obtained.iter().map(|(seed, s, _)| (*seed, s.pattern_classes())).collect();
+        self.rederive_budgets(&joining);
 
-        // Move each chip's session + jobs into a cell the pool can claim;
-        // every cell is taken by exactly one worker.
-        let mut cells: Vec<Mutex<Option<(u64, CompileSession, Vec<QueuedJob>)>>> =
-            Vec::with_capacity(n_chips);
-        for seed in &order {
-            let mut session = self.obtain_session(*seed);
+        for (seed, session, _) in obtained.iter_mut() {
             session.set_threads(inner);
-            if let Some(budget) = self.per_chip_budget {
+            if let Some(&budget) = self.applied_budgets.get(seed) {
                 session.set_table_memory_bytes(budget);
             }
-            cells.push(Mutex::new(Some((*seed, session, by_chip.remove(seed).unwrap()))));
         }
+        // Move each chip's session + jobs into a cell the pool can claim;
+        // every cell is taken by exactly one worker.
+        let cells: Vec<Mutex<Option<(u64, CompileSession, Vec<QueuedJob>)>>> =
+            obtained.into_iter().map(|t| Mutex::new(Some(t))).collect();
         let done: Vec<(u64, CompileSession, Vec<JobResult>)> =
             parallel_work_steal(n_chips, outer, 1, |i| {
                 let (seed, mut session, jobs) = cells[i]
@@ -330,8 +379,84 @@ impl CompileService {
         Ok(results)
     }
 
-    /// Cache files the latest [`CompileService::run`] failed to write
-    /// (empty on a clean run). Warm state is still held in memory, so a
+    /// Re-derive the fleet-wide budget split over every retained session
+    /// plus the `joining` (chip, interned pattern count) pairs currently
+    /// held outside the map, and apply the new shares to the retained
+    /// sessions (joining sessions are the caller's to size). Shares are
+    /// proportional to interned pattern counts — the cap lands where the
+    /// fault-pattern diversity is — with a floor weight of one pattern,
+    /// which also makes an all-new fleet split exactly even. A no-op
+    /// beyond clearing state under [`TableBudget::PerSession`].
+    fn rederive_budgets(&mut self, joining: &[(u64, usize)]) {
+        self.fleet_cap = self.sopts.table_budget.fleet_bytes();
+        self.applied_budgets.clear();
+        let Some(total) = self.fleet_cap else { return };
+        let mut pattern_weight: BTreeMap<u64, u128> = self
+            .sessions
+            .iter()
+            .map(|(seed, s)| (*seed, s.pattern_classes().max(1) as u128))
+            .collect();
+        for (seed, count) in joining {
+            pattern_weight.insert(*seed, (*count).max(1) as u128);
+        }
+        let weight_sum: u128 = pattern_weight.values().sum::<u128>().max(1);
+        for (seed, w) in pattern_weight {
+            let share = ((total as u128 * w) / weight_sum) as usize;
+            self.applied_budgets.insert(seed, share.max(1));
+        }
+        // Retained sessions (idle or not) adopt their shares now; a
+        // shrinking split takes effect at their next batch boundary.
+        for (seed, session) in self.sessions.iter_mut() {
+            if let Some(&budget) = self.applied_budgets.get(seed) {
+                session.set_table_memory_bytes(budget);
+            }
+        }
+    }
+
+    /// Whether a warm session for `chip_seed` is already available —
+    /// retained in memory, or present as a cache file under the
+    /// configured `cache_dir` (existence check only; a stale or
+    /// key-mismatched file is detected and rebuilt at load time). The
+    /// network fabric uses this to route repeat jobs down the warm local
+    /// path instead of re-solving them distributed.
+    pub fn has_cached_session(&self, chip_seed: u64) -> bool {
+        if self.sessions.contains_key(&chip_seed) {
+            return true;
+        }
+        match &self.sopts.cache_dir {
+            Some(dir) => {
+                Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed).exists()
+            }
+            None => false,
+        }
+    }
+
+    /// Adopt `session` as the retained warm session of `chip_seed`,
+    /// replacing any existing one. This is the scheduling hook the
+    /// network fabric uses to hand a shard-merged session back to the
+    /// service so subsequent jobs for the chip run warm and local. With
+    /// a `cache_dir` configured the adopted session is persisted
+    /// best-effort (a failure is appended to
+    /// [`CompileService::persist_errors`], never raised), and under a
+    /// fleet-wide [`TableBudget`] the split is re-derived over the new
+    /// live set immediately, so adopted sessions join the memory cap
+    /// instead of keeping their build-time budget.
+    pub fn install_session(&mut self, chip_seed: u64, session: CompileSession) {
+        if let Some(dir) = &self.sopts.cache_dir {
+            if session.persistable() {
+                let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
+                if let Err(e) = session.save(&path) {
+                    self.persist_errors.push(format!("chip {chip_seed}: {e:#}"));
+                }
+            }
+        }
+        self.sessions.insert(chip_seed, session);
+        self.rederive_budgets(&[]);
+    }
+
+    /// Cache files the latest [`CompileService::run`] (plus any
+    /// [`CompileService::install_session`] since) failed to write —
+    /// empty on a clean run. Warm state is still held in memory, so a
     /// later `run` retries persisting automatically.
     pub fn persist_errors(&self) -> &[String] {
         &self.persist_errors
@@ -403,7 +528,7 @@ mod tests {
     }
 
     #[test]
-    fn fleet_budget_splits_across_live_sessions() {
+    fn fleet_budget_splits_proportionally_to_pattern_counts() {
         let cfg = GroupConfig::R2C2;
         let opts = CompileOptions::new(cfg, Method::Complete);
         let total = 64 << 20;
@@ -413,30 +538,88 @@ mod tests {
             table_budget: TableBudget::Fleet(total),
             cache_dir: None,
         });
-        let ws = random_weights(800, cfg.max_per_array(), 5);
-        service.enqueue(1, "a", ws.clone());
-        service.enqueue(2, "a", ws.clone());
+        // Chip 1 compiles 8x the weights of chip 2, so it interns far
+        // more fault-pattern classes.
+        let big = random_weights(8_000, cfg.max_per_array(), 5);
+        let small = random_weights(1_000, cfg.max_per_array(), 6);
+        service.enqueue(1, "a", big.clone());
+        service.enqueue(2, "a", small.clone());
         let _ = service.run().unwrap();
-        assert_eq!(service.applied_table_budget(), Some(total / 2));
-        for (_, s) in service.sessions() {
-            assert_eq!(s.options().table_memory_bytes, total / 2);
+        // Both sessions were new when the run began (no interned patterns
+        // yet), so the first split is exactly even — the fallback.
+        assert_eq!(service.applied_table_budget(), Some(total));
+        assert_eq!(service.session_table_budget(1), Some(total / 2));
+        assert_eq!(service.session_table_budget(2), Some(total / 2));
+
+        // A third chip joining re-derives the split over all live
+        // sessions, now weighted by interned pattern counts.
+        let c1 = service.session(1).unwrap().pattern_classes();
+        let c2 = service.session(2).unwrap().pattern_classes();
+        assert!(c1 > c2, "8x the weights must intern more patterns ({c1} vs {c2})");
+        service.enqueue(3, "a", small);
+        let _ = service.run().unwrap();
+        let sum = (c1 + c2 + 1) as u128;
+        let share = |w: usize| ((total as u128 * w as u128 / sum) as usize).max(1);
+        assert_eq!(service.session_table_budget(1), Some(share(c1)));
+        assert_eq!(service.session_table_budget(2), Some(share(c2)));
+        assert_eq!(service.session_table_budget(3), Some(share(1)));
+        // The shares are applied to the sessions themselves (idle or not)
+        // and never exceed the fleet cap in total.
+        for (seed, s) in service.sessions() {
+            assert_eq!(Some(s.options().table_memory_bytes), service.session_table_budget(*seed));
         }
-        // A third chip joining re-derives the split over all live sessions.
-        service.enqueue(3, "a", ws);
-        let _ = service.run().unwrap();
-        assert_eq!(service.applied_table_budget(), Some(total / 3));
-        assert_eq!(
-            service.session(3).unwrap().options().table_memory_bytes,
-            total / 3
+        let applied: usize = [1u64, 2, 3]
+            .iter()
+            .map(|s| service.session_table_budget(*s).unwrap())
+            .sum();
+        assert!(applied <= total, "shares must fit the cap ({applied} vs {total})");
+        assert!(
+            service.session_table_budget(1) > service.session_table_budget(3),
+            "the pattern-heavy chip must get the bigger share"
         );
-        // Outputs never depend on the budget: results above were computed
-        // under an eviction-pressured cap and still match a standalone
-        // session (covered by eviction tests in `classes.rs`; here we
-        // just confirm the accounting).
         assert_eq!(service.sessions().count(), 3);
 
         // The auto policy always derives *some* positive fleet cap.
         assert!(TableBudget::Auto.fleet_bytes().unwrap() > 0);
         assert_eq!(TableBudget::PerSession.fleet_bytes(), None);
+    }
+
+    #[test]
+    fn install_session_adopts_and_persists_warm_state() {
+        let cfg = GroupConfig::R2C2;
+        let opts = CompileOptions::new(cfg, Method::Complete);
+        let dir = std::env::temp_dir().join(format!("rchg-install-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut service = CompileService::new(ServiceOptions {
+            opts: opts.clone(),
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: Some(dir.clone()),
+        });
+        // Warm a session outside the service (as the fabric's shard-merge
+        // path does) and hand it over.
+        let chip = ChipFaults::new(11, FaultRates::paper_default());
+        let ws = random_weights(1_200, cfg.max_per_array(), 9);
+        let mut session = CompileSession::builder(cfg).options(opts).chip(&chip);
+        let _ = session.compile_tensor("a", &ws);
+        service.install_session(11, session);
+        assert!(service.persist_errors().is_empty());
+        assert!(service.session(11).is_some());
+        // The adopted session serves the next run warm…
+        service.enqueue(11, "a", ws.clone());
+        let results = service.run().unwrap();
+        assert_eq!(results[0].tensor.stats.unique_pairs, 0, "adopted session must be warm");
+        // …and was persisted at install time: a fresh service over the
+        // same cache dir also starts warm.
+        let mut restarted = CompileService::new(ServiceOptions {
+            opts: CompileOptions::new(cfg, Method::Complete),
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: Some(dir.clone()),
+        });
+        restarted.enqueue(11, "a", ws);
+        let warm = restarted.run().unwrap();
+        assert_eq!(warm[0].tensor.stats.unique_pairs, 0, "cache file must warm-start");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

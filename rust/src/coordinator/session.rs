@@ -238,6 +238,18 @@ impl CompileSession {
         SessionBuilder { opts: CompileOptions::new(cfg, Method::Complete) }
     }
 
+    /// Session matching a warm-state cache key — the shared constructor
+    /// of everything that rebuilds a session from a serialized identity:
+    /// the shard merge ([`CompileSession::from_fragments`]), the network
+    /// fabric's workers (a wire-delivered shard job), and the fabric
+    /// coordinator. Execution knobs (threads, tier, budget) stay at their
+    /// defaults; adjust with the `set_*` methods.
+    pub(crate) fn for_key(key: &CacheKey) -> CompileSession {
+        let mut opts = CompileOptions::new(key.cfg, key.pipeline.method);
+        opts.pipeline = key.pipeline;
+        CompileSession::builder(key.cfg).options(opts).chip(&key.chip)
+    }
+
     fn from_opts(opts: CompileOptions, chip: Option<ChipFaults>) -> CompileSession {
         let cache = opts.dedupe.then(|| SolveCache::new(opts.cfg));
         CompileSession {

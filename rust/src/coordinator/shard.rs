@@ -65,7 +65,7 @@
 //! ```
 
 use super::classes::{PatternId, PatternSolution};
-use super::compiler::{scan_batch, solve_fresh, CompileOptions, TensorJob};
+use super::compiler::{scan_batch, solve_fresh, TensorJob};
 use super::persist::{
     push_u32, read_key, read_pattern_solution, seal, table_len, unseal, write_key,
     write_pattern_solution, CacheKey, Reader,
@@ -146,6 +146,13 @@ pub struct ShardFragment {
 }
 
 impl ShardFragment {
+    /// The chip/config/pipeline fingerprint this fragment belongs to —
+    /// the fabric coordinator's scheduling hook for validating a
+    /// worker-returned fragment *before* attempting a merge.
+    pub(crate) fn cache_key(&self) -> &CacheKey {
+        &self.key
+    }
+
     /// Shard index within the plan (0-based).
     pub fn shard(&self) -> usize {
         self.shard as usize
@@ -273,10 +280,7 @@ impl CompileSession {
         let first = fragments
             .first()
             .ok_or_else(|| anyhow!("no shard fragments to merge"))?;
-        let mut opts = CompileOptions::new(first.key.cfg, first.key.pipeline.method);
-        opts.pipeline = first.key.pipeline;
-        let mut session =
-            CompileSession::builder(first.key.cfg).options(opts).chip(&first.key.chip);
+        let mut session = CompileSession::for_key(&first.key);
         session.merge_fragments(fragments)?;
         Ok(session)
     }

@@ -54,6 +54,13 @@
 //! cache **byte-identical** to an unsharded compile — surfaced as
 //! `rchg shard-solve --shard k/K` and `rchg merge-shards`.
 //!
+//! The [`net`] **compile fabric** puts all of this on the wire (std TCP,
+//! "RCWP" v1 framed protocol): `rchg serve` is a daemon wrapping the
+//! service whose coordinator schedules shard ranges onto connected
+//! `rchg worker` hosts — with timeout/loss reassignment — and `rchg
+//! submit` ships jobs and streams results back. Distributed or local,
+//! cold or warm, the compiled bitmaps and session bytes are identical.
+//!
 //! The old free functions are **removed**: `compile_tensor(ws, f, opts)`
 //! → `session.compile_with_faults(ws, f)` (use `.detached()` when there
 //! is no chip); `compile_tensor_with_cache` → the same (the session owns
@@ -118,6 +125,7 @@ pub mod fault;
 pub mod grouping;
 pub mod ilp;
 pub mod metrics;
+pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod runtime;

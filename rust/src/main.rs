@@ -5,6 +5,9 @@
 //!   rchg tables                 regenerate every paper table/figure (fast set)
 //!   rchg compile …              compile a model's weights for a chip
 //!   rchg serve-batch …          batched compile service over many chips
+//!   rchg serve …                compile-fabric coordinator daemon (TCP)
+//!   rchg worker …               fabric worker: solve shard jobs for a coordinator
+//!   rchg submit …               send a compile job to a fabric coordinator
 //!   rchg shard-solve …          solve shard k/K of one chip's compile
 //!   rchg merge-shards …         reassemble shard fragments into a warm cache
 //!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
@@ -29,6 +32,7 @@ use rchg::experiments::lm::{table3, LmOptions};
 use rchg::experiments::Table;
 use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
+use rchg::net::{run_worker, CompileClient, FabricServer, ServeOptions as FabricServeOptions};
 use rchg::runtime::{artifacts_dir, Runtime};
 use rchg::util::cli::Cli;
 use rchg::util::timer::{fmt_dur, Timer};
@@ -259,15 +263,7 @@ fn main() -> anyhow::Result<()> {
             if seeds.is_empty() {
                 anyhow::bail!("no chip seeds given");
             }
-            let table_budget = match args.get_str("table-budget", "per-session") {
-                "per-session" => TableBudget::PerSession,
-                "auto" => TableBudget::Auto,
-                s => TableBudget::Fleet(
-                    rchg::util::mem::parse_size_bytes(s).ok_or_else(|| {
-                        anyhow::anyhow!("bad --table-budget {s:?} (per-session | auto | bytes)")
-                    })?,
-                ),
-            };
+            let table_budget = parse_table_budget(args.get_str("table-budget", "per-session"))?;
             let tensors = synthetic_model_tensors(
                 args.get_str("model", "resnet20"),
                 &cfg,
@@ -320,13 +316,187 @@ fn main() -> anyhow::Result<()> {
                     ]);
                 }
                 println!("{}", t.render());
-                if let Some(budget) = service.applied_table_budget() {
+                let persist_failures = service.persist_errors().len();
+                if persist_failures > 0 {
                     println!(
-                        "per-chip table budget: {:.1} MiB ({} live sessions under the fleet cap)",
-                        budget as f64 / (1 << 20) as f64,
-                        service.sessions().count(),
+                        "persist: {persist_failures} session cache write(s) FAILED this round \
+                         (see warnings above; warm state is retained in memory and retried \
+                         next round)"
                     );
                 }
+                if let Some(total) = service.applied_table_budget() {
+                    let shares: Vec<usize> = service
+                        .sessions()
+                        .filter_map(|(s, _)| service.session_table_budget(*s))
+                        .collect();
+                    let mib = |b: usize| b as f64 / (1 << 20) as f64;
+                    let lo = shares.iter().copied().min().unwrap_or(0);
+                    let hi = shares.iter().copied().max().unwrap_or(0);
+                    println!(
+                        "fleet table budget: {:.1} MiB across {} sessions \
+                         (per-chip {:.1}–{:.1} MiB, split ∝ interned pattern count)",
+                        mib(total),
+                        shares.len(),
+                        mib(lo),
+                        mib(hi),
+                    );
+                }
+            }
+        }
+        "serve" => {
+            let cli = Cli::new("compile-fabric coordinator: accept jobs, schedule shard-solves on workers")
+                .opt("listen", "listen address", Some("127.0.0.1:7077"))
+                .opt("config", "grouping config", Some("r2c2"))
+                .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
+                .opt("threads", "local worker threads (0 = auto-detect)", Some("0"))
+                .opt("cache-dir", "persist per-chip session caches (cross-run warm-start)", None)
+                .opt(
+                    "table-budget",
+                    "pattern-table memory: per-session | auto | fleet bytes (suffix k/m/g ok)",
+                    Some("per-session"),
+                )
+                .opt(
+                    "shard-min-weights",
+                    "fan a job out to workers only at/above this many weights",
+                    Some("50000"),
+                )
+                .opt("max-shards", "max shard ranges per distributed job", Some("8"))
+                .opt(
+                    "worker-timeout-secs",
+                    "seconds before a silent worker's range is reassigned",
+                    Some("600"),
+                );
+            let args = cli.parse(rest);
+            let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
+                .ok_or_else(|| anyhow::anyhow!("bad config"))?;
+            let method = Method::parse(args.get_str("method", "complete"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let mut opts = CompileOptions::new(cfg, method);
+            opts.threads = args.get_threads("threads");
+            let sopts = FabricServeOptions {
+                service: ServiceOptions {
+                    opts,
+                    rates: FaultRates::paper_default(),
+                    table_budget: parse_table_budget(args.get_str("table-budget", "per-session"))?,
+                    cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+                },
+                shard_min_weights: args.get_usize("shard-min-weights", 50_000),
+                max_shards: args.get_usize("max-shards", 8).max(1),
+                worker_timeout: std::time::Duration::from_secs(
+                    args.get_u64("worker-timeout-secs", 600).max(1),
+                ),
+            };
+            let server = FabricServer::bind(args.get_str("listen", "127.0.0.1:7077"), sopts)?;
+            println!(
+                "rchg fabric: listening on {} ({} {:?}) — add workers with \
+                 `rchg worker --connect {0}`, submit with `rchg submit --connect {0}`, \
+                 stop with `rchg submit --connect {0} --shutdown`",
+                server.local_addr(),
+                cfg,
+                method,
+            );
+            let stats = server.run()?;
+            println!(
+                "fabric stopped: {} jobs ({} distributed), {} workers joined, \
+                 {} shard ranges dispatched, {} reassigned after worker loss",
+                stats.jobs,
+                stats.distributed_jobs,
+                stats.workers_joined,
+                stats.shards_dispatched,
+                stats.reassignments,
+            );
+        }
+        "worker" => {
+            let cli = Cli::new("fabric worker: solve shard jobs handed down by a coordinator")
+                .opt("connect", "coordinator address", Some("127.0.0.1:7077"))
+                .opt("threads", "solve threads (0 = auto-detect)", Some("0"));
+            let args = cli.parse(rest);
+            let addr = args.get_str("connect", "127.0.0.1:7077");
+            println!("rchg worker: connecting to coordinator {addr}");
+            let report = run_worker(addr, args.get_threads("threads"))?;
+            println!(
+                "worker done: {} shard job(s) solved ({} pattern classes); coordinator hung up",
+                report.jobs, report.patterns_solved,
+            );
+        }
+        "submit" => {
+            let cli = Cli::new("send a compile job to a fabric coordinator")
+                .opt("connect", "coordinator address", Some("127.0.0.1:7077"))
+                .opt("model", "layer-shape model", Some("resnet20"))
+                .opt("config", "grouping config (must match the coordinator)", Some("r2c2"))
+                .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
+                .opt("chip", "chip seed", Some("1"))
+                .opt("limit", "max weights", Some("60000"))
+                .opt("fetch-session", "also download the chip's warm RCSS cache to this path", None)
+                .opt("info", "print fabric status instead of compiling", None)
+                .opt("shutdown", "stop the coordinator when done", None);
+            let args = cli.parse(rest);
+            let addr = args.get_str("connect", "127.0.0.1:7077");
+            let mut client = CompileClient::connect(addr)?;
+            if args.get_bool("info") {
+                let i = client.info()?;
+                println!(
+                    "fabric {addr}: {} idle worker(s), {} warm session(s), {} job(s) served \
+                     ({} distributed, {} shard reassignments)",
+                    i.workers, i.sessions, i.jobs, i.distributed_jobs, i.reassignments,
+                );
+            } else {
+                let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
+                    .ok_or_else(|| anyhow::anyhow!("bad config"))?;
+                let method = Method::parse(args.get_str("method", "complete"))
+                    .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+                let seed = args.get_u64("chip", 1);
+                let tensors = synthetic_model_tensors(
+                    args.get_str("model", "resnet20"),
+                    &cfg,
+                    args.get_usize("limit", 60_000),
+                )?;
+                let timer = Timer::start();
+                let (results, summary) = client.compile_model(seed, cfg, method, &tensors)?;
+                let secs = timer.secs();
+                println!(
+                    "chip {seed}: {} tensors / {} weights compiled in {} — {} fresh solve(s){}",
+                    summary.tensors,
+                    summary.weights,
+                    fmt_dur(secs),
+                    summary.fresh_solves,
+                    if summary.shards > 0 {
+                        format!(
+                            ", fanned out as {} shard range(s) over {} worker(s) \
+                             ({} reassigned after loss)",
+                            summary.shards, summary.workers, summary.reassigned
+                        )
+                    } else {
+                        " (compiled on the coordinator)".to_string()
+                    },
+                );
+                let imperfect: usize = results
+                    .iter()
+                    .flat_map(|r| r.errors.iter())
+                    .filter(|&&e| e != 0)
+                    .count();
+                println!(
+                    "residual: {imperfect} of {} weights imperfect ({:.4}%)",
+                    summary.weights,
+                    100.0 * imperfect as f64 / (summary.weights.max(1)) as f64,
+                );
+                if let Some(path) = args.get("fetch-session") {
+                    let bytes = client.fetch_session(seed)?;
+                    let path = std::path::PathBuf::from(path);
+                    if let Some(parent) = path.parent() {
+                        std::fs::create_dir_all(parent).ok();
+                    }
+                    std::fs::write(&path, &bytes)?;
+                    println!(
+                        "fetched warm session cache: {} bytes → {}",
+                        bytes.len(),
+                        path.display()
+                    );
+                }
+            }
+            if args.get_bool("shutdown") {
+                client.shutdown_server()?;
+                println!("fabric {addr}: shutdown requested");
             }
         }
         "shard-solve" => {
@@ -472,6 +642,9 @@ fn main() -> anyhow::Result<()> {
                  \x20 tables           regenerate all paper tables/figures (fast set)\n\
                  \x20 compile          compile a model for one chip (timing)\n\
                  \x20 serve-batch      batched compile service over many chips (warm sessions)\n\
+                 \x20 serve            compile-fabric coordinator daemon (schedules shard-solves on workers)\n\
+                 \x20 worker           fabric worker: solve shard jobs for a coordinator\n\
+                 \x20 submit           send a compile job to a fabric coordinator\n\
                  \x20 shard-solve      solve shard k/K of one chip's compile (fan one chip out)\n\
                  \x20 merge-shards     reassemble shard fragments into a warm session cache\n\
                  \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
@@ -484,6 +657,18 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse the `--table-budget` policy shared by `serve-batch` and `serve`:
+/// `per-session`, `auto`, or a fleet byte size (k/m/g suffixes ok).
+fn parse_table_budget(s: &str) -> anyhow::Result<TableBudget> {
+    Ok(match s {
+        "per-session" => TableBudget::PerSession,
+        "auto" => TableBudget::Auto,
+        s => TableBudget::Fleet(rchg::util::mem::parse_size_bytes(s).ok_or_else(|| {
+            anyhow::anyhow!("bad --table-budget {s:?} (per-session | auto | bytes)")
+        })?),
+    })
 }
 
 /// Parse the `--shard k/K` spec (1-based index, e.g. `2/4`).

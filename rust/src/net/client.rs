@@ -1,0 +1,95 @@
+//! The fabric client: submit compile jobs to an `rchg serve` daemon.
+//!
+//! One [`CompileClient`] wraps one connection; requests are sequential
+//! (submit → stream results → done). The server streams one
+//! [`TensorResult`] frame per tensor, so a client can hand decompositions
+//! downstream while later tensors are still in flight, then closes the
+//! job with a [`FabricSummary`]. A warm chip session can also be pulled
+//! down as verbatim RCSS bytes ([`CompileClient::fetch_session`]) — the
+//! same bytes `CompileSession::save` would write on the server, loadable
+//! anywhere with `CompileSession::from_bytes`.
+
+use super::protocol::{
+    decode_error, decode_info, decode_summary, decode_tensor_result, encode_chip_seed,
+    encode_compile_request, read_frame, write_frame, FabricInfo, FabricSummary, FrameType,
+    TensorResult,
+};
+use crate::coordinator::Method;
+use crate::grouping::GroupConfig;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+
+/// A connection to an `rchg serve` coordinator.
+pub struct CompileClient {
+    stream: TcpStream,
+}
+
+impl CompileClient {
+    pub fn connect(addr: &str) -> Result<CompileClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect to fabric {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(CompileClient { stream })
+    }
+
+    /// Compile one chip's named tensor set on the fabric. Results come
+    /// back in submit order; whether the job ran locally or fanned out
+    /// across workers is reported in the summary and never changes a
+    /// result byte.
+    pub fn compile_model(
+        &mut self,
+        chip_seed: u64,
+        cfg: GroupConfig,
+        method: Method,
+        tensors: &[(String, Vec<i64>)],
+    ) -> Result<(Vec<TensorResult>, FabricSummary)> {
+        let payload = encode_compile_request(chip_seed, cfg, method, tensors);
+        write_frame(&mut self.stream, FrameType::CompileRequest, &payload)?;
+        let mut results = Vec::with_capacity(tensors.len());
+        loop {
+            let frame = self.expect_frame("compile results")?;
+            match frame.frame_type {
+                FrameType::CompileResult => results.push(decode_tensor_result(&frame.payload)?),
+                FrameType::CompileDone => {
+                    return Ok((results, decode_summary(&frame.payload)?))
+                }
+                FrameType::Error => bail!("fabric: {}", decode_error(&frame.payload)),
+                t => bail!("unexpected {t:?} frame in a compile stream"),
+            }
+        }
+    }
+
+    /// Fetch a chip's warm session cache as verbatim RCSS bytes.
+    pub fn fetch_session(&mut self, chip_seed: u64) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, FrameType::FetchSession, &encode_chip_seed(chip_seed))?;
+        let frame = self.expect_frame("session bytes")?;
+        match frame.frame_type {
+            FrameType::SessionBytes => Ok(frame.payload),
+            FrameType::Error => bail!("fabric: {}", decode_error(&frame.payload)),
+            t => bail!("unexpected {t:?} frame for a session fetch"),
+        }
+    }
+
+    /// Current fabric status (idle workers, warm sessions, job counters).
+    pub fn info(&mut self) -> Result<FabricInfo> {
+        write_frame(&mut self.stream, FrameType::Info, &[])?;
+        let frame = self.expect_frame("fabric info")?;
+        match frame.frame_type {
+            FrameType::InfoReply => decode_info(&frame.payload),
+            FrameType::Error => bail!("fabric: {}", decode_error(&frame.payload)),
+            t => bail!("unexpected {t:?} frame for an info request"),
+        }
+    }
+
+    /// Ask the coordinator to stop (it finishes in-flight jobs on their
+    /// own connections, closes pooled workers, and exits its accept
+    /// loop). Consumes the client.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        write_frame(&mut self.stream, FrameType::Shutdown, &[])
+    }
+
+    fn expect_frame(&mut self, what: &str) -> Result<super::protocol::Frame> {
+        read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("fabric closed the connection awaiting {what}"))
+    }
+}

@@ -1,0 +1,41 @@
+//! Compile fabric: the networked coordinator/worker subsystem.
+//!
+//! Everything below `coordinator` stops at the process boundary — the
+//! batch service is in-process, and shard fragments move as files. This
+//! module puts the same machinery on the wire (std TCP, no new
+//! dependencies) with three roles:
+//!
+//! * **coordinator** ([`FabricServer`], `rchg serve --listen <addr>`) —
+//!   a daemon wrapping [`crate::coordinator::CompileService`]. Clients
+//!   submit compile jobs and get per-tensor results streamed back; for a
+//!   large cold job the built-in coordinator derives a
+//!   [`crate::coordinator::ShardPlan`], schedules the pattern-id ranges
+//!   onto connected workers, collects their fragments over the wire, and
+//!   merges them into a warm session — byte-identical to a local
+//!   unsharded compile.
+//! * **worker** ([`run_worker`], `rchg worker --connect <addr>`) — a
+//!   host that executes [`crate::coordinator::CompileSession::solve_shard`]
+//!   jobs it is handed. Stateless between jobs; a lost worker only costs
+//!   time (its range is reassigned to a live worker, or solved locally).
+//! * **client** ([`CompileClient`], `rchg submit --connect <addr>`) —
+//!   submits jobs, streams results, fetches warm RCSS session bytes,
+//!   inspects fabric status, and can stop the daemon.
+//!
+//! The wire protocol ("RCWP" v1, [`protocol`]) is length-prefixed framed
+//! binary — magic, version, frame type, payload length, FNV-1a checksum
+//! — with clean rejection of truncated, corrupted, and
+//! version-mismatched frames. Payloads reuse the persistence codecs:
+//! shard jobs open with the RCSS cache-key layout, shard results are
+//! verbatim RCSF fragment bytes, and session fetches are verbatim RCSS
+//! files. Byte layouts and deployment topologies are documented in
+//! `docs/ARCHITECTURE.md`.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod worker;
+
+pub use client::CompileClient;
+pub use protocol::{FabricInfo, FabricSummary, Frame, FrameType, TensorResult};
+pub use server::{FabricServer, FabricStats, ServeOptions};
+pub use worker::{run_worker, WorkerReport};

@@ -1,0 +1,713 @@
+//! RCWP v1 — the compile fabric's wire protocol.
+//!
+//! Every message on a fabric connection is one **frame**: a fixed
+//! little-endian header (`magic "RCWP" · version u32 · frame type u32 ·
+//! payload length u32`), the payload bytes, and a trailing FNV-1a
+//! checksum over header + payload. [`read_frame`] verifies magic,
+//! version, type, length bound, and checksum before returning a byte of
+//! payload to any decoder — a truncated, corrupted, or
+//! version-mismatched frame is rejected with an error, and a connection
+//! that closes *between* frames reads as a clean `None` (closing
+//! *inside* a frame is an error).
+//!
+//! Payload codecs reuse the coordinator's persistence machinery
+//! (`coordinator/persist.rs`): the shard-job payload opens with the same
+//! cache-key byte layout as RCSS/RCSF files ([`decode_shard_job`] →
+//! chip seed + fault rates, [`GroupConfig`], pipeline fingerprint), and
+//! shard results travel as verbatim RCSF fragment bytes
+//! ([`crate::coordinator::ShardFragment::to_bytes`]) — one codec, three
+//! surfaces (session file, fragment file, wire).
+//!
+//! Conversation shapes (see [`super::server`] for the roles):
+//!
+//! ```text
+//! worker:  Hello → HelloAck, then (ShardJob → ShardResult | Error)*
+//! client:  CompileRequest → CompileResult* → CompileDone
+//!          FetchSession   → SessionBytes | Error
+//!          Info           → InfoReply
+//!          Shutdown       → (server stops)
+//! ```
+
+use crate::coordinator::persist::{
+    push_i64, push_u32, push_u64, read_key, write_key, CacheKey, Reader,
+};
+use crate::coordinator::{Method, PipelineOptions};
+use crate::fault::bank::ChipFaults;
+use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::util::prop::{fnv1a, fnv1a_with};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame magic ("RCWP").
+pub const WIRE_MAGIC: u32 = 0x5243_5750;
+/// Wire protocol version. Version mismatches are rejected per frame, so
+/// a mixed-version fleet fails loudly at the first exchange.
+pub const WIRE_VERSION: u32 = 1;
+/// Fixed frame header length: magic, version, frame type, payload length.
+pub const FRAME_HEADER_LEN: usize = 16;
+/// Hard cap on one frame's payload. A corrupt or hostile length field
+/// must produce a clean error, not a multi-gigabyte allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 256 << 20;
+
+/// Everything that travels on a fabric connection. Codes are part of the
+/// wire format — never renumber, only append.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    /// Worker → server: join the worker pool (payload: u32 thread count).
+    Hello,
+    /// Server → worker: registration accepted.
+    HelloAck,
+    /// Client → server: compile one chip's tensor set.
+    CompileRequest,
+    /// Server → client: one compiled tensor (streamed per tensor).
+    CompileResult,
+    /// Server → client: end of a compile stream, with a job summary.
+    CompileDone,
+    /// Server → worker: solve one shard range of a chip's pattern space.
+    ShardJob,
+    /// Worker → server: the solved range as verbatim RCSF fragment bytes.
+    ShardResult,
+    /// Client → server: fetch a chip's warm session cache.
+    FetchSession,
+    /// Server → client: verbatim RCSS session cache bytes.
+    SessionBytes,
+    /// Client → server: request fabric status.
+    Info,
+    /// Server → client: fabric status.
+    InfoReply,
+    /// Client → server: stop the fabric.
+    Shutdown,
+    /// Either direction: human-readable failure for the previous request.
+    Error,
+}
+
+impl FrameType {
+    /// Stable wire code — never renumber.
+    pub fn code(self) -> u32 {
+        match self {
+            FrameType::Hello => 1,
+            FrameType::HelloAck => 2,
+            FrameType::CompileRequest => 3,
+            FrameType::CompileResult => 4,
+            FrameType::CompileDone => 5,
+            FrameType::ShardJob => 6,
+            FrameType::ShardResult => 7,
+            FrameType::FetchSession => 8,
+            FrameType::SessionBytes => 9,
+            FrameType::Info => 10,
+            FrameType::InfoReply => 11,
+            FrameType::Shutdown => 12,
+            FrameType::Error => 13,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<FrameType> {
+        Some(match c {
+            1 => FrameType::Hello,
+            2 => FrameType::HelloAck,
+            3 => FrameType::CompileRequest,
+            4 => FrameType::CompileResult,
+            5 => FrameType::CompileDone,
+            6 => FrameType::ShardJob,
+            7 => FrameType::ShardResult,
+            8 => FrameType::FetchSession,
+            9 => FrameType::SessionBytes,
+            10 => FrameType::Info,
+            11 => FrameType::InfoReply,
+            12 => FrameType::Shutdown,
+            13 => FrameType::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame: its type and raw payload bytes (already
+/// checksum-verified by [`read_frame`]).
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub frame_type: FrameType,
+    pub payload: Vec<u8>,
+}
+
+/// The full wire bytes of one frame (header · payload · checksum).
+/// Exposed so tests can corrupt frames byte-by-byte.
+pub fn frame_bytes(frame_type: FrameType, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(FRAME_HEADER_LEN + payload.len() + 8);
+    push_u32(&mut buf, WIRE_MAGIC);
+    push_u32(&mut buf, WIRE_VERSION);
+    push_u32(&mut buf, frame_type.code());
+    push_u32(&mut buf, payload.len() as u32);
+    buf.extend_from_slice(payload);
+    let sum = fnv1a(&buf);
+    push_u64(&mut buf, sum);
+    buf
+}
+
+/// Write one frame (single `write_all` + flush, so frames never
+/// interleave on a connection written from one thread at a time).
+pub fn write_frame(w: &mut impl Write, frame_type: FrameType, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_PAYLOAD {
+        bail!(
+            "refusing to send a {}-byte RCWP payload (cap {MAX_FRAME_PAYLOAD})",
+            payload.len()
+        );
+    }
+    w.write_all(&frame_bytes(frame_type, payload))
+        .context("write RCWP frame")?;
+    w.flush().context("flush RCWP frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` means the peer closed the connection
+/// cleanly *at a frame boundary*; closing mid-frame, a bad magic, an
+/// unsupported version, an unknown frame type, an oversized length, or a
+/// checksum mismatch are all errors — a malformed frame never reaches a
+/// payload decoder.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let mut filled = 0usize;
+    while filled < FRAME_HEADER_LEN {
+        let n = r.read(&mut header[filled..]).context("read RCWP frame header")?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-frame ({filled} of {FRAME_HEADER_LEN} header bytes)");
+        }
+        filled += n;
+    }
+    let word = |i: usize| u32::from_le_bytes(header[4 * i..4 * i + 4].try_into().unwrap());
+    let magic = word(0);
+    if magic != WIRE_MAGIC {
+        bail!("bad RCWP frame magic {magic:#010x}");
+    }
+    let version = word(1);
+    if version != WIRE_VERSION {
+        bail!("unsupported RCWP version {version} (this build speaks {WIRE_VERSION})");
+    }
+    let frame_type = FrameType::from_code(word(2))
+        .ok_or_else(|| anyhow!("unknown RCWP frame type {}", word(2)))?;
+    let len = word(3) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        bail!("RCWP payload length {len} exceeds the {MAX_FRAME_PAYLOAD}-byte cap");
+    }
+    let mut body = vec![0u8; len + 8];
+    r.read_exact(&mut body)
+        .context("read RCWP frame payload (truncated frame)")?;
+    let stored = u64::from_le_bytes(body[len..].try_into().unwrap());
+    body.truncate(len);
+    // Stream the checksum over header then payload — no joining copy
+    // (payloads run up to MAX_FRAME_PAYLOAD).
+    if fnv1a_with(fnv1a(&header), &body) != stored {
+        bail!("RCWP frame checksum mismatch (corrupted frame)");
+    }
+    Ok(Some(Frame { frame_type, payload: body }))
+}
+
+// ---- payload codecs -----------------------------------------------------
+
+/// Hello payload: the worker's solve thread count (informational).
+pub fn encode_hello(threads: usize) -> Vec<u8> {
+    (threads as u32).to_le_bytes().to_vec()
+}
+
+/// Tolerant hello decode: an empty payload reads as 0 threads.
+pub fn decode_hello(payload: &[u8]) -> usize {
+    match payload.get(..4) {
+        Some(b) => u32::from_le_bytes(b.try_into().unwrap()) as usize,
+        None => 0,
+    }
+}
+
+/// Error payload: a UTF-8 message (lossily decoded, it is diagnostics).
+pub fn decode_error(payload: &[u8]) -> String {
+    String::from_utf8_lossy(payload).into_owned()
+}
+
+/// FetchSession payload: the chip seed whose warm cache is requested.
+pub fn encode_chip_seed(chip_seed: u64) -> Vec<u8> {
+    chip_seed.to_le_bytes().to_vec()
+}
+
+pub fn decode_chip_seed(payload: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(payload);
+    let seed = r.u64().context("chip-seed payload")?;
+    if r.remaining() != 0 {
+        bail!("chip-seed payload has {} trailing bytes", r.remaining());
+    }
+    Ok(seed)
+}
+
+fn push_tensors(buf: &mut Vec<u8>, tensors: &[(String, Vec<i64>)]) {
+    push_u32(buf, tensors.len() as u32);
+    for (name, ws) in tensors {
+        push_u32(buf, name.len() as u32);
+        buf.extend_from_slice(name.as_bytes());
+        push_u32(buf, ws.len() as u32);
+        for &w in ws {
+            push_i64(buf, w);
+        }
+    }
+}
+
+fn read_tensors(r: &mut Reader<'_>) -> Result<Vec<(String, Vec<i64>)>> {
+    let n = r.u32()? as usize;
+    if n > 65_536 {
+        bail!("unreasonable tensor count {n} in RCWP payload");
+    }
+    let mut out = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let name_len = r.u32()? as usize;
+        if name_len > 4_096 {
+            bail!("unreasonable tensor name length {name_len} in RCWP payload");
+        }
+        let name = std::str::from_utf8(r.bytes(name_len)?)
+            .context("tensor name is not UTF-8")?
+            .to_string();
+        let n_w = r.u32()? as usize;
+        if r.remaining() < n_w.saturating_mul(8) {
+            bail!("RCWP payload truncated inside tensor {name:?} ({n_w} weights declared)");
+        }
+        let mut ws = Vec::with_capacity(n_w);
+        for _ in 0..n_w {
+            ws.push(r.i64()?);
+        }
+        out.push((name, ws));
+    }
+    Ok(out)
+}
+
+/// A client's compile job: one chip's named tensor set, plus the
+/// grouping config + method the client expects (the server rejects a
+/// request that disagrees with its own configuration instead of
+/// silently compiling under different options).
+#[derive(Clone, Debug)]
+pub struct CompileRequest {
+    pub chip_seed: u64,
+    pub cfg: GroupConfig,
+    pub method: Method,
+    pub tensors: Vec<(String, Vec<i64>)>,
+}
+
+pub fn encode_compile_request(
+    chip_seed: u64,
+    cfg: GroupConfig,
+    method: Method,
+    tensors: &[(String, Vec<i64>)],
+) -> Vec<u8> {
+    let weights: usize = tensors.iter().map(|(_, w)| w.len()).sum();
+    let mut buf = Vec::with_capacity(32 + 8 * weights);
+    push_u64(&mut buf, chip_seed);
+    push_u32(&mut buf, cfg.rows as u32);
+    push_u32(&mut buf, cfg.cols as u32);
+    push_u32(&mut buf, cfg.levels as u32);
+    buf.push(method.code());
+    push_tensors(&mut buf, tensors);
+    buf
+}
+
+pub fn decode_compile_request(payload: &[u8]) -> Result<CompileRequest> {
+    let mut r = Reader::new(payload);
+    let chip_seed = r.u64()?;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let levels = r.u32()?;
+    if rows == 0 || cols == 0 || !(2..=255).contains(&levels) {
+        bail!("bad grouping config R{rows}C{cols}@{levels} in compile request");
+    }
+    let cfg = GroupConfig::new(rows, cols, levels as u8);
+    let method = Method::from_code(r.u8()?)
+        .ok_or_else(|| anyhow!("bad method code in compile request"))?;
+    let tensors = read_tensors(&mut r)?;
+    if r.remaining() != 0 {
+        bail!("compile request has {} trailing bytes", r.remaining());
+    }
+    Ok(CompileRequest { chip_seed, cfg, method, tensors })
+}
+
+/// A shard-solve assignment, decoded from the wire. The identity fields
+/// (chip + config + pipeline) travel in the exact cache-key byte layout
+/// RCSS/RCSF files open with, so worker and coordinator agree on the
+/// fragment key by construction.
+#[derive(Clone, Debug)]
+pub struct ShardJobSpec {
+    pub chip: ChipFaults,
+    pub cfg: GroupConfig,
+    pub pipeline: PipelineOptions,
+    /// 0-based shard index within the plan.
+    pub shard: u32,
+    /// Total shards in the plan.
+    pub shards: u32,
+    pub tensors: Vec<(String, Vec<i64>)>,
+}
+
+pub fn encode_shard_job(
+    chip: &ChipFaults,
+    cfg: GroupConfig,
+    pipeline: PipelineOptions,
+    shard: u32,
+    shards: u32,
+    tensors: &[(String, Vec<i64>)],
+) -> Vec<u8> {
+    let weights: usize = tensors.iter().map(|(_, w)| w.len()).sum();
+    let mut buf = Vec::with_capacity(80 + 8 * weights);
+    write_key(&mut buf, &CacheKey::new(chip, cfg, pipeline));
+    push_u32(&mut buf, shard);
+    push_u32(&mut buf, shards);
+    push_tensors(&mut buf, tensors);
+    buf
+}
+
+pub fn decode_shard_job(payload: &[u8]) -> Result<ShardJobSpec> {
+    let mut r = Reader::new(payload);
+    let key = read_key(&mut r).context("shard job cache key")?;
+    let shard = r.u32()?;
+    let shards = r.u32()?;
+    if shards == 0 || shard >= shards {
+        bail!("bad shard assignment {shard} of {shards} in shard job");
+    }
+    let tensors = read_tensors(&mut r)?;
+    if r.remaining() != 0 {
+        bail!("shard job has {} trailing bytes", r.remaining());
+    }
+    Ok(ShardJobSpec {
+        chip: key.chip,
+        cfg: key.cfg,
+        pipeline: key.pipeline,
+        shard,
+        shards,
+        tensors,
+    })
+}
+
+/// One compiled tensor streamed back to the client: the decomposition
+/// bitmaps and residual error per weight, plus the fresh solve work this
+/// tensor triggered server-side (0 on a warm cache).
+#[derive(Clone, Debug)]
+pub struct TensorResult {
+    pub name: String,
+    pub errors: Vec<i64>,
+    pub decomps: Vec<Decomposition>,
+    pub fresh_solves: u64,
+}
+
+pub fn encode_tensor_result(res: &TensorResult, cells: usize) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + res.errors.len() * (8 + 2 * cells));
+    push_u32(&mut buf, res.name.len() as u32);
+    buf.extend_from_slice(res.name.as_bytes());
+    push_u64(&mut buf, res.fresh_solves);
+    push_u32(&mut buf, cells as u32);
+    push_u32(&mut buf, res.errors.len() as u32);
+    for (err, d) in res.errors.iter().zip(&res.decomps) {
+        push_i64(&mut buf, *err);
+        buf.extend_from_slice(&d.pos.cells);
+        buf.extend_from_slice(&d.neg.cells);
+    }
+    buf
+}
+
+pub fn decode_tensor_result(payload: &[u8]) -> Result<TensorResult> {
+    let mut r = Reader::new(payload);
+    let name_len = r.u32()? as usize;
+    if name_len > 4_096 {
+        bail!("unreasonable tensor name length {name_len} in tensor result");
+    }
+    let name = std::str::from_utf8(r.bytes(name_len)?)
+        .context("tensor name is not UTF-8")?
+        .to_string();
+    let fresh_solves = r.u64()?;
+    let cells = r.u32()? as usize;
+    if cells == 0 || cells > 64 {
+        bail!("unreasonable cell count {cells} in tensor result");
+    }
+    let n = r.u32()? as usize;
+    if r.remaining() < n.saturating_mul(8 + 2 * cells) {
+        bail!("tensor result truncated ({n} weights declared)");
+    }
+    let mut errors = Vec::with_capacity(n);
+    let mut decomps = Vec::with_capacity(n);
+    for _ in 0..n {
+        errors.push(r.i64()?);
+        let pos = Bitmap { cells: r.bytes(cells)?.to_vec() };
+        let neg = Bitmap { cells: r.bytes(cells)?.to_vec() };
+        decomps.push(Decomposition { pos, neg });
+    }
+    if r.remaining() != 0 {
+        bail!("tensor result has {} trailing bytes", r.remaining());
+    }
+    Ok(TensorResult { name, errors, decomps, fresh_solves })
+}
+
+/// End-of-stream summary of one compile job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricSummary {
+    pub tensors: u32,
+    pub weights: u64,
+    /// Fresh solve work this job performed server-side: pattern classes
+    /// solved on shard workers plus any per-pair catch-up at merge time
+    /// (distributed), or unique (pattern, weight) solves (local). 0 means
+    /// the job ran entirely warm.
+    pub fresh_solves: u64,
+    /// Shard ranges of the distributed solve (0 = compiled locally).
+    pub shards: u32,
+    /// Workers the coordinator dispatched shard ranges to.
+    pub workers: u32,
+    /// Shard ranges reassigned after a worker was lost.
+    pub reassigned: u32,
+}
+
+pub fn encode_summary(s: &FabricSummary) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32);
+    push_u32(&mut buf, s.tensors);
+    push_u64(&mut buf, s.weights);
+    push_u64(&mut buf, s.fresh_solves);
+    push_u32(&mut buf, s.shards);
+    push_u32(&mut buf, s.workers);
+    push_u32(&mut buf, s.reassigned);
+    buf
+}
+
+pub fn decode_summary(payload: &[u8]) -> Result<FabricSummary> {
+    let mut r = Reader::new(payload);
+    let s = FabricSummary {
+        tensors: r.u32()?,
+        weights: r.u64()?,
+        fresh_solves: r.u64()?,
+        shards: r.u32()?,
+        workers: r.u32()?,
+        reassigned: r.u32()?,
+    };
+    if r.remaining() != 0 {
+        bail!("fabric summary has {} trailing bytes", r.remaining());
+    }
+    Ok(s)
+}
+
+/// Fabric status returned by an [`FrameType::Info`] request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricInfo {
+    /// Workers currently idle in the pool (dispatched workers are
+    /// temporarily claimed by their job).
+    pub workers: u32,
+    /// Warm chip sessions held by the server.
+    pub sessions: u32,
+    pub jobs: u64,
+    pub distributed_jobs: u64,
+    pub reassignments: u64,
+}
+
+pub fn encode_info(i: &FabricInfo) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32);
+    push_u32(&mut buf, i.workers);
+    push_u32(&mut buf, i.sessions);
+    push_u64(&mut buf, i.jobs);
+    push_u64(&mut buf, i.distributed_jobs);
+    push_u64(&mut buf, i.reassignments);
+    buf
+}
+
+pub fn decode_info(payload: &[u8]) -> Result<FabricInfo> {
+    let mut r = Reader::new(payload);
+    let i = FabricInfo {
+        workers: r.u32()?,
+        sessions: r.u32()?,
+        jobs: r.u64()?,
+        distributed_jobs: r.u64()?,
+        reassignments: r.u64()?,
+    };
+    if r.remaining() != 0 {
+        bail!("fabric info has {} trailing bytes", r.remaining());
+    }
+    Ok(i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultRates;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_every_type() {
+        for t in (1..=13).filter_map(FrameType::from_code) {
+            let payload = vec![0xAB; 37];
+            let bytes = frame_bytes(t, &payload);
+            let frame = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+            assert_eq!(frame.frame_type, t);
+            assert_eq!(frame.payload, payload);
+            assert_eq!(t, FrameType::from_code(t.code()).unwrap());
+        }
+    }
+
+    #[test]
+    fn clean_eof_vs_truncation() {
+        // Empty stream: clean end at a frame boundary.
+        assert!(read_frame(&mut Cursor::new(&[] as &[u8])).unwrap().is_none());
+        // Any proper prefix of a frame is a truncation error.
+        let bytes = frame_bytes(FrameType::Hello, &encode_hello(4));
+        for cut in 1..bytes.len() {
+            assert!(
+                read_frame(&mut Cursor::new(&bytes[..cut])).is_err(),
+                "prefix of {cut} bytes must be rejected"
+            );
+        }
+        // Two frames back to back parse in order, then clean EOF.
+        let mut two = bytes.clone();
+        two.extend_from_slice(&frame_bytes(FrameType::Shutdown, &[]));
+        let mut cur = Cursor::new(&two);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().frame_type, FrameType::Hello);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap().frame_type, FrameType::Shutdown);
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn corruption_is_rejected_everywhere() {
+        let bytes = frame_bytes(FrameType::CompileDone, &encode_summary(&FabricSummary::default()));
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                read_frame(&mut Cursor::new(&bad)).is_err(),
+                "flip at byte {i} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn version_and_magic_mismatch_report_cleanly() {
+        let mut bad_version = frame_bytes(FrameType::Hello, &[]);
+        bad_version[4] = 2; // version 2
+        let err = read_frame(&mut Cursor::new(&bad_version)).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "got: {err}");
+
+        let mut bad_magic = frame_bytes(FrameType::Hello, &[]);
+        bad_magic[0] ^= 0xFF;
+        let err = read_frame(&mut Cursor::new(&bad_magic)).unwrap_err().to_string();
+        assert!(err.contains("magic"), "got: {err}");
+
+        let mut bad_type = frame_bytes(FrameType::Hello, &[]);
+        bad_type[8] = 0xEE;
+        let err = read_frame(&mut Cursor::new(&bad_type)).unwrap_err().to_string();
+        assert!(err.contains("frame type"), "got: {err}");
+    }
+
+    #[test]
+    fn hostile_length_is_capped_before_allocation() {
+        let mut bytes = frame_bytes(FrameType::Hello, &[]);
+        bytes[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err().to_string();
+        assert!(err.contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn compile_request_roundtrip_and_rejection() {
+        let tensors = vec![
+            ("conv1".to_string(), vec![-3i64, 0, 7, 30]),
+            ("fc".to_string(), vec![1i64, -1]),
+        ];
+        let payload = encode_compile_request(9, GroupConfig::R2C2, Method::Complete, &tensors);
+        let req = decode_compile_request(&payload).unwrap();
+        assert_eq!(req.chip_seed, 9);
+        assert_eq!(req.cfg, GroupConfig::R2C2);
+        assert_eq!(req.method, Method::Complete);
+        assert_eq!(req.tensors, tensors);
+        // Truncation anywhere inside the payload fails cleanly.
+        for cut in 0..payload.len() {
+            assert!(decode_compile_request(&payload[..cut]).is_err());
+        }
+        // Trailing garbage is rejected.
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(decode_compile_request(&long).is_err());
+    }
+
+    #[test]
+    fn shard_job_roundtrip_reuses_cache_key_codec() {
+        let chip = ChipFaults::new(77, FaultRates::paper_default());
+        let tensors = vec![("t".to_string(), vec![5i64, -5])];
+        let payload = encode_shard_job(
+            &chip,
+            GroupConfig::R2C2,
+            PipelineOptions::default(),
+            1,
+            4,
+            &tensors,
+        );
+        let spec = decode_shard_job(&payload).unwrap();
+        assert_eq!(spec.chip, chip);
+        assert_eq!(spec.cfg, GroupConfig::R2C2);
+        assert_eq!(spec.pipeline, PipelineOptions::default());
+        assert_eq!((spec.shard, spec.shards), (1, 4));
+        assert_eq!(spec.tensors, tensors);
+        // A shard index outside the plan is rejected.
+        let bad = encode_shard_job(
+            &chip,
+            GroupConfig::R2C2,
+            PipelineOptions::default(),
+            4,
+            4,
+            &tensors,
+        );
+        assert!(decode_shard_job(&bad).is_err());
+    }
+
+    #[test]
+    fn tensor_result_roundtrip() {
+        let cells = GroupConfig::R2C2.cells();
+        let res = TensorResult {
+            name: "conv1".into(),
+            errors: vec![0, 2],
+            decomps: vec![
+                Decomposition {
+                    pos: Bitmap { cells: vec![1, 0, 2, 3] },
+                    neg: Bitmap { cells: vec![0, 0, 0, 1] },
+                },
+                Decomposition {
+                    pos: Bitmap { cells: vec![3, 3, 0, 0] },
+                    neg: Bitmap { cells: vec![2, 0, 1, 0] },
+                },
+            ],
+            fresh_solves: 11,
+        };
+        let payload = encode_tensor_result(&res, cells);
+        let back = decode_tensor_result(&payload).unwrap();
+        assert_eq!(back.name, res.name);
+        assert_eq!(back.errors, res.errors);
+        assert_eq!(back.decomps, res.decomps);
+        assert_eq!(back.fresh_solves, 11);
+        for cut in 0..payload.len() {
+            assert!(decode_tensor_result(&payload[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn summary_and_info_roundtrip() {
+        let s = FabricSummary {
+            tensors: 3,
+            weights: 4_000,
+            fresh_solves: 120,
+            shards: 4,
+            workers: 2,
+            reassigned: 1,
+        };
+        assert_eq!(decode_summary(&encode_summary(&s)).unwrap(), s);
+        let i = FabricInfo {
+            workers: 2,
+            sessions: 5,
+            jobs: 9,
+            distributed_jobs: 3,
+            reassignments: 1,
+        };
+        assert_eq!(decode_info(&encode_info(&i)).unwrap(), i);
+        assert!(decode_summary(&[1, 2, 3]).is_err());
+        assert!(decode_info(&[]).is_err());
+    }
+
+    #[test]
+    fn hello_and_chip_seed_payloads() {
+        assert_eq!(decode_hello(&encode_hello(8)), 8);
+        assert_eq!(decode_hello(&[]), 0);
+        assert_eq!(decode_chip_seed(&encode_chip_seed(42)).unwrap(), 42);
+        assert!(decode_chip_seed(&[1, 2]).is_err());
+    }
+}

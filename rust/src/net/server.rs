@@ -1,0 +1,629 @@
+//! The fabric coordinator: `rchg serve`.
+//!
+//! A [`FabricServer`] is a TCP daemon with two kinds of peers:
+//!
+//! * **clients** submit compile jobs ([`FrameType::CompileRequest`]) and
+//!   get per-tensor results streamed back — the networked face of
+//!   [`CompileService`];
+//! * **workers** (`rchg worker`) register into a pool and are handed
+//!   [`FrameType::ShardJob`]s when a job is big enough to fan out.
+//!
+//! For a large job the coordinator derives a deterministic
+//! [`ShardPlan`] (K = min(idle workers, `max_shards`)), dispatches each
+//! pattern-id range to a worker, and collects [`ShardFragment`]s back
+//! over the wire. A worker that disconnects, times out, or returns a
+//! malformed fragment costs nothing but time: its range is **requeued**
+//! and picked up by the next live worker (or solved locally when none
+//! remain), so a job always completes. The merged warm session — and
+//! therefore every compiled bitmap and the RCSS bytes saved from it —
+//! is **byte-identical** to a local unsharded compile; the fabric only
+//! moves *where* solve time is spent, never a single output byte (the
+//! shard-count invariance proven in `tests/sharding.rs` carries over
+//! verbatim because the wire ships the same RCSF fragment bytes the
+//! file-based flow uses).
+//!
+//! Small jobs, repeat jobs against a warm session, and jobs arriving
+//! while no workers are connected run through the in-process
+//! [`CompileService`] directly — the fabric degrades to `serve-batch`
+//! behavior, never to failure.
+
+use super::protocol::{
+    decode_chip_seed, decode_compile_request, decode_error, decode_hello, encode_info,
+    encode_shard_job, encode_summary, encode_tensor_result, read_frame, write_frame,
+    CompileRequest, FabricInfo, FabricSummary, Frame, FrameType, TensorResult,
+};
+use crate::coordinator::persist::CacheKey;
+use crate::coordinator::{
+    CompileOptions, CompileService, CompileSession, ServiceOptions, ShardFragment, ShardPlan,
+};
+use crate::fault::bank::ChipFaults;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a freshly accepted connection gets to send its opening frame.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Fabric configuration: the in-process service the daemon wraps, plus
+/// the coordinator's scheduling knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Compile options, fault rates, table budget, and cache dir shared
+    /// with the in-process [`CompileService`].
+    pub service: ServiceOptions,
+    /// Fan a job out to workers only when its total weight count reaches
+    /// this (smaller jobs compile locally faster than they schedule).
+    pub shard_min_weights: usize,
+    /// Cap on shard ranges per distributed job.
+    pub max_shards: usize,
+    /// How long a dispatched worker may stay silent before its range is
+    /// reassigned to a live worker.
+    pub worker_timeout: Duration,
+}
+
+/// Cumulative fabric counters (returned by [`FabricServer::run`] and
+/// served over [`FrameType::Info`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FabricStats {
+    pub workers_joined: u64,
+    pub jobs: u64,
+    pub distributed_jobs: u64,
+    pub shards_dispatched: u64,
+    pub reassignments: u64,
+}
+
+struct WorkerConn {
+    id: u64,
+    stream: TcpStream,
+}
+
+struct FabricState {
+    sopts: ServeOptions,
+    listen_addr: SocketAddr,
+    service: Mutex<CompileService>,
+    /// Idle registered workers. A distributed job *claims* workers out of
+    /// the pool and returns the survivors when done.
+    workers: Mutex<Vec<WorkerConn>>,
+    stats: Mutex<FabricStats>,
+    next_worker: AtomicU64,
+    /// Compile jobs currently being served; shutdown waits for this to
+    /// drain so in-flight jobs finish on their own connections.
+    active_jobs: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// RAII marker of one in-flight compile job (see
+/// [`FabricState::active_jobs`]); decrements on every exit path.
+struct JobGuard<'a>(&'a AtomicU64);
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Everything one distributed round's driver threads share.
+struct ShardRound<'a> {
+    plan: ShardPlan,
+    shards: usize,
+    key: CacheKey,
+    req: &'a CompileRequest,
+    sopts: &'a ServeOptions,
+    /// Shard indices not yet solved (a lost worker's range is pushed
+    /// back here — that is the reassignment mechanism).
+    pending: Mutex<Vec<usize>>,
+    frags: Vec<Mutex<Option<ShardFragment>>>,
+    reassigned: AtomicU32,
+}
+
+/// The compile-fabric daemon. See the module docs; construct with
+/// [`FabricServer::bind`], then block in [`FabricServer::run`].
+pub struct FabricServer {
+    listener: TcpListener,
+    state: Arc<FabricState>,
+}
+
+impl FabricServer {
+    /// Bind the coordinator to `addr` (e.g. `"127.0.0.1:7077"`; port 0
+    /// picks an ephemeral port — see [`FabricServer::local_addr`]).
+    pub fn bind(addr: &str, sopts: ServeOptions) -> Result<FabricServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind fabric listener {addr}"))?;
+        let listen_addr = listener.local_addr().context("fabric listener address")?;
+        let service = CompileService::new(sopts.service.clone());
+        let state = Arc::new(FabricState {
+            sopts,
+            listen_addr,
+            service: Mutex::new(service),
+            workers: Mutex::new(Vec::new()),
+            stats: Mutex::new(FabricStats::default()),
+            next_worker: AtomicU64::new(0),
+            active_jobs: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(FabricServer { listener, state })
+    }
+
+    /// The address the fabric actually listens on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.listen_addr
+    }
+
+    /// Accept and serve connections until a [`FrameType::Shutdown`] frame
+    /// arrives, then wait for in-flight compile jobs to finish on their
+    /// own connections before returning. Each connection is handled on
+    /// its own thread; worker connections are parked in the pool between
+    /// dispatches. Returns the cumulative fabric counters.
+    pub fn run(self) -> Result<FabricStats> {
+        loop {
+            let (stream, _peer) = match self.listener.accept() {
+                Ok(pair) => pair,
+                Err(e) => {
+                    if self.state.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(e).context("accept fabric connection");
+                }
+            };
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || {
+                if let Err(e) = handle_connection(state, stream) {
+                    eprintln!("fabric: connection error: {e:#}");
+                }
+            });
+        }
+        // Let in-flight jobs complete and stream their results (job
+        // runtime is bounded: local solves terminate, and every worker
+        // dispatch is bounded by the worker timeout).
+        while self.state.active_jobs.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        // Closing pooled worker connections lets `rchg worker` processes
+        // observe a clean EOF and exit.
+        self.state.workers.lock().expect("worker pool lock").clear();
+        let stats = *self.state.stats.lock().expect("stats lock");
+        Ok(stats)
+    }
+}
+
+fn send_error(stream: &mut TcpStream, msg: &str) {
+    let _ = write_frame(stream, FrameType::Error, msg.as_bytes());
+}
+
+fn handle_connection(state: Arc<FabricState>, mut stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("set handshake timeout")?;
+    let first = match read_frame(&mut stream) {
+        Ok(Some(f)) => f,
+        Ok(None) => return Ok(()),
+        Err(e) => {
+            send_error(&mut stream, &format!("{e:#}"));
+            return Err(e);
+        }
+    };
+    if first.frame_type == FrameType::Hello {
+        return register_worker(&state, stream, &first.payload);
+    }
+    // A client connection: serve request frames until it closes.
+    stream.set_read_timeout(None).context("clear client timeout")?;
+    let mut next: Option<Frame> = Some(first);
+    loop {
+        let frame = match next.take() {
+            Some(f) => f,
+            None => match read_frame(&mut stream) {
+                Ok(Some(f)) => f,
+                Ok(None) => return Ok(()),
+                Err(e) => {
+                    send_error(&mut stream, &format!("{e:#}"));
+                    return Err(e);
+                }
+            },
+        };
+        match frame.frame_type {
+            FrameType::CompileRequest => {
+                if let Err(e) = handle_compile(&state, &mut stream, &frame.payload) {
+                    send_error(&mut stream, &format!("{e:#}"));
+                    return Err(e);
+                }
+            }
+            FrameType::FetchSession => handle_fetch(&state, &mut stream, &frame.payload)?,
+            FrameType::Info => handle_info(&state, &mut stream)?,
+            FrameType::Shutdown => {
+                state.shutdown.store(true, Ordering::SeqCst);
+                // Wake the accept loop so it observes the flag.
+                let _ = TcpStream::connect(state.listen_addr);
+                return Ok(());
+            }
+            t => {
+                send_error(&mut stream, &format!("unexpected {t:?} frame"));
+                bail!("unexpected {t:?} frame from client");
+            }
+        }
+    }
+}
+
+fn register_worker(state: &Arc<FabricState>, mut stream: TcpStream, payload: &[u8]) -> Result<()> {
+    let threads = decode_hello(payload);
+    write_frame(&mut stream, FrameType::HelloAck, &[])?;
+    // Dispatch sets per-job timeouts; an idle pooled worker just waits.
+    stream.set_read_timeout(None).context("clear worker timeout")?;
+    let id = state.next_worker.fetch_add(1, Ordering::Relaxed) + 1;
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    eprintln!("fabric: worker {id} joined from {peer} ({threads} threads)");
+    state.workers.lock().expect("worker pool lock").push(WorkerConn { id, stream });
+    state.stats.lock().expect("stats lock").workers_joined += 1;
+    Ok(())
+}
+
+/// Validate a compile request, pick the execution path (distributed vs
+/// local), and stream the per-tensor results back. Request-level
+/// validation failures answer with an [`FrameType::Error`] frame and
+/// keep the connection alive; transport failures propagate.
+fn handle_compile(state: &Arc<FabricState>, stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    state.active_jobs.fetch_add(1, Ordering::SeqCst);
+    let _in_flight = JobGuard(&state.active_jobs);
+    let req = match decode_compile_request(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            send_error(stream, &format!("bad compile request: {e:#}"));
+            return Ok(());
+        }
+    };
+    let opts = &state.sopts.service.opts;
+    if req.cfg != opts.cfg || req.method != opts.pipeline.method {
+        send_error(
+            stream,
+            &format!(
+                "this fabric compiles {} {:?}; the job asked for {} {:?}",
+                opts.cfg, opts.pipeline.method, req.cfg, req.method
+            ),
+        );
+        return Ok(());
+    }
+    let maxv = req.cfg.max_per_array();
+    for (name, ws) in &req.tensors {
+        // Explicit two-sided compare: `abs()` would overflow on i64::MIN.
+        if let Some(w) = ws.iter().find(|&&w| w > maxv || w < -maxv) {
+            send_error(
+                stream,
+                &format!("tensor {name:?} weight {w} is outside ±{maxv} for {}", req.cfg),
+            );
+            return Ok(());
+        }
+    }
+    let total_weights: usize = req.tensors.iter().map(|(_, ws)| ws.len()).sum();
+    // Warm chips — retained in memory or persisted under the cache dir —
+    // take the local path: a warm recompile is pure cache hits, cheaper
+    // than re-solving the chip distributed.
+    let has_warm_session = state
+        .service
+        .lock()
+        .expect("service lock")
+        .has_cached_session(req.chip_seed);
+    let idle_workers = state.workers.lock().expect("worker pool lock").len();
+    let distribute =
+        total_weights >= state.sopts.shard_min_weights && idle_workers > 0 && !has_warm_session;
+    let (results, summary) = if distribute {
+        distributed_compile(state, &req)?
+    } else {
+        local_compile(state, &req)?
+    };
+    // Count the work before streaming: a client that disconnects
+    // mid-stream must not erase the counters of solves that happened.
+    {
+        let mut stats = state.stats.lock().expect("stats lock");
+        stats.jobs += 1;
+        if summary.shards > 0 {
+            stats.distributed_jobs += 1;
+            stats.shards_dispatched += summary.shards as u64;
+            stats.reassignments += summary.reassigned as u64;
+        }
+    }
+    let cells = req.cfg.cells();
+    for r in &results {
+        write_frame(stream, FrameType::CompileResult, &encode_tensor_result(r, cells))?;
+    }
+    write_frame(stream, FrameType::CompileDone, &encode_summary(&summary))?;
+    Ok(())
+}
+
+/// Compile through the in-process service (small jobs, warm sessions, or
+/// a workerless fabric). The service lock is held across enqueue + run
+/// so concurrent clients cannot interleave their batches.
+fn local_compile(
+    state: &Arc<FabricState>,
+    req: &CompileRequest,
+) -> Result<(Vec<TensorResult>, FabricSummary)> {
+    let mut svc = state.service.lock().expect("service lock");
+    for (name, ws) in &req.tensors {
+        svc.enqueue(req.chip_seed, name, ws.clone());
+    }
+    let compiled = svc.run()?;
+    for e in svc.persist_errors() {
+        eprintln!("fabric: warning: session cache not persisted — {e}");
+    }
+    drop(svc);
+    let mut weights = 0u64;
+    let mut fresh = 0u64;
+    let results: Vec<TensorResult> = compiled
+        .into_iter()
+        .map(|r| {
+            weights += r.tensor.decomps.len() as u64;
+            fresh += r.tensor.stats.unique_pairs as u64;
+            TensorResult {
+                name: r.name,
+                errors: r.tensor.errors,
+                decomps: r.tensor.decomps,
+                fresh_solves: r.tensor.stats.unique_pairs as u64,
+            }
+        })
+        .collect();
+    let summary = FabricSummary {
+        tensors: results.len() as u32,
+        weights,
+        fresh_solves: fresh,
+        shards: 0,
+        workers: 0,
+        reassigned: 0,
+    };
+    Ok((results, summary))
+}
+
+fn session_for(chip: &ChipFaults, opts: &CompileOptions) -> CompileSession {
+    CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip)
+}
+
+/// Fan one job's solve phase across the worker pool: claim every idle
+/// worker, derive the plan, dispatch ranges with reassignment-on-loss,
+/// solve any leftovers locally, merge, compile, and retain the warm
+/// session in the service.
+fn distributed_compile(
+    state: &Arc<FabricState>,
+    req: &CompileRequest,
+) -> Result<(Vec<TensorResult>, FabricSummary)> {
+    let sopts = &state.sopts;
+    let chip = ChipFaults::new(req.chip_seed, sopts.service.rates);
+    let mut claimed: Vec<WorkerConn> =
+        std::mem::take(&mut *state.workers.lock().expect("worker pool lock"));
+    if claimed.is_empty() {
+        // Lost the worker-claim race to a concurrent job: this compile is
+        // local after all (and reported as such).
+        return local_compile(state, req);
+    }
+    let shards = claimed.len().clamp(1, sopts.max_shards.max(1));
+    // Workers beyond the shard count have nothing to do this round.
+    let extra = claimed.split_off(shards.min(claimed.len()));
+    if !extra.is_empty() {
+        state.workers.lock().expect("worker pool lock").extend(extra);
+    }
+    let dispatched_workers = claimed.len() as u32;
+    let pipeline = sopts.service.opts.pipeline;
+    let round = ShardRound {
+        plan: ShardPlan::new(shards),
+        shards,
+        key: CacheKey::new(&chip, req.cfg, pipeline),
+        req,
+        sopts,
+        pending: Mutex::new((0..shards).rev().collect()),
+        frags: (0..shards).map(|_| Mutex::new(None)).collect(),
+        reassigned: AtomicU32::new(0),
+    };
+    let survivors: Vec<WorkerConn> = std::thread::scope(|s| {
+        let handles: Vec<_> = claimed
+            .into_iter()
+            .map(|w| {
+                let round = &round;
+                s.spawn(move || drive_worker(w, round))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("shard driver panicked"))
+            .collect()
+    });
+    state.workers.lock().expect("worker pool lock").extend(survivors);
+
+    // Any range every worker failed on (or that was never assigned
+    // because the pool drained) is solved locally — a fabric losing its
+    // whole fleet mid-job still completes the job.
+    for (k, slot) in round.frags.iter().enumerate() {
+        if slot.lock().expect("fragment lock").is_some() {
+            continue;
+        }
+        eprintln!("fabric: solving shard {}/{shards} locally (no live worker)", k + 1);
+        let mut session = session_for(&chip, &sopts.service.opts);
+        for (name, ws) in &req.tensors {
+            session.submit(name, ws.clone());
+        }
+        let frag = session.solve_shard(&round.plan, k)?;
+        *slot.lock().expect("fragment lock") = Some(frag);
+    }
+    let fragments: Vec<ShardFragment> = round
+        .frags
+        .iter()
+        .map(|m| {
+            m.lock()
+                .expect("fragment lock")
+                .take()
+                .expect("every shard range resolved above")
+        })
+        .collect();
+    let shard_solves: u64 = fragments.iter().map(|f| f.solved_patterns() as u64).sum();
+
+    // Merge into a session configured exactly like the service's own
+    // (execution knobs included), compile the job from the warm cache,
+    // and hand the session to the service for future (local) jobs.
+    let mut session = session_for(&chip, &sopts.service.opts);
+    // Under a fleet-wide table budget the merged session joins the cap
+    // right away with a conservative even share over the live set
+    // (eviction only ever costs re-solves, never output bytes);
+    // `install_session` re-derives the proportional split afterwards.
+    if let Some(total) = sopts.service.table_budget.fleet_bytes() {
+        let live = state.service.lock().expect("service lock").sessions().count() + 1;
+        session.set_table_memory_bytes((total / live).max(1));
+    }
+    session
+        .merge_fragments(&fragments)
+        .context("merge worker shard fragments")?;
+    for (name, ws) in &req.tensors {
+        session.submit(name, ws.clone());
+    }
+    let compiled = session.drain();
+    let mut weights = 0u64;
+    let mut catch_up = 0u64;
+    let results: Vec<TensorResult> = compiled
+        .into_iter()
+        .map(|(name, t)| {
+            weights += t.decomps.len() as u64;
+            catch_up += t.stats.unique_pairs as u64;
+            TensorResult {
+                name,
+                errors: t.errors,
+                decomps: t.decomps,
+                fresh_solves: t.stats.unique_pairs as u64,
+            }
+        })
+        .collect();
+    {
+        let mut svc = state.service.lock().expect("service lock");
+        let before = svc.persist_errors().len();
+        svc.install_session(req.chip_seed, session);
+        for e in &svc.persist_errors()[before..] {
+            eprintln!("fabric: warning: session cache not persisted — {e}");
+        }
+    }
+    let summary = FabricSummary {
+        tensors: results.len() as u32,
+        weights,
+        fresh_solves: shard_solves + catch_up,
+        shards: shards as u32,
+        workers: dispatched_workers,
+        reassigned: round.reassigned.load(Ordering::Relaxed),
+    };
+    Ok((results, summary))
+}
+
+/// Feed one worker shard ranges until none are pending. Returns the
+/// worker for re-pooling, or `None` when it was lost (its last range is
+/// already requeued for a live worker — or the local fallback — to
+/// pick up).
+fn drive_worker(mut w: WorkerConn, round: &ShardRound<'_>) -> Option<WorkerConn> {
+    loop {
+        let shard = match round.pending.lock().expect("pending lock").pop() {
+            Some(s) => s,
+            None => return Some(w),
+        };
+        match dispatch_one(&mut w, round, shard) {
+            Ok(frag) => {
+                *round.frags[shard].lock().expect("fragment lock") = Some(frag);
+            }
+            Err(e) => {
+                eprintln!(
+                    "fabric: worker {} lost on shard {}/{}: {e:#} — range requeued",
+                    w.id,
+                    shard + 1,
+                    round.shards
+                );
+                round.pending.lock().expect("pending lock").push(shard);
+                round.reassigned.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+    }
+}
+
+/// Send one shard job and await its fragment, bounded by the worker
+/// timeout. Any failure — transport error, timeout, worker-reported
+/// error, or a fragment that does not match the assignment — makes the
+/// caller requeue the range and drop the worker.
+fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Result<ShardFragment> {
+    let timeout = Some(round.sopts.worker_timeout);
+    w.stream.set_read_timeout(timeout).context("set worker read timeout")?;
+    w.stream.set_write_timeout(timeout).context("set worker write timeout")?;
+    let payload = encode_shard_job(
+        &round.key.chip,
+        round.key.cfg,
+        round.key.pipeline,
+        shard as u32,
+        round.shards as u32,
+        &round.req.tensors,
+    );
+    write_frame(&mut w.stream, FrameType::ShardJob, &payload)?;
+    let frame = read_frame(&mut w.stream)?
+        .ok_or_else(|| anyhow!("worker disconnected before returning the shard"))?;
+    match frame.frame_type {
+        FrameType::ShardResult => {
+            let frag = ShardFragment::from_bytes(&frame.payload)
+                .context("parse worker shard fragment")?;
+            if frag.shard() != shard || frag.shards() != round.shards {
+                bail!(
+                    "worker returned shard {}/{} for assignment {}/{}",
+                    frag.shard() + 1,
+                    frag.shards(),
+                    shard + 1,
+                    round.shards
+                );
+            }
+            if let Some(why) = round.key.mismatch(frag.cache_key()) {
+                bail!("worker fragment does not belong to this job: {why}");
+            }
+            Ok(frag)
+        }
+        FrameType::Error => bail!("worker reported: {}", decode_error(&frame.payload)),
+        t => bail!("unexpected {t:?} frame from worker"),
+    }
+}
+
+fn handle_fetch(state: &Arc<FabricState>, stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let chip_seed = match decode_chip_seed(payload) {
+        Ok(s) => s,
+        Err(e) => {
+            send_error(stream, &format!("bad session fetch: {e:#}"));
+            return Ok(());
+        }
+    };
+    let bytes = {
+        let svc = state.service.lock().expect("service lock");
+        match svc.session(chip_seed) {
+            // Retained session: serialize its live warm state.
+            Some(session) => session.to_bytes(),
+            // In-memory miss: serve the cache-dir file verbatim, so a
+            // restarted coordinator covers the same warm set the compile
+            // router's `has_cached_session` check sees.
+            None => svc
+                .cached_session_bytes(chip_seed)
+                .ok_or_else(|| anyhow!("no warm session for chip {chip_seed}")),
+        }
+    };
+    match bytes {
+        Ok(b) => write_frame(stream, FrameType::SessionBytes, &b),
+        Err(e) => {
+            send_error(stream, &format!("{e:#}"));
+            Ok(())
+        }
+    }
+}
+
+fn handle_info(state: &Arc<FabricState>, stream: &mut TcpStream) -> Result<()> {
+    let info = {
+        let stats = state.stats.lock().expect("stats lock");
+        FabricInfo {
+            workers: state.workers.lock().expect("worker pool lock").len() as u32,
+            sessions: state.service.lock().expect("service lock").sessions().count() as u32,
+            jobs: stats.jobs,
+            distributed_jobs: stats.distributed_jobs,
+            reassignments: stats.reassignments,
+        }
+    };
+    write_frame(stream, FrameType::InfoReply, &encode_info(&info))
+}

@@ -1,0 +1,92 @@
+//! The fabric worker: `rchg worker`.
+//!
+//! A worker is a host that lends its cores to the coordinator: it
+//! connects, registers ([`FrameType::Hello`] → ack), then loops solving
+//! [`FrameType::ShardJob`]s — each job is one [`ShardPlan`] range of one
+//! chip's pattern space, solved with [`CompileSession::solve_shard`] and
+//! returned as verbatim RCSF fragment bytes. The worker holds no state
+//! between jobs: every job carries its full identity (chip + config +
+//! pipeline, in the RCSS cache-key layout) and tensor set, so any worker
+//! can solve any range of any chip, and losing a worker loses nothing
+//! but time.
+//!
+//! A job that fails to solve (malformed spec, unsupported config)
+//! answers with an [`FrameType::Error`] frame; the coordinator requeues
+//! the range elsewhere and drops this worker. A clean EOF from the
+//! coordinator — shutdown, or the coordinator dropping a lost worker —
+//! ends the loop normally.
+
+use super::protocol::{
+    decode_error, decode_shard_job, encode_hello, read_frame, write_frame, FrameType,
+};
+use crate::coordinator::persist::CacheKey;
+use crate::coordinator::{CompileSession, ShardPlan};
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+
+/// What a worker accomplished before its coordinator hung up.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    /// Shard jobs solved and returned.
+    pub jobs: u64,
+    /// Pattern classes solved across all jobs.
+    pub patterns_solved: u64,
+}
+
+/// Connect to a coordinator at `addr` and solve shard jobs until it
+/// hangs up (or sends [`FrameType::Shutdown`]). `threads` is this
+/// worker's solve fan-out (thread count never changes solved bytes).
+pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect to coordinator {addr}"))?;
+    stream.set_nodelay(true).ok();
+    write_frame(&mut stream, FrameType::Hello, &encode_hello(threads))?;
+    let ack = read_frame(&mut stream)?
+        .ok_or_else(|| anyhow!("coordinator closed during the handshake"))?;
+    match ack.frame_type {
+        FrameType::HelloAck => {}
+        FrameType::Error => bail!("coordinator rejected worker: {}", decode_error(&ack.payload)),
+        t => bail!("unexpected {t:?} frame during the handshake"),
+    }
+    let mut report = WorkerReport::default();
+    loop {
+        let frame = match read_frame(&mut stream)? {
+            Some(f) => f,
+            None => break, // coordinator hung up between jobs: done
+        };
+        match frame.frame_type {
+            FrameType::ShardJob => match solve_job(&frame.payload, threads) {
+                Ok((bytes, solved)) => {
+                    write_frame(&mut stream, FrameType::ShardResult, &bytes)?;
+                    report.jobs += 1;
+                    report.patterns_solved += solved as u64;
+                }
+                Err(e) => {
+                    eprintln!("worker: shard job failed: {e:#}");
+                    write_frame(&mut stream, FrameType::Error, format!("{e:#}").as_bytes())?;
+                }
+            },
+            FrameType::Shutdown => break,
+            t => bail!("unexpected {t:?} frame from coordinator"),
+        }
+    }
+    Ok(report)
+}
+
+/// Solve one wire-delivered shard job: rebuild the session the job's
+/// cache key describes, submit the full tensor set (every shard scans
+/// everything so all shards derive the identical registry), solve only
+/// the assigned range, and serialize the fragment.
+fn solve_job(payload: &[u8], threads: usize) -> Result<(Vec<u8>, usize)> {
+    let spec = decode_shard_job(payload)?;
+    let key = CacheKey::new(&spec.chip, spec.cfg, spec.pipeline);
+    let mut session = CompileSession::for_key(&key);
+    session.set_threads(threads);
+    for (name, ws) in &spec.tensors {
+        session.submit(name, ws.clone());
+    }
+    let plan = ShardPlan::new(spec.shards as usize);
+    let fragment = session.solve_shard(&plan, spec.shard as usize)?;
+    let solved = fragment.solved_patterns();
+    Ok((fragment.to_bytes(), solved))
+}

@@ -28,9 +28,19 @@ where
     }
 }
 
-/// FNV-1a hash (for deriving per-property base seeds from names).
+/// FNV-1a offset basis (the hash state before any byte is folded in).
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a hash (for deriving per-property base seeds from names, and as
+/// the checksum of the RCSS/RCSF file formats and RCWP wire frames).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a_with(FNV1A_OFFSET, bytes)
+}
+
+/// Continue an FNV-1a hash from a prior state — `fnv1a_with(fnv1a(a), b)`
+/// equals `fnv1a` of `a` and `b` concatenated, so multi-buffer inputs
+/// (e.g. a frame header and its payload) hash without a joining copy.
+pub fn fnv1a_with(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x1000_0000_01b3);
@@ -90,6 +100,15 @@ mod tests {
     fn fnv_distinct() {
         assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
         assert_ne!(fnv1a(b""), fnv1a(b"a"));
+    }
+
+    #[test]
+    fn fnv_streams_across_buffers() {
+        let whole = b"header-and-payload";
+        let (a, b) = whole.split_at(7);
+        assert_eq!(fnv1a_with(fnv1a(a), b), fnv1a(whole));
+        assert_eq!(fnv1a_with(FNV1A_OFFSET, whole), fnv1a(whole));
+        assert_eq!(fnv1a_with(fnv1a(whole), b""), fnv1a(whole));
     }
 
     #[test]

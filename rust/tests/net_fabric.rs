@@ -1,0 +1,325 @@
+//! Compile-fabric acceptance tests (RCWP v1 over localhost TCP).
+//!
+//! * A distributed compile — coordinator + 2 workers — produces compiled
+//!   bitmaps AND fetched RCSS session bytes byte-identical to a local
+//!   unsharded `CompileSession` compile.
+//! * Killing a worker mid-solve reassigns its pattern range to the live
+//!   worker and the job still completes, byte-identically.
+//! * Malformed, truncated, and wrong-version frames are rejected cleanly
+//!   (and never take the server down).
+//! * A workerless fabric degrades to local compilation, never failure.
+
+use rchg::coordinator::{
+    CompileOptions, CompileSession, CompiledTensor, Method, ServiceOptions, TableBudget,
+};
+use rchg::experiments::compile_time::synthetic_model_tensors;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+use rchg::net::protocol::{
+    encode_hello, frame_bytes, read_frame, write_frame, FrameType, FRAME_HEADER_LEN,
+};
+use rchg::net::{run_worker, CompileClient, FabricServer, FabricStats, ServeOptions, TensorResult};
+use std::io::{Cursor, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+const CFG: GroupConfig = GroupConfig::R2C2;
+
+fn model(limit: usize) -> Vec<(String, Vec<i64>)> {
+    synthetic_model_tensors("resnet20", &CFG, limit).unwrap()
+}
+
+fn serve_opts(shard_min_weights: usize) -> ServeOptions {
+    let mut opts = CompileOptions::new(CFG, Method::Complete);
+    opts.threads = 2;
+    ServeOptions {
+        service: ServiceOptions {
+            opts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: None,
+        },
+        shard_min_weights,
+        max_shards: 8,
+        worker_timeout: Duration::from_secs(30),
+    }
+}
+
+fn start_server(sopts: ServeOptions) -> (SocketAddr, thread::JoinHandle<FabricStats>) {
+    let server = FabricServer::bind("127.0.0.1:0", sopts).unwrap();
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+/// Poll the fabric until `n` workers sit idle in the pool.
+fn wait_for_workers(addr: SocketAddr, n: usize) {
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+    for _ in 0..600 {
+        if client.info().unwrap().workers as usize >= n {
+            return;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("{n} workers never registered with the fabric at {addr}");
+}
+
+/// The unsharded single-process reference: per-tensor outputs + the RCSS
+/// bytes a local session saves after compiling the same tensor set.
+fn local_reference(
+    chip_seed: u64,
+    tensors: &[(String, Vec<i64>)],
+) -> (Vec<(String, CompiledTensor)>, Vec<u8>) {
+    let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+    let mut session = CompileSession::builder(CFG).method(Method::Complete).chip(&chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    let out = session.drain();
+    let bytes = session.to_bytes().unwrap();
+    (out, bytes)
+}
+
+fn assert_results_match(got: &[TensorResult], want: &[(String, CompiledTensor)]) {
+    assert_eq!(got.len(), want.len(), "tensor count");
+    for (g, (name, w)) in got.iter().zip(want) {
+        assert_eq!(&g.name, name);
+        assert_eq!(g.errors, w.errors, "residual errors of {name}");
+        assert_eq!(g.decomps, w.decomps, "bitmaps of {name}");
+    }
+}
+
+#[test]
+fn fabric_distributed_compile_is_byte_identical_to_local() {
+    let tensors = model(2_500);
+    let (addr, server) = start_server(serve_opts(1)); // force fan-out
+    let addr_s = addr.to_string();
+    let (wa, wb) = (addr_s.clone(), addr_s.clone());
+    let w1 = thread::spawn(move || run_worker(&wa, 1).unwrap());
+    let w2 = thread::spawn(move || run_worker(&wb, 1).unwrap());
+    wait_for_workers(addr, 2);
+
+    let mut client = CompileClient::connect(&addr_s).unwrap();
+    let (results, summary) = client.compile_model(7, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(summary.shards, 2, "2 idle workers => a 2-way plan");
+    assert_eq!(summary.workers, 2);
+    assert_eq!(summary.reassigned, 0);
+    assert!(summary.fresh_solves > 0, "a cold distributed job solves fresh work");
+
+    // Acceptance: bitmaps AND RCSS session bytes byte-identical to a
+    // local unsharded compile.
+    let (want, want_bytes) = local_reference(7, &tensors);
+    assert_results_match(&results, &want);
+    let remote_bytes = client.fetch_session(7).unwrap();
+    assert_eq!(remote_bytes, want_bytes, "fetched RCSS bytes must equal a local save");
+    // The fetched bytes are a loadable session anywhere.
+    let mut warm = CompileSession::from_bytes(&remote_bytes).unwrap();
+    let again = warm.compile_tensor(&tensors[0].0, &tensors[0].1);
+    assert_eq!(again.stats.unique_pairs, 0, "fetched cache must be warm");
+
+    // A repeat job hits the retained warm session: local path, no solves.
+    let (repeat, warm_summary) =
+        client.compile_model(7, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(warm_summary.shards, 0, "warm jobs skip the fan-out");
+    assert_eq!(warm_summary.fresh_solves, 0, "warm jobs solve nothing");
+    assert_results_match(&repeat, &want);
+
+    client.shutdown_server().unwrap();
+    let stats = server.join().unwrap();
+    assert_eq!(stats.jobs, 2);
+    assert_eq!(stats.distributed_jobs, 1);
+    // Workers observe a clean EOF once the fabric stops.
+    let r1 = w1.join().unwrap();
+    let r2 = w2.join().unwrap();
+    assert_eq!(r1.jobs + r2.jobs, 2, "each worker solved its range");
+    assert!(r1.patterns_solved + r2.patterns_solved > 0);
+}
+
+#[test]
+fn fabric_killed_worker_range_is_reassigned_to_a_live_worker() {
+    let tensors = model(2_000);
+    let (addr, server) = start_server(serve_opts(1));
+    let addr_s = addr.to_string();
+
+    // One real worker…
+    let wa = addr_s.clone();
+    let real = thread::spawn(move || run_worker(&wa, 1).unwrap());
+    // …and one that registers, accepts a shard job, then dies mid-solve.
+    let fake_addr = addr_s.clone();
+    let fake = thread::spawn(move || {
+        let mut s = TcpStream::connect(&fake_addr).unwrap();
+        write_frame(&mut s, FrameType::Hello, &encode_hello(1)).unwrap();
+        let ack = read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(ack.frame_type, FrameType::HelloAck);
+        let _job = read_frame(&mut s); // swallow the assignment, then vanish
+        drop(s);
+    });
+    wait_for_workers(addr, 2);
+
+    let mut client = CompileClient::connect(&addr_s).unwrap();
+    let (results, summary) = client.compile_model(9, CFG, Method::Complete, &tensors).unwrap();
+
+    // The dead worker's range was requeued and solved by the live worker
+    // — the job completed without local fallback changing a byte.
+    assert_eq!(summary.shards, 2);
+    assert!(summary.reassigned >= 1, "losing a worker must reassign its range");
+    fake.join().unwrap();
+    let (want, want_bytes) = local_reference(9, &tensors);
+    assert_results_match(&results, &want);
+    assert_eq!(client.fetch_session(9).unwrap(), want_bytes);
+
+    client.shutdown_server().unwrap();
+    let stats = server.join().unwrap();
+    assert!(stats.reassignments >= 1);
+    real.join().unwrap();
+}
+
+#[test]
+fn fabric_workerless_coordinator_compiles_locally_and_restarts_warm() {
+    let tensors = model(900);
+    let dir = std::env::temp_dir().join(format!("rchg-fabric-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sopts = serve_opts(1); // would shard, but no workers
+    sopts.service.cache_dir = Some(dir.clone());
+    let (addr, server) = start_server(sopts);
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+    let (results, summary) = client.compile_model(3, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(summary.shards, 0);
+    assert_eq!(summary.workers, 0);
+    let (want, want_bytes) = local_reference(3, &tensors);
+    assert_results_match(&results, &want);
+    assert_eq!(client.fetch_session(3).unwrap(), want_bytes);
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+
+    // A restarted coordinator over the same cache dir serves the warm
+    // cache from disk — both for session fetches and for compiles
+    // (which warm-start with zero fresh solves instead of re-solving).
+    let mut sopts = serve_opts(1);
+    sopts.service.cache_dir = Some(dir.clone());
+    let (addr, server) = start_server(sopts);
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+    assert_eq!(
+        client.fetch_session(3).unwrap(),
+        want_bytes,
+        "restarted coordinator must serve the persisted warm cache"
+    );
+    let (again, warm_summary) = client.compile_model(3, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(warm_summary.fresh_solves, 0, "disk warm-start must solve nothing");
+    assert_eq!(warm_summary.shards, 0);
+    assert_results_match(&again, &want);
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fabric_malformed_truncated_and_wrong_version_frames_are_rejected() {
+    // Protocol-level rejection, no server involved: flip any byte of a
+    // sealed frame and the reader must refuse it.
+    let good = frame_bytes(FrameType::Info, &[]);
+    for i in 0..good.len() {
+        let mut bad = good.clone();
+        bad[i] ^= 0x20;
+        assert!(read_frame(&mut Cursor::new(&bad)).is_err(), "flip at {i} accepted");
+    }
+    // Every truncation of a frame errors; an empty stream is a clean EOF.
+    for cut in 1..good.len() {
+        assert!(read_frame(&mut Cursor::new(&good[..cut])).is_err());
+    }
+    assert!(read_frame(&mut Cursor::new(&[] as &[u8])).unwrap().is_none());
+
+    // Server-level rejection: garbage and wrong-version frames get a
+    // clean error and never take the fabric down.
+    let (addr, server) = start_server(serve_opts(usize::MAX));
+    let addr_s = addr.to_string();
+
+    // Raw garbage: the connection is rejected. The server either answers
+    // with an Error frame or hangs up (a reset is possible when it drops
+    // the socket with bytes unread) — both are clean rejections, and the
+    // load-bearing assertion is that the fabric survives, below.
+    let mut garbage = TcpStream::connect(&addr_s).unwrap();
+    garbage.write_all(&[0xFF; 64]).unwrap();
+    garbage.flush().unwrap();
+    if let Ok(Some(f)) = read_frame(&mut garbage) {
+        assert_eq!(f.frame_type, FrameType::Error, "garbage must be answered with an error");
+    }
+    drop(garbage);
+
+    // …a wrong-version frame is named as such…
+    let mut stale = TcpStream::connect(&addr_s).unwrap();
+    let mut v2 = frame_bytes(FrameType::Info, &[]);
+    v2[4] = 2; // bump the version field
+    stale.write_all(&v2).unwrap();
+    stale.flush().unwrap();
+    if let Ok(Some(f)) = read_frame(&mut stale) {
+        assert_eq!(f.frame_type, FrameType::Error);
+        assert!(
+            String::from_utf8_lossy(&f.payload).contains("version"),
+            "the rejection must name the version mismatch"
+        );
+    }
+    drop(stale);
+
+    // …a hostile payload length is capped before allocation…
+    let mut huge = TcpStream::connect(&addr_s).unwrap();
+    let mut oversized = frame_bytes(FrameType::Info, &[]);
+    oversized[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    huge.write_all(&oversized).unwrap();
+    huge.flush().unwrap();
+    drop(huge);
+
+    // …and the fabric is still alive and serving valid clients.
+    let mut client = CompileClient::connect(&addr_s).unwrap();
+    let info = client.info().unwrap();
+    assert_eq!(info.jobs, 0);
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn fabric_request_validation_answers_with_errors_not_hangups() {
+    let (addr, server) = start_server(serve_opts(usize::MAX));
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+
+    // Config mismatch: the server compiles R2C2.
+    let small = vec![("t".to_string(), vec![1i64, -1])];
+    let err = client
+        .compile_model(1, GroupConfig::R1C4, Method::Complete, &small)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("R2C2") || err.contains("R1C4"), "got: {err}");
+
+    // Out-of-range weights are named.
+    let wild = vec![("t".to_string(), vec![1_000i64])];
+    let err = client
+        .compile_model(1, CFG, Method::Complete, &wild)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("outside"), "got: {err}");
+
+    // Unknown chip for a session fetch.
+    let err = client.fetch_session(999).unwrap_err().to_string();
+    assert!(err.contains("no warm session"), "got: {err}");
+
+    // The same connection still serves valid requests after each error.
+    let (_, summary) = client.compile_model(2, CFG, Method::Complete, &small).unwrap();
+    assert_eq!(summary.tensors, 1);
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn fabric_frame_header_layout_is_stable() {
+    // The header is part of the wire contract: magic, version, type, len.
+    let bytes = frame_bytes(FrameType::Hello, &[0xAA, 0xBB]);
+    assert_eq!(FRAME_HEADER_LEN, 16);
+    assert_eq!(&bytes[0..4], &0x5243_5750u32.to_le_bytes()); // "RCWP"
+    assert_eq!(&bytes[4..8], &1u32.to_le_bytes()); // version
+    assert_eq!(&bytes[8..12], &FrameType::Hello.code().to_le_bytes());
+    assert_eq!(&bytes[12..16], &2u32.to_le_bytes()); // payload length
+    assert_eq!(&bytes[16..18], &[0xAA, 0xBB]);
+    assert_eq!(bytes.len(), 16 + 2 + 8); // header + payload + checksum
+}
