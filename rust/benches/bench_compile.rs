@@ -9,6 +9,7 @@
 //! legacy per-weight path at several thread counts.
 
 use rchg::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method, SolveTier};
+use rchg::experiments::bench::{compile_sample, BENCH_CHIP_SEED, BENCH_MODEL};
 use rchg::experiments::compile_time::{
     dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, synthetic_model_weights,
     table2, CompileTimeOptions,
@@ -31,11 +32,13 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let opts = CompileTimeOptions {
         models: if quick {
-            vec!["resnet20".into()]
+            vec![BENCH_MODEL.into()]
         } else {
-            vec!["resnet20".into(), "resnet18".into(), "resnet50".into(), "vgg16".into()]
+            vec![BENCH_MODEL.into(), "resnet18".into(), "resnet50".into(), "vgg16".into()]
         },
-        sample_complete: if quick { 50_000 } else { 400_000 },
+        // Shared with `rchg bench` (experiments::bench) so this bench and
+        // the harness sample identical workloads.
+        sample_complete: compile_sample(quick),
         sample_ilp: if quick { 500 } else { 2_000 },
         sample_ff: if quick { 500 } else { 2_000 },
         threads: 1,
@@ -53,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     println!("== full-scale (no sampling) complete-pipeline runs");
     let mut best_ratio = 1.0f64;
     for cfg in [GroupConfig::R1C4, GroupConfig::R2C2] {
-        let r = measure("resnet20", cfg, Method::Complete, usize::MAX, 1, 1)?;
+        let r = measure(BENCH_MODEL, cfg, Method::Complete, usize::MAX, 1, BENCH_CHIP_SEED)?;
         println!(
             "  resnet20 {} complete: {} for {} weights ({:.0} weights/s) — \
              {} classes, {} unique pairs, {:.1}x dedup",
@@ -77,8 +80,8 @@ fn main() -> anyhow::Result<()> {
     println!("== pattern-class vs legacy per-weight equivalence (resnet20 sample)");
     let cfg = GroupConfig::R2C2;
     let n = if quick { 40_000 } else { 120_000 };
-    let ws = synthetic_model_weights("resnet20", &cfg, n)?;
-    let chip = ChipFaults::new(1, FaultRates::paper_default());
+    let ws = synthetic_model_weights(BENCH_MODEL, &cfg, n)?;
+    let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
     let faults = chip.sample_tensor(0, ws.len(), cfg.cells());
     let mut legacy = CompileOptions::new(cfg, Method::Complete);
     legacy.dedupe = false;
@@ -146,7 +149,7 @@ fn main() -> anyhow::Result<()> {
     // ≥90% of solves (it skips all of them — the chip's fault pattern is
     // fixed) and stay byte-identical to the cold compile.
     println!("== session warm-start (save → load → recompile)");
-    let tensors = synthetic_model_tensors("resnet20", &cfg, n)?;
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, n)?;
     let warm_chip = ChipFaults::new(3, FaultRates::paper_default());
     let mut cold = CompileSession::builder(cfg).threads(1).chip(&warm_chip);
     let t_cold = Timer::start();

@@ -4,29 +4,21 @@
 use rchg::baseline::fault_free::ff_decompose;
 use rchg::coordinator::{decompose_one, Method, PipelineOptions};
 use rchg::decompose::{cvm_ilp, fawd_ilp, GroupTables};
-use rchg::fault::{FaultRates, GroupFaults};
+use rchg::experiments::bench::{seeded_cases, BENCH_CASE_POOL};
 use rchg::grouping::{FaultAnalysis, GroupConfig};
 use rchg::ilp::IlpStats;
-use rchg::util::prng::Rng;
 use rchg::util::timer::{bench, bench_header, black_box};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let iters = if quick { 20 } else { 100 };
     println!("{}", bench_header());
+    let mut difftable_speedup = f64::INFINITY;
 
     for cfg in [GroupConfig::R1C4, GroupConfig::R2C2, GroupConfig::R2C4] {
-        let rates = FaultRates::paper_default();
-        // Pre-sample a pool of cases so the RNG isn't in the timed path.
-        let mut rng = Rng::new(7);
-        let cases: Vec<(GroupFaults, i64)> = (0..4096)
-            .map(|_| {
-                (
-                    GroupFaults::sample(cfg.cells(), &rates, &mut rng),
-                    rng.range_i64(-cfg.max_per_array(), cfg.max_per_array()),
-                )
-            })
-            .collect();
+        // The seeded case pool shared with `rchg bench` (experiments::bench)
+        // — the harness and this microbench measure the same inputs.
+        let cases = seeded_cases(&cfg, BENCH_CASE_POOL);
         let mut st = IlpStats::default();
         let opts = PipelineOptions { method: Method::Complete, ..Default::default() };
 
@@ -55,6 +47,37 @@ fn main() {
         });
         println!("{}", stats.report());
 
+        // DiffTable construction: vectorized builder vs the scalar
+        // reference, same prebuilt GroupTables pool. The ≥1.5x criterion
+        // is asserted after the config loop.
+        let pool_n = if quick { 256 } else { 1024 };
+        let tables: Vec<GroupTables> =
+            cases.iter().take(pool_n).map(|(f, _)| GroupTables::build(&cfg, f)).collect();
+        for gt in &tables {
+            assert_eq!(
+                gt.diff_table(),
+                gt.diff_table_reference(),
+                "vectorized DiffTable diverged from reference ({})",
+                cfg.name()
+            );
+        }
+        let fast = bench(&format!("{}/difftable-build", cfg.name()), iters, 0.2, || {
+            for gt in &tables {
+                black_box(gt.diff_table());
+            }
+        });
+        println!("{}", fast.report());
+        let reference =
+            bench(&format!("{}/difftable-build-reference", cfg.name()), iters, 0.2, || {
+                for gt in &tables {
+                    black_box(gt.diff_table_reference());
+                }
+            });
+        println!("{}", reference.report());
+        let speedup = reference.mean_s / fast.mean_s.max(1e-12);
+        println!("  {} difftable speedup: {:.2}x", cfg.name(), speedup);
+        difftable_speedup = difftable_speedup.min(speedup);
+
         let mut i4 = 0usize;
         let stats = bench(&format!("{}/ilp-fawd", cfg.name()), iters.min(30), 0.1, || {
             i4 = (i4 + 1) % cases.len();
@@ -81,4 +104,15 @@ fn main() {
             println!("{}", stats.report());
         }
     }
+
+    println!(
+        "difftable criterion (vectorized ≥1.5x reference on every config): {} \
+         (worst {difftable_speedup:.2}x)",
+        if difftable_speedup >= 1.5 { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        difftable_speedup >= 1.5,
+        "vectorized DiffTable build must be ≥1.5x the scalar reference \
+         (worst config: {difftable_speedup:.2}x)"
+    );
 }

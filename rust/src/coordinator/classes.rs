@@ -49,6 +49,14 @@ pub struct PatternCtx {
 impl PatternCtx {
     pub fn new(cfg: GroupConfig, faults: GroupFaults) -> PatternCtx {
         let key = faults.pattern_key();
+        PatternCtx::with_key(cfg, faults, key)
+    }
+
+    /// Construct with a precomputed interning key. The registry already
+    /// computed the key to probe its map; recomputing it here would double
+    /// the per-fresh-pattern key-derivation work on the scan path.
+    pub fn with_key(cfg: GroupConfig, faults: GroupFaults, key: PatternKey) -> PatternCtx {
+        debug_assert_eq!(key, faults.pattern_key());
         let fault_free = faults.is_fault_free();
         PatternCtx {
             cfg,
@@ -82,20 +90,83 @@ impl PatternCtx {
     }
 }
 
+/// Patterns per arena chunk. 256 contexts ≈ a few hundred KB per chunk
+/// once analyses/tables materialize inline — big enough to amortize the
+/// chunk allocation, small enough that a mostly-fault-free chip (a
+/// handful of classes) does not over-commit.
+const CTX_CHUNK: usize = 256;
+
+/// Chunked arena backing [`PatternCtx`] storage.
+///
+/// `PatternCtx` is a wide struct (fault map plus two inline `OnceLock`
+/// payloads once the lazy analysis/tables materialize). A plain
+/// `Vec<PatternCtx>` re-copies every context on each capacity doubling as
+/// a scan discovers new classes; the arena allocates fixed-size chunks
+/// instead, so a push never moves previously interned contexts and
+/// interning cost stays flat regardless of registry size. Every chunk
+/// holds exactly `CTX_CHUNK` contexts (the last one partially), which
+/// makes indexing a shift-and-mask-free div/mod pair.
+#[derive(Debug)]
+struct CtxArena {
+    chunks: Vec<Vec<PatternCtx>>,
+    len: usize,
+}
+
+impl CtxArena {
+    fn new() -> CtxArena {
+        CtxArena { chunks: Vec::new(), len: 0 }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> &PatternCtx {
+        &self.chunks[i / CTX_CHUNK][i % CTX_CHUNK]
+    }
+
+    fn push(&mut self, ctx: PatternCtx) {
+        if self.len % CTX_CHUNK == 0 {
+            self.chunks.push(Vec::with_capacity(CTX_CHUNK));
+        }
+        self.chunks.last_mut().expect("chunk pushed above").push(ctx);
+        self.len += 1;
+    }
+
+    fn iter(&self) -> impl Iterator<Item = &PatternCtx> {
+        self.chunks.iter().flat_map(|c| c.iter())
+    }
+}
+
+impl Clone for CtxArena {
+    fn clone(&self) -> CtxArena {
+        // Rebuild through `push` so every clone restores the full-capacity
+        // chunk invariant (a derived clone would shrink chunk capacity to
+        // its length and the next push into the tail chunk would
+        // reallocate it).
+        let mut out = CtxArena::new();
+        out.chunks.reserve(self.chunks.len());
+        for ctx in self.iter() {
+            out.push(ctx.clone());
+        }
+        out
+    }
+}
+
 /// Interning registry of fault-pattern classes for one grouping config.
 ///
 /// Pattern ids are assigned in first-intern order, so a registry filled by
-/// a deterministic scan is itself deterministic.
+/// a deterministic scan is itself deterministic. Contexts live in a
+/// chunked [`CtxArena`]; the interning fast path (pattern already seen —
+/// the overwhelmingly common case on a realistic chip) is one key
+/// derivation plus one map probe, with no allocation.
 #[derive(Clone, Debug)]
 pub struct PatternRegistry {
     cfg: GroupConfig,
     by_key: FnvMap<PatternKey, PatternId>,
-    ctxs: Vec<PatternCtx>,
+    ctxs: CtxArena,
 }
 
 impl PatternRegistry {
     pub fn new(cfg: GroupConfig) -> PatternRegistry {
-        PatternRegistry { cfg, by_key: FnvMap::default(), ctxs: Vec::new() }
+        PatternRegistry { cfg, by_key: FnvMap::default(), ctxs: CtxArena::new() }
     }
 
     pub fn cfg(&self) -> &GroupConfig {
@@ -108,16 +179,23 @@ impl PatternRegistry {
         if let Some(&id) = self.by_key.get(&key) {
             return id;
         }
-        let id = self.ctxs.len() as PatternId;
+        let id = self.ctxs.len as PatternId;
         self.by_key.insert(key, id);
-        self.ctxs.push(PatternCtx::new(self.cfg, faults.clone()));
+        // The key was just derived for the map probe — hand it down rather
+        // than recomputing it inside the context constructor.
+        self.ctxs.push(PatternCtx::with_key(self.cfg, faults.clone(), key));
         id
     }
 
     /// Scan a tensor's fault maps, interning every pattern. Returns one
-    /// class id per group, aligned with the input.
+    /// class id per group, aligned with the input. The output vector is
+    /// sized up front — for a million-group tensor this is the only
+    /// allocation the scan performs besides the (rare) fresh-pattern
+    /// inserts.
     pub fn intern_all(&mut self, faults: &[GroupFaults]) -> Vec<PatternId> {
-        faults.iter().map(|f| self.intern(f)).collect()
+        let mut out = Vec::with_capacity(faults.len());
+        out.extend(faults.iter().map(|f| self.intern(f)));
+        out
     }
 
     /// Interned fault patterns in id order (the session cache serializer
@@ -127,16 +205,16 @@ impl PatternRegistry {
     }
 
     pub fn ctx(&self, id: PatternId) -> &PatternCtx {
-        &self.ctxs[id as usize]
+        self.ctxs.get(id as usize)
     }
 
     /// Number of distinct pattern classes interned so far.
     pub fn len(&self) -> usize {
-        self.ctxs.len()
+        self.ctxs.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ctxs.is_empty()
+        self.ctxs.len == 0
     }
 
     /// How many classes materialized their decomposition tables.
@@ -413,6 +491,17 @@ impl SolveCache {
         }
     }
 
+    /// Immutable per-pattern view of every resident solution, indexed by
+    /// [`PatternId`] over the full registry. The batch scatter phase
+    /// resolves millions of weights; borrowing the slot vector once hoists
+    /// the per-weight bounds/`Option` probes of [`SolveCache::get`] out of
+    /// the hot loop.
+    pub fn solution_views(&self) -> Vec<Option<&PatternSolution>> {
+        (0..self.registry.len())
+            .map(|pid| self.slots.get(pid).and_then(|s| s.as_ref()).map(|s| &s.solution))
+            .collect()
+    }
+
     /// The resident solution of pattern `pid` **if it was touched in the
     /// current batch epoch** (scanned, served, or freshly solved since the
     /// last [`SolveCache::begin_batch`]). This is the shard-fragment
@@ -558,6 +647,37 @@ mod tests {
         // Every id resolves back to a pattern with the same key.
         for (f, id) in maps.iter().zip(&ids1) {
             assert_eq!(r1.ctx(*id).key, f.pattern_key());
+        }
+    }
+
+    #[test]
+    fn arena_survives_chunk_boundaries() {
+        // Fill the registry well past two arena chunks and verify ids,
+        // keys, iteration order and clones all stay consistent.
+        let cfg = GroupConfig::R2C2;
+        let mut reg = PatternRegistry::new(cfg);
+        let mut rng = Rng::new(99);
+        let mut seen: Vec<(PatternId, GroupFaults)> = Vec::new();
+        while reg.len() < 2 * CTX_CHUNK + 7 {
+            let f =
+                GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.4, p_sa1: 0.4 }, &mut rng);
+            let id = reg.intern(&f);
+            seen.push((id, f));
+        }
+        for (id, f) in &seen {
+            assert_eq!(reg.ctx(*id).key, f.pattern_key());
+            assert_eq!(&reg.ctx(*id).faults, f);
+        }
+        // patterns() walks ids in order across chunk boundaries; a rebuild
+        // from that walk reproduces identical ids (the serializer contract).
+        let mut rebuilt = PatternRegistry::new(cfg);
+        for (expect, f) in reg.patterns().enumerate() {
+            assert_eq!(rebuilt.intern(f) as usize, expect);
+        }
+        assert_eq!(rebuilt.len(), reg.len());
+        let cloned = reg.clone();
+        for (id, f) in &seen {
+            assert_eq!(&cloned.ctx(*id).faults, f);
         }
     }
 

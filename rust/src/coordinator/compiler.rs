@@ -31,7 +31,7 @@
 //! are gone — build a [`super::CompileSession`] (see its module docs for
 //! the migration table).
 
-use super::classes::{PatternId, SolveCache, DEFAULT_TABLE_MEMORY_BYTES};
+use super::classes::{PatternId, PatternSolution, SolveCache, DEFAULT_TABLE_MEMORY_BYTES};
 use super::pipeline::{
     decompose_one, decompose_with_ctx, solve_full_range, Method, Outcome, PipelineOptions,
     SolveTier, Stage, ALL_STAGES,
@@ -458,36 +458,33 @@ fn compile_batch_inner(
     let solve_secs = solve_fresh(&mut scan, opts, cache);
     let BatchScan { mut per_tensor, tensor_pids, .. } = scan;
 
-    // Phase 4 — scatter: O(1) lookups map every weight to its outcome.
-    let mut scattered: Vec<(Vec<Decomposition>, Vec<i64>, HashMap<&'static str, usize>)> =
-        Vec::with_capacity(jobs.len());
+    // Phase 4 — scatter: map every weight to its outcome. The per-pattern
+    // solution views are borrowed once for the whole batch (hoisting the
+    // per-weight slot/`Option` probes of `SolveCache::get` out of the hot
+    // loop); decompositions stream into an exact-capacity buffer through
+    // `extend` rather than per-weight pushes; stage tallies use a flat
+    // array indexed by `Stage::code` instead of a per-weight hash probe.
+    // Output bytes are identical to the per-weight formulation — the
+    // byte-determinism suites pin this.
+    let views = cache.solution_views();
+    let max_w = opts.cfg.max_per_array();
+    let mut results = Vec::with_capacity(jobs.len());
     for (ti, j) in jobs.iter().enumerate() {
         let n = j.weights.len();
-        let stats = &mut per_tensor[ti];
-        let mut decomps = Vec::with_capacity(n);
-        let mut errors = Vec::with_capacity(n);
-        let mut counts: HashMap<&'static str, usize> = HashMap::new();
-        for (&pid, &w) in tensor_pids[ti].iter().zip(j.weights.iter()) {
-            let out = cache.get(pid, w).expect("every request was resident or solved this batch");
-            *counts.entry(out.stage.name()).or_insert(0) += 1;
+        let mut stats = std::mem::take(&mut per_tensor[ti]);
+        let mut decomps: Vec<Decomposition> = Vec::with_capacity(n);
+        let mut errors: Vec<i64> = Vec::with_capacity(n);
+        let mut counts = [0usize; ALL_STAGES.len()];
+        decomps.extend(tensor_pids[ti].iter().zip(j.weights.iter()).map(|(&pid, &w)| {
+            let out = resolve_outcome(&views, pid, w, max_w);
+            counts[out.stage.code() as usize] += 1;
             if out.error != 0 {
                 stats.imperfect += 1;
                 stats.total_abs_error += out.error.unsigned_abs();
             }
-            decomps.push(out.decomposition.clone());
             errors.push(out.error);
-        }
-        scattered.push((decomps, errors, counts));
-    }
-
-    let wall = timer.secs();
-    let total_weights: usize = jobs.iter().map(|j| j.weights.len()).sum();
-    let total_solve: f64 = solve_secs.iter().sum();
-    let overhead = (wall - total_solve).max(0.0);
-    let mut results = Vec::with_capacity(jobs.len());
-    for (ti, (decomps, errors, counts)) in scattered.into_iter().enumerate() {
-        let mut stats = std::mem::take(&mut per_tensor[ti]);
-        let n = decomps.len();
+            out.decomposition.clone()
+        }));
         stats.weights = n;
         debug_assert_eq!(stats.unique_pairs + stats.dedup_hits, n);
         stats.unique_patterns = cache.registry.len();
@@ -496,16 +493,48 @@ fn compile_batch_inner(
         stats.resident_table_bytes = cache.resident_bytes();
         stats.stage_counts = ALL_STAGES
             .iter()
-            .filter_map(|s| counts.get(s.name()).map(|c| (s.name(), *c)))
+            .filter(|s| counts[s.code() as usize] > 0)
+            .map(|s| (s.name(), counts[s.code() as usize]))
             .collect();
-        stats.wall_secs = if total_weights == 0 {
-            0.0
-        } else {
-            solve_secs[ti] + overhead * n as f64 / total_weights as f64
-        };
         results.push(CompiledTensor { cfg: opts.cfg, decomps, errors, stats });
     }
+
+    let wall = timer.secs();
+    let total_weights: usize = jobs.iter().map(|j| j.weights.len()).sum();
+    let total_solve: f64 = solve_secs.iter().sum();
+    let overhead = (wall - total_solve).max(0.0);
+    for (ti, r) in results.iter_mut().enumerate() {
+        r.stats.wall_secs = if total_weights == 0 {
+            0.0
+        } else {
+            solve_secs[ti] + overhead * r.stats.weights as f64 / total_weights as f64
+        };
+    }
     results
+}
+
+/// Resolve one (pattern, weight) request against the batch's hoisted
+/// solution views — the scatter phase's inner step. Panics (like the
+/// `expect` it replaces) when the request was neither resident nor solved
+/// this batch, which the scan phase rules out.
+#[inline]
+fn resolve_outcome<'a>(
+    views: &[Option<&'a PatternSolution>],
+    pid: PatternId,
+    w: i64,
+    max_w: i64,
+) -> &'a Outcome {
+    match views[pid as usize] {
+        Some(PatternSolution::Table(t)) => {
+            let i = w + max_w;
+            debug_assert!((0..t.len() as i64).contains(&i), "table-tier weight out of range");
+            &t[i as usize]
+        }
+        Some(PatternSolution::Pairs(m)) => {
+            m.get(&w).expect("every request was resident or solved this batch")
+        }
+        None => panic!("every request was resident or solved this batch"),
+    }
 }
 
 /// Legacy per-weight compilation: contiguous ranges across threads with

@@ -17,8 +17,22 @@
 
 use crate::fault::{FaultState, GroupFaults};
 use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use std::cell::RefCell;
 
 const INF: u32 = u32::MAX;
+
+thread_local! {
+    /// Pooled DP scratch row for [`ValueTable::build`]. The builder runs
+    /// once per fresh pattern; without pooling each build pays a transient
+    /// `Vec<u32>` allocation for the rolling DP row. The row is taken at
+    /// build start and returned at build end, so nested builds on one
+    /// thread (there are none) would simply fall back to a fresh alloc.
+    static DP_ROW: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+    /// Pooled scratch for [`GroupTables::diff_table`]: the packed-key
+    /// merge buffer and the reversed dense negative-cost row.
+    static DIFF_SCRATCH: RefCell<(Vec<u64>, Vec<u32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Achievable decoded values of one array: dense min-ℓ1-cost table plus
 /// per-cell digit choices for witness reconstruction.
@@ -44,7 +58,9 @@ impl ValueTable {
         let mut cost = vec![INF; stride];
         cost[0] = 0;
         let mut choice = vec![0u8; n_cells * stride];
-        let mut next = vec![INF; stride];
+        let mut next = DP_ROW.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        next.clear();
+        next.resize(stride, INF);
 
         for (idx, f) in faults.iter().enumerate() {
             let sig = cfg.sig_of(idx) as usize;
@@ -96,6 +112,9 @@ impl ValueTable {
             }
             std::mem::swap(&mut cost, &mut next);
         }
+        // Return the rolling row to the pool (after the swaps, `next` may be
+        // either original buffer — both are plain `Vec<u32>` of `stride`).
+        DP_ROW.with(|s| *s.borrow_mut() = std::mem::take(&mut next));
 
         let values: Vec<i64> = (0..stride).filter(|&v| cost[v] != INF).map(|v| v as i64).collect();
         debug_assert!(!values.is_empty());
@@ -220,7 +239,7 @@ impl ValueTable {
 /// per-target sweeps select (see `fawd_pair`/`cvm_pair` for the
 /// tie-breaking proof sketch), so batch extraction is byte-identical to
 /// the per-weight algorithms.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DiffTable {
     /// Smallest achievable difference (`pos.min − neg.max`).
     min_diff: i64,
@@ -406,7 +425,78 @@ impl GroupTables {
     /// `O(|pos| · |neg|)` pass that lets every subsequent FAWD/CVM query
     /// be answered in `O(1)` via [`GroupTables::fawd_from`] /
     /// [`GroupTables::cvm_from`].
+    ///
+    /// Vectorized formulation (byte-identical to
+    /// [`GroupTables::diff_table_reference`], pinned by the
+    /// `vectorized_diff_table_matches_reference` property test):
+    ///
+    /// * The negative array's costs are first scattered into a **dense
+    ///   reversed row** over `[neg.min ..= neg.max]` — index `k` holds the
+    ///   cost of `b = neg.max − k`, or the `UNREACHED` sentinel for holes.
+    ///   This hoists the per-iteration `cost_of` bounds-check/lookup of the
+    ///   scalar loop out of the cross product entirely.
+    /// * For a fixed `a`, the differences `a − b` over that row are
+    ///   **contiguous** in the table (`i = (a − pos.min) + k`), so the
+    ///   inner pass is a branchless min-merge of two flat slices the
+    ///   autovectorizer can chew on.
+    /// * Each candidate is packed as `(cost << 32) | pos_index`. Costs are
+    ///   bounded by `cells · (levels−1)` ≪ 2³⁰, so `u64::min` over packed
+    ///   keys orders first by cost, then by the ascending position of `a`
+    ///   in the sorted value list — exactly the strict-`<`-update /
+    ///   smallest-`a` tie-break of the scalar loop. Sentinel entries carry
+    ///   cost ≥ `UNREACHED` and therefore never beat a real pair.
     pub fn diff_table(&self) -> DiffTable {
+        /// Cost sentinel for unachievable `b` values in the dense row —
+        /// far above any real combined cost, far below `u32` overflow.
+        const UNREACHED: u32 = 1 << 30;
+        let pos_min = self.pos.min_value();
+        let min_diff = pos_min - self.neg.max_value();
+        let max_diff = self.pos.max_value() - self.neg.min_value();
+        let n = (max_diff - min_diff + 1) as usize;
+        let span = (self.neg.max_value() - self.neg.min_value() + 1) as usize;
+
+        let (mut merged, mut neg_rev) =
+            DIFF_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        merged.clear();
+        merged.resize(n, u64::MAX);
+        neg_rev.clear();
+        neg_rev.resize(span, UNREACHED);
+        for &b in self.neg.values() {
+            let cb = self.neg.cost_of(b).expect("neg value achievable");
+            debug_assert!(cb < UNREACHED);
+            neg_rev[(self.neg.max_value() - b) as usize] = cb;
+        }
+
+        for (ai, &a) in self.pos.values().iter().enumerate() {
+            let ca = self.pos.cost_of(a).expect("pos value achievable");
+            debug_assert!(ca < UNREACHED);
+            let base = ((ca as u64) << 32) | ai as u64;
+            // Diffs for this `a` occupy `[a − pos_min, a − pos_min + span)`.
+            let window = &mut merged[(a - pos_min) as usize..(a - pos_min) as usize + span];
+            for (slot, &cb) in window.iter_mut().zip(neg_rev.iter()) {
+                let key = base + ((cb as u64) << 32);
+                *slot = (*slot).min(key);
+            }
+        }
+
+        let mut cost = vec![INF; n];
+        let mut best_a = vec![0i64; n];
+        for (i, &m) in merged.iter().enumerate() {
+            let c = (m >> 32) as u32;
+            if c < UNREACHED {
+                cost[i] = c;
+                best_a[i] = self.pos.values()[(m & 0xffff_ffff) as usize];
+            }
+        }
+        DIFF_SCRATCH.with(|s| *s.borrow_mut() = (std::mem::take(&mut merged), std::mem::take(&mut neg_rev)));
+        Self::finish_diff_table(min_diff, cost, best_a)
+    }
+
+    /// The original scalar cross-product construction, kept as the
+    /// executable specification for [`GroupTables::diff_table`]: property
+    /// tests pin the vectorized builder byte-identical to this, and
+    /// `benches/bench_decompose.rs` measures the speedup against it.
+    pub fn diff_table_reference(&self) -> DiffTable {
         let min_diff = self.pos.min_value() - self.neg.max_value();
         let max_diff = self.pos.max_value() - self.neg.min_value();
         let n = (max_diff - min_diff + 1) as usize;
@@ -426,6 +516,13 @@ impl GroupTables {
                 }
             }
         }
+        Self::finish_diff_table(min_diff, cost, best_a)
+    }
+
+    /// Shared tail of both builders: the prev/next nearest-achievable
+    /// index fills.
+    fn finish_diff_table(min_diff: i64, cost: Vec<u32>, best_a: Vec<i64>) -> DiffTable {
+        let n = cost.len();
         let mut prev = vec![NO_DIFF; n];
         let mut last = NO_DIFF;
         for (i, p) in prev.iter_mut().enumerate() {
@@ -601,6 +698,10 @@ mod tests {
                 GroupFaults::sample(cfg.cells(), &FaultRates { p_sa0: 0.2, p_sa1: 0.2 }, rng);
             let tables = GroupTables::build(&cfg, &faults);
             let dt = tables.diff_table();
+            prop_assert!(
+                dt == tables.diff_table_reference(),
+                "vectorized table differs from scalar reference (cfg {cfg}, faults {faults:?})"
+            );
             let maxv = cfg.max_per_array();
             for w in -maxv - 2..=maxv + 2 {
                 let sweep_fawd = tables.fawd(&cfg, &faults, w);
@@ -615,6 +716,61 @@ mod tests {
                 prop_assert!(
                     sd == bd,
                     "cvm decomposition diverged at w={w} (cfg {cfg}, faults {faults:?})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vectorized_diff_table_matches_reference() {
+        // The vectorized builder must be BYTE-identical to the scalar
+        // reference — `cost`, `best_a`, `prev`, `next` and `min_diff` all
+        // compared via `PartialEq` — over random, *independently* sampled
+        // positive/negative ValueTables (sparser and more asymmetric than
+        // anything one GroupFaults sample produces), across sparse and
+        // dense fault regimes.
+        prop_check("diff-table-vectorized-vs-reference", 300, |rng| {
+            let cfg = [
+                GroupConfig::R1C4,
+                GroupConfig::R2C2,
+                GroupConfig::new(2, 3, 4),
+                GroupConfig::new(1, 2, 4),
+            ][rng.index(4)];
+            let rate = [0.0, 0.05, 0.3, 0.6][rng.index(4)];
+            let fa = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: rate, p_sa1: rate },
+                rng,
+            );
+            let fb = GroupFaults::sample(
+                cfg.cells(),
+                &FaultRates { p_sa0: rate / 2.0, p_sa1: rate * 1.5 },
+                rng,
+            );
+            // Independent pos/neg pair: pos from one sample, neg from the
+            // other, exercising mismatched value-set shapes.
+            let tables = GroupTables {
+                pos: ValueTable::build(&cfg, &fa.pos),
+                neg: ValueTable::build(&cfg, &fb.neg),
+            };
+            let vec_dt = tables.diff_table();
+            let ref_dt = tables.diff_table_reference();
+            prop_assert!(
+                vec_dt == ref_dt,
+                "vectorized != reference (cfg {cfg}, pos {:?}, neg {:?})",
+                fa.pos,
+                fb.neg
+            );
+            // And the full diff range answers identically through both.
+            for w in vec_dt.min_diff() - 2..=vec_dt.max_diff() + 2 {
+                prop_assert!(
+                    vec_dt.fawd_pair(w) == ref_dt.fawd_pair(w),
+                    "fawd_pair diverged at w={w}"
+                );
+                prop_assert!(
+                    vec_dt.cvm_pair(w) == ref_dt.cvm_pair(w),
+                    "cvm_pair diverged at w={w}"
                 );
             }
             Ok(())

@@ -1,0 +1,629 @@
+//! `rchg bench` — the per-PR performance-trajectory harness.
+//!
+//! Runs a fixed, seeded workload suite — cold/warm compile throughput on
+//! ResNet-20-shaped tensors, dedupe ratio, `DiffTable` builds/s (vectorized
+//! vs scalar reference), shard merge time, and a localhost fabric
+//! round-trip — and emits a schema-stable JSON report. The report for
+//! PR *n* is committed at the repo root as `BENCH_<n>.json`, so the perf
+//! trajectory across PRs is a diffable artifact; CI runs the same suite
+//! with `--quick` on every push and uploads the result.
+//!
+//! Schema stability contract: a report's **key tree** never changes within
+//! one `schema` tag ([`BENCH_SCHEMA`]). [`skeleton`] is the canonical key
+//! tree (every leaf `null`); [`validate`] checks any report against it.
+//! Leaf *values* split into two classes: timing fields (names ending in
+//! `_secs` / `_per_sec`, plus `speedup` — see [`is_timing_field`]) vary
+//! run to run, every other field is a deterministic function of the seeded
+//! workload and must be identical across runs (pinned by the
+//! `bench_harness` integration test).
+//!
+//! The microbenchmarks under `rust/benches/` share this module's workload
+//! definitions ([`seeded_cases`], [`BENCH_MODEL`], [`BENCH_CHIP_SEED`],
+//! [`compile_sample`]) so the two never drift apart.
+
+use super::compile_time::synthetic_model_tensors;
+use crate::coordinator::compiler::dedup_ratio_of;
+use crate::coordinator::{
+    CompileOptions, CompileSession, Method, ServiceOptions, ShardPlan, TableBudget,
+};
+use crate::decompose::GroupTables;
+use crate::fault::bank::ChipFaults;
+use crate::fault::{FaultRates, GroupFaults};
+use crate::grouping::GroupConfig;
+use crate::net::{run_worker, CompileClient, FabricServer, ServeOptions};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::timer::{bench, black_box, Timer};
+use anyhow::{anyhow, Result};
+use std::thread;
+use std::time::Duration;
+
+/// Schema tag of the report format. Bump only on key-tree changes.
+pub const BENCH_SCHEMA: &str = "rchg-bench-v1";
+
+/// Model shape every compile workload uses.
+pub const BENCH_MODEL: &str = "resnet20";
+
+/// Chip fault-bank seed shared with `benches/bench_compile.rs`.
+pub const BENCH_CHIP_SEED: u64 = 1;
+
+/// Case-pool RNG seed shared with `benches/bench_decompose.rs`.
+pub const BENCH_CASE_SEED: u64 = 7;
+
+/// Case-pool size of the decompose/DiffTable microbenchmarks.
+pub const BENCH_CASE_POOL: usize = 4096;
+
+/// The two configs every per-config workload runs at.
+pub const BENCH_CONFIGS: [GroupConfig; 2] = [GroupConfig::R2C2, GroupConfig::R1C4];
+
+/// Sample size of `bench_compile`'s Table-II rows (shared so the criterion
+/// bench and this harness measure the same seeded inputs).
+pub fn compile_sample(quick: bool) -> usize {
+    if quick {
+        50_000
+    } else {
+        400_000
+    }
+}
+
+/// The seeded (fault pattern, weight) case pool shared by
+/// `benches/bench_decompose.rs` and the harness's DiffTable workload —
+/// one generator, no drift between the two measurements.
+pub fn seeded_cases(cfg: &GroupConfig, n: usize) -> Vec<(GroupFaults, i64)> {
+    let rates = FaultRates::paper_default();
+    let mut rng = Rng::new(BENCH_CASE_SEED);
+    (0..n)
+        .map(|_| {
+            (
+                GroupFaults::sample(cfg.cells(), &rates, &mut rng),
+                rng.range_i64(-cfg.max_per_array(), cfg.max_per_array()),
+            )
+        })
+        .collect()
+}
+
+/// Workload sizes for one harness run.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    /// Solver threads for the compile/shard workloads.
+    pub threads: usize,
+    /// Total weight cap of the cold/warm compile and shard workloads.
+    pub compile_limit: usize,
+    /// DiffTable case-pool size (≤ [`BENCH_CASE_POOL`]).
+    pub difftable_cases: usize,
+    /// Minimum timed seconds per DiffTable measurement.
+    pub min_time_s: f64,
+    /// Shard count of the shard-merge workload.
+    pub shards: usize,
+    /// Total weight cap of the fabric round-trip workload.
+    pub fabric_limit: usize,
+    /// Run the localhost fabric round-trip (needs TCP loopback); when
+    /// off, the fabric workload's fields are emitted as `null` so the
+    /// schema stays identical.
+    pub fabric: bool,
+}
+
+impl BenchOptions {
+    /// Full-size suite (the numbers committed as `BENCH_<n>.json`).
+    pub fn full() -> BenchOptions {
+        BenchOptions {
+            threads: 1,
+            compile_limit: 120_000,
+            difftable_cases: BENCH_CASE_POOL,
+            min_time_s: 0.5,
+            shards: 4,
+            fabric_limit: 10_000,
+            fabric: true,
+        }
+    }
+
+    /// Reduced suite for the CI smoke step (`rchg bench --quick`).
+    pub fn quick() -> BenchOptions {
+        BenchOptions {
+            threads: 1,
+            compile_limit: 20_000,
+            difftable_cases: 512,
+            min_time_s: 0.1,
+            shards: 2,
+            fabric_limit: 2_000,
+            fabric: true,
+        }
+    }
+
+    /// Tiny suite for the test harness: seconds, not minutes, and no
+    /// sockets inside `cargo test`.
+    pub fn tiny() -> BenchOptions {
+        BenchOptions {
+            threads: 1,
+            compile_limit: 1_500,
+            difftable_cases: 48,
+            min_time_s: 0.0,
+            shards: 2,
+            fabric_limit: 400,
+            fabric: false,
+        }
+    }
+}
+
+/// Is `name` a timing leaf (varies run to run) rather than a
+/// deterministic property of the seeded workload?
+pub fn is_timing_field(name: &str) -> bool {
+    name.ends_with("_secs") || name.ends_with("_per_sec") || name == "speedup"
+}
+
+/// A copy of `doc` with every timing leaf (by [`is_timing_field`])
+/// nulled — the view the determinism test compares across runs.
+pub fn strip_timings(doc: &Json) -> Json {
+    match doc {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .map(|(k, v)| {
+                    let v = if is_timing_field(k) { Json::Null } else { strip_timings(v) };
+                    (k.clone(), v)
+                })
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_timings).collect()),
+        other => other.clone(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workload measurements. Each workload has a measurement struct and one
+// `*_fields` function mapping `Option<&M>` to named leaves — called with
+// `Some` by the runner and with `None` by `skeleton()`, which is what
+// guarantees the two key trees can never drift apart.
+// ---------------------------------------------------------------------
+
+struct CompileMeasurement {
+    weights: usize,
+    tensors: usize,
+    unique_patterns: usize,
+    unique_pairs: usize,
+    pattern_tables_built: usize,
+    cold_secs: f64,
+    warm_secs: f64,
+    warm_fresh_pairs: usize,
+}
+
+fn compile_fields(m: Option<&CompileMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    vec![
+        ("weights", f(m.map(|m| m.weights as f64))),
+        ("tensors", f(m.map(|m| m.tensors as f64))),
+        ("unique_patterns", f(m.map(|m| m.unique_patterns as f64))),
+        ("unique_pairs", f(m.map(|m| m.unique_pairs as f64))),
+        ("dedup_ratio", f(m.map(|m| dedup_ratio_of(m.weights, m.unique_pairs)))),
+        ("pattern_tables_built", f(m.map(|m| m.pattern_tables_built as f64))),
+        ("cold_secs", f(m.map(|m| m.cold_secs))),
+        ("cold_weights_per_sec", f(m.map(|m| per_sec(m.weights, m.cold_secs)))),
+        ("cold_patterns_per_sec", f(m.map(|m| per_sec(m.unique_patterns, m.cold_secs)))),
+        ("warm_secs", f(m.map(|m| m.warm_secs))),
+        ("warm_weights_per_sec", f(m.map(|m| per_sec(m.weights, m.warm_secs)))),
+        ("warm_fresh_pairs", f(m.map(|m| m.warm_fresh_pairs as f64))),
+    ]
+}
+
+struct DiffTableMeasurement {
+    cases: usize,
+    distinct_tables: usize,
+    build_secs: f64,
+    reference_secs: f64,
+}
+
+fn difftable_fields(m: Option<&DiffTableMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    vec![
+        ("cases", f(m.map(|m| m.cases as f64))),
+        ("distinct_tables", f(m.map(|m| m.distinct_tables as f64))),
+        ("builds_per_sec", f(m.map(|m| per_sec(m.cases, m.build_secs)))),
+        ("reference_builds_per_sec", f(m.map(|m| per_sec(m.cases, m.reference_secs)))),
+        ("speedup", f(m.map(|m| m.reference_secs / m.build_secs.max(1e-12)))),
+    ]
+}
+
+struct ShardMergeMeasurement {
+    shards: usize,
+    patterns: usize,
+    solved_pairs: usize,
+    shard_solve_secs: f64,
+    merge_secs: f64,
+}
+
+fn shard_merge_fields(m: Option<&ShardMergeMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    vec![
+        ("shards", f(m.map(|m| m.shards as f64))),
+        ("patterns", f(m.map(|m| m.patterns as f64))),
+        ("solved_pairs", f(m.map(|m| m.solved_pairs as f64))),
+        ("shard_solve_secs", f(m.map(|m| m.shard_solve_secs))),
+        ("merge_secs", f(m.map(|m| m.merge_secs))),
+    ]
+}
+
+struct FabricMeasurement {
+    weights: usize,
+    tensors: usize,
+    shards: usize,
+    workers: usize,
+    fresh_solves: u64,
+    roundtrip_secs: f64,
+}
+
+fn fabric_fields(m: Option<&FabricMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    vec![
+        ("weights", f(m.map(|m| m.weights as f64))),
+        ("tensors", f(m.map(|m| m.tensors as f64))),
+        ("shards", f(m.map(|m| m.shards as f64))),
+        ("workers", f(m.map(|m| m.workers as f64))),
+        ("fresh_solves", f(m.map(|m| m.fresh_solves as f64))),
+        ("roundtrip_secs", f(m.map(|m| m.roundtrip_secs))),
+        ("weights_per_sec", f(m.map(|m| per_sec(m.weights, m.roundtrip_secs)))),
+    ]
+}
+
+fn per_sec(count: usize, secs: f64) -> f64 {
+    count as f64 / secs.max(1e-12)
+}
+
+fn cfg_key(prefix: &str, cfg: &GroupConfig) -> String {
+    format!("{prefix}_{}", cfg.name().to_lowercase())
+}
+
+// ---------------------------------------------------------------------
+// Workload runners.
+// ---------------------------------------------------------------------
+
+/// Cold compile of the seeded model through a fresh session, then a warm
+/// recompile of the same tensors through the now-warm session.
+fn run_compile(cfg: GroupConfig, o: &BenchOptions) -> Result<CompileMeasurement> {
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.compile_limit)?;
+    let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
+    let mut session = CompileSession::builder(cfg)
+        .method(Method::Complete)
+        .threads(o.threads)
+        .chip(&chip);
+
+    let t = Timer::start();
+    let cold = session.compile_model(&tensors);
+    let cold_secs = t.secs();
+    let weights: usize = cold.iter().map(|(_, c, _)| c.stats.weights).sum();
+    let unique_pairs: usize = cold.iter().map(|(_, c, _)| c.stats.unique_pairs).sum();
+    let pattern_tables_built: usize =
+        cold.iter().map(|(_, c, _)| c.stats.pattern_tables_built).sum();
+
+    let t = Timer::start();
+    let warm = session.compile_model(&tensors);
+    let warm_secs = t.secs();
+    let warm_fresh_pairs: usize = warm.iter().map(|(_, c, _)| c.stats.unique_pairs).sum();
+
+    Ok(CompileMeasurement {
+        weights,
+        tensors: tensors.len(),
+        unique_patterns: session.pattern_classes(),
+        unique_pairs,
+        pattern_tables_built,
+        cold_secs,
+        warm_secs,
+        warm_fresh_pairs,
+    })
+}
+
+/// DiffTable construction throughput over the seeded case pool:
+/// vectorized builder vs the scalar reference, same `GroupTables`.
+fn run_difftable(cfg: GroupConfig, o: &BenchOptions) -> DiffTableMeasurement {
+    let cases = seeded_cases(&cfg, o.difftable_cases);
+    let tables: Vec<GroupTables> =
+        cases.iter().map(|(f, _)| GroupTables::build(&cfg, f)).collect();
+    let mut distinct = std::collections::BTreeSet::new();
+    for (f, _) in &cases {
+        distinct.insert(f.pattern_key());
+    }
+    let built = bench("difftable", 3, o.min_time_s, || {
+        for gt in &tables {
+            black_box(gt.diff_table());
+        }
+    });
+    let reference = bench("difftable-reference", 3, o.min_time_s, || {
+        for gt in &tables {
+            black_box(gt.diff_table_reference());
+        }
+    });
+    DiffTableMeasurement {
+        cases: tables.len(),
+        distinct_tables: distinct.len(),
+        build_secs: built.mean_s,
+        reference_secs: reference.mean_s,
+    }
+}
+
+/// Solve the model in K pattern-range shards, then time reassembling the
+/// fragments into one warm session.
+fn run_shard_merge(cfg: GroupConfig, o: &BenchOptions) -> Result<ShardMergeMeasurement> {
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.compile_limit)?;
+    let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
+    let plan = ShardPlan::new(o.shards);
+    let t = Timer::start();
+    let mut fragments = Vec::with_capacity(o.shards);
+    for k in 0..o.shards {
+        let mut session = CompileSession::builder(cfg)
+            .method(Method::Complete)
+            .threads(o.threads)
+            .chip(&chip);
+        for (name, ws) in &tensors {
+            session.submit(name, ws.clone());
+        }
+        fragments.push(session.solve_shard(&plan, k)?);
+    }
+    let shard_solve_secs = t.secs();
+    let t = Timer::start();
+    let merged = CompileSession::from_fragments(&fragments)?;
+    let merge_secs = t.secs();
+    Ok(ShardMergeMeasurement {
+        shards: o.shards,
+        patterns: merged.pattern_classes(),
+        solved_pairs: merged.solved_pairs(),
+        shard_solve_secs,
+        merge_secs,
+    })
+}
+
+/// Full fabric round-trip on loopback TCP: coordinator + one worker,
+/// client submits the model and streams results back.
+fn run_fabric(o: &BenchOptions) -> Result<FabricMeasurement> {
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.fabric_limit)?;
+    let mut copts = CompileOptions::new(cfg, Method::Complete);
+    copts.threads = o.threads;
+    let sopts = ServeOptions {
+        service: ServiceOptions {
+            opts: copts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: None,
+        },
+        shard_min_weights: 1, // always fan out, so the trip is end-to-end
+        max_shards: 8,
+        worker_timeout: Duration::from_secs(60),
+    };
+    let server = FabricServer::bind("127.0.0.1:0", sopts)?;
+    let addr = server.local_addr().to_string();
+    let server_handle = thread::spawn(move || server.run());
+    let worker_addr = addr.clone();
+    let worker_handle = thread::spawn(move || run_worker(&worker_addr, 1));
+
+    let mut client = CompileClient::connect(&addr)?;
+    let mut ready = false;
+    for _ in 0..600 {
+        if client.info()?.workers >= 1 {
+            ready = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    if !ready {
+        return Err(anyhow!("fabric worker never registered at {addr}"));
+    }
+
+    let t = Timer::start();
+    let (results, summary) =
+        client.compile_model(BENCH_CHIP_SEED, cfg, Method::Complete, &tensors)?;
+    let roundtrip_secs = t.secs();
+    let weights: usize = results.iter().map(|r| r.decomps.len()).sum();
+    client.shutdown_server()?;
+    let _ = server_handle.join();
+    let _ = worker_handle.join();
+    Ok(FabricMeasurement {
+        weights,
+        tensors: results.len(),
+        shards: summary.shards as usize,
+        workers: summary.workers as usize,
+        fresh_solves: summary.fresh_solves,
+        roundtrip_secs,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Report assembly.
+// ---------------------------------------------------------------------
+
+fn workload_obj(fields: Vec<(&'static str, Json)>) -> Json {
+    Json::obj(fields)
+}
+
+fn host_obj() -> Json {
+    let cpus = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    Json::obj(vec![
+        ("os", Json::Str(std::env::consts::OS.to_string())),
+        ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+        ("cpus", Json::Num(cpus as f64)),
+    ])
+}
+
+fn assemble(
+    quick: bool,
+    pr: usize,
+    threads: usize,
+    workloads: Vec<(String, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+        ("pr", Json::Num(pr as f64)),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::Num(threads as f64)),
+        ("host", host_obj()),
+        (
+            "workloads",
+            Json::Obj(workloads.into_iter().collect()),
+        ),
+    ])
+}
+
+/// Run the whole suite and return the JSON report.
+pub fn run(o: &BenchOptions, quick: bool, pr: usize) -> Result<Json> {
+    let mut workloads: Vec<(String, Json)> = Vec::new();
+    for cfg in BENCH_CONFIGS {
+        let m = run_compile(cfg, o)?;
+        workloads.push((cfg_key("compile", &cfg), workload_obj(compile_fields(Some(&m)))));
+    }
+    for cfg in BENCH_CONFIGS {
+        let m = run_difftable(cfg, o);
+        workloads
+            .push((cfg_key("difftable", &cfg), workload_obj(difftable_fields(Some(&m)))));
+    }
+    let m = run_shard_merge(GroupConfig::R2C2, o)?;
+    workloads.push(("shard_merge_r2c2".to_string(), workload_obj(shard_merge_fields(Some(&m)))));
+    let fabric = if o.fabric {
+        let m = run_fabric(o)?;
+        workload_obj(fabric_fields(Some(&m)))
+    } else {
+        workload_obj(fabric_fields(None))
+    };
+    workloads.push(("fabric_roundtrip".to_string(), fabric));
+    Ok(assemble(quick, pr, o.threads, workloads))
+}
+
+/// The canonical key tree of a report: every structural key present,
+/// every leaf `null`. A session authored without a local Rust toolchain
+/// commits this skeleton as its `BENCH_<n>.json`; CI regenerates the
+/// measured version (schema-identical by construction) as an artifact.
+pub fn skeleton(pr: usize) -> Json {
+    let mut workloads: Vec<(String, Json)> = Vec::new();
+    for cfg in BENCH_CONFIGS {
+        workloads.push((cfg_key("compile", &cfg), workload_obj(compile_fields(None))));
+    }
+    for cfg in BENCH_CONFIGS {
+        workloads.push((cfg_key("difftable", &cfg), workload_obj(difftable_fields(None))));
+    }
+    workloads.push(("shard_merge_r2c2".to_string(), workload_obj(shard_merge_fields(None))));
+    workloads.push(("fabric_roundtrip".to_string(), workload_obj(fabric_fields(None))));
+    let mut doc = assemble(false, pr, 1, workloads);
+    // Run-dependent header scalars are null in the skeleton; `pr` stays,
+    // since it names the report regardless of whether anyone measured.
+    if let Json::Obj(m) = &mut doc {
+        for key in ["quick", "threads"] {
+            m.insert(key.to_string(), Json::Null);
+        }
+        m.insert(
+            "host".to_string(),
+            Json::obj(vec![("os", Json::Null), ("arch", Json::Null), ("cpus", Json::Null)]),
+        );
+    }
+    doc
+}
+
+/// Validate `doc` against the canonical key tree: identical object keys
+/// at every level. Leaf values are unconstrained (null or scalar) except
+/// `schema`, which must be [`BENCH_SCHEMA`] when present as a string.
+pub fn validate(doc: &Json) -> std::result::Result<(), String> {
+    if let Json::Str(s) = doc.get("schema") {
+        if s != BENCH_SCHEMA {
+            return Err(format!("schema tag {s:?} != {BENCH_SCHEMA:?}"));
+        }
+    }
+    same_shape(&skeleton(0), doc, "$")
+}
+
+fn same_shape(want: &Json, got: &Json, path: &str) -> std::result::Result<(), String> {
+    match (want, got) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            let ka: Vec<&String> = a.keys().collect();
+            let kb: Vec<&String> = b.keys().collect();
+            if ka != kb {
+                return Err(format!("{path}: keys {kb:?} != expected {ka:?}"));
+            }
+            for (k, v) in a {
+                same_shape(v, &b[k], &format!("{path}.{k}"))?;
+            }
+            Ok(())
+        }
+        (Json::Obj(_), other) => {
+            Err(format!("{path}: expected an object, got {other:?}"))
+        }
+        // Leaves: any scalar (or null, for skeleton/unmeasured runs).
+        _ => match got {
+            Json::Obj(_) | Json::Arr(_) => {
+                Err(format!("{path}: expected a scalar leaf, got a container"))
+            }
+            _ => Ok(()),
+        },
+    }
+}
+
+/// Human-readable rendering of a report (the non-`--json` CLI output).
+pub fn render_human(doc: &Json) -> String {
+    let mut t = super::Table::new(
+        &format!("rchg bench ({})", doc.get("schema").as_str().unwrap_or("?")),
+        &["workload", "field", "value"],
+    );
+    if let Json::Obj(ws) = doc.get("workloads") {
+        for (name, fields) in ws {
+            if let Json::Obj(fs) = fields {
+                for (field, v) in fs {
+                    let val = match v {
+                        Json::Null => "-".to_string(),
+                        Json::Num(x) if x.fract() == 0.0 && x.abs() < 1e15 => {
+                            format!("{}", *x as i64)
+                        }
+                        Json::Num(x) => format!("{x:.3}"),
+                        other => format!("{other:?}"),
+                    };
+                    t.row(vec![name.clone(), field.to_string(), val]);
+                }
+            }
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skeleton_is_schema_valid() {
+        let sk = skeleton(6);
+        validate(&sk).expect("skeleton must validate against itself");
+        // And it round-trips through the serializer.
+        let text = sk.pretty();
+        let parsed = Json::parse(&text).expect("skeleton pretty output parses");
+        assert_eq!(parsed, sk);
+        validate(&parsed).expect("parsed skeleton still validates");
+    }
+
+    #[test]
+    fn timing_field_classifier() {
+        for t in ["cold_secs", "merge_secs", "weights_per_sec", "builds_per_sec", "speedup"] {
+            assert!(is_timing_field(t), "{t} must be a timing field");
+        }
+        for d in ["weights", "dedup_ratio", "unique_patterns", "shards", "fresh_solves"] {
+            assert!(!is_timing_field(d), "{d} must be deterministic");
+        }
+    }
+
+    #[test]
+    fn strip_timings_nulls_only_timing_leaves() {
+        let doc = Json::obj(vec![
+            ("weights", Json::Num(10.0)),
+            ("cold_secs", Json::Num(1.5)),
+            (
+                "nested",
+                Json::obj(vec![("speedup", Json::Num(2.0)), ("shards", Json::Num(4.0))]),
+            ),
+        ]);
+        let s = strip_timings(&doc);
+        assert_eq!(s.get("weights"), &Json::Num(10.0));
+        assert_eq!(s.get("cold_secs"), &Json::Null);
+        assert_eq!(s.get("nested").get("speedup"), &Json::Null);
+        assert_eq!(s.get("nested").get("shards"), &Json::Num(4.0));
+    }
+
+    #[test]
+    fn seeded_cases_are_reproducible() {
+        let cfg = GroupConfig::R2C2;
+        let a = seeded_cases(&cfg, 64);
+        let b = seeded_cases(&cfg, 64);
+        assert_eq!(a, b, "case pool must be a pure function of the seed");
+    }
+}

@@ -5,6 +5,7 @@
 //! the same numbers from the same code. EXPERIMENTS.md records the runs.
 
 pub mod accuracy;
+pub mod bench;
 pub mod compile_time;
 pub mod hw;
 pub mod lm;

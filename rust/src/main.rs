@@ -13,6 +13,7 @@
 //!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
 //!   rchg eval-lm …              LM perplexity under SAFs  (Table III)
 //!   rchg compile-time …         compilation-time study    (Table II/Fig 10)
+//!   rchg bench …                per-PR perf harness → BENCH_<n>.json
 //!   rchg energy …               energy sweep              (Fig 11)
 //!   rchg inconsecutivity …      Monte-Carlo Theorem-2 study (Fig 6)
 //!   rchg info                   runtime + artifact info
@@ -24,6 +25,7 @@ use rchg::coordinator::{
 };
 use rchg::energy::EnergyParams;
 use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
+use rchg::experiments::bench::{self, BenchOptions};
 use rchg::experiments::compile_time::{
     dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, table2, CompileTimeOptions,
 };
@@ -186,6 +188,42 @@ fn main() -> anyhow::Result<()> {
             println!("{}", fig10a(&rows, &opts.models).render());
             println!("{}", fig10b(&rows, opts.models.last().unwrap()).render());
             println!("{}", dedup_report(&rows).render());
+        }
+        "bench" => {
+            let cli = Cli::new("per-PR perf harness: seeded workload suite → schema-stable JSON")
+                .opt("json", "print the JSON report instead of the human-readable table", None)
+                .opt("quick", "reduced workload sizes (the CI smoke configuration)", None)
+                .opt("threads", "solver threads for the compile/shard workloads", Some("1"))
+                .opt("no-fabric", "skip the localhost fabric round-trip workload", None)
+                .opt("out", "also write the JSON report to this path", None)
+                .opt("pr", "PR number stamped into the report", Some("6"))
+                .opt("check", "validate an existing report file against the schema, then exit", None);
+            let args = cli.parse(rest);
+            if let Some(path) = args.get("check") {
+                let text = std::fs::read_to_string(path)?;
+                let doc = rchg::util::json::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: invalid JSON: {e}"))?;
+                bench::validate(&doc)
+                    .map_err(|e| anyhow::anyhow!("{path}: schema mismatch: {e}"))?;
+                println!("{path}: schema ok ({})", bench::BENCH_SCHEMA);
+                return Ok(());
+            }
+            let quick = args.get_bool("quick");
+            let mut o = if quick { BenchOptions::quick() } else { BenchOptions::full() };
+            o.threads = args.get_usize("threads", 1).max(1);
+            if args.get_bool("no-fabric") {
+                o.fabric = false;
+            }
+            let doc = bench::run(&o, quick, args.get_usize("pr", 6))?;
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, doc.pretty() + "\n")?;
+                eprintln!("bench report written to {path}");
+            }
+            if args.get_bool("json") {
+                println!("{}", doc.pretty());
+            } else {
+                println!("{}", bench::render_human(&doc));
+            }
         }
         "compile" => {
             let cli = Cli::new("compile a synthetic model for one chip")
@@ -650,6 +688,7 @@ fn main() -> anyhow::Result<()> {
                  \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
                  \x20 eval-lm          Table III\n\
                  \x20 compile-time     Table II / Fig 10\n\
+                 \x20 bench            per-PR perf harness: seeded workloads → BENCH_<n>.json\n\
                  \x20 energy           Fig 11\n\
                  \x20 inconsecutivity  Fig 6\n\n\
                  run `rchg <subcommand> --help` for options"

@@ -1,0 +1,88 @@
+//! Perf-harness contract tests: the `rchg bench` report schema is stable,
+//! its non-timing fields are a deterministic function of the seeded
+//! workload, and the committed `BENCH_*.json` trajectory files at the
+//! repository root stay schema-valid.
+//!
+//! These run the tiny suite (seconds, no sockets); the real numbers come
+//! from `rchg bench` / the CI smoke step.
+
+use rchg::experiments::bench::{
+    run, seeded_cases, skeleton, strip_timings, validate, BenchOptions, BENCH_SCHEMA,
+};
+use rchg::grouping::GroupConfig;
+use rchg::util::json::Json;
+
+fn tiny_report() -> Json {
+    run(&BenchOptions::tiny(), true, 6).expect("tiny bench suite runs")
+}
+
+#[test]
+fn report_schema_round_trips() {
+    let doc = tiny_report();
+    validate(&doc).expect("fresh report validates");
+    let text = doc.pretty();
+    let parsed = Json::parse(&text).expect("report serializes to parseable JSON");
+    assert_eq!(parsed, doc, "pretty → parse must round-trip exactly");
+    validate(&parsed).expect("parsed report still validates");
+    assert_eq!(doc.get("schema").as_str(), Some(BENCH_SCHEMA));
+}
+
+#[test]
+fn report_matches_skeleton_key_tree() {
+    // The measured report and the no-toolchain skeleton must have byte-for-
+    // byte identical key trees — that is the whole schema-stability story.
+    let doc = tiny_report();
+    let sk = skeleton(6);
+    fn key_tree(j: &Json) -> Json {
+        match j {
+            Json::Obj(m) => Json::Obj(m.iter().map(|(k, v)| (k.clone(), key_tree(v))).collect()),
+            _ => Json::Null,
+        }
+    }
+    assert_eq!(key_tree(&doc), key_tree(&sk));
+    validate(&sk).expect("skeleton validates");
+}
+
+#[test]
+fn non_timing_fields_are_deterministic() {
+    let a = strip_timings(&tiny_report());
+    let b = strip_timings(&tiny_report());
+    assert_eq!(
+        a.pretty(),
+        b.pretty(),
+        "two runs of the seeded suite must agree on every non-timing field"
+    );
+}
+
+#[test]
+fn seeded_case_pool_is_shared_and_stable() {
+    // The harness and benches/bench_decompose.rs draw from this generator;
+    // pin its determinism so the two can never silently diverge.
+    for cfg in [GroupConfig::R2C2, GroupConfig::R1C4] {
+        assert_eq!(seeded_cases(&cfg, 128), seeded_cases(&cfg, 128));
+        // A prefix of a longer pool is the shorter pool (same stream).
+        let long = seeded_cases(&cfg, 128);
+        let short = seeded_cases(&cfg, 64);
+        assert_eq!(&long[..64], &short[..]);
+    }
+}
+
+#[test]
+fn committed_trajectory_files_validate() {
+    // Every BENCH_<n>.json at the repo root must parse and match the
+    // current schema (skeletons with null leaves included).
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&root).expect("repo root readable") {
+        let path = entry.expect("dir entry").path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("trajectory file readable");
+        let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        validate(&doc).unwrap_or_else(|e| panic!("{name}: schema mismatch: {e}"));
+        seen += 1;
+    }
+    assert!(seen >= 1, "expected at least BENCH_6.json at the repo root");
+}
