@@ -26,6 +26,7 @@ use super::pipeline::{Outcome, PipelineOptions};
 use crate::decompose::GroupTables;
 use crate::fault::{GroupFaults, PatternKey};
 use crate::grouping::{FaultAnalysis, GroupConfig};
+use crate::store::StoreHandle;
 use crate::util::fnv::FnvMap;
 use std::sync::OnceLock;
 
@@ -315,6 +316,11 @@ pub struct SolveCache {
     resident_bytes: usize,
     table_memory_bytes: usize,
     evictions: u64,
+    /// Optional fleet-global solution store (see [`crate::store`]): the
+    /// solve phase consults it for fresh full-range patterns before
+    /// fanning out local solves, and publishes what it solved. Shared
+    /// across chips; never serialized with the chip-scoped session.
+    store: Option<StoreHandle>,
 }
 
 impl SolveCache {
@@ -328,7 +334,20 @@ impl SolveCache {
             resident_bytes: 0,
             table_memory_bytes: DEFAULT_TABLE_MEMORY_BYTES,
             evictions: 0,
+            store: None,
         }
+    }
+
+    /// Attach a fleet-global solution store. The solve phase will consult
+    /// it for fresh `BatchTable` patterns (installing byte-identical hits
+    /// instead of solving) and publish freshly solved tables back.
+    pub fn set_store(&mut self, store: StoreHandle) {
+        self.store = Some(store);
+    }
+
+    /// The attached fleet-global solution store, if any.
+    pub fn store(&self) -> Option<&StoreHandle> {
+        self.store.as_ref()
     }
 
     /// Bind the cache to one set of pipeline options (first caller wins;
@@ -368,6 +387,11 @@ impl SolveCache {
     /// it is trimmed at the next batch boundary).
     pub fn begin_batch(&mut self) {
         self.epoch += 1;
+        // The fleet store rides the same batch cadence: its LRU epoch
+        // advances (and its budget is enforced) at batch boundaries too.
+        if let Some(store) = &self.store {
+            store.begin_epoch();
+        }
         if self.resident_bytes <= self.table_memory_bytes {
             return;
         }

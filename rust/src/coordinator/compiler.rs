@@ -147,6 +147,16 @@ pub struct CompileStats {
     /// — the number of solve *sweeps* on the `BatchTable` tier (the
     /// pair-cache baseline sweeps once per unique pair instead).
     pub pattern_tables_built: usize,
+    /// Fresh patterns answered by the fleet-global solution store
+    /// ([`crate::store`]) instead of a local solve — `BatchTable` tier
+    /// only; always 0 when no store is attached. A store hit installs a
+    /// byte-identical table, so it trades solve time for nothing else.
+    pub store_hits: usize,
+    /// Fresh patterns an attached store could not answer: solved locally,
+    /// then published back for the rest of the fleet. Always 0 when no
+    /// store is attached (`pattern_tables_built` keeps counting local
+    /// builds either way).
+    pub store_misses: usize,
     /// Pattern solutions evicted so far to honor the memory budget
     /// (chip-wide gauge).
     pub table_evictions: u64,
@@ -208,6 +218,8 @@ impl CompileStats {
         self.table_evictions = self.table_evictions.max(other.table_evictions);
         self.resident_table_bytes = self.resident_table_bytes.max(other.resident_table_bytes);
         self.pattern_tables_built += other.pattern_tables_built;
+        self.store_hits += other.store_hits;
+        self.store_misses += other.store_misses;
         self.unique_pairs += other.unique_pairs;
         self.dedup_hits += other.dedup_hits;
         self.ilp.nodes += other.ilp.nodes;
@@ -238,6 +250,15 @@ impl CompileStats {
             s.push_str(&format!(
                 "pattern_tables={} resident_table_bytes={} evictions={}\n",
                 self.pattern_tables_built, self.resident_table_bytes, self.table_evictions,
+            ));
+        }
+        if self.store_hits > 0 || self.store_misses > 0 {
+            s.push_str(&format!(
+                "store_hits={} store_misses={} ({:.1}% served by the fleet store)\n",
+                self.store_hits,
+                self.store_misses,
+                100.0 * self.store_hits as f64
+                    / (self.store_hits + self.store_misses).max(1) as f64,
             ));
         }
         for (name, c) in &self.stage_counts {
@@ -401,22 +422,53 @@ pub(super) fn solve_fresh(
     let mut solve_secs = vec![0f64; per_tensor.len()];
     match scan.tier {
         SolveTier::BatchTable => {
+            // Fleet-store consult before the fan-out: any fresh pattern
+            // the store already holds is installed verbatim (the store's
+            // determinism contract makes the table byte-identical to a
+            // local solve), and only the remainder is solved locally —
+            // then published back for the rest of the fleet. Store hits
+            // charge no solve time and build no local table; work order
+            // stays fixed by the scan either way.
+            let store = cache.store().cloned();
+            let sctx = crate::store::StoreCtx::new(opts.cfg, opts.pipeline);
+            let mut hits: Vec<(usize, Vec<Outcome>)> = Vec::new();
+            let mut misses: Vec<usize> = Vec::new();
+            if let Some(store) = &store {
+                for (i, &(pid, _)) in scan.fresh_patterns.iter().enumerate() {
+                    match store.lookup_table(&sctx, &cache.registry.ctx(pid).faults) {
+                        Some(t) => hits.push((i, t)),
+                        None => misses.push(i),
+                    }
+                }
+            } else {
+                misses.extend(0..scan.fresh_patterns.len());
+            }
+            for (i, outs) in hits {
+                let (pid, ti) = scan.fresh_patterns[i];
+                per_tensor[ti].store_hits += 1;
+                cache.install_table(pid, outs);
+            }
             let fresh_patterns = &scan.fresh_patterns;
             let registry = &cache.registry;
             let built: Vec<(Vec<Outcome>, StageClock, f64)> =
-                parallel_work_steal(fresh_patterns.len(), threads, 1, |i| {
-                    let (pid, _) = fresh_patterns[i];
+                parallel_work_steal(misses.len(), threads, 1, |j| {
+                    let (pid, _) = fresh_patterns[misses[j]];
                     let t = opts.time_stages.then(Timer::start);
                     let (outs, clock) =
                         solve_full_range(registry.ctx(pid), &opts.pipeline, opts.time_stages);
                     let secs = t.map(|t| t.secs()).unwrap_or(0.0);
                     (outs, clock, secs)
                 });
-            for (&(pid, ti), (outs, clock, secs)) in fresh_patterns.iter().zip(built) {
+            for (&j, (outs, clock, secs)) in misses.iter().zip(built) {
+                let (pid, ti) = fresh_patterns[j];
                 let st = &mut per_tensor[ti];
                 st.clock.merge(&clock);
                 st.pattern_tables_built += 1;
                 solve_secs[ti] += secs;
+                if let Some(store) = &store {
+                    st.store_misses += 1;
+                    store.publish_table(&sctx, &cache.registry.ctx(pid).faults, &outs);
+                }
                 cache.install_table(pid, outs);
             }
         }

@@ -34,6 +34,7 @@ use super::compiler::{CompileOptions, CompiledTensor};
 use super::session::CompileSession;
 use crate::fault::bank::ChipFaults;
 use crate::fault::FaultRates;
+use crate::store::StoreHandle;
 use crate::util::pool::parallel_work_steal;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -94,6 +95,13 @@ pub struct ServiceOptions {
     /// behavior of older services: [`TableBudget::PerSession`]).
     pub table_budget: TableBudget,
     pub cache_dir: Option<PathBuf>,
+    /// Directory for the fleet-global solution store's RCPS file tier
+    /// (see [`crate::store`]). `None` defaults to `<cache_dir>/store`
+    /// when a cache dir is configured; with neither, the store runs
+    /// memory-only. The store itself is always on — it is what lets a
+    /// second chip with overlapping fault patterns skip the solves the
+    /// first chip already paid for.
+    pub store_dir: Option<PathBuf>,
 }
 
 struct QueuedJob {
@@ -123,6 +131,7 @@ pub struct JobResult {
 ///     rates: FaultRates::paper_default(),
 ///     table_budget: TableBudget::Fleet(64 << 20),
 ///     cache_dir: None,
+///     store_dir: None,
 /// });
 /// let weights: Vec<i64> = (-10..=10).collect();
 /// let job_a = service.enqueue(1, "conv1", weights.clone()); // chip 1
@@ -146,10 +155,25 @@ pub struct CompileService {
     persist_errors: Vec<String>,
     fleet_cap: Option<usize>,
     applied_budgets: BTreeMap<u64, usize>,
+    /// The fleet-global solution store every session compiles through.
+    store: StoreHandle,
 }
 
 impl CompileService {
     pub fn new(sopts: ServiceOptions) -> CompileService {
+        // One store for the whole fleet: RCPS file tier under
+        // `store_dir` (else `<cache_dir>/store`), memory-only when the
+        // service has no disk at all. An uncreatable directory degrades
+        // to memory-only rather than failing the service — the store is
+        // an accelerator, never a correctness dependency.
+        let store_dir = sopts
+            .store_dir
+            .clone()
+            .or_else(|| sopts.cache_dir.as_ref().map(|d| d.join("store")));
+        let store = store_dir
+            .as_deref()
+            .and_then(|dir| StoreHandle::with_dir(dir).ok())
+            .unwrap_or_else(StoreHandle::in_memory);
         CompileService {
             sopts,
             sessions: BTreeMap::new(),
@@ -158,7 +182,16 @@ impl CompileService {
             persist_errors: Vec::new(),
             fleet_cap: None,
             applied_budgets: BTreeMap::new(),
+            store,
         }
+    }
+
+    /// The fleet-global solution store shared by every session this
+    /// service compiles through. Clone the handle to share the same
+    /// store with sessions managed outside the service (the network
+    /// fabric's shard workers do exactly that).
+    pub fn store(&self) -> &StoreHandle {
+        &self.store
     }
 
     /// The fleet-wide pattern-table cap the latest
@@ -249,18 +282,22 @@ impl CompileService {
     }
 
     /// A session for `chip_seed`: warm from the in-memory map, else warm
-    /// from the cache dir (if the stored key matches), else cold.
+    /// from the cache dir (if the stored key matches), else cold. Every
+    /// path leaves the session attached to the fleet store (RCSS bytes
+    /// never carry the store, so disk-loaded sessions re-attach here).
     fn obtain_session(&mut self, chip_seed: u64) -> CompileSession {
-        if let Some(s) = self.sessions.remove(&chip_seed) {
-            return s;
-        }
-        if let Some(s) = self.load_from_cache_dir(chip_seed) {
-            return s;
-        }
-        let chip = ChipFaults::new(chip_seed, self.sopts.rates);
-        CompileSession::builder(self.sopts.opts.cfg)
-            .options(self.sopts.opts.clone())
-            .chip(&chip)
+        let mut s = if let Some(s) = self.sessions.remove(&chip_seed) {
+            s
+        } else if let Some(s) = self.load_from_cache_dir(chip_seed) {
+            s
+        } else {
+            let chip = ChipFaults::new(chip_seed, self.sopts.rates);
+            CompileSession::builder(self.sopts.opts.cfg)
+                .options(self.sopts.opts.clone())
+                .chip(&chip)
+        };
+        s.set_store(self.store.clone());
+        s
     }
 
     /// Verbatim RCSS bytes of `chip_seed`'s cache-dir file, when one
@@ -441,7 +478,8 @@ impl CompileService {
     /// fleet-wide [`TableBudget`] the split is re-derived over the new
     /// live set immediately, so adopted sessions join the memory cap
     /// instead of keeping their build-time budget.
-    pub fn install_session(&mut self, chip_seed: u64, session: CompileSession) {
+    pub fn install_session(&mut self, chip_seed: u64, mut session: CompileSession) {
+        session.set_store(self.store.clone());
         if let Some(dir) = &self.sopts.cache_dir {
             if session.persistable() {
                 let path = Self::cache_path(dir, &self.sopts.opts, &self.sopts.rates, chip_seed);
@@ -485,6 +523,7 @@ mod tests {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::PerSession,
             cache_dir: None,
+            store_dir: None,
         });
         let w0 = random_weights(1_500, cfg.max_per_array(), 1);
         let w1 = random_weights(900, cfg.max_per_array(), 2);
@@ -537,6 +576,7 @@ mod tests {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::Fleet(total),
             cache_dir: None,
+            store_dir: None,
         });
         // Chip 1 compiles 8x the weights of chip 2, so it interns far
         // more fault-pattern classes.
@@ -595,6 +635,7 @@ mod tests {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::PerSession,
             cache_dir: Some(dir.clone()),
+            store_dir: None,
         });
         // Warm a session outside the service (as the fabric's shard-merge
         // path does) and hand it over.
@@ -616,6 +657,7 @@ mod tests {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::PerSession,
             cache_dir: Some(dir.clone()),
+            store_dir: None,
         });
         restarted.enqueue(11, "a", ws);
         let warm = restarted.run().unwrap();

@@ -84,6 +84,8 @@ use super::pipeline::{Method, PipelineOptions, SolveTier};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::GroupConfig;
+use crate::store::StoreHandle;
+use crate::util::fnv::FnvMap;
 use crate::util::prop::fnv1a;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
@@ -156,6 +158,7 @@ pub struct CompileSession {
 /// ```
 pub struct SessionBuilder {
     opts: CompileOptions,
+    store: Option<StoreHandle>,
 }
 
 impl SessionBuilder {
@@ -218,24 +221,36 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a fleet-global solution store (see [`crate::store`]): the
+    /// solve phase consults it for fresh full-range patterns before
+    /// solving locally, and publishes everything it solved. One
+    /// [`StoreHandle`] clone can be shared across any number of
+    /// sessions — that sharing is the whole point (solutions depend
+    /// only on pattern + config + pipeline, never on the chip).
+    /// Ignored by legacy (`dedupe = false`) sessions.
+    pub fn store(mut self, store: StoreHandle) -> SessionBuilder {
+        self.store = Some(store);
+        self
+    }
+
     /// Bind the session to a chip: tensors compiled by name/id sample
     /// their fault maps from this chip's fault universe.
     pub fn chip(self, chip: &ChipFaults) -> CompileSession {
-        CompileSession::from_opts(self.opts, Some(chip.clone()))
+        CompileSession::from_opts(self.opts, Some(chip.clone()), self.store)
     }
 
     /// A session without a chip binding — only
     /// [`CompileSession::compile_with_faults`] works; `save` is refused
     /// (there is no chip identity to key the cache by).
     pub fn detached(self) -> CompileSession {
-        CompileSession::from_opts(self.opts, None)
+        CompileSession::from_opts(self.opts, None, self.store)
     }
 }
 
 impl CompileSession {
     /// Start building a session for one grouping configuration.
     pub fn builder(cfg: GroupConfig) -> SessionBuilder {
-        SessionBuilder { opts: CompileOptions::new(cfg, Method::Complete) }
+        SessionBuilder { opts: CompileOptions::new(cfg, Method::Complete), store: None }
     }
 
     /// Session matching a warm-state cache key — the shared constructor
@@ -250,8 +265,18 @@ impl CompileSession {
         CompileSession::builder(key.cfg).options(opts).chip(&key.chip)
     }
 
-    fn from_opts(opts: CompileOptions, chip: Option<ChipFaults>) -> CompileSession {
-        let cache = opts.dedupe.then(|| SolveCache::new(opts.cfg));
+    fn from_opts(
+        opts: CompileOptions,
+        chip: Option<ChipFaults>,
+        store: Option<StoreHandle>,
+    ) -> CompileSession {
+        let cache = opts.dedupe.then(|| {
+            let mut cache = SolveCache::new(opts.cfg);
+            if let Some(store) = store {
+                cache.set_store(store);
+            }
+            cache
+        });
         CompileSession {
             opts,
             chip,
@@ -312,6 +337,23 @@ impl CompileSession {
     /// compilation batch; eviction never changes outputs).
     pub fn set_table_memory_bytes(&mut self, bytes: usize) {
         self.opts.table_memory_bytes = bytes.max(1);
+    }
+
+    /// Attach (or replace) the fleet-global solution store on a live
+    /// session — e.g. one rehydrated via [`CompileSession::load`] or
+    /// [`CompileSession::from_bytes`], which always start store-less
+    /// (the store is fleet state, never part of the chip-scoped RCSS
+    /// bytes). No-op on legacy (`dedupe = false`) sessions, which have
+    /// no cache for the store to serve.
+    pub fn set_store(&mut self, store: StoreHandle) {
+        if let Some(cache) = self.cache.as_mut() {
+            cache.set_store(store);
+        }
+    }
+
+    /// The attached fleet store, if any.
+    pub fn store(&self) -> Option<&StoreHandle> {
+        self.cache.as_ref().and_then(|c| c.store())
     }
 
     /// Whether this session's cache key matches (chip seed + rates,
@@ -416,6 +458,29 @@ impl CompileSession {
     /// Tensors queued and not yet drained.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Distinct fault patterns the queued tensors will intern, in scan
+    /// order (first occurrence wins), without touching any session
+    /// state. This is the fabric worker's pre-solve peek: before
+    /// running [`CompileSession::solve_shard`] it asks the
+    /// coordinator's fleet store for exactly these patterns, so
+    /// already-solved classes never fan out locally.
+    ///
+    /// Panics on a detached session (no chip to sample faults from).
+    pub fn queued_patterns(&self) -> Vec<GroupFaults> {
+        let cells = self.opts.cfg.cells();
+        let chip = self.chip.as_ref().expect("detached session has no chip to sample faults");
+        let mut seen: FnvMap<u64, ()> = FnvMap::default();
+        let mut out = Vec::new();
+        for q in &self.queue {
+            for f in chip.sample_tensor(q.tensor_id, q.weights.len(), cells) {
+                if seen.insert(f.pattern_key(), ()).is_none() {
+                    out.push(f);
+                }
+            }
+        }
+        out
     }
 
     /// Compile every queued tensor in submit order as **one batch**: one

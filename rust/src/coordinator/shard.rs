@@ -183,6 +183,13 @@ impl ShardFragment {
         self.parts.iter().filter(|(_, s)| s.is_some()).count()
     }
 
+    /// In-range (pattern, solution) parts in pattern-id order. The
+    /// fabric worker walks these to publish freshly solved full-range
+    /// tables to the fleet store (see [`crate::store`]).
+    pub fn parts(&self) -> impl Iterator<Item = (&GroupFaults, Option<&PatternSolution>)> {
+        self.parts.iter().map(|(p, s)| (p, s.as_ref()))
+    }
+
     /// Serialize to the RCSF v1 format: the RCSS cache-key header, the
     /// shard framing (`shard · shards · n_patterns · start · len`), the
     /// per-pattern solutions in id order (same byte layout as RCSS v2,

@@ -31,6 +31,7 @@ use crate::fault::bank::ChipFaults;
 use crate::fault::{FaultRates, GroupFaults};
 use crate::grouping::GroupConfig;
 use crate::net::{run_worker, CompileClient, FabricServer, ServeOptions};
+use crate::store::StoreHandle;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::timer::{bench, black_box, Timer};
@@ -184,6 +185,15 @@ struct CompileMeasurement {
     cold_secs: f64,
     warm_secs: f64,
     warm_fresh_pairs: usize,
+    /// Fleet-store lookups during the cold compile (store starts empty,
+    /// so the hit rate is 0 by construction — the no-spurious-hit check).
+    store_cold_hits: u64,
+    store_cold_misses: u64,
+    /// Fleet-store lookups when a *second chip* compiles the same model
+    /// against the store the first chip populated — the cross-chip reuse
+    /// the store exists for.
+    store_warm_hits: u64,
+    store_warm_misses: u64,
 }
 
 fn compile_fields(m: Option<&CompileMeasurement>) -> Vec<(&'static str, Json)> {
@@ -201,7 +211,22 @@ fn compile_fields(m: Option<&CompileMeasurement>) -> Vec<(&'static str, Json)> {
         ("warm_secs", f(m.map(|m| m.warm_secs))),
         ("warm_weights_per_sec", f(m.map(|m| per_sec(m.weights, m.warm_secs)))),
         ("warm_fresh_pairs", f(m.map(|m| m.warm_fresh_pairs as f64))),
+        ("store_cold_hit_rate", f(m.and_then(|m| hit_rate(m.store_cold_hits, m.store_cold_misses)))),
+        ("store_warm_hit_rate", f(m.and_then(|m| hit_rate(m.store_warm_hits, m.store_warm_misses)))),
     ]
+}
+
+/// Store hit rate over `hits + misses` lookups; `None` (→ a `null` leaf)
+/// when the workload never consulted the store (per-weight tiers).
+/// Deterministic: the lookup set is the seeded fresh-pattern set, which
+/// does not depend on thread count or timing.
+fn hit_rate(hits: u64, misses: u64) -> Option<f64> {
+    let n = hits + misses;
+    if n == 0 {
+        None
+    } else {
+        Some(hits as f64 / n as f64)
+    }
 }
 
 struct DiffTableMeasurement {
@@ -276,13 +301,19 @@ fn cfg_key(prefix: &str, cfg: &GroupConfig) -> String {
 // ---------------------------------------------------------------------
 
 /// Cold compile of the seeded model through a fresh session, then a warm
-/// recompile of the same tensors through the now-warm session.
+/// recompile of the same tensors through the now-warm session. The
+/// session carries an in-memory fleet store (mirroring the batch
+/// service, which always attaches one); after the timed runs a *second
+/// chip* compiles the same model against that store to measure the
+/// cross-chip hit rate.
 fn run_compile(cfg: GroupConfig, o: &BenchOptions) -> Result<CompileMeasurement> {
     let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.compile_limit)?;
     let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
+    let store = StoreHandle::in_memory();
     let mut session = CompileSession::builder(cfg)
         .method(Method::Complete)
         .threads(o.threads)
+        .store(store.clone())
         .chip(&chip);
 
     let t = Timer::start();
@@ -298,6 +329,15 @@ fn run_compile(cfg: GroupConfig, o: &BenchOptions) -> Result<CompileMeasurement>
     let warm_secs = t.secs();
     let warm_fresh_pairs: usize = warm.iter().map(|(_, c, _)| c.stats.unique_pairs).sum();
 
+    let after_cold = store.counters();
+    let mut cross = CompileSession::builder(cfg)
+        .method(Method::Complete)
+        .threads(o.threads)
+        .store(store.clone())
+        .chip(&ChipFaults::new(BENCH_CHIP_SEED + 1, FaultRates::paper_default()));
+    cross.compile_model(&tensors);
+    let after_cross = store.counters();
+
     Ok(CompileMeasurement {
         weights,
         tensors: tensors.len(),
@@ -307,6 +347,10 @@ fn run_compile(cfg: GroupConfig, o: &BenchOptions) -> Result<CompileMeasurement>
         cold_secs,
         warm_secs,
         warm_fresh_pairs,
+        store_cold_hits: after_cold.hits,
+        store_cold_misses: after_cold.misses,
+        store_warm_hits: after_cross.hits - after_cold.hits,
+        store_warm_misses: after_cross.misses - after_cold.misses,
     })
 }
 
@@ -382,6 +426,7 @@ fn run_fabric(o: &BenchOptions) -> Result<FabricMeasurement> {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::PerSession,
             cache_dir: None,
+            store_dir: None,
         },
         shard_min_weights: 1, // always fan out, so the trip is end-to-end
         max_shards: 8,
@@ -597,7 +642,15 @@ mod tests {
         for t in ["cold_secs", "merge_secs", "weights_per_sec", "builds_per_sec", "speedup"] {
             assert!(is_timing_field(t), "{t} must be a timing field");
         }
-        for d in ["weights", "dedup_ratio", "unique_patterns", "shards", "fresh_solves"] {
+        for d in [
+            "weights",
+            "dedup_ratio",
+            "unique_patterns",
+            "shards",
+            "fresh_solves",
+            "store_cold_hit_rate",
+            "store_warm_hit_rate",
+        ] {
             assert!(!is_timing_field(d), "{d} must be deterministic");
         }
     }

@@ -24,6 +24,7 @@ use crate::coordinator::{CompileOptions, CompileSession, Method, PatternId, Patt
 use crate::fault::bank::ChipFaults;
 use crate::fault::{FaultRates, GroupFaults};
 use crate::grouping::GroupConfig;
+use crate::store::StoreHandle;
 use crate::util::fnv::FnvMap;
 use crate::util::prng::Rng;
 use crate::util::timer::{fmt_dur, Timer};
@@ -172,6 +173,12 @@ pub struct CompileTimeRow {
     pub resident_table_bytes: usize,
     /// Pattern solutions evicted to honor the session memory budget.
     pub table_evictions: u64,
+    /// Pattern tables answered by the fleet solution store instead of a
+    /// fresh batch solve (0 when no store is attached).
+    pub store_hits: usize,
+    /// Pattern tables solved fresh while a store was attached (and
+    /// published back to it).
+    pub store_misses: usize,
 }
 
 impl CompileTimeRow {
@@ -190,6 +197,23 @@ pub fn measure(
     threads: usize,
     chip_seed: u64,
 ) -> Result<CompileTimeRow> {
+    measure_with_store(model, cfg, method, sample, threads, chip_seed, None)
+}
+
+/// [`measure`] with an optional fleet solution store attached to the
+/// session (`rchg compile --store-dir`, and the bench harness's store
+/// workload). The store changes *where* tables come from, never their
+/// bytes, so timing rows stay comparable; the row's `store_hits` /
+/// `store_misses` report what it contributed.
+pub fn measure_with_store(
+    model: &str,
+    cfg: GroupConfig,
+    method: Method,
+    sample: usize,
+    threads: usize,
+    chip_seed: u64,
+    store: Option<StoreHandle>,
+) -> Result<CompileTimeRow> {
     let layers = by_name(model).ok_or_else(|| anyhow!("unknown model {model}"))?;
     let total_weights = total_params(&layers);
     let ws = synthetic_model_weights(model, &cfg, sample)?;
@@ -206,7 +230,11 @@ pub fn measure(
     if std::env::var("RCHG_TIME_STAGES").as_deref() == Ok("0") {
         opts.time_stages = false;
     }
-    let mut session = CompileSession::builder(cfg).options(opts.clone()).chip(&chip);
+    let mut builder = CompileSession::builder(cfg).options(opts.clone());
+    if let Some(store) = store {
+        builder = builder.store(store);
+    }
+    let mut session = builder.chip(&chip);
     let faults = session.sample_faults(0, ws.len());
     let timer = Timer::start();
     let out = session.compile_with_faults(&ws, &faults);
@@ -261,6 +289,8 @@ pub fn measure(
         pattern_tables: out.stats.pattern_tables_built,
         resident_table_bytes: out.stats.resident_table_bytes,
         table_evictions: out.stats.table_evictions,
+        store_hits: out.stats.store_hits,
+        store_misses: out.stats.store_misses,
     })
 }
 

@@ -129,5 +129,6 @@ pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod store;
 pub mod tensor;
 pub mod util;

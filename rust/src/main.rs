@@ -27,7 +27,8 @@ use rchg::energy::EnergyParams;
 use rchg::experiments::accuracy::{fig8, fig9, table1, AccuracyOptions};
 use rchg::experiments::bench::{self, BenchOptions};
 use rchg::experiments::compile_time::{
-    dedup_report, fig10a, fig10b, measure, synthetic_model_tensors, table2, CompileTimeOptions,
+    dedup_report, fig10a, fig10b, measure_with_store, synthetic_model_tensors, table2,
+    CompileTimeOptions,
 };
 use rchg::experiments::hw::{fig6, fig11};
 use rchg::experiments::lm::{table3, LmOptions};
@@ -36,6 +37,7 @@ use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
 use rchg::net::{run_worker, CompileClient, FabricServer, ServeOptions as FabricServeOptions};
 use rchg::runtime::{artifacts_dir, Runtime};
+use rchg::store::StoreHandle;
 use rchg::util::cli::Cli;
 use rchg::util::timer::{fmt_dur, Timer};
 use std::collections::BTreeMap;
@@ -196,7 +198,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("threads", "solver threads for the compile/shard workloads", Some("1"))
                 .opt("no-fabric", "skip the localhost fabric round-trip workload", None)
                 .opt("out", "also write the JSON report to this path", None)
-                .opt("pr", "PR number stamped into the report", Some("6"))
+                .opt("pr", "PR number stamped into the report", Some("7"))
                 .opt("check", "validate an existing report file against the schema, then exit", None);
             let args = cli.parse(rest);
             if let Some(path) = args.get("check") {
@@ -214,7 +216,7 @@ fn main() -> anyhow::Result<()> {
             if args.get_bool("no-fabric") {
                 o.fabric = false;
             }
-            let doc = bench::run(&o, quick, args.get_usize("pr", 6))?;
+            let doc = bench::run(&o, quick, args.get_usize("pr", 7))?;
             if let Some(path) = args.get("out") {
                 std::fs::write(path, doc.pretty() + "\n")?;
                 eprintln!("bench report written to {path}");
@@ -232,19 +234,29 @@ fn main() -> anyhow::Result<()> {
                 .opt("method", "complete|ilp|ff|unprotected", Some("complete"))
                 .opt("chip", "chip seed", Some("1"))
                 .opt("threads", "worker threads (0 = auto-detect)", Some("0"))
-                .opt("limit", "max weights", None);
+                .opt("limit", "max weights", None)
+                .opt(
+                    "store-dir",
+                    "fleet solution store directory (reuse pattern tables across chips/runs)",
+                    None,
+                );
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
                 .ok_or_else(|| anyhow::anyhow!("bad config"))?;
             let method = Method::parse(args.get_str("method", "complete"))
                 .ok_or_else(|| anyhow::anyhow!("bad method"))?;
-            let r = measure(
+            let store = match args.get("store-dir") {
+                Some(dir) => Some(StoreHandle::with_dir(std::path::Path::new(&dir))?),
+                None => None,
+            };
+            let r = measure_with_store(
                 args.get_str("model", "resnet20"),
                 cfg,
                 method,
                 args.get_usize("limit", usize::MAX),
                 args.get_threads("threads"),
                 args.get_u64("chip", 1),
+                store,
             )?;
             println!(
                 "compiled {} weights of {} ({}) in {} — full model {} weights ≈ {} linear, \
@@ -275,6 +287,13 @@ fn main() -> anyhow::Result<()> {
                     r.table_evictions
                 );
             }
+            if r.store_hits + r.store_misses > 0 {
+                println!(
+                    "solution store: {} table(s) served from the store, {} solved fresh \
+                     and published",
+                    r.store_hits, r.store_misses
+                );
+            }
         }
         "serve-batch" => {
             let cli = Cli::new("batched compile service: many chips, one warm session each")
@@ -285,6 +304,11 @@ fn main() -> anyhow::Result<()> {
                 .opt("limit", "max weights per chip", Some("60000"))
                 .opt("threads", "total worker threads (0 = auto-detect)", Some("0"))
                 .opt("cache-dir", "persist per-chip session caches (cross-run warm-start)", None)
+                .opt(
+                    "store-dir",
+                    "fleet solution store directory (default <cache-dir>/store when caching)",
+                    None,
+                )
                 .opt(
                     "table-budget",
                     "pattern-table memory: per-session | auto | fleet bytes (suffix k/m/g ok)",
@@ -314,6 +338,7 @@ fn main() -> anyhow::Result<()> {
                 rates: FaultRates::paper_default(),
                 table_budget,
                 cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+                store_dir: args.get("store-dir").map(std::path::PathBuf::from),
             });
             for round in 1..=args.get_usize("rounds", 2).max(1) {
                 for &seed in &seeds {
@@ -354,6 +379,14 @@ fn main() -> anyhow::Result<()> {
                     ]);
                 }
                 println!("{}", t.render());
+                let store_hits: usize = per_chip.values().map(|s| s.store_hits).sum();
+                let store_misses: usize = per_chip.values().map(|s| s.store_misses).sum();
+                if store_hits + store_misses > 0 {
+                    println!(
+                        "solution store: {store_hits} pattern table(s) served from the \
+                         fleet store, {store_misses} solved fresh and published"
+                    );
+                }
                 let persist_failures = service.persist_errors().len();
                 if persist_failures > 0 {
                     println!(
@@ -389,6 +422,11 @@ fn main() -> anyhow::Result<()> {
                 .opt("threads", "local worker threads (0 = auto-detect)", Some("0"))
                 .opt("cache-dir", "persist per-chip session caches (cross-run warm-start)", None)
                 .opt(
+                    "store-dir",
+                    "fleet solution store directory (default <cache-dir>/store when caching)",
+                    None,
+                )
+                .opt(
                     "table-budget",
                     "pattern-table memory: per-session | auto | fleet bytes (suffix k/m/g ok)",
                     Some("per-session"),
@@ -417,6 +455,7 @@ fn main() -> anyhow::Result<()> {
                     rates: FaultRates::paper_default(),
                     table_budget: parse_table_budget(args.get_str("table-budget", "per-session"))?,
                     cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+                    store_dir: args.get("store-dir").map(std::path::PathBuf::from),
                 },
                 shard_min_weights: args.get_usize("shard-min-weights", 50_000),
                 max_shards: args.get_usize("max-shards", 8).max(1),
@@ -453,8 +492,9 @@ fn main() -> anyhow::Result<()> {
             println!("rchg worker: connecting to coordinator {addr}");
             let report = run_worker(addr, args.get_threads("threads"))?;
             println!(
-                "worker done: {} shard job(s) solved ({} pattern classes); coordinator hung up",
-                report.jobs, report.patterns_solved,
+                "worker done: {} shard job(s) solved ({} pattern classes, {} store hit(s), \
+                 {} table(s) published); coordinator hung up",
+                report.jobs, report.patterns_solved, report.store_hits, report.store_published,
             );
         }
         "submit" => {

@@ -21,19 +21,30 @@
 //! Conversation shapes (see [`super::server`] for the roles):
 //!
 //! ```text
-//! worker:  Hello → HelloAck, then (ShardJob → ShardResult | Error)*
+//! worker:  Hello → HelloAck, then per assignment:
+//!          ShardJob → (StoreGet → StorePut)? → StorePut* → ShardResult | Error
 //! client:  CompileRequest → CompileResult* → CompileDone
 //!          FetchSession   → SessionBytes | Error
 //!          Info           → InfoReply
 //!          Shutdown       → (server stops)
 //! ```
+//!
+//! The `StoreGet`/`StorePut` pair is the fleet solution store's fabric
+//! tier (see [`crate::store`]): before solving a shard range a worker
+//! asks the coordinator for any already-solved patterns (`StoreGet`,
+//! answered by one `StorePut`), and after solving it publishes what it
+//! solved fresh (`StorePut`, no reply) so the next worker — or the next
+//! chip — starts from the fleet's accumulated work.
 
 use crate::coordinator::persist::{
-    push_i64, push_u32, push_u64, read_key, write_key, CacheKey, Reader,
+    push_i64, push_u32, push_u64, read_key, read_pattern_solution, write_key,
+    write_pattern_solution, CacheKey, Reader,
 };
-use crate::coordinator::{Method, PipelineOptions};
+use crate::coordinator::{Method, Outcome, PatternSolution, PipelineOptions};
 use crate::fault::bank::ChipFaults;
+use crate::fault::GroupFaults;
 use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::store::{read_store_ctx, StoreCtx};
 use crate::util::prop::{fnv1a, fnv1a_with};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
@@ -79,6 +90,13 @@ pub enum FrameType {
     Shutdown,
     /// Either direction: human-readable failure for the previous request.
     Error,
+    /// Worker → coordinator: which of these fault patterns does the
+    /// fleet store already hold? (payload: store context + patterns).
+    StoreGet,
+    /// Either direction: a batch of (pattern, full-range table) store
+    /// entries — the coordinator's reply to a `StoreGet`, and a
+    /// worker's unsolicited publish of freshly solved patterns.
+    StorePut,
 }
 
 impl FrameType {
@@ -98,6 +116,8 @@ impl FrameType {
             FrameType::InfoReply => 11,
             FrameType::Shutdown => 12,
             FrameType::Error => 13,
+            FrameType::StoreGet => 14,
+            FrameType::StorePut => 15,
         }
     }
 
@@ -116,6 +136,8 @@ impl FrameType {
             11 => FrameType::InfoReply,
             12 => FrameType::Shutdown,
             13 => FrameType::Error,
+            14 => FrameType::StoreGet,
+            15 => FrameType::StorePut,
             _ => return None,
         })
     }
@@ -521,6 +543,109 @@ pub fn decode_info(payload: &[u8]) -> Result<FabricInfo> {
     Ok(i)
 }
 
+/// A decoded [`FrameType::StoreGet`]: which of these fault patterns does
+/// the fleet store hold, under one store context?
+#[derive(Clone, Debug)]
+pub struct StoreQuery {
+    pub ctx: StoreCtx,
+    pub patterns: Vec<GroupFaults>,
+}
+
+/// A decoded [`FrameType::StorePut`]: (pattern, full-range table) store
+/// entries under one store context. Only dense tables travel — the
+/// store's scope ends where request-dependent partial state begins.
+#[derive(Clone, Debug)]
+pub struct StoreBatch {
+    pub ctx: StoreCtx,
+    pub entries: Vec<(GroupFaults, Vec<Outcome>)>,
+}
+
+/// StoreGet payload: the canonical store-context bytes (the content
+/// hash's own preimage layout), then the queried patterns as raw
+/// pos/neg fault-state bytes.
+pub fn encode_store_get(ctx: &StoreCtx, patterns: &[GroupFaults]) -> Vec<u8> {
+    let cells = ctx.cells();
+    let mut buf = Vec::with_capacity(32 + patterns.len() * 2 * cells);
+    ctx.push_bytes(&mut buf);
+    push_u32(&mut buf, patterns.len() as u32);
+    for p in patterns {
+        debug_assert_eq!((p.pos.len(), p.neg.len()), (cells, cells));
+        buf.extend(p.pos.iter().map(|&f| f as u8));
+        buf.extend(p.neg.iter().map(|&f| f as u8));
+    }
+    buf
+}
+
+pub fn decode_store_get(payload: &[u8]) -> Result<StoreQuery> {
+    let mut r = Reader::new(payload);
+    let ctx = read_store_ctx(&mut r).context("store query context")?;
+    let cells = ctx.cells();
+    let n = r.u32()? as usize;
+    if n > 65_536 {
+        bail!("unreasonable store query count {n} in RCWP payload");
+    }
+    if r.remaining() != n * 2 * cells {
+        bail!("store query payload length mismatch ({n} patterns declared)");
+    }
+    let mut patterns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = r.fault_states(cells)?;
+        let neg = r.fault_states(cells)?;
+        patterns.push(GroupFaults { pos, neg });
+    }
+    Ok(StoreQuery { ctx, patterns })
+}
+
+/// StorePut payload: the canonical store-context bytes, then each entry
+/// in the RCSS per-pattern solution framing (fault bytes · table tag ·
+/// dense outcome table) — the same codec RCPS blobs and session files
+/// use, so worker and coordinator agree on solution bytes by
+/// construction.
+pub fn encode_store_put(ctx: &StoreCtx, entries: &[(GroupFaults, Vec<Outcome>)]) -> Vec<u8> {
+    let cells = ctx.cells();
+    let mut buf =
+        Vec::with_capacity(32 + entries.len() * (2 * cells + 5 + ctx.table_len() * (9 + 2 * cells)));
+    ctx.push_bytes(&mut buf);
+    push_u32(&mut buf, entries.len() as u32);
+    for (pattern, table) in entries {
+        debug_assert_eq!(table.len(), ctx.table_len());
+        write_pattern_solution(&mut buf, pattern, Some(&PatternSolution::Table(table.clone())));
+    }
+    buf
+}
+
+pub fn decode_store_put(payload: &[u8]) -> Result<StoreBatch> {
+    let mut r = Reader::new(payload);
+    let ctx = read_store_ctx(&mut r).context("store batch context")?;
+    let key = ctx.cache_key();
+    let cells = ctx.cells();
+    let table_len = ctx.table_len();
+    let n = r.u32()? as usize;
+    if n > 65_536 {
+        bail!("unreasonable store entry count {n} in RCWP payload");
+    }
+    // Sanity cap before allocating: every entry costs at least its fault
+    // bytes plus a tag.
+    if r.remaining() < n * (2 * cells + 1) {
+        bail!("store batch truncated ({n} entries declared)");
+    }
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (pattern, solution) = read_pattern_solution(&mut r, &key, false)?;
+        match solution.expect("store entries are never empty") {
+            PatternSolution::Table(t) if t.len() == table_len => entries.push((pattern, t)),
+            PatternSolution::Table(t) => {
+                bail!("store entry table has {} outcomes (config wants {table_len})", t.len())
+            }
+            PatternSolution::Pairs(_) => bail!("store frames carry full-range tables only"),
+        }
+    }
+    if r.remaining() != 0 {
+        bail!("store batch has {} trailing bytes", r.remaining());
+    }
+    Ok(StoreBatch { ctx, entries })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -529,7 +654,7 @@ mod tests {
 
     #[test]
     fn frame_roundtrip_every_type() {
-        for t in (1..=13).filter_map(FrameType::from_code) {
+        for t in (1..=15).filter_map(FrameType::from_code) {
             let payload = vec![0xAB; 37];
             let bytes = frame_bytes(t, &payload);
             let frame = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
@@ -701,6 +826,45 @@ mod tests {
         assert_eq!(decode_info(&encode_info(&i)).unwrap(), i);
         assert!(decode_summary(&[1, 2, 3]).is_err());
         assert!(decode_info(&[]).is_err());
+    }
+
+    #[test]
+    fn store_get_and_put_roundtrip_and_rejection() {
+        use crate::coordinator::Stage;
+        use crate::fault::FaultState;
+        let cfg = GroupConfig::R2C2;
+        let ctx = StoreCtx::new(cfg, PipelineOptions::default());
+        let mut faulty = GroupFaults::free(cfg.cells());
+        faulty.neg[1] = FaultState::Sa0;
+        let patterns = vec![GroupFaults::free(cfg.cells()), faulty.clone()];
+
+        let get = encode_store_get(&ctx, &patterns);
+        let q = decode_store_get(&get).unwrap();
+        assert_eq!(q.ctx, ctx);
+        assert_eq!(q.patterns, patterns);
+        for cut in 0..get.len() {
+            assert!(decode_store_get(&get[..cut]).is_err(), "cut at {cut}");
+        }
+
+        let maxv = cfg.max_per_array();
+        let table: Vec<Outcome> = (-maxv..=maxv)
+            .map(|w| Outcome {
+                decomposition: Decomposition::encode_ideal(w, &cfg),
+                error: 0,
+                stage: Stage::FastPath,
+            })
+            .collect();
+        let entries = vec![(faulty, table)];
+        let put = encode_store_put(&ctx, &entries);
+        let b = decode_store_put(&put).unwrap();
+        assert_eq!(b.ctx, ctx);
+        assert_eq!(b.entries, entries);
+        for cut in 0..put.len() {
+            assert!(decode_store_put(&put[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = put.clone();
+        long.push(0);
+        assert!(decode_store_put(&long).is_err());
     }
 
     #[test]

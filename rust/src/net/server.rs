@@ -28,15 +28,17 @@
 //! behavior, never to failure.
 
 use super::protocol::{
-    decode_chip_seed, decode_compile_request, decode_error, decode_hello, encode_info,
-    encode_shard_job, encode_summary, encode_tensor_result, read_frame, write_frame,
-    CompileRequest, FabricInfo, FabricSummary, Frame, FrameType, TensorResult,
+    decode_chip_seed, decode_compile_request, decode_error, decode_hello, decode_store_get,
+    decode_store_put, encode_info, encode_shard_job, encode_store_put, encode_summary,
+    encode_tensor_result, read_frame, write_frame, CompileRequest, FabricInfo, FabricSummary,
+    Frame, FrameType, TensorResult,
 };
 use crate::coordinator::persist::CacheKey;
 use crate::coordinator::{
     CompileOptions, CompileService, CompileSession, ServiceOptions, ShardFragment, ShardPlan,
 };
 use crate::fault::bank::ChipFaults;
+use crate::store::StoreHandle;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -83,6 +85,10 @@ struct FabricState {
     sopts: ServeOptions,
     listen_addr: SocketAddr,
     service: Mutex<CompileService>,
+    /// The service's fleet-global solution store (see [`crate::store`]),
+    /// cloned out so worker `StoreGet`/`StorePut` frames are answered
+    /// without taking the service lock.
+    store: StoreHandle,
     /// Idle registered workers. A distributed job *claims* workers out of
     /// the pool and returns the survivors when done.
     workers: Mutex<Vec<WorkerConn>>,
@@ -111,6 +117,8 @@ struct ShardRound<'a> {
     key: CacheKey,
     req: &'a CompileRequest,
     sopts: &'a ServeOptions,
+    /// Fleet store serving worker `StoreGet`/`StorePut` frames.
+    store: &'a StoreHandle,
     /// Shard indices not yet solved (a lost worker's range is pushed
     /// back here — that is the reassignment mechanism).
     pending: Mutex<Vec<usize>>,
@@ -133,10 +141,12 @@ impl FabricServer {
             TcpListener::bind(addr).with_context(|| format!("bind fabric listener {addr}"))?;
         let listen_addr = listener.local_addr().context("fabric listener address")?;
         let service = CompileService::new(sopts.service.clone());
+        let store = service.store().clone();
         let state = Arc::new(FabricState {
             sopts,
             listen_addr,
             service: Mutex::new(service),
+            store,
             workers: Mutex::new(Vec::new()),
             stats: Mutex::new(FabricStats::default()),
             next_worker: AtomicU64::new(0),
@@ -379,8 +389,11 @@ fn local_compile(
     Ok((results, summary))
 }
 
-fn session_for(chip: &ChipFaults, opts: &CompileOptions) -> CompileSession {
-    CompileSession::builder(opts.cfg).options(opts.clone()).chip(chip)
+fn session_for(chip: &ChipFaults, opts: &CompileOptions, store: &StoreHandle) -> CompileSession {
+    CompileSession::builder(opts.cfg)
+        .options(opts.clone())
+        .store(store.clone())
+        .chip(chip)
 }
 
 /// Fan one job's solve phase across the worker pool: claim every idle
@@ -414,6 +427,7 @@ fn distributed_compile(
         key: CacheKey::new(&chip, req.cfg, pipeline),
         req,
         sopts,
+        store: &state.store,
         pending: Mutex::new((0..shards).rev().collect()),
         frags: (0..shards).map(|_| Mutex::new(None)).collect(),
         reassigned: AtomicU32::new(0),
@@ -441,7 +455,7 @@ fn distributed_compile(
             continue;
         }
         eprintln!("fabric: solving shard {}/{shards} locally (no live worker)", k + 1);
-        let mut session = session_for(&chip, &sopts.service.opts);
+        let mut session = session_for(&chip, &sopts.service.opts, &state.store);
         for (name, ws) in &req.tensors {
             session.submit(name, ws.clone());
         }
@@ -463,7 +477,7 @@ fn distributed_compile(
     // Merge into a session configured exactly like the service's own
     // (execution knobs included), compile the job from the warm cache,
     // and hand the session to the service for future (local) jobs.
-    let mut session = session_for(&chip, &sopts.service.opts);
+    let mut session = session_for(&chip, &sopts.service.opts, &state.store);
     // Under a fleet-wide table budget the merged session joins the cap
     // right away with a conservative even share over the live set
     // (eviction only ever costs re-solves, never output bytes);
@@ -543,9 +557,14 @@ fn drive_worker(mut w: WorkerConn, round: &ShardRound<'_>) -> Option<WorkerConn>
 }
 
 /// Send one shard job and await its fragment, bounded by the worker
-/// timeout. Any failure — transport error, timeout, worker-reported
-/// error, or a fragment that does not match the assignment — makes the
-/// caller requeue the range and drop the worker.
+/// timeout. Between the job and its result the worker may interleave
+/// fleet-store traffic: one `StoreGet` (answered with a `StorePut` of
+/// every pattern the store holds) and any number of `StorePut`
+/// publishes of its freshly solved patterns — the trust model is the
+/// same as for the fragment itself (workers only publish what they
+/// locally solved). Any failure — transport error, timeout,
+/// worker-reported error, or a fragment that does not match the
+/// assignment — makes the caller requeue the range and drop the worker.
 fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Result<ShardFragment> {
     let timeout = Some(round.sopts.worker_timeout);
     w.stream.set_read_timeout(timeout).context("set worker read timeout")?;
@@ -559,28 +578,50 @@ fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Res
         &round.req.tensors,
     );
     write_frame(&mut w.stream, FrameType::ShardJob, &payload)?;
-    let frame = read_frame(&mut w.stream)?
-        .ok_or_else(|| anyhow!("worker disconnected before returning the shard"))?;
-    match frame.frame_type {
-        FrameType::ShardResult => {
-            let frag = ShardFragment::from_bytes(&frame.payload)
-                .context("parse worker shard fragment")?;
-            if frag.shard() != shard || frag.shards() != round.shards {
-                bail!(
-                    "worker returned shard {}/{} for assignment {}/{}",
-                    frag.shard() + 1,
-                    frag.shards(),
-                    shard + 1,
-                    round.shards
-                );
+    loop {
+        let frame = read_frame(&mut w.stream)?
+            .ok_or_else(|| anyhow!("worker disconnected before returning the shard"))?;
+        match frame.frame_type {
+            FrameType::StoreGet => {
+                let q = decode_store_get(&frame.payload).context("parse worker store query")?;
+                let mut entries = Vec::new();
+                for p in q.patterns {
+                    if let Some(t) = round.store.lookup_table(&q.ctx, &p) {
+                        entries.push((p, t));
+                    }
+                }
+                write_frame(
+                    &mut w.stream,
+                    FrameType::StorePut,
+                    &encode_store_put(&q.ctx, &entries),
+                )?;
             }
-            if let Some(why) = round.key.mismatch(frag.cache_key()) {
-                bail!("worker fragment does not belong to this job: {why}");
+            FrameType::StorePut => {
+                let b = decode_store_put(&frame.payload).context("parse worker store publish")?;
+                for (p, t) in &b.entries {
+                    round.store.publish_table(&b.ctx, p, t);
+                }
             }
-            Ok(frag)
+            FrameType::ShardResult => {
+                let frag = ShardFragment::from_bytes(&frame.payload)
+                    .context("parse worker shard fragment")?;
+                if frag.shard() != shard || frag.shards() != round.shards {
+                    bail!(
+                        "worker returned shard {}/{} for assignment {}/{}",
+                        frag.shard() + 1,
+                        frag.shards(),
+                        shard + 1,
+                        round.shards
+                    );
+                }
+                if let Some(why) = round.key.mismatch(frag.cache_key()) {
+                    bail!("worker fragment does not belong to this job: {why}");
+                }
+                return Ok(frag);
+            }
+            FrameType::Error => bail!("worker reported: {}", decode_error(&frame.payload)),
+            t => bail!("unexpected {t:?} frame from worker"),
         }
-        FrameType::Error => bail!("worker reported: {}", decode_error(&frame.payload)),
-        t => bail!("unexpected {t:?} frame from worker"),
     }
 }
 

@@ -4,11 +4,22 @@
 //! connects, registers ([`FrameType::Hello`] → ack), then loops solving
 //! [`FrameType::ShardJob`]s — each job is one [`ShardPlan`] range of one
 //! chip's pattern space, solved with [`CompileSession::solve_shard`] and
-//! returned as verbatim RCSF fragment bytes. The worker holds no state
-//! between jobs: every job carries its full identity (chip + config +
-//! pipeline, in the RCSS cache-key layout) and tensor set, so any worker
-//! can solve any range of any chip, and losing a worker loses nothing
-//! but time.
+//! returned as verbatim RCSF fragment bytes. The worker holds no
+//! *chip-scoped* state between jobs: every job carries its full identity
+//! (chip + config + pipeline, in the RCSS cache-key layout) and tensor
+//! set, so any worker can solve any range of any chip, and losing a
+//! worker loses nothing but time.
+//!
+//! What a worker *does* keep across jobs is a process-lifetime
+//! fleet-store replica (see [`crate::store`]): before solving it asks
+//! the coordinator which of the job's fault patterns the fleet already
+//! solved ([`FrameType::StoreGet`]), installs the answer, and after
+//! solving it publishes its fresh full-range tables back
+//! ([`FrameType::StorePut`]) — so a pattern any chip in the fleet has
+//! hit is solved exactly once, no matter which worker drew it. Store
+//! traffic only moves where solve time is spent: the fragment bytes a
+//! store-assisted worker returns are byte-identical to a store-less
+//! solve (the store's determinism contract).
 //!
 //! A job that fails to solve (malformed spec, unsupported config)
 //! answers with an [`FrameType::Error`] frame; the coordinator requeues
@@ -17,10 +28,14 @@
 //! ends the loop normally.
 
 use super::protocol::{
-    decode_error, decode_shard_job, encode_hello, read_frame, write_frame, FrameType,
+    decode_error, decode_shard_job, decode_store_put, encode_hello, encode_store_get,
+    encode_store_put, read_frame, write_frame, FrameType,
 };
 use crate::coordinator::persist::CacheKey;
-use crate::coordinator::{CompileSession, ShardPlan};
+use crate::coordinator::{CompileSession, Outcome, PatternSolution, ShardPlan};
+use crate::fault::GroupFaults;
+use crate::store::{StoreCtx, StoreHandle};
+use crate::util::fnv::FnvMap;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
 
@@ -31,6 +46,11 @@ pub struct WorkerReport {
     pub jobs: u64,
     /// Pattern classes solved across all jobs.
     pub patterns_solved: u64,
+    /// Pattern tables answered by the fleet store instead of a local
+    /// solve (via the coordinator or this worker's own replica).
+    pub store_hits: u64,
+    /// Fresh pattern tables published back to the coordinator.
+    pub store_published: u64,
 }
 
 /// Connect to a coordinator at `addr` and solve shard jobs until it
@@ -48,6 +68,10 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
         FrameType::Error => bail!("coordinator rejected worker: {}", decode_error(&ack.payload)),
         t => bail!("unexpected {t:?} frame during the handshake"),
     }
+    // The worker's process-lifetime fleet-store replica: memory-only
+    // (the coordinator owns the durable file tier), shared across every
+    // job this connection serves.
+    let store = StoreHandle::in_memory();
     let mut report = WorkerReport::default();
     loop {
         let frame = match read_frame(&mut stream)? {
@@ -55,11 +79,13 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
             None => break, // coordinator hung up between jobs: done
         };
         match frame.frame_type {
-            FrameType::ShardJob => match solve_job(&frame.payload, threads) {
-                Ok((bytes, solved)) => {
-                    write_frame(&mut stream, FrameType::ShardResult, &bytes)?;
+            FrameType::ShardJob => match solve_job(&mut stream, &store, &frame.payload, threads) {
+                Ok(done) => {
+                    write_frame(&mut stream, FrameType::ShardResult, &done.fragment_bytes)?;
                     report.jobs += 1;
-                    report.patterns_solved += solved as u64;
+                    report.patterns_solved += done.solved as u64;
+                    report.store_hits += done.store_hits as u64;
+                    report.store_published += done.published as u64;
                 }
                 Err(e) => {
                     eprintln!("worker: shard job failed: {e:#}");
@@ -73,20 +99,92 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
     Ok(report)
 }
 
+/// One solved shard job, ready to return to the coordinator.
+struct SolvedJob {
+    fragment_bytes: Vec<u8>,
+    solved: usize,
+    store_hits: usize,
+    published: usize,
+}
+
 /// Solve one wire-delivered shard job: rebuild the session the job's
 /// cache key describes, submit the full tensor set (every shard scans
-/// everything so all shards derive the identical registry), solve only
-/// the assigned range, and serialize the fragment.
-fn solve_job(payload: &[u8], threads: usize) -> Result<(Vec<u8>, usize)> {
+/// everything so all shards derive the identical registry), sync the
+/// job's patterns with the coordinator's fleet store, solve only the
+/// assigned range, publish what came out fresh, and serialize the
+/// fragment.
+fn solve_job(
+    stream: &mut TcpStream,
+    store: &StoreHandle,
+    payload: &[u8],
+    threads: usize,
+) -> Result<SolvedJob> {
     let spec = decode_shard_job(payload)?;
     let key = CacheKey::new(&spec.chip, spec.cfg, spec.pipeline);
     let mut session = CompileSession::for_key(&key);
     session.set_threads(threads);
+    session.set_store(store.clone());
     for (name, ws) in &spec.tensors {
         session.submit(name, ws.clone());
     }
+    // Pre-solve store sync: ask the coordinator for the job's patterns
+    // this replica does not hold yet. The reply is consumed before any
+    // bail below it, so every error leaves the stream at a frame
+    // boundary.
+    let sctx = StoreCtx::new(spec.cfg, spec.pipeline);
+    let patterns = session.queued_patterns();
+    let unknown: Vec<GroupFaults> =
+        patterns.iter().filter(|p| !store.contains(&sctx, p)).cloned().collect();
+    if !unknown.is_empty() {
+        write_frame(stream, FrameType::StoreGet, &encode_store_get(&sctx, &unknown))?;
+        let reply = read_frame(stream)?
+            .ok_or_else(|| anyhow!("coordinator closed during the store sync"))?;
+        match reply.frame_type {
+            FrameType::StorePut => {
+                let b = decode_store_put(&reply.payload).context("parse store sync reply")?;
+                for (p, t) in &b.entries {
+                    store.publish_table(&b.ctx, p, t);
+                }
+            }
+            FrameType::Error => {
+                bail!("coordinator store sync failed: {}", decode_error(&reply.payload))
+            }
+            t => bail!("unexpected {t:?} frame in the store sync"),
+        }
+    }
+    // Everything the replica holds *before* the solve came from the
+    // fleet; anything beyond it afterwards is this job's fresh work.
+    let known: FnvMap<u64, ()> = patterns
+        .iter()
+        .filter(|p| store.contains(&sctx, p))
+        .map(|p| (sctx.content_hash(p), ()))
+        .collect();
+    let hits_before = store.counters().hits;
+
     let plan = ShardPlan::new(spec.shards as usize);
     let fragment = session.solve_shard(&plan, spec.shard as usize)?;
     let solved = fragment.solved_patterns();
-    Ok((fragment.to_bytes(), solved))
+    let store_hits = (store.counters().hits - hits_before) as usize;
+
+    // Publish the range's freshly solved full-range tables back to the
+    // coordinator before returning the fragment (Pairs-tier partial
+    // solutions stay out of the store by design).
+    let fresh: Vec<(GroupFaults, Vec<Outcome>)> = fragment
+        .parts()
+        .filter_map(|(p, s)| match s {
+            Some(PatternSolution::Table(t)) if !known.contains_key(&sctx.content_hash(p)) => {
+                Some((p.clone(), t.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    if !fresh.is_empty() {
+        write_frame(stream, FrameType::StorePut, &encode_store_put(&sctx, &fresh))?;
+    }
+    Ok(SolvedJob {
+        fragment_bytes: fragment.to_bytes(),
+        solved,
+        store_hits,
+        published: fresh.len(),
+    })
 }

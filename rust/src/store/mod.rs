@@ -1,0 +1,715 @@
+//! Fleet-global, content-addressed pattern-solution store.
+//!
+//! A solved full-range pattern table depends on exactly three things —
+//! the fault pattern itself, the [`GroupConfig`], and the pipeline
+//! fingerprint ([`PipelineOptions`]) — and **not** on chip identity.
+//! Every cache below this module is chip-scoped (the RCSS session cache
+//! is keyed by chip seed + fault rates), so a fleet of a million chips
+//! re-solves the same hot SAF patterns once per chip. This module is the
+//! cross-chip dedupe layer:
+//!
+//! * [`StoreCtx`] + [`StoreCtx::content_hash`] — the content address: an
+//!   FNV-1a hash over the canonical pattern bytes and the config/pipeline
+//!   fingerprint, explicitly *excluding* chip seed and fault rates.
+//! * [`SolutionStore`] — the in-process tier: a bounded-byte map from
+//!   content hash to solved table with the same deterministic epoch-LRU
+//!   discipline as [`crate::coordinator::SolveCache`].
+//! * RCPS v1 blobs — the file tier: one sealed blob per distinct solution
+//!   under `<dir>/<hash:016x>.rcps`, built from the same
+//!   `coordinator::persist` codecs as RCSS/RCSF (trailing FNV-1a
+//!   checksum verified before parsing; corrupt, truncated or
+//!   version-mismatched blobs are rejected cleanly).
+//! * [`StoreHandle`] — the shared `Arc<Mutex<…>>` wrapper a
+//!   [`crate::coordinator::CompileService`] attaches to every chip's
+//!   session, and the fabric coordinator serves over RCWP
+//!   (`StoreGet`/`StorePut` frames).
+//!
+//! ## Determinism contract
+//!
+//! A store hit must be provably byte-identical to what a local solve
+//! would produce. Three mechanisms enforce it:
+//!
+//! 1. Solutions enter the store only from an actual local solve
+//!    ([`crate::coordinator::solve_full_range`] output installed
+//!    verbatim), so every entry
+//!    *is* a local solve's bytes.
+//! 2. A lookup verifies full equality of the pattern and context against
+//!    the stored entry — the content hash routes, equality decides — so a
+//!    hash collision can never substitute a different pattern's solution.
+//! 3. A file-tier read re-verifies the blob's trailing checksum before
+//!    parsing and re-checks the decoded pattern, context, and table
+//!    length against the request before serving it.
+//!
+//! Store scope is the `BatchTable` tier only: full-range tables are a
+//! pure function of (pattern, config, pipeline), while `PerWeight`
+//! pair maps are request-dependent partial state and are never published.
+
+use crate::coordinator::persist::{
+    push_i64, push_u32, read_pattern_solution, seal, table_len, unseal, write_pattern_solution,
+    CacheKey, Reader,
+};
+use crate::coordinator::{Method, Outcome, PatternSolution, PipelineOptions};
+use crate::fault::bank::ChipFaults;
+use crate::fault::{FaultRates, GroupFaults};
+use crate::grouping::GroupConfig;
+use crate::util::fnv::FnvMap;
+use crate::util::prop::{fnv1a_with, FNV1A_OFFSET};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// Magic marker of the pattern-solution blob format ("RCPS").
+pub const STORE_MAGIC: u32 = 0x5243_5053;
+/// Current pattern-solution blob format version.
+pub const STORE_VERSION: u32 = 1;
+
+/// Default resident-memory budget of the in-process tier. Matches the
+/// per-chip table budget default: the store is one more table cache, just
+/// shared across chips.
+pub const DEFAULT_STORE_MEMORY_BYTES: usize = 256 << 20;
+
+/// The chip-independent half of a solution's identity: grouping config +
+/// pipeline fingerprint. Together with a fault pattern this is everything
+/// a full-range table is a function of.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StoreCtx {
+    pub cfg: GroupConfig,
+    pub pipeline: PipelineOptions,
+}
+
+impl StoreCtx {
+    pub fn new(cfg: GroupConfig, pipeline: PipelineOptions) -> StoreCtx {
+        StoreCtx { cfg, pipeline }
+    }
+
+    /// Cells per array under this context's config.
+    pub fn cells(&self) -> usize {
+        self.cfg.cells()
+    }
+
+    /// Dense-table length of a full-range solution under this context.
+    pub fn table_len(&self) -> usize {
+        table_len(&self.cfg)
+    }
+
+    /// A synthetic chip-less cache key (seed 0, zero fault rates) that
+    /// lets the store reuse the RCSS per-pattern solution codecs, which
+    /// only consume the config/pipeline half of the key.
+    pub(crate) fn cache_key(&self) -> CacheKey {
+        CacheKey::new(&ChipFaults::new(0, FaultRates::none()), self.cfg, self.pipeline)
+    }
+
+    /// Canonical context bytes, shared by the content hash, the RCPS blob
+    /// header, and the RCWP store frames: `rows u32 · cols u32 ·
+    /// levels u32 · method u8 · sparsest u8 · table_value_limit i64 ·
+    /// cells u32` (all little-endian). This is the [`write_key`] layout
+    /// minus the chip fields — chip seed and fault rates are *excluded*
+    /// from a solution's identity by design.
+    ///
+    /// [`write_key`]: crate::coordinator::persist::write_key
+    pub(crate) fn push_bytes(&self, buf: &mut Vec<u8>) {
+        push_u32(buf, self.cfg.rows as u32);
+        push_u32(buf, self.cfg.cols as u32);
+        push_u32(buf, self.cfg.levels as u32);
+        buf.push(self.pipeline.method.code());
+        buf.push(self.pipeline.sparsest as u8);
+        push_i64(buf, self.pipeline.table_value_limit);
+        push_u32(buf, self.cfg.cells() as u32);
+    }
+
+    /// The content address of `pattern` under this context: FNV-1a over
+    /// the canonical context bytes followed by the pattern's pos/neg
+    /// fault-state bytes. Routing only — a lookup always re-verifies full
+    /// equality before serving, so hash collisions cost a miss, never a
+    /// wrong answer.
+    pub fn content_hash(&self, pattern: &GroupFaults) -> u64 {
+        let mut head = Vec::with_capacity(32);
+        self.push_bytes(&mut head);
+        let mut h = fnv1a_with(FNV1A_OFFSET, &head);
+        for f in pattern.pos.iter().chain(&pattern.neg) {
+            h = fnv1a_with(h, &[*f as u8]);
+        }
+        h
+    }
+}
+
+/// Parse and validate the canonical context bytes written by
+/// [`StoreCtx::push_bytes`], with the same bounds discipline as the RCSS
+/// key parser: a corrupt header must produce a clean error, never an
+/// absurd table allocation.
+pub(crate) fn read_store_ctx(r: &mut Reader<'_>) -> Result<StoreCtx> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let levels = r.u32()?;
+    if rows == 0 || cols == 0 || !(2..=255).contains(&levels) {
+        bail!("bad grouping config R{rows}C{cols}@{levels} in store record");
+    }
+    let cfg = GroupConfig::new(rows, cols, levels as u8);
+    let method =
+        Method::from_code(r.u8()?).ok_or_else(|| anyhow!("bad method code in store record"))?;
+    let sparsest = r.u8()? != 0;
+    let table_value_limit = r.i64()?;
+    let pipeline = PipelineOptions { method, table_value_limit, sparsest };
+    let cells = r.u32()? as usize;
+    if cells != cfg.cells() || cells == 0 || cells > 16 {
+        bail!("cell count {cells} disagrees with config {cfg} in store record");
+    }
+    (levels as i64)
+        .checked_pow(cols as u32)
+        .and_then(|p| p.checked_sub(1))
+        .and_then(|p| p.checked_mul(rows as i64))
+        .filter(|&m| m > 0 && m <= (1 << 24))
+        .ok_or_else(|| anyhow!("unreasonable weight range in store record"))?;
+    Ok(StoreCtx { cfg, pipeline })
+}
+
+/// Serialize one solved pattern as an RCPS v1 blob: magic, version, the
+/// canonical context bytes, the RCSS per-pattern framing (fault bytes +
+/// tagged dense table), and the trailing FNV-1a checksum.
+pub fn encode_blob(ctx: &StoreCtx, pattern: &GroupFaults, outcomes: &[Outcome]) -> Vec<u8> {
+    debug_assert_eq!(outcomes.len(), ctx.table_len());
+    let mut buf = Vec::new();
+    push_u32(&mut buf, STORE_MAGIC);
+    push_u32(&mut buf, STORE_VERSION);
+    ctx.push_bytes(&mut buf);
+    let solution = PatternSolution::Table(outcomes.to_vec());
+    write_pattern_solution(&mut buf, pattern, Some(&solution));
+    seal(buf)
+}
+
+/// Parse an RCPS v1 blob and verify it answers exactly the requested
+/// (context, pattern): checksum first, then magic/version, then full
+/// equality of the decoded context and pattern against the request.
+/// Anything else — corruption, truncation, a version from a different
+/// build, a hash-colliding foreign pattern — is an error, never a
+/// silently adopted solution.
+pub fn decode_blob(
+    bytes: &[u8],
+    ctx: &StoreCtx,
+    pattern: &GroupFaults,
+) -> Result<Vec<Outcome>> {
+    let payload = unseal(bytes)?;
+    let mut r = Reader::new(payload);
+    let magic = r.u32()?;
+    if magic != STORE_MAGIC {
+        bail!("bad store blob magic {magic:#010x}");
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        bail!("unsupported store blob version {version} (this build reads {STORE_VERSION})");
+    }
+    let got_ctx = read_store_ctx(&mut r)?;
+    if got_ctx != *ctx {
+        bail!("store blob context {got_ctx:?} does not match the request");
+    }
+    let key = ctx.cache_key();
+    let (got_pattern, solution) = read_pattern_solution(&mut r, &key, false)?;
+    if r.remaining() != 0 {
+        bail!("store blob has {} trailing bytes", r.remaining());
+    }
+    if got_pattern != *pattern {
+        bail!("store blob pattern does not match the request (content-hash collision)");
+    }
+    match solution {
+        Some(PatternSolution::Table(t)) if t.len() == ctx.table_len() => Ok(t),
+        Some(PatternSolution::Table(t)) => bail!(
+            "store blob table has {} entries, config {} needs {}",
+            t.len(),
+            ctx.cfg,
+            ctx.table_len()
+        ),
+        _ => bail!("store blob does not carry a full-range table"),
+    }
+}
+
+/// Lifetime counters of one [`SolutionStore`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Lookups answered, from memory or disk.
+    pub hits: u64,
+    /// Subset of `hits` that were re-read (and re-verified) from the file
+    /// tier rather than served from memory.
+    pub file_hits: u64,
+    /// Lookups no tier could answer.
+    pub misses: u64,
+    /// Distinct solutions inserted (idempotent re-publishes don't count).
+    pub publishes: u64,
+    /// In-memory entries evicted to honor the byte budget.
+    pub evictions: u64,
+    /// Corrupt, truncated, or version-mismatched RCPS blobs rejected.
+    pub rejected_blobs: u64,
+    /// File-tier I/O failures (reads other than not-found, failed writes).
+    pub io_errors: u64,
+}
+
+impl StoreCounters {
+    /// Fraction of lookups answered, or `None` when nothing was looked up.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let total = self.hits + self.misses;
+        (total > 0).then(|| self.hits as f64 / total as f64)
+    }
+}
+
+/// One resident solution: the full identity (for equality verification on
+/// lookup) plus the solved table and LRU bookkeeping.
+#[derive(Clone, Debug)]
+struct StoreEntry {
+    ctx: StoreCtx,
+    pattern: GroupFaults,
+    table: Vec<Outcome>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Estimated resident bytes of one store entry (same estimate family as
+/// `SolveCache`: a guard rail, not an allocator ledger).
+fn entry_bytes(ctx: &StoreCtx) -> usize {
+    let cells = ctx.cells();
+    64 + 2 * cells + ctx.table_len() * (2 * (24 + cells) + 16)
+}
+
+/// The fleet-global pattern-solution store: in-process tier plus an
+/// optional RCPS file tier. Use through a [`StoreHandle`] when shared
+/// across sessions or threads.
+#[derive(Debug)]
+pub struct SolutionStore {
+    dir: Option<PathBuf>,
+    entries: FnvMap<u64, StoreEntry>,
+    max_bytes: usize,
+    resident_bytes: usize,
+    epoch: u64,
+    counters: StoreCounters,
+}
+
+impl SolutionStore {
+    /// Memory-only store with a resident-byte budget.
+    pub fn new(max_bytes: usize) -> SolutionStore {
+        SolutionStore {
+            dir: None,
+            entries: FnvMap::default(),
+            max_bytes: max_bytes.max(1),
+            resident_bytes: 0,
+            epoch: 0,
+            counters: StoreCounters::default(),
+        }
+    }
+
+    /// Store with an RCPS file tier rooted at `dir` (created if missing).
+    pub fn with_dir(dir: &Path, max_bytes: usize) -> Result<SolutionStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store directory {}", dir.display()))?;
+        let mut s = SolutionStore::new(max_bytes);
+        s.dir = Some(dir.to_path_buf());
+        Ok(s)
+    }
+
+    /// File-tier root, when configured.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Resident entries in the in-process tier.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Estimated resident bytes of the in-process tier.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Lifetime counters snapshot.
+    pub fn counters(&self) -> StoreCounters {
+        self.counters
+    }
+
+    /// Blob path of one content hash under the file tier.
+    fn blob_path(dir: &Path, hash: u64) -> PathBuf {
+        dir.join(format!("{hash:016x}.rcps"))
+    }
+
+    /// Advance the LRU epoch and evict least-recently-used entries until
+    /// the resident estimate fits the budget — deterministic order:
+    /// (last-used epoch, content hash) ascending, earlier epochs only.
+    /// Eviction never loses work (the file tier keeps its blob, and a
+    /// re-solve is byte-identical by contract).
+    pub fn begin_epoch(&mut self) {
+        self.epoch += 1;
+        if self.resident_bytes <= self.max_bytes {
+            return;
+        }
+        let mut cands: Vec<(u64, u64)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.last_used < self.epoch)
+            .map(|(&k, e)| (e.last_used, k))
+            .collect();
+        cands.sort_unstable();
+        for (_, key) in cands {
+            if self.resident_bytes <= self.max_bytes {
+                break;
+            }
+            if let Some(e) = self.entries.remove(&key) {
+                self.resident_bytes -= e.bytes.min(self.resident_bytes);
+                self.counters.evictions += 1;
+            }
+        }
+    }
+
+    /// Is (ctx, pattern) resident in the in-process tier? (No counter
+    /// traffic — the fabric worker's publish-dedupe probe.)
+    pub fn contains(&self, ctx: &StoreCtx, pattern: &GroupFaults) -> bool {
+        self.entries
+            .get(&ctx.content_hash(pattern))
+            .is_some_and(|e| e.ctx == *ctx && e.pattern == *pattern)
+    }
+
+    /// Look up the full-range table of (ctx, pattern): memory first, then
+    /// the file tier (a disk hit is re-verified and promoted to memory).
+    /// Every hit went through full-equality verification against the
+    /// stored identity — the returned table is provably the one a local
+    /// solve of exactly this request produced.
+    pub fn lookup_table(&mut self, ctx: &StoreCtx, pattern: &GroupFaults) -> Option<Vec<Outcome>> {
+        let hash = ctx.content_hash(pattern);
+        if let Some(e) = self.entries.get_mut(&hash) {
+            if e.ctx == *ctx && e.pattern == *pattern {
+                e.last_used = self.epoch;
+                self.counters.hits += 1;
+                return Some(e.table.clone());
+            }
+            // Hash-colliding foreign entry: fall through to a miss — never
+            // serve a different pattern's solution.
+        }
+        if let Some(dir) = self.dir.clone() {
+            let path = Self::blob_path(&dir, hash);
+            match std::fs::read(&path) {
+                Ok(bytes) => match decode_blob(&bytes, ctx, pattern) {
+                    Ok(table) => {
+                        self.install(hash, ctx, pattern, table.clone());
+                        self.counters.file_hits += 1;
+                        self.counters.hits += 1;
+                        return Some(table);
+                    }
+                    Err(_) => self.counters.rejected_blobs += 1,
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(_) => self.counters.io_errors += 1,
+            }
+        }
+        self.counters.misses += 1;
+        None
+    }
+
+    /// Publish a freshly solved full-range table. Idempotent: an entry
+    /// already resident (necessarily byte-identical, by the determinism
+    /// contract) is only LRU-refreshed, and an existing blob is never
+    /// rewritten. The file write goes through a temp-file rename so a
+    /// concurrent reader never sees a torn blob.
+    pub fn publish_table(&mut self, ctx: &StoreCtx, pattern: &GroupFaults, outcomes: &[Outcome]) {
+        if outcomes.len() != ctx.table_len() {
+            return; // not a full-range table; out of store scope
+        }
+        let hash = ctx.content_hash(pattern);
+        match self.entries.get_mut(&hash) {
+            Some(e) if e.ctx == *ctx && e.pattern == *pattern => {
+                e.last_used = self.epoch;
+            }
+            Some(_) => return, // hash-colliding foreign resident: keep it
+            None => {
+                self.install(hash, ctx, pattern, outcomes.to_vec());
+                self.counters.publishes += 1;
+            }
+        }
+        if let Some(dir) = self.dir.clone() {
+            let path = Self::blob_path(&dir, hash);
+            if !path.exists() {
+                let tmp = path.with_extension("rcps.tmp");
+                let blob = encode_blob(ctx, pattern, outcomes);
+                let wrote = std::fs::write(&tmp, blob)
+                    .and_then(|()| std::fs::rename(&tmp, &path));
+                if wrote.is_err() {
+                    self.counters.io_errors += 1;
+                    let _ = std::fs::remove_file(&tmp);
+                }
+            }
+        }
+    }
+
+    fn install(&mut self, hash: u64, ctx: &StoreCtx, pattern: &GroupFaults, table: Vec<Outcome>) {
+        let bytes = entry_bytes(ctx);
+        self.resident_bytes += bytes;
+        self.entries.insert(
+            hash,
+            StoreEntry {
+                ctx: *ctx,
+                pattern: pattern.clone(),
+                table,
+                bytes,
+                last_used: self.epoch,
+            },
+        );
+    }
+}
+
+/// Cloneable shared handle to one [`SolutionStore`] — what a
+/// `CompileService` attaches to every chip's session and the fabric
+/// coordinator serves to workers. All methods lock internally; a poisoned
+/// lock is recovered (the store holds only verified, re-derivable state).
+#[derive(Clone)]
+pub struct StoreHandle {
+    inner: Arc<Mutex<SolutionStore>>,
+}
+
+impl fmt::Debug for StoreHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("StoreHandle(..)")
+    }
+}
+
+impl StoreHandle {
+    pub fn new(store: SolutionStore) -> StoreHandle {
+        StoreHandle { inner: Arc::new(Mutex::new(store)) }
+    }
+
+    /// Memory-only store with the default budget.
+    pub fn in_memory() -> StoreHandle {
+        StoreHandle::new(SolutionStore::new(DEFAULT_STORE_MEMORY_BYTES))
+    }
+
+    /// Store with an RCPS file tier at `dir` and the default budget.
+    pub fn with_dir(dir: &Path) -> Result<StoreHandle> {
+        Ok(StoreHandle::new(SolutionStore::with_dir(dir, DEFAULT_STORE_MEMORY_BYTES)?))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SolutionStore> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// See [`SolutionStore::begin_epoch`].
+    pub fn begin_epoch(&self) {
+        self.lock().begin_epoch();
+    }
+
+    /// See [`SolutionStore::lookup_table`].
+    pub fn lookup_table(&self, ctx: &StoreCtx, pattern: &GroupFaults) -> Option<Vec<Outcome>> {
+        self.lock().lookup_table(ctx, pattern)
+    }
+
+    /// See [`SolutionStore::publish_table`].
+    pub fn publish_table(&self, ctx: &StoreCtx, pattern: &GroupFaults, outcomes: &[Outcome]) {
+        self.lock().publish_table(ctx, pattern, outcomes);
+    }
+
+    /// See [`SolutionStore::contains`].
+    pub fn contains(&self, ctx: &StoreCtx, pattern: &GroupFaults) -> bool {
+        self.lock().contains(ctx, pattern)
+    }
+
+    /// See [`SolutionStore::counters`].
+    pub fn counters(&self) -> StoreCounters {
+        self.lock().counters()
+    }
+
+    /// Resident entries in the in-process tier.
+    pub fn entries(&self) -> usize {
+        self.lock().entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Stage;
+    use crate::fault::FaultState;
+    use crate::grouping::Decomposition;
+
+    fn ctx(cfg: GroupConfig) -> StoreCtx {
+        StoreCtx::new(cfg, PipelineOptions::default())
+    }
+
+    fn full_table(cfg: &GroupConfig) -> Vec<Outcome> {
+        let maxv = cfg.max_per_array();
+        (-maxv..=maxv)
+            .map(|w| Outcome {
+                decomposition: Decomposition::encode_ideal(w, cfg),
+                error: 0,
+                stage: Stage::FastPath,
+            })
+            .collect()
+    }
+
+    fn faulty_pattern(cells: usize) -> GroupFaults {
+        let mut g = GroupFaults::free(cells);
+        g.pos[0] = FaultState::Sa1;
+        g
+    }
+
+    #[test]
+    fn content_hash_keys_by_pattern_and_context_only() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let free = GroupFaults::free(cfg.cells());
+        let faulty = faulty_pattern(cfg.cells());
+        assert_eq!(c.content_hash(&free), c.content_hash(&free.clone()));
+        assert_ne!(c.content_hash(&free), c.content_hash(&faulty));
+        // Same pattern bytes under a different config → different address
+        // (the config/pipeline fingerprint is part of the identity). R2C2
+        // and R1C4 both have 4 cells, so the pattern bytes are identical.
+        let free4 = GroupFaults::free(4);
+        assert_ne!(
+            ctx(GroupConfig::R2C2).content_hash(&free4),
+            ctx(GroupConfig::R1C4).content_hash(&free4)
+        );
+        let mut other_pipeline = PipelineOptions::default();
+        other_pipeline.sparsest = !other_pipeline.sparsest;
+        assert_ne!(
+            c.content_hash(&free),
+            StoreCtx::new(cfg, other_pipeline).content_hash(&free)
+        );
+    }
+
+    #[test]
+    fn blob_roundtrip_and_corruption_rejection() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let pattern = faulty_pattern(cfg.cells());
+        let table = full_table(&cfg);
+        let blob = encode_blob(&c, &pattern, &table);
+        let back = decode_blob(&blob, &c, &pattern).expect("roundtrip");
+        assert_eq!(back.len(), table.len());
+        assert_eq!(back[0].decomposition, table[0].decomposition);
+        // Every flipped byte is rejected before or during parsing.
+        for i in 0..blob.len() {
+            let mut bad = blob.clone();
+            bad[i] ^= 0x20;
+            assert!(decode_blob(&bad, &c, &pattern).is_err(), "flip at byte {i}");
+        }
+        // Truncation at any point is rejected.
+        for cut in [0, 8, blob.len() / 2, blob.len() - 1] {
+            assert!(decode_blob(&blob[..cut], &c, &pattern).is_err(), "cut at {cut}");
+        }
+        // A different requested pattern or context is rejected even with a
+        // pristine blob (the full-equality half of the contract).
+        assert!(decode_blob(&blob, &c, &GroupFaults::free(cfg.cells())).is_err());
+        assert!(decode_blob(&blob, &ctx(GroupConfig::R1C4), &pattern).is_err());
+    }
+
+    #[test]
+    fn blob_version_mismatch_rejected() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let pattern = faulty_pattern(cfg.cells());
+        let blob = encode_blob(&c, &pattern, &full_table(&cfg));
+        // Re-seal with a bumped version so only the version check fires.
+        let payload = unseal(&blob).unwrap().to_vec();
+        let mut bumped = payload.clone();
+        bumped[4..8].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+        let resealed = seal(bumped);
+        let err = decode_blob(&resealed, &c, &pattern).unwrap_err().to_string();
+        assert!(err.contains("version"), "got: {err}");
+    }
+
+    #[test]
+    fn store_lookup_publish_and_counters() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let pattern = faulty_pattern(cfg.cells());
+        let table = full_table(&cfg);
+        let mut store = SolutionStore::new(1 << 20);
+        store.begin_epoch();
+        assert!(store.lookup_table(&c, &pattern).is_none());
+        store.publish_table(&c, &pattern, &table);
+        assert!(store.contains(&c, &pattern));
+        let got = store.lookup_table(&c, &pattern).expect("published entry answers");
+        assert_eq!(got.len(), table.len());
+        // Idempotent republish: no double count, no byte growth.
+        let bytes = store.resident_bytes();
+        store.publish_table(&c, &pattern, &table);
+        assert_eq!(store.resident_bytes(), bytes);
+        let counters = store.counters();
+        assert_eq!(counters.hits, 1);
+        assert_eq!(counters.misses, 1);
+        assert_eq!(counters.publishes, 1);
+        assert_eq!(counters.hit_rate(), Some(0.5));
+        // A short table (not full-range) is out of scope and ignored.
+        let other = GroupFaults::free(cfg.cells());
+        store.publish_table(&c, &other, &table[..3]);
+        assert!(!store.contains(&c, &other));
+    }
+
+    #[test]
+    fn eviction_is_lru_deterministic_and_budgeted() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let table = full_table(&cfg);
+        let mut patterns = Vec::new();
+        for i in 0..3 {
+            let mut g = GroupFaults::free(cfg.cells());
+            g.neg[i] = FaultState::Sa0;
+            patterns.push(g);
+        }
+        let one = entry_bytes(&c);
+        let mut store = SolutionStore::new(2 * one + one / 2);
+        store.begin_epoch();
+        store.publish_table(&c, &patterns[0], &table);
+        store.begin_epoch();
+        store.publish_table(&c, &patterns[1], &table);
+        store.begin_epoch();
+        // Touch [0] so [1] is the LRU victim.
+        assert!(store.lookup_table(&c, &patterns[0]).is_some());
+        store.publish_table(&c, &patterns[2], &table);
+        store.begin_epoch();
+        assert_eq!(store.counters().evictions, 1);
+        assert!(store.contains(&c, &patterns[0]));
+        assert!(!store.contains(&c, &patterns[1]), "LRU victim must be the untouched entry");
+        assert!(store.contains(&c, &patterns[2]));
+        assert!(store.resident_bytes() <= 2 * one + one / 2);
+    }
+
+    #[test]
+    fn file_tier_shares_blobs_across_store_instances() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let pattern = faulty_pattern(cfg.cells());
+        let table = full_table(&cfg);
+        let dir = std::env::temp_dir().join(format!("rchg-store-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut a = SolutionStore::with_dir(&dir, 1 << 20).unwrap();
+            a.publish_table(&c, &pattern, &table);
+        }
+        let hash = c.content_hash(&pattern);
+        let path = dir.join(format!("{hash:016x}.rcps"));
+        assert!(path.exists(), "publish must write the blob");
+        // A brand-new store instance (fresh process, same dir) serves the
+        // blob from disk after re-verification.
+        let mut b = SolutionStore::with_dir(&dir, 1 << 20).unwrap();
+        let got = b.lookup_table(&c, &pattern).expect("file-tier hit");
+        assert_eq!(got.len(), table.len());
+        assert_eq!(b.counters().file_hits, 1);
+        // Corrupt the blob on disk: rejected cleanly, counted, and the
+        // lookup degrades to a miss.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let mut d = SolutionStore::with_dir(&dir, 1 << 20).unwrap();
+        assert!(d.lookup_table(&c, &pattern).is_none());
+        assert_eq!(d.counters().rejected_blobs, 1);
+        assert_eq!(d.counters().misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn handle_is_shared_and_cloneable() {
+        let cfg = GroupConfig::R2C2;
+        let c = ctx(cfg);
+        let pattern = faulty_pattern(cfg.cells());
+        let h = StoreHandle::in_memory();
+        let h2 = h.clone();
+        h.publish_table(&c, &pattern, &full_table(&cfg));
+        assert!(h2.contains(&c, &pattern), "clones share one store");
+        assert_eq!(h2.entries(), 1);
+    }
+}

@@ -40,6 +40,7 @@ fn serve_opts(shard_min_weights: usize) -> ServeOptions {
             rates: FaultRates::paper_default(),
             table_budget: TableBudget::PerSession,
             cache_dir: None,
+            store_dir: None,
         },
         shard_min_weights,
         max_shards: 8,

@@ -220,6 +220,7 @@ fn service_batches_many_chips_and_warm_starts_from_cache_dir() {
         rates: FaultRates::paper_default(),
         table_budget: TableBudget::PerSession,
         cache_dir: Some(dir.clone()),
+        store_dir: None,
     });
     for &seed in &seeds {
         for (name, ws) in &tensors {
@@ -251,6 +252,7 @@ fn service_batches_many_chips_and_warm_starts_from_cache_dir() {
         rates: FaultRates::paper_default(),
         table_budget: TableBudget::PerSession,
         cache_dir: Some(dir.clone()),
+        store_dir: None,
     });
     for &seed in &seeds {
         for (name, ws) in &tensors {

@@ -1,0 +1,335 @@
+//! Fleet-store acceptance tests.
+//!
+//! * A store-backed compile is byte-identical to a store-less one —
+//!   bitmaps, residual errors, AND the saved RCSS session bytes (the
+//!   store's determinism contract).
+//! * A second chip compiling the same model against a populated store
+//!   reuses solutions across chips (`store_hits > 0`), and a re-compile
+//!   of the *same* chip through a fresh session builds zero tables.
+//! * The RCPS file tier answers a cold process from disk, and rejects
+//!   corrupt, truncated, and version-mismatched blobs cleanly (a
+//!   rejection is a miss, never a wrong answer or a crash).
+//! * A pathologically small memory budget evicts constantly and still
+//!   never changes a byte of output.
+//! * Fabric end-to-end: tables a worker publishes after one chip's job
+//!   are reused when a later chip's job is solved over the same fabric.
+
+use rchg::coordinator::{CompileOptions, CompileSession, CompiledTensor, Method, ServiceOptions, TableBudget};
+use rchg::experiments::compile_time::synthetic_model_tensors;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+use rchg::net::{run_worker, CompileClient, FabricServer, FabricStats, ServeOptions, TensorResult};
+use rchg::store::{SolutionStore, StoreCtx, StoreHandle};
+use rchg::util::prop::fnv1a;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+const CFG: GroupConfig = GroupConfig::R2C2;
+const BIG: usize = 256 << 20;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rchg-store-{name}-{}", std::process::id()))
+}
+
+fn model(limit: usize) -> Vec<(String, Vec<i64>)> {
+    synthetic_model_tensors("resnet20", &CFG, limit).unwrap()
+}
+
+/// The context every session in this file solves under (builder defaults
+/// for the complete method) — what its publishes are keyed by.
+fn store_ctx() -> StoreCtx {
+    StoreCtx::new(CFG, CompileOptions::new(CFG, Method::Complete).pipeline)
+}
+
+/// Compile `tensors` for one chip through a fresh session, optionally
+/// store-backed; returns the per-tensor outputs and the RCSS save bytes.
+fn compile_chip(
+    seed: u64,
+    tensors: &[(String, Vec<i64>)],
+    store: Option<StoreHandle>,
+) -> (Vec<(String, CompiledTensor)>, Vec<u8>) {
+    let chip = ChipFaults::new(seed, FaultRates::paper_default());
+    let mut builder = CompileSession::builder(CFG).method(Method::Complete).threads(1);
+    if let Some(store) = store {
+        builder = builder.store(store);
+    }
+    let mut session = builder.chip(&chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    let out = session.drain();
+    let bytes = session.to_bytes().unwrap();
+    (out, bytes)
+}
+
+fn assert_outputs_match(got: &[(String, CompiledTensor)], want: &[(String, CompiledTensor)]) {
+    assert_eq!(got.len(), want.len(), "tensor count");
+    for ((gn, g), (wn, w)) in got.iter().zip(want) {
+        assert_eq!(gn, wn);
+        assert_eq!(g.decomps, w.decomps, "bitmaps of {gn}");
+        assert_eq!(g.errors, w.errors, "residual errors of {gn}");
+    }
+}
+
+fn sum_stat(out: &[(String, CompiledTensor)], f: impl Fn(&CompiledTensor) -> usize) -> usize {
+    out.iter().map(|(_, t)| f(t)).sum()
+}
+
+#[test]
+fn store_backed_compile_is_byte_identical_and_reuses_across_chips() {
+    let tensors = model(4_000);
+    let store = StoreHandle::in_memory();
+
+    // Chip 1, cold store: identical output, no spurious hits.
+    let (plain_a, bytes_a) = compile_chip(1, &tensors, None);
+    let (store_a, store_bytes_a) = compile_chip(1, &tensors, Some(store.clone()));
+    assert_outputs_match(&store_a, &plain_a);
+    assert_eq!(store_bytes_a, bytes_a, "RCSS bytes must not depend on the store");
+    let after_a = store.counters();
+    assert_eq!(after_a.hits, 0, "an empty store must answer nothing");
+    assert!(after_a.misses > 0, "a cold compile must consult the store");
+    assert!(after_a.publishes > 0, "a cold compile must publish its solves");
+    assert_eq!(sum_stat(&store_a, |t| t.stats.store_hits), 0);
+    assert_eq!(sum_stat(&store_a, |t| t.stats.store_misses), after_a.misses as usize);
+
+    // Chip 2, warm store: cross-chip reuse with byte-identical output.
+    let (plain_b, bytes_b) = compile_chip(2, &tensors, None);
+    let (store_b, store_bytes_b) = compile_chip(2, &tensors, Some(store.clone()));
+    assert_outputs_match(&store_b, &plain_b);
+    assert_eq!(store_bytes_b, bytes_b);
+    let hits_b = sum_stat(&store_b, |t| t.stats.store_hits);
+    assert!(hits_b > 0, "chips share hot SAF patterns; chip 2 must reuse chip 1's solves");
+    assert_eq!(store.counters().hits, hits_b as u64);
+    // Every store hit skipped exactly one table build.
+    let plain_builds = sum_stat(&plain_b, |t| t.stats.pattern_tables_built);
+    let store_builds = sum_stat(&store_b, |t| t.stats.pattern_tables_built);
+    assert_eq!(store_builds + hits_b, plain_builds, "hits must replace builds one-for-one");
+
+    // Chip 1 again through a *fresh* session: the store holds its whole
+    // pattern set, so nothing is built locally and the RCSS bytes still
+    // match the original store-less save.
+    let (again_a, again_bytes_a) = compile_chip(1, &tensors, Some(store.clone()));
+    assert_outputs_match(&again_a, &plain_a);
+    assert_eq!(again_bytes_a, bytes_a);
+    assert_eq!(
+        sum_stat(&again_a, |t| t.stats.pattern_tables_built),
+        0,
+        "a fully warm store must build zero tables"
+    );
+    assert!(sum_stat(&again_a, |t| t.stats.store_hits) > 0);
+    assert_eq!(sum_stat(&again_a, |t| t.stats.store_misses), 0);
+}
+
+#[test]
+fn file_tier_answers_cold_processes_and_rejects_tampered_blobs() {
+    let dir = tmp("blob-reject");
+    let _ = std::fs::remove_dir_all(&dir);
+    let tensors = model(1_200);
+    let store = StoreHandle::new(SolutionStore::with_dir(&dir, BIG).unwrap());
+    compile_chip(5, &tensors, Some(store.clone()));
+    assert!(store.counters().publishes > 0);
+
+    // The pattern set chip 5 drew (same sampling the compile used).
+    let chip = ChipFaults::new(5, FaultRates::paper_default());
+    let mut peek = CompileSession::builder(CFG).method(Method::Complete).chip(&chip);
+    for (name, ws) in &tensors {
+        peek.submit(name, ws.clone());
+    }
+    let patterns = peek.queued_patterns();
+    assert!(!patterns.is_empty());
+    let ctx = store_ctx();
+
+    // A fresh store over the same dir — a cold process — answers every
+    // pattern from disk, through full re-verification.
+    let mut cold = SolutionStore::with_dir(&dir, BIG).unwrap();
+    for p in &patterns {
+        assert!(cold.lookup_table(&ctx, p).is_some(), "file tier must answer a cold process");
+    }
+    let c = cold.counters();
+    assert_eq!(c.file_hits, patterns.len() as u64);
+    assert_eq!(c.rejected_blobs, 0);
+    assert_eq!(c.misses, 0);
+
+    let blobs: Vec<(PathBuf, Vec<u8>)> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| {
+            let path = e.unwrap().path();
+            (path.extension().and_then(|x| x.to_str()) == Some("rcps"))
+                .then(|| (path.clone(), std::fs::read(&path).unwrap()))
+        })
+        .collect();
+    assert!(!blobs.is_empty());
+
+    // Corruption: one flipped byte per blob → every lookup is a clean miss.
+    for (path, bytes) in &blobs {
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x5A;
+        std::fs::write(path, bad).unwrap();
+    }
+    let mut corrupt = SolutionStore::with_dir(&dir, BIG).unwrap();
+    for p in &patterns {
+        assert!(corrupt.lookup_table(&ctx, p).is_none(), "corrupt blob must not be served");
+    }
+    assert_eq!(corrupt.counters().rejected_blobs, patterns.len() as u64);
+    assert_eq!(corrupt.counters().misses, patterns.len() as u64);
+
+    // Truncation.
+    for (path, bytes) in &blobs {
+        std::fs::write(path, &bytes[..bytes.len() / 2]).unwrap();
+    }
+    let mut truncated = SolutionStore::with_dir(&dir, BIG).unwrap();
+    for p in &patterns {
+        assert!(truncated.lookup_table(&ctx, p).is_none());
+    }
+    assert_eq!(truncated.counters().rejected_blobs, patterns.len() as u64);
+
+    // A blob from a future format version, re-sealed so its checksum is
+    // valid — only the version gate can (and must) reject it.
+    for (path, bytes) in &blobs {
+        let mut payload = bytes[..bytes.len() - 8].to_vec();
+        payload[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let sum = fnv1a(&payload);
+        payload.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(path, payload).unwrap();
+    }
+    let mut foreign = SolutionStore::with_dir(&dir, BIG).unwrap();
+    for p in &patterns {
+        assert!(foreign.lookup_table(&ctx, p).is_none(), "future-version blob must be refused");
+    }
+    assert_eq!(foreign.counters().rejected_blobs, patterns.len() as u64);
+
+    // Restoring the valid bytes restores service.
+    for (path, bytes) in &blobs {
+        std::fs::write(path, bytes).unwrap();
+    }
+    let mut restored = SolutionStore::with_dir(&dir, BIG).unwrap();
+    for p in &patterns {
+        assert!(restored.lookup_table(&ctx, p).is_some());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_memory_budget_evicts_constantly_and_never_changes_output() {
+    let tensors = model(2_500);
+    let store = StoreHandle::new(SolutionStore::new(1)); // evict everything, every epoch
+    let (plain_a, bytes_a) = compile_chip(1, &tensors, None);
+    let (starved_a, starved_bytes_a) = compile_chip(1, &tensors, Some(store.clone()));
+    assert_outputs_match(&starved_a, &plain_a);
+    assert_eq!(starved_bytes_a, bytes_a);
+    let (plain_b, bytes_b) = compile_chip(2, &tensors, None);
+    let (starved_b, starved_bytes_b) = compile_chip(2, &tensors, Some(store.clone()));
+    assert_outputs_match(&starved_b, &plain_b);
+    assert_eq!(starved_bytes_b, bytes_b);
+    assert!(
+        store.counters().evictions > 0,
+        "a 1-byte budget must evict at epoch boundaries"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fabric end-to-end (idioms shared with tests/net_fabric.rs).
+// ---------------------------------------------------------------------
+
+fn serve_opts(shard_min_weights: usize) -> ServeOptions {
+    let mut opts = CompileOptions::new(CFG, Method::Complete);
+    opts.threads = 2;
+    ServeOptions {
+        service: ServiceOptions {
+            opts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: None,
+            store_dir: None, // memory-only fleet store on the coordinator
+        },
+        shard_min_weights,
+        max_shards: 8,
+        worker_timeout: Duration::from_secs(30),
+    }
+}
+
+fn start_server(sopts: ServeOptions) -> (SocketAddr, thread::JoinHandle<FabricStats>) {
+    let server = FabricServer::bind("127.0.0.1:0", sopts).unwrap();
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn wait_for_workers(addr: SocketAddr, n: usize) {
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+    for _ in 0..600 {
+        if client.info().unwrap().workers as usize >= n {
+            return;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("{n} workers never registered with the fabric at {addr}");
+}
+
+fn local_reference(chip_seed: u64, tensors: &[(String, Vec<i64>)]) -> Vec<(String, CompiledTensor)> {
+    let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+    let mut session = CompileSession::builder(CFG).method(Method::Complete).chip(&chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    session.drain()
+}
+
+fn assert_results_match(got: &[TensorResult], want: &[(String, CompiledTensor)]) {
+    assert_eq!(got.len(), want.len(), "tensor count");
+    for (g, (name, w)) in got.iter().zip(want) {
+        assert_eq!(&g.name, name);
+        assert_eq!(g.errors, w.errors, "residual errors of {name}");
+        assert_eq!(g.decomps, w.decomps, "bitmaps of {name}");
+    }
+}
+
+#[test]
+fn fabric_reuses_worker_published_solutions_across_jobs() {
+    let tensors = model(2_000);
+    let (addr, server) = start_server(serve_opts(1)); // always fan out
+    let addr_s = addr.to_string();
+
+    // Phase 1: one worker solves chip 21 cold and publishes its tables.
+    let wa = addr_s.clone();
+    let w1 = thread::spawn(move || run_worker(&wa, 1).unwrap());
+    wait_for_workers(addr, 1);
+    let mut client = CompileClient::connect(&addr_s).unwrap();
+    let (r21, s21) = client.compile_model(21, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(s21.shards, 1);
+    assert_eq!(s21.workers, 1);
+    assert_results_match(&r21, &local_reference(21, &tensors));
+
+    // Phase 2: a second worker joins with an *empty* replica; chip 22's
+    // job fans out to both. Shared patterns are served by the fleet store
+    // — the first worker's replica, or the coordinator's copy over
+    // StoreGet — instead of being re-solved, and the output is still
+    // byte-identical to a store-less local compile.
+    let wb = addr_s.clone();
+    let w2 = thread::spawn(move || run_worker(&wb, 1).unwrap());
+    wait_for_workers(addr, 2);
+    let (r22, s22) = client.compile_model(22, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(s22.shards, 2, "2 idle workers => a 2-way plan");
+    assert_results_match(&r22, &local_reference(22, &tensors));
+
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+    let rep1 = w1.join().unwrap();
+    let rep2 = w2.join().unwrap();
+    assert!(
+        rep1.store_published > 0,
+        "the cold chip-21 job must publish fresh tables to the coordinator"
+    );
+    assert!(
+        rep1.store_hits + rep2.store_hits > 0,
+        "chip 22 must reuse fleet-store tables published during chip 21's job"
+    );
+    assert!(
+        rep2.store_published > 0 || rep2.store_hits > 0,
+        "the late worker participates in the store either way"
+    );
+}
