@@ -174,16 +174,24 @@ impl PatternRegistry {
         &self.cfg
     }
 
-    /// Intern one pattern, returning its class id.
+    /// Intern one pattern, returning its class id. The key is derived
+    /// once and handed down rather than recomputed inside the context
+    /// constructor.
     pub fn intern(&mut self, faults: &GroupFaults) -> PatternId {
-        let key = faults.pattern_key();
+        self.intern_with_key(faults, faults.pattern_key())
+    }
+
+    /// Intern one pattern whose key the caller already derived. The
+    /// parallel scan's merge path goes through here: thread-local scans
+    /// computed every key once, so the merge must not pay the derivation
+    /// again per distinct pattern.
+    pub fn intern_with_key(&mut self, faults: &GroupFaults, key: PatternKey) -> PatternId {
+        debug_assert_eq!(key, faults.pattern_key());
         if let Some(&id) = self.by_key.get(&key) {
             return id;
         }
         let id = self.ctxs.len as PatternId;
         self.by_key.insert(key, id);
-        // The key was just derived for the map probe — hand it down rather
-        // than recomputing it inside the context constructor.
         self.ctxs.push(PatternCtx::with_key(self.cfg, faults.clone(), key));
         id
     }

@@ -36,7 +36,7 @@ use super::pipeline::{
     decompose_one, decompose_with_ctx, solve_full_range, Method, Outcome, PipelineOptions,
     SolveTier, Stage, ALL_STAGES,
 };
-use crate::fault::GroupFaults;
+use crate::fault::{GroupFaults, PatternKey};
 use crate::grouping::{Decomposition, GroupConfig};
 use crate::ilp::IlpStats;
 use crate::util::fnv::FnvMap;
@@ -169,6 +169,11 @@ pub struct CompileStats {
     /// Number of weights with non-zero residual error.
     pub imperfect: usize,
     pub wall_secs: f64,
+    /// Wall seconds spent in the scan + dedupe phases (1+2), attributed
+    /// proportionally to tensor size. Unlike `wall_secs` this is a phase
+    /// bucket charged per batch, so both merge flavors sum it (like
+    /// solve-clock time, not like the compilation's own wall clock).
+    pub scan_secs: f64,
 }
 
 impl CompileStats {
@@ -226,13 +231,15 @@ impl CompileStats {
         self.ilp.lp_solves += other.ilp.lp_solves;
         self.total_abs_error += other.total_abs_error;
         self.imperfect += other.imperfect;
+        self.scan_secs += other.scan_secs;
     }
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "weights={} wall={:.3}s imperfect={} ({:.4}%) total|err|={} memo_hits={}\n",
+            "weights={} wall={:.3}s scan={:.3}s imperfect={} ({:.4}%) total|err|={} memo_hits={}\n",
             self.weights,
             self.wall_secs,
+            self.scan_secs,
             self.imperfect,
             100.0 * self.imperfect as f64 / self.weights.max(1) as f64,
             self.total_abs_error,
@@ -343,7 +350,7 @@ pub fn compile_batch_with_cache(
 /// ([`compile_batch_with_cache`]) and the sharded solve
 /// ([`super::CompileSession::solve_shard`]), which filters the fresh work
 /// to its pattern-id range before solving.
-pub(super) struct BatchScan {
+pub(crate) struct BatchScan {
     pub(super) per_tensor: Vec<CompileStats>,
     pub(super) tensor_pids: Vec<Vec<PatternId>>,
     /// Missing patterns in first-seen scan order, with the tensor index
@@ -358,18 +365,156 @@ pub(super) struct BatchScan {
     pub(super) tier: SolveTier,
 }
 
+/// Scan-phase work-stealing granularity: groups per stolen chunk. Large
+/// enough that per-chunk interner setup amortizes, small enough to keep
+/// threads balanced across tensors of uneven size. Chunk boundaries never
+/// affect output — the merge re-derives global first-seen order from
+/// stream order — so this is a pure throughput knob.
+const SCAN_CHUNK: usize = 4096;
+
+/// Stamp the scan phase's wall time into the per-tensor partial stats,
+/// attributed proportionally to tensor size (the same attribution rule
+/// the batch wall uses for non-solve overhead).
+fn stamp_scan_secs(per_tensor: &mut [CompileStats], jobs: &[TensorJob<'_>], secs: f64) {
+    let total: usize = jobs.iter().map(|j| j.weights.len()).sum();
+    if total == 0 {
+        return;
+    }
+    for (st, j) in per_tensor.iter_mut().zip(jobs) {
+        st.scan_secs = secs * j.weights.len() as f64 / total as f64;
+    }
+}
+
 /// Phases 1+2 per tensor, in batch order — scan: intern each group's
 /// fault pattern; dedupe: mark resident requests as hits, collect the
 /// fresh work (patterns or pairs, by tier) with the tensor that
 /// introduced each unit. Also starts the batch (pipeline binding, memory
 /// budget, LRU epoch) on the cache. `collect_pairs` forces per-pair
 /// collection on the `BatchTable` tier too (see [`BatchScan::fresh_pairs`]).
-pub(super) fn scan_batch(
+///
+/// The scan itself is parallel: pattern-key derivation and interning —
+/// the part that dominates on realistic fault maps — runs as chunk-local
+/// scans over [`parallel_work_steal`], and a sequential merge remaps
+/// chunk-local ids onto the canonical registry. Because the merge walks
+/// chunks in stream order and each chunk's distinct patterns are recorded
+/// in chunk-local first-seen order, canonical ids land in **global**
+/// first-seen order — so registry order, `fresh_patterns`/`fresh_pairs`
+/// order, and every stat are byte-identical to the sequential loop
+/// ([`scan_batch_reference`], property-pinned) at any thread count. The
+/// epoch-stateful dedupe against the [`SolveCache`] is inherently
+/// order-dependent and stays in the sequential tail.
+pub(crate) fn scan_batch(
     jobs: &[TensorJob<'_>],
     opts: &CompileOptions,
     cache: &mut SolveCache,
     collect_pairs: bool,
 ) -> BatchScan {
+    let threads = opts.threads.max(1);
+    let total: usize = jobs.iter().map(|j| j.faults.len()).sum();
+    if threads == 1 || total < 2 * SCAN_CHUNK {
+        // No parallelism to exploit — the reference loop *is* the scan.
+        return scan_batch_reference(jobs, opts, cache, collect_pairs);
+    }
+    let timer = Timer::start();
+    for j in jobs {
+        assert_eq!(j.weights.len(), j.faults.len(), "one fault map per weight group");
+    }
+    assert_eq!(*cache.registry.cfg(), opts.cfg, "solve cache bound to a different config");
+    cache.bind_pipeline(&opts.pipeline);
+    cache.set_table_memory_bytes(opts.table_memory_bytes);
+    cache.begin_batch();
+    let tier = opts.effective_tier();
+    let want_pairs = collect_pairs || tier == SolveTier::PerWeight;
+
+    // Phase 1a (parallel): each chunk derives its groups' pattern keys and
+    // interns them into a chunk-local table, recording each distinct
+    // pattern's key and first flat index — no allocation per group, no
+    // clone per pattern.
+    let flat: Vec<&GroupFaults> = jobs.iter().flat_map(|j| j.faults.iter()).collect();
+    struct ChunkScan {
+        /// Chunk-local pattern id per group, in stream order.
+        ids: Vec<u32>,
+        /// Distinct patterns in chunk-local first-seen order: derived key
+        /// plus the flat index of the first occurrence.
+        fresh: Vec<(PatternKey, usize)>,
+    }
+    let n_chunks = total.div_ceil(SCAN_CHUNK);
+    let chunks: Vec<ChunkScan> = parallel_work_steal(n_chunks, threads, 1, |c| {
+        let range = c * SCAN_CHUNK..((c + 1) * SCAN_CHUNK).min(total);
+        let mut local: FnvMap<PatternKey, u32> = FnvMap::default();
+        let mut ids = Vec::with_capacity(range.len());
+        let mut fresh: Vec<(PatternKey, usize)> = Vec::new();
+        for i in range {
+            let key = flat[i].pattern_key();
+            let next = fresh.len() as u32;
+            let id = *local.entry(key).or_insert_with(|| {
+                fresh.push((key, i));
+                next
+            });
+            ids.push(id);
+        }
+        ChunkScan { ids, fresh }
+    });
+
+    // Phase 1b (sequential merge): walk chunks in stream order, intern
+    // each chunk's distinct patterns into the canonical registry, then
+    // remap its chunk-local ids. Chunk-local first-seen order nested in
+    // chunk order *is* global stream first-seen order, so canonical ids
+    // match the sequential scan's exactly.
+    let mut pids: Vec<PatternId> = Vec::with_capacity(total);
+    let mut remap: Vec<PatternId> = Vec::new();
+    for c in &chunks {
+        remap.clear();
+        remap.extend(
+            c.fresh.iter().map(|&(key, i)| cache.registry.intern_with_key(flat[i], key)),
+        );
+        pids.extend(c.ids.iter().map(|&l| remap[l as usize]));
+    }
+    let mut tensor_pids: Vec<Vec<PatternId>> = Vec::with_capacity(jobs.len());
+    let mut off = 0;
+    for j in jobs {
+        let n = j.weights.len();
+        tensor_pids.push(pids[off..off + n].to_vec());
+        off += n;
+    }
+
+    // Phase 2 (sequential, order-dependent): the reference dedupe loop
+    // over the canonical ids, verbatim.
+    let mut per_tensor: Vec<CompileStats> = vec![CompileStats::default(); jobs.len()];
+    let mut batch_seen: FnvMap<(PatternId, i64), ()> = FnvMap::default();
+    let mut queued_patterns: FnvMap<PatternId, ()> = FnvMap::default();
+    let mut fresh_patterns: Vec<(PatternId, usize)> = Vec::new();
+    let mut fresh_pairs: Vec<(PatternId, i64, usize)> = Vec::new();
+    for (ti, j) in jobs.iter().enumerate() {
+        let st = &mut per_tensor[ti];
+        for (&pid, &w) in tensor_pids[ti].iter().zip(j.weights.iter()) {
+            if cache.touch(pid, w) || batch_seen.insert((pid, w), ()).is_some() {
+                st.dedup_hits += 1;
+                continue;
+            }
+            st.unique_pairs += 1;
+            if want_pairs {
+                fresh_pairs.push((pid, w, ti));
+            }
+            if tier == SolveTier::BatchTable && queued_patterns.insert(pid, ()).is_none() {
+                fresh_patterns.push((pid, ti));
+            }
+        }
+    }
+    stamp_scan_secs(&mut per_tensor, jobs, timer.secs());
+    BatchScan { per_tensor, tensor_pids, fresh_patterns, fresh_pairs, tier }
+}
+
+/// The sequential scan loop — the equivalence baseline [`scan_batch`] is
+/// property-tested against (same pattern as `diff_table_reference`), and
+/// the path small batches and single-thread runs take outright.
+pub(crate) fn scan_batch_reference(
+    jobs: &[TensorJob<'_>],
+    opts: &CompileOptions,
+    cache: &mut SolveCache,
+    collect_pairs: bool,
+) -> BatchScan {
+    let timer = Timer::start();
     for j in jobs {
         assert_eq!(j.weights.len(), j.faults.len(), "one fault map per weight group");
     }
@@ -404,6 +549,7 @@ pub(super) fn scan_batch(
         }
         tensor_pids.push(pids);
     }
+    stamp_scan_secs(&mut per_tensor, jobs, timer.secs());
     BatchScan { per_tensor, tensor_pids, fresh_patterns, fresh_pairs, tier }
 }
 
@@ -932,6 +1078,63 @@ mod tests {
             assert_eq!(f_new, f_old);
             assert_eq!(c_new.decomps, c_old.decomps);
             assert_eq!(c_new.errors, c_old.errors);
+        }
+    }
+
+    /// Tentpole property: the parallel scan is byte-identical to the
+    /// sequential reference — registry order, per-group ids, fresh-work
+    /// order, and dedupe stats — at every thread count, on both tiers,
+    /// cold and warm.
+    #[test]
+    fn parallel_scan_matches_reference_at_any_thread_count() {
+        for cfg in [GroupConfig::R2C2, GroupConfig::R1C4] {
+            let chip = ChipFaults::new(31, FaultRates::paper_default());
+            let ws0 = random_weights(9_000, cfg.max_per_array(), 101);
+            let ws1 = random_weights(5_000, cfg.max_per_array(), 102);
+            let ws2 = random_weights(9_000, cfg.max_per_array(), 103);
+            let f0 = chip.sample_tensor(0, ws0.len(), cfg.cells());
+            let f1 = chip.sample_tensor(1, ws1.len(), cfg.cells());
+            let f2 = chip.sample_tensor(2, ws2.len(), cfg.cells());
+            let jobs = [
+                TensorJob { weights: &ws0, faults: &f0 },
+                TensorJob { weights: &ws1, faults: &f1 },
+            ];
+            let jobs2 = [TensorJob { weights: &ws2, faults: &f2 }];
+            for tier in [SolveTier::BatchTable, SolveTier::PerWeight] {
+                for collect_pairs in [false, true] {
+                    for threads in [1usize, 4, 8] {
+                        let mut ropts = CompileOptions::new(cfg, Method::Complete);
+                        ropts.threads = 1;
+                        ropts.tier = tier;
+                        let mut popts = ropts.clone();
+                        popts.threads = threads;
+                        let mut rcache = SolveCache::new(cfg);
+                        let mut pcache = SolveCache::new(cfg);
+                        // Cold batch, then a second batch over the now
+                        // warm registry/epoch state.
+                        for jb in [&jobs[..], &jobs2[..]] {
+                            let r = scan_batch_reference(jb, &ropts, &mut rcache, collect_pairs);
+                            let p = scan_batch(jb, &popts, &mut pcache, collect_pairs);
+                            let why = format!(
+                                "cfg={cfg:?} tier={tier:?} pairs={collect_pairs} threads={threads}"
+                            );
+                            assert_eq!(p.tensor_pids, r.tensor_pids, "{why}");
+                            assert_eq!(p.fresh_patterns, r.fresh_patterns, "{why}");
+                            assert_eq!(p.fresh_pairs, r.fresh_pairs, "{why}");
+                            assert_eq!(p.tier, r.tier, "{why}");
+                            for (a, b) in p.per_tensor.iter().zip(&r.per_tensor) {
+                                assert_eq!(a.unique_pairs, b.unique_pairs, "{why}");
+                                assert_eq!(a.dedup_hits, b.dedup_hits, "{why}");
+                            }
+                            assert_eq!(pcache.registry.len(), rcache.registry.len(), "{why}");
+                            assert!(
+                                pcache.registry.patterns().eq(rcache.registry.patterns()),
+                                "registry first-seen order diverged: {why}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -286,6 +286,70 @@ pub(crate) fn read_pattern_solution(
     Ok((pattern, solution))
 }
 
+/// Registry snapshot magic, "RCRG" big-endian.
+pub(crate) const SNAPSHOT_MAGIC: u32 = 0x5243_5247;
+pub(crate) const SNAPSHOT_VERSION: u32 = 1;
+
+/// Serialize a post-scan pattern registry ("RCRG" v1): canonical pattern
+/// fault bytes in id order under the shared cache-key header, sealed with
+/// the trailing FNV-1a checksum. Layout: `magic u32 · version u32 ·
+/// cache key ([`write_key`]) · n_patterns u32 · n × (pos cells · neg
+/// cells, one [`FaultState`] byte each) · checksum u64`. Re-interning the
+/// decoded patterns in order reproduces the coordinator's pattern ids
+/// exactly — that contract is what lets a fabric worker rebuild the
+/// registry without the tensor set or a re-scan
+/// ([`super::CompileSession::solve_shard_from_snapshot`]).
+pub(crate) fn encode_registry_snapshot(
+    key: &CacheKey,
+    registry: &super::classes::PatternRegistry,
+) -> Vec<u8> {
+    debug_assert_eq!(*registry.cfg(), key.cfg);
+    let cells = key.cells();
+    let n = registry.len();
+    let mut buf = Vec::with_capacity(58 + 4 + n * 2 * cells + 8);
+    push_u32(&mut buf, SNAPSHOT_MAGIC);
+    push_u32(&mut buf, SNAPSHOT_VERSION);
+    write_key(&mut buf, key);
+    push_u32(&mut buf, n as u32);
+    for p in registry.patterns() {
+        debug_assert_eq!(p.pos.len(), cells);
+        for f in p.pos.iter().chain(&p.neg) {
+            buf.push(*f as u8);
+        }
+    }
+    seal(buf)
+}
+
+/// Parse and validate an "RCRG" v1 registry snapshot (see
+/// [`encode_registry_snapshot`]). The checksum is verified before any
+/// parsing; the byte count must agree exactly with the declared pattern
+/// count. Duplicate patterns are not rejected here — the re-interning
+/// consumer catches them as a non-sequential id.
+pub(crate) fn decode_registry_snapshot(bytes: &[u8]) -> Result<(CacheKey, Vec<GroupFaults>)> {
+    let payload = unseal(bytes)?;
+    let mut r = Reader::new(payload);
+    if r.u32()? != SNAPSHOT_MAGIC {
+        bail!("not a registry snapshot (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != SNAPSHOT_VERSION {
+        bail!("unsupported registry snapshot version {version} (expected {SNAPSHOT_VERSION})");
+    }
+    let key = read_key(&mut r)?;
+    let cells = key.cells();
+    let n = r.u32()? as usize;
+    if r.remaining() != n * 2 * cells {
+        bail!("registry snapshot size disagrees with its pattern count");
+    }
+    let mut patterns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = r.fault_states(cells)?;
+        let neg = r.fault_states(cells)?;
+        patterns.push(GroupFaults { pos, neg });
+    }
+    Ok((key, patterns))
+}
+
 /// Bounds-checked little-endian reader over a sealed payload.
 pub(crate) struct Reader<'a> {
     buf: &'a [u8],
@@ -351,6 +415,57 @@ mod tests {
         }
         assert!(unseal(&sealed[..sealed.len() - 1]).is_err());
         assert!(unseal(&[]).is_err());
+    }
+
+    #[test]
+    fn registry_snapshot_roundtrip_and_rejection() {
+        use super::super::classes::PatternRegistry;
+
+        let cfg = GroupConfig::R2C2;
+        let chip = ChipFaults::new(9, FaultRates::paper_default());
+        let key = CacheKey::new(&chip, cfg, PipelineOptions::default());
+        let mut registry = PatternRegistry::new(cfg);
+        let faults = chip.sample_tensor(0, 400, cfg.cells());
+        registry.intern_all(&faults);
+        assert!(registry.len() > 1);
+
+        let bytes = encode_registry_snapshot(&key, &registry);
+        let (back_key, patterns) = decode_registry_snapshot(&bytes).unwrap();
+        assert_eq!(back_key, key);
+        assert_eq!(patterns.len(), registry.len());
+        assert!(registry.patterns().eq(patterns.iter()), "id order must round-trip");
+        // Re-interning reproduces the same ids.
+        let mut rebuilt = PatternRegistry::new(cfg);
+        for (i, p) in patterns.iter().enumerate() {
+            assert_eq!(rebuilt.intern(p) as usize, i);
+        }
+
+        // Corruption anywhere (including the checksum) is rejected.
+        for i in (0..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x20;
+            assert!(decode_registry_snapshot(&bad).is_err(), "flip at {i} must be rejected");
+        }
+        // Truncation at every prefix is rejected.
+        for len in [0, 8, 15, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_registry_snapshot(&bytes[..len]).is_err());
+        }
+        // Wrong magic / unsupported version (re-sealed so the checksum
+        // passes and the header check itself fires).
+        let payload = unseal(&bytes).unwrap().to_vec();
+        let mut wrong_magic = payload.clone();
+        wrong_magic[0] ^= 1;
+        let err = decode_registry_snapshot(&seal(wrong_magic)).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        let mut wrong_version = payload.clone();
+        wrong_version[4] = 99;
+        let err = decode_registry_snapshot(&seal(wrong_version)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // Declared count disagreeing with the byte count is rejected.
+        let mut short_count = payload;
+        let count_at = 8 + 50; // magic + version + cache key
+        short_count[count_at] = short_count[count_at].wrapping_sub(1);
+        assert!(decode_registry_snapshot(&seal(short_count)).is_err());
     }
 
     #[test]

@@ -65,11 +65,13 @@
 //! ```
 
 use super::classes::{PatternId, PatternSolution};
-use super::compiler::{scan_batch, solve_fresh, TensorJob};
+use super::compiler::{scan_batch, solve_fresh, BatchScan, CompileStats, TensorJob};
 use super::persist::{
-    push_u32, read_key, read_pattern_solution, seal, table_len, unseal, write_key,
-    write_pattern_solution, CacheKey, Reader,
+    decode_registry_snapshot, encode_registry_snapshot, push_u32, read_key,
+    read_pattern_solution, seal, table_len, unseal, write_key, write_pattern_solution, CacheKey,
+    Reader,
 };
+use super::pipeline::SolveTier;
 use super::session::CompileSession;
 use crate::fault::GroupFaults;
 use anyhow::{anyhow, bail, Context, Result};
@@ -370,6 +372,167 @@ impl CompileSession {
         }
         Ok(ShardFragment {
             key: CacheKey::new(&chip, self.opts.cfg, pipeline),
+            shard: shard as u32,
+            shards: plan.shards() as u32,
+            n_patterns: n_patterns as u32,
+            start: range.start as u32,
+            parts,
+        })
+    }
+
+    /// Scan + intern every queued tensor — **without** consuming the
+    /// queue — and serialize the resulting pattern registry as a sealed
+    /// "RCRG" v1 snapshot (see
+    /// [`CompileSession::solve_shard_from_snapshot`] for the consuming
+    /// side). This is the coordinator half of the snapshot shard path:
+    /// one scan here replaces K per-worker re-scans of the full tensor
+    /// set, and the snapshot (a few bytes per distinct pattern) replaces
+    /// the tensor set in every shard-job payload. The session keeps its
+    /// queue so the same tensors can be [`CompileSession::drain`]ed after
+    /// the shard fragments merge back in.
+    pub fn scan_to_snapshot(&mut self) -> Result<Vec<u8>> {
+        let chip = self
+            .chip
+            .clone()
+            .ok_or_else(|| anyhow!("detached session has no chip to snapshot"))?;
+        if self.cache.is_none() {
+            bail!("legacy (dedupe = off) session cannot snapshot its registry");
+        }
+        let cells = self.opts.cfg.cells();
+        if cells == 0 || cells > 16 {
+            bail!(
+                "config {} has {cells} cells per array; registry snapshots support at most 16",
+                self.opts.cfg
+            );
+        }
+        if self.queue.is_empty() {
+            bail!("no tensors queued — submit() the tensor set before scan_to_snapshot()");
+        }
+        let all_faults: Vec<Vec<GroupFaults>> = self
+            .queue
+            .iter()
+            .map(|q| chip.sample_tensor(q.tensor_id, q.weights.len(), cells))
+            .collect();
+        let jobs: Vec<TensorJob<'_>> = self
+            .queue
+            .iter()
+            .zip(&all_faults)
+            .map(|(q, f)| TensorJob { weights: &q.weights, faults: f })
+            .collect();
+        let cache = self.cache.as_mut().expect("checked above");
+        scan_batch(&jobs, &self.opts, cache, false);
+        let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let key = CacheKey::new(&chip, self.opts.cfg, pipeline);
+        Ok(encode_registry_snapshot(&key, &cache.registry))
+    }
+
+    /// Run shard `shard` of `plan` from a registry snapshot instead of
+    /// the tensor set: rebuild the coordinator's pattern registry by
+    /// re-interning the snapshot's patterns in id order (reproducing the
+    /// exact ids the coordinator assigned), then batch-solve every
+    /// pattern in this shard's range. Per-shard cost is O(in-range
+    /// patterns) — no tensors shipped, no full re-scan — and on a cold
+    /// session the fragment is byte-identical to what
+    /// [`CompileSession::solve_shard`] produces from the full tensor set
+    /// (pinned by `tests/sharding.rs` and the fabric e2e suite).
+    ///
+    /// Only the [`SolveTier::BatchTable`] tier is supported: per-weight
+    /// fresh work is (pattern, weight) pairs, which a registry snapshot
+    /// deliberately does not carry.
+    ///
+    /// ```
+    /// use rchg::coordinator::{CompileSession, ShardPlan};
+    /// use rchg::fault::bank::ChipFaults;
+    /// use rchg::fault::FaultRates;
+    /// use rchg::grouping::GroupConfig;
+    ///
+    /// let cfg = GroupConfig::R2C2;
+    /// let chip = ChipFaults::new(3, FaultRates::paper_default());
+    /// let weights: Vec<i64> = (0..256).map(|i| (i % 61) - 30).collect();
+    ///
+    /// // The coordinator scans once and ships the registry, not the tensors.
+    /// let mut coord = CompileSession::builder(cfg).chip(&chip);
+    /// coord.submit("fc", weights.clone());
+    /// let snapshot = coord.scan_to_snapshot().unwrap();
+    ///
+    /// let plan = ShardPlan::new(2);
+    /// let fragments: Vec<_> = (0..2)
+    ///     .map(|k| {
+    ///         // Workers never see `weights`.
+    ///         let mut worker = CompileSession::builder(cfg).chip(&chip);
+    ///         worker.solve_shard_from_snapshot(&snapshot, &plan, k).unwrap()
+    ///     })
+    ///     .collect();
+    /// let mut merged = CompileSession::from_fragments(&fragments).unwrap();
+    /// let got = merged.compile_tensor("fc", &weights);
+    /// assert_eq!(got.stats.unique_pairs, 0, "merged cache answers everything");
+    /// ```
+    pub fn solve_shard_from_snapshot(
+        &mut self,
+        snapshot: &[u8],
+        plan: &ShardPlan,
+        shard: usize,
+    ) -> Result<ShardFragment> {
+        if shard >= plan.shards() {
+            bail!("shard {shard} out of range for a {}-way plan", plan.shards());
+        }
+        let chip = self
+            .chip
+            .clone()
+            .ok_or_else(|| anyhow!("detached session cannot shard-solve from a snapshot"))?;
+        let cache = self.cache.as_mut().ok_or_else(|| {
+            anyhow!("legacy (dedupe = off) session cannot shard-solve from a snapshot")
+        })?;
+        if self.opts.effective_tier() != SolveTier::BatchTable {
+            bail!(
+                "snapshot shard-solve requires the full-range table tier \
+                 (per-weight fresh work needs the tensor set — use solve_shard)"
+            );
+        }
+        let (key, patterns) = decode_registry_snapshot(snapshot)?;
+        let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
+        let own = CacheKey::new(&chip, self.opts.cfg, pipeline);
+        if let Some(why) = own.mismatch(&key) {
+            bail!("registry snapshot does not belong to this session: {why}");
+        }
+        // Start the batch exactly like a scan would, then rebuild the
+        // registry in snapshot id order (the codec's re-intern contract).
+        cache.bind_pipeline(&self.opts.pipeline);
+        cache.set_table_memory_bytes(self.opts.table_memory_bytes);
+        cache.begin_batch();
+        for (i, p) in patterns.iter().enumerate() {
+            if cache.registry.intern(p) as usize != i {
+                bail!("registry snapshot pattern {i} is a duplicate");
+            }
+        }
+        let n_patterns = patterns.len();
+        let range = plan.range(shard, n_patterns);
+
+        // Every in-range pattern is this shard's fresh work: snapshots
+        // are shipped for cold rounds, where the tensor path would mark
+        // each of them fresh too. All solve work is charged to one
+        // pseudo-tensor — there are no per-tensor stats without tensors.
+        let mut scan = BatchScan {
+            per_tensor: vec![CompileStats::default()],
+            tensor_pids: Vec::new(),
+            fresh_patterns: range.clone().map(|pid| (pid as PatternId, 0)).collect(),
+            fresh_pairs: Vec::new(),
+            tier: SolveTier::BatchTable,
+        };
+        let solve_secs = solve_fresh(&mut scan, &self.opts, cache);
+        let parts: Vec<(GroupFaults, Option<PatternSolution>)> = range
+            .clone()
+            .map(|pid| {
+                let pid = pid as PatternId;
+                let pattern = cache.registry.ctx(pid).faults.clone();
+                (pattern, cache.solution_if_current(pid).cloned())
+            })
+            .collect();
+        let mut st = scan.per_tensor.pop().expect("one pseudo-tensor");
+        st.wall_secs = solve_secs[0];
+        self.stats.merge_with_wall(&st);
+        Ok(ShardFragment {
+            key: own,
             shard: shard as u32,
             shards: plan.shards() as u32,
             n_patterns: n_patterns as u32,

@@ -2,8 +2,10 @@
 //!
 //! Runs a fixed, seeded workload suite — cold/warm compile throughput on
 //! ResNet-20-shaped tensors, dedupe ratio, `DiffTable` builds/s (vectorized
-//! vs scalar reference), shard merge time, and a localhost fabric
-//! round-trip — and emits a schema-stable JSON report. The report for
+//! vs scalar reference), batch-scan throughput (parallel vs sequential
+//! reference, plus "RCRG" registry-snapshot codec rates), shard merge
+//! time, and a localhost fabric round-trip — and emits a schema-stable
+//! JSON report. The report for
 //! PR *n* is committed at the repo root as `BENCH_<n>.json`, so the perf
 //! trajectory across PRs is a diffable artifact; CI runs the same suite
 //! with `--quick` on every push and uploads the result.
@@ -22,9 +24,10 @@
 //! [`compile_sample`]) so the two never drift apart.
 
 use super::compile_time::synthetic_model_tensors;
-use crate::coordinator::compiler::dedup_ratio_of;
+use crate::coordinator::compiler::{dedup_ratio_of, scan_batch, scan_batch_reference, TensorJob};
+use crate::coordinator::persist::{decode_registry_snapshot, encode_registry_snapshot, CacheKey};
 use crate::coordinator::{
-    CompileOptions, CompileSession, Method, ServiceOptions, ShardPlan, TableBudget,
+    CompileOptions, CompileSession, Method, ServiceOptions, ShardPlan, SolveCache, TableBudget,
 };
 use crate::decompose::GroupTables;
 use crate::fault::bank::ChipFaults;
@@ -247,6 +250,35 @@ fn difftable_fields(m: Option<&DiffTableMeasurement>) -> Vec<(&'static str, Json
     ]
 }
 
+struct ScanMeasurement {
+    groups: usize,
+    patterns: usize,
+    reference_secs: f64,
+    parallel_secs: f64,
+    /// Threads the parallel side ran with (host parallelism capped at 8;
+    /// the reference is sequential by definition).
+    scan_threads: usize,
+    snapshot_bytes: usize,
+    encode_secs: f64,
+    decode_secs: f64,
+}
+
+fn scan_fields(m: Option<&ScanMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    let mib = (1usize << 20) as f64;
+    vec![
+        ("groups", f(m.map(|m| m.groups as f64))),
+        ("patterns", f(m.map(|m| m.patterns as f64))),
+        ("scan_threads", f(m.map(|m| m.scan_threads as f64))),
+        ("reference_groups_per_sec", f(m.map(|m| per_sec(m.groups, m.reference_secs)))),
+        ("parallel_groups_per_sec", f(m.map(|m| per_sec(m.groups, m.parallel_secs)))),
+        ("speedup", f(m.map(|m| m.reference_secs / m.parallel_secs.max(1e-12)))),
+        ("snapshot_bytes", f(m.map(|m| m.snapshot_bytes as f64))),
+        ("snapshot_encode_mb_per_sec", f(m.map(|m| per_sec(m.snapshot_bytes, m.encode_secs) / mib))),
+        ("snapshot_decode_mb_per_sec", f(m.map(|m| per_sec(m.snapshot_bytes, m.decode_secs) / mib))),
+    ]
+}
+
 struct ShardMergeMeasurement {
     shards: usize,
     patterns: usize,
@@ -382,6 +414,64 @@ fn run_difftable(cfg: GroupConfig, o: &BenchOptions) -> DiffTableMeasurement {
     }
 }
 
+/// Batch-scan throughput over the seeded model: the parallel chunked
+/// scan vs the sequential reference (same canonical output — the
+/// equivalence is property-tested in `coordinator::compiler`), plus the
+/// "RCRG" registry-snapshot codec's encode/decode rates over the
+/// registry that scan produced. Every iteration scans cold (fresh
+/// `SolveCache`), since a warm scan is pure dedupe and measures nothing.
+fn run_scan(cfg: GroupConfig, o: &BenchOptions) -> Result<ScanMeasurement> {
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.compile_limit)?;
+    let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
+    let faults: Vec<Vec<GroupFaults>> = tensors
+        .iter()
+        .enumerate()
+        .map(|(i, (_, ws))| chip.sample_tensor(i as u64, ws.len(), cfg.cells()))
+        .collect();
+    let jobs: Vec<TensorJob<'_>> = tensors
+        .iter()
+        .zip(&faults)
+        .map(|((_, ws), fs)| TensorJob { weights: ws, faults: fs })
+        .collect();
+    let groups: usize = tensors.iter().map(|(_, ws)| ws.len()).sum();
+
+    let ref_opts = CompileOptions::new(cfg, Method::Complete);
+    let scan_threads = thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    let mut par_opts = ref_opts.clone();
+    par_opts.threads = scan_threads;
+
+    let reference = bench("scan-reference", 3, o.min_time_s, || {
+        let mut cache = SolveCache::new(cfg);
+        black_box(scan_batch_reference(&jobs, &ref_opts, &mut cache, false));
+    });
+    let parallel = bench("scan-parallel", 3, o.min_time_s, || {
+        let mut cache = SolveCache::new(cfg);
+        black_box(scan_batch(&jobs, &par_opts, &mut cache, false));
+    });
+
+    let mut cache = SolveCache::new(cfg);
+    scan_batch_reference(&jobs, &ref_opts, &mut cache, false);
+    let patterns = cache.registry.len();
+    let key = CacheKey::new(&chip, cfg, ref_opts.pipeline);
+    let snapshot = encode_registry_snapshot(&key, &cache.registry);
+    let encode = bench("snapshot-encode", 3, o.min_time_s, || {
+        black_box(encode_registry_snapshot(&key, &cache.registry));
+    });
+    let decode = bench("snapshot-decode", 3, o.min_time_s, || {
+        black_box(decode_registry_snapshot(&snapshot).expect("snapshot decodes"));
+    });
+    Ok(ScanMeasurement {
+        groups,
+        patterns,
+        reference_secs: reference.mean_s,
+        parallel_secs: parallel.mean_s,
+        scan_threads,
+        snapshot_bytes: snapshot.len(),
+        encode_secs: encode.mean_s,
+        decode_secs: decode.mean_s,
+    })
+}
+
 /// Solve the model in K pattern-range shards, then time reassembling the
 /// fragments into one warm session.
 fn run_shard_merge(cfg: GroupConfig, o: &BenchOptions) -> Result<ShardMergeMeasurement> {
@@ -431,6 +521,7 @@ fn run_fabric(o: &BenchOptions) -> Result<FabricMeasurement> {
         shard_min_weights: 1, // always fan out, so the trip is end-to-end
         max_shards: 8,
         worker_timeout: Duration::from_secs(60),
+        snapshot_dispatch: true,
     };
     let server = FabricServer::bind("127.0.0.1:0", sopts)?;
     let addr = server.local_addr().to_string();
@@ -517,6 +608,10 @@ pub fn run(o: &BenchOptions, quick: bool, pr: usize) -> Result<Json> {
         workloads
             .push((cfg_key("difftable", &cfg), workload_obj(difftable_fields(Some(&m)))));
     }
+    for cfg in BENCH_CONFIGS {
+        let m = run_scan(cfg, o)?;
+        workloads.push((cfg_key("scan", &cfg), workload_obj(scan_fields(Some(&m)))));
+    }
     let m = run_shard_merge(GroupConfig::R2C2, o)?;
     workloads.push(("shard_merge_r2c2".to_string(), workload_obj(shard_merge_fields(Some(&m)))));
     let fabric = if o.fabric {
@@ -540,6 +635,9 @@ pub fn skeleton(pr: usize) -> Json {
     }
     for cfg in BENCH_CONFIGS {
         workloads.push((cfg_key("difftable", &cfg), workload_obj(difftable_fields(None))));
+    }
+    for cfg in BENCH_CONFIGS {
+        workloads.push((cfg_key("scan", &cfg), workload_obj(scan_fields(None))));
     }
     workloads.push(("shard_merge_r2c2".to_string(), workload_obj(shard_merge_fields(None))));
     workloads.push(("fabric_roundtrip".to_string(), workload_obj(fabric_fields(None))));
@@ -639,7 +737,15 @@ mod tests {
 
     #[test]
     fn timing_field_classifier() {
-        for t in ["cold_secs", "merge_secs", "weights_per_sec", "builds_per_sec", "speedup"] {
+        for t in [
+            "cold_secs",
+            "merge_secs",
+            "weights_per_sec",
+            "builds_per_sec",
+            "speedup",
+            "parallel_groups_per_sec",
+            "snapshot_encode_mb_per_sec",
+        ] {
             assert!(is_timing_field(t), "{t} must be a timing field");
         }
         for d in [
@@ -650,6 +756,8 @@ mod tests {
             "fresh_solves",
             "store_cold_hit_rate",
             "store_warm_hit_rate",
+            "snapshot_bytes",
+            "scan_threads",
         ] {
             assert!(!is_timing_field(d), "{d} must be deterministic");
         }

@@ -144,6 +144,11 @@ pub struct CompileTimeRow {
     pub sampled_weights: usize,
     pub total_weights: usize,
     pub measured_secs: f64,
+    /// Seconds the measured run spent in the scan + dedupe phases
+    /// (from [`crate::coordinator::CompileStats::scan_secs`]) — the part
+    /// the parallel batch scan attacks; the rest of `measured_secs` is
+    /// solve + scatter.
+    pub scan_secs: f64,
     /// Linear extrapolation to the full model.
     pub full_secs: f64,
     /// Dedup-aware extrapolation: solve time scaled by the fitted
@@ -272,6 +277,7 @@ pub fn measure_with_store(
         sampled_weights: ws.len(),
         total_weights,
         measured_secs: measured,
+        scan_secs: out.stats.scan_secs,
         full_secs: full,
         full_secs_dedup,
         predicted_pairs_full,
@@ -476,6 +482,9 @@ mod tests {
         assert_eq!(r.unique_pairs + r.dedup_hits, r.sampled_weights);
         assert!(r.unique_patterns > 0);
         assert!(r.dedup_ratio() > 1.0, "R2C2 at 5k weights must dedupe");
+        // The scan-phase clock is populated and bounded by the wall.
+        assert!(r.scan_secs > 0.0, "scan_secs must be stamped");
+        assert!(r.scan_secs <= r.measured_secs + 1e-9);
     }
 
     #[test]

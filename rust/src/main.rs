@@ -198,7 +198,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("threads", "solver threads for the compile/shard workloads", Some("1"))
                 .opt("no-fabric", "skip the localhost fabric round-trip workload", None)
                 .opt("out", "also write the JSON report to this path", None)
-                .opt("pr", "PR number stamped into the report", Some("7"))
+                .opt("pr", "PR number stamped into the report", Some("8"))
                 .opt("check", "validate an existing report file against the schema, then exit", None);
             let args = cli.parse(rest);
             if let Some(path) = args.get("check") {
@@ -216,7 +216,7 @@ fn main() -> anyhow::Result<()> {
             if args.get_bool("no-fabric") {
                 o.fabric = false;
             }
-            let doc = bench::run(&o, quick, args.get_usize("pr", 7))?;
+            let doc = bench::run(&o, quick, args.get_usize("pr", 8))?;
             if let Some(path) = args.get("out") {
                 std::fs::write(path, doc.pretty() + "\n")?;
                 eprintln!("bench report written to {path}");
@@ -441,6 +441,11 @@ fn main() -> anyhow::Result<()> {
                     "worker-timeout-secs",
                     "seconds before a silent worker's range is reassigned",
                     Some("600"),
+                )
+                .opt(
+                    "tensor-jobs",
+                    "ship tensor sets to workers instead of sealed registry snapshots",
+                    None,
                 );
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
@@ -462,6 +467,7 @@ fn main() -> anyhow::Result<()> {
                 worker_timeout: std::time::Duration::from_secs(
                     args.get_u64("worker-timeout-secs", 600).max(1),
                 ),
+                snapshot_dispatch: !args.get_bool("tensor-jobs"),
             };
             let server = FabricServer::bind(args.get_str("listen", "127.0.0.1:7077"), sopts)?;
             println!(
@@ -474,10 +480,11 @@ fn main() -> anyhow::Result<()> {
             );
             let stats = server.run()?;
             println!(
-                "fabric stopped: {} jobs ({} distributed), {} workers joined, \
-                 {} shard ranges dispatched, {} reassigned after worker loss",
+                "fabric stopped: {} jobs ({} distributed, {} via registry snapshots), \
+                 {} workers joined, {} shard ranges dispatched, {} reassigned after worker loss",
                 stats.jobs,
                 stats.distributed_jobs,
+                stats.snapshot_rounds,
                 stats.workers_joined,
                 stats.shards_dispatched,
                 stats.reassignments,

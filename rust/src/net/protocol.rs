@@ -97,6 +97,11 @@ pub enum FrameType {
     /// entries — the coordinator's reply to a `StoreGet`, and a
     /// worker's unsolicited publish of freshly solved patterns.
     StorePut,
+    /// Server → worker: solve one shard range from a sealed "RCRG"
+    /// registry snapshot instead of the tensor set (payload: shard ·
+    /// shards · snapshot bytes). The snapshot-path replacement for
+    /// `ShardJob` on table-tier rounds.
+    ShardSnapshotJob,
 }
 
 impl FrameType {
@@ -118,6 +123,7 @@ impl FrameType {
             FrameType::Error => 13,
             FrameType::StoreGet => 14,
             FrameType::StorePut => 15,
+            FrameType::ShardSnapshotJob => 16,
         }
     }
 
@@ -138,6 +144,7 @@ impl FrameType {
             13 => FrameType::Error,
             14 => FrameType::StoreGet,
             15 => FrameType::StorePut,
+            16 => FrameType::ShardSnapshotJob,
             _ => return None,
         })
     }
@@ -402,6 +409,43 @@ pub fn decode_shard_job(payload: &[u8]) -> Result<ShardJobSpec> {
     })
 }
 
+/// A snapshot-path shard-solve assignment, decoded from the wire: the
+/// shard coordinates plus the coordinator's sealed "RCRG" registry
+/// snapshot, verbatim. The snapshot carries its own cache-key header and
+/// checksum, so identity validation happens in the RCRG decoder — this
+/// codec only frames it.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshotJobSpec {
+    /// 0-based shard index within the plan.
+    pub shard: u32,
+    /// Total shards in the plan.
+    pub shards: u32,
+    /// Sealed "RCRG" v1 registry snapshot bytes.
+    pub snapshot: Vec<u8>,
+}
+
+pub fn encode_shard_snapshot_job(shard: u32, shards: u32, snapshot: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + snapshot.len());
+    push_u32(&mut buf, shard);
+    push_u32(&mut buf, shards);
+    buf.extend_from_slice(snapshot);
+    buf
+}
+
+pub fn decode_shard_snapshot_job(payload: &[u8]) -> Result<ShardSnapshotJobSpec> {
+    let mut r = Reader::new(payload);
+    let shard = r.u32()?;
+    let shards = r.u32()?;
+    if shards == 0 || shard >= shards {
+        bail!("bad shard assignment {shard} of {shards} in snapshot shard job");
+    }
+    let snapshot = r.bytes(r.remaining())?.to_vec();
+    if snapshot.is_empty() {
+        bail!("snapshot shard job carries no registry snapshot");
+    }
+    Ok(ShardSnapshotJobSpec { shard, shards, snapshot })
+}
+
 /// One compiled tensor streamed back to the client: the decomposition
 /// bitmaps and residual error per weight, plus the fresh solve work this
 /// tensor triggered server-side (0 on a warm cache).
@@ -654,7 +698,7 @@ mod tests {
 
     #[test]
     fn frame_roundtrip_every_type() {
-        for t in (1..=15).filter_map(FrameType::from_code) {
+        for t in (1..=16).filter_map(FrameType::from_code) {
             let payload = vec![0xAB; 37];
             let bytes = frame_bytes(t, &payload);
             let frame = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
@@ -774,6 +818,22 @@ mod tests {
             &tensors,
         );
         assert!(decode_shard_job(&bad).is_err());
+    }
+
+    #[test]
+    fn shard_snapshot_job_roundtrip_and_rejection() {
+        let snapshot = vec![0x52u8, 0x43, 0x52, 0x47, 1, 2, 3, 4, 5];
+        let payload = encode_shard_snapshot_job(2, 4, &snapshot);
+        let spec = decode_shard_snapshot_job(&payload).unwrap();
+        assert_eq!((spec.shard, spec.shards), (2, 4));
+        assert_eq!(spec.snapshot, snapshot);
+        // A shard index outside the plan is rejected.
+        assert!(decode_shard_snapshot_job(&encode_shard_snapshot_job(4, 4, &snapshot)).is_err());
+        assert!(decode_shard_snapshot_job(&encode_shard_snapshot_job(0, 0, &snapshot)).is_err());
+        // An empty snapshot body is rejected.
+        assert!(decode_shard_snapshot_job(&encode_shard_snapshot_job(0, 2, &[])).is_err());
+        // Truncation inside the shard header is rejected.
+        assert!(decode_shard_snapshot_job(&payload[..6]).is_err());
     }
 
     #[test]

@@ -29,13 +29,14 @@
 
 use super::protocol::{
     decode_chip_seed, decode_compile_request, decode_error, decode_hello, decode_store_get,
-    decode_store_put, encode_info, encode_shard_job, encode_store_put, encode_summary,
-    encode_tensor_result, read_frame, write_frame, CompileRequest, FabricInfo, FabricSummary,
-    Frame, FrameType, TensorResult,
+    decode_store_put, encode_info, encode_shard_job, encode_shard_snapshot_job, encode_store_put,
+    encode_summary, encode_tensor_result, read_frame, write_frame, CompileRequest, FabricInfo,
+    FabricSummary, Frame, FrameType, TensorResult,
 };
 use crate::coordinator::persist::CacheKey;
 use crate::coordinator::{
     CompileOptions, CompileService, CompileSession, ServiceOptions, ShardFragment, ShardPlan,
+    SolveTier,
 };
 use crate::fault::bank::ChipFaults;
 use crate::store::StoreHandle;
@@ -63,6 +64,13 @@ pub struct ServeOptions {
     /// How long a dispatched worker may stay silent before its range is
     /// reassigned to a live worker.
     pub worker_timeout: Duration,
+    /// Ship table-tier shard jobs as sealed "RCRG" registry snapshots
+    /// (the coordinator scans once; workers solve their range without the
+    /// tensor set or a re-scan). `false` forces the tensor-shipping
+    /// `ShardJob` path everywhere — the two produce byte-identical
+    /// results (pinned by the fabric e2e suite); this is an escape hatch
+    /// and an A/B lever, not a semantic switch.
+    pub snapshot_dispatch: bool,
 }
 
 /// Cumulative fabric counters (returned by [`FabricServer::run`] and
@@ -74,6 +82,10 @@ pub struct FabricStats {
     pub distributed_jobs: u64,
     pub shards_dispatched: u64,
     pub reassignments: u64,
+    /// Distributed rounds whose shards were dispatched as registry
+    /// snapshots instead of tensor sets (see
+    /// [`ServeOptions::snapshot_dispatch`]).
+    pub snapshot_rounds: u64,
 }
 
 struct WorkerConn {
@@ -124,6 +136,10 @@ struct ShardRound<'a> {
     pending: Mutex<Vec<usize>>,
     frags: Vec<Mutex<Option<ShardFragment>>>,
     reassigned: AtomicU32,
+    /// Sealed "RCRG" registry snapshot for this round, when the
+    /// snapshot path is on: the coordinator scanned the tensor set once,
+    /// and every dispatch ships these bytes instead of the tensors.
+    snapshot: Option<Vec<u8>>,
 }
 
 /// The compile-fabric daemon. See the module docs; construct with
@@ -421,6 +437,30 @@ fn distributed_compile(
     }
     let dispatched_workers = claimed.len() as u32;
     let pipeline = sopts.service.opts.pipeline;
+    // Snapshot dispatch: scan the tensor set once right here, then ship
+    // every worker the sealed registry instead of the tensors. Gated to
+    // the full-range table tier — per-weight fresh work needs the actual
+    // weights on the worker, so those rounds keep the tensor path.
+    let snapshot = if sopts.snapshot_dispatch
+        && sopts.service.opts.effective_tier() == SolveTier::BatchTable
+    {
+        let mut scan = session_for(&chip, &sopts.service.opts, &state.store);
+        for (name, ws) in &req.tensors {
+            scan.submit(name, ws.clone());
+        }
+        match scan.scan_to_snapshot() {
+            Ok(bytes) => Some(bytes),
+            Err(e) => {
+                eprintln!("fabric: snapshot scan failed ({e:#}); shipping tensors instead");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    if snapshot.is_some() {
+        state.stats.lock().expect("stats lock").snapshot_rounds += 1;
+    }
     let round = ShardRound {
         plan: ShardPlan::new(shards),
         shards,
@@ -431,6 +471,7 @@ fn distributed_compile(
         pending: Mutex::new((0..shards).rev().collect()),
         frags: (0..shards).map(|_| Mutex::new(None)).collect(),
         reassigned: AtomicU32::new(0),
+        snapshot,
     };
     let survivors: Vec<WorkerConn> = std::thread::scope(|s| {
         let handles: Vec<_> = claimed
@@ -569,15 +610,20 @@ fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Res
     let timeout = Some(round.sopts.worker_timeout);
     w.stream.set_read_timeout(timeout).context("set worker read timeout")?;
     w.stream.set_write_timeout(timeout).context("set worker write timeout")?;
-    let payload = encode_shard_job(
-        &round.key.chip,
-        round.key.cfg,
-        round.key.pipeline,
-        shard as u32,
-        round.shards as u32,
-        &round.req.tensors,
-    );
-    write_frame(&mut w.stream, FrameType::ShardJob, &payload)?;
+    if let Some(snap) = &round.snapshot {
+        let payload = encode_shard_snapshot_job(shard as u32, round.shards as u32, snap);
+        write_frame(&mut w.stream, FrameType::ShardSnapshotJob, &payload)?;
+    } else {
+        let payload = encode_shard_job(
+            &round.key.chip,
+            round.key.cfg,
+            round.key.pipeline,
+            shard as u32,
+            round.shards as u32,
+            &round.req.tensors,
+        );
+        write_frame(&mut w.stream, FrameType::ShardJob, &payload)?;
+    }
     loop {
         let frame = read_frame(&mut w.stream)?
             .ok_or_else(|| anyhow!("worker disconnected before returning the shard"))?;

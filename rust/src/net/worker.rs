@@ -2,13 +2,23 @@
 //!
 //! A worker is a host that lends its cores to the coordinator: it
 //! connects, registers ([`FrameType::Hello`] → ack), then loops solving
-//! [`FrameType::ShardJob`]s — each job is one [`ShardPlan`] range of one
-//! chip's pattern space, solved with [`CompileSession::solve_shard`] and
-//! returned as verbatim RCSF fragment bytes. The worker holds no
-//! *chip-scoped* state between jobs: every job carries its full identity
-//! (chip + config + pipeline, in the RCSS cache-key layout) and tensor
-//! set, so any worker can solve any range of any chip, and losing a
-//! worker loses nothing but time.
+//! shard jobs — each job is one [`ShardPlan`] range of one chip's
+//! pattern space, returned as verbatim RCSF fragment bytes. Jobs arrive
+//! in two flavors:
+//!
+//! - [`FrameType::ShardJob`] carries the full tensor set; the worker
+//!   re-scans it into a registry and solves its range with
+//!   [`CompileSession::solve_shard`].
+//! - [`FrameType::ShardSnapshotJob`] carries a sealed "RCRG" registry
+//!   snapshot instead — the coordinator already scanned, so the worker
+//!   reconstructs the registry directly and solves its range with
+//!   [`CompileSession::solve_shard_from_snapshot`], never touching the
+//!   tensors. Both flavors produce byte-identical fragments.
+//!
+//! The worker holds no *chip-scoped* state between jobs: every job
+//! carries its full identity (chip + config + pipeline, in the RCSS
+//! cache-key layout), so any worker can solve any range of any chip,
+//! and losing a worker loses nothing but time.
 //!
 //! What a worker *does* keep across jobs is a process-lifetime
 //! fleet-store replica (see [`crate::store`]): before solving it asks
@@ -28,11 +38,11 @@
 //! ends the loop normally.
 
 use super::protocol::{
-    decode_error, decode_shard_job, decode_store_put, encode_hello, encode_store_get,
-    encode_store_put, read_frame, write_frame, FrameType,
+    decode_error, decode_shard_job, decode_shard_snapshot_job, decode_store_put, encode_hello,
+    encode_store_get, encode_store_put, read_frame, write_frame, FrameType,
 };
-use crate::coordinator::persist::CacheKey;
-use crate::coordinator::{CompileSession, Outcome, PatternSolution, ShardPlan};
+use crate::coordinator::persist::{decode_registry_snapshot, CacheKey};
+use crate::coordinator::{CompileSession, Outcome, PatternSolution, ShardFragment, ShardPlan};
 use crate::fault::GroupFaults;
 use crate::store::{StoreCtx, StoreHandle};
 use crate::util::fnv::FnvMap;
@@ -79,19 +89,26 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
             None => break, // coordinator hung up between jobs: done
         };
         match frame.frame_type {
-            FrameType::ShardJob => match solve_job(&mut stream, &store, &frame.payload, threads) {
-                Ok(done) => {
-                    write_frame(&mut stream, FrameType::ShardResult, &done.fragment_bytes)?;
-                    report.jobs += 1;
-                    report.patterns_solved += done.solved as u64;
-                    report.store_hits += done.store_hits as u64;
-                    report.store_published += done.published as u64;
+            FrameType::ShardJob | FrameType::ShardSnapshotJob => {
+                let outcome = if frame.frame_type == FrameType::ShardJob {
+                    solve_job(&mut stream, &store, &frame.payload, threads)
+                } else {
+                    solve_snapshot_job(&mut stream, &store, &frame.payload, threads)
+                };
+                match outcome {
+                    Ok(done) => {
+                        write_frame(&mut stream, FrameType::ShardResult, &done.fragment_bytes)?;
+                        report.jobs += 1;
+                        report.patterns_solved += done.solved as u64;
+                        report.store_hits += done.store_hits as u64;
+                        report.store_published += done.published as u64;
+                    }
+                    Err(e) => {
+                        eprintln!("worker: shard job failed: {e:#}");
+                        write_frame(&mut stream, FrameType::Error, format!("{e:#}").as_bytes())?;
+                    }
                 }
-                Err(e) => {
-                    eprintln!("worker: shard job failed: {e:#}");
-                    write_frame(&mut stream, FrameType::Error, format!("{e:#}").as_bytes())?;
-                }
-            },
+            }
             FrameType::Shutdown => break,
             t => bail!("unexpected {t:?} frame from coordinator"),
         }
@@ -127,48 +144,109 @@ fn solve_job(
     for (name, ws) in &spec.tensors {
         session.submit(name, ws.clone());
     }
-    // Pre-solve store sync: ask the coordinator for the job's patterns
-    // this replica does not hold yet. The reply is consumed before any
-    // bail below it, so every error leaves the stream at a frame
-    // boundary.
     let sctx = StoreCtx::new(spec.cfg, spec.pipeline);
     let patterns = session.queued_patterns();
-    let unknown: Vec<GroupFaults> =
-        patterns.iter().filter(|p| !store.contains(&sctx, p)).cloned().collect();
-    if !unknown.is_empty() {
-        write_frame(stream, FrameType::StoreGet, &encode_store_get(&sctx, &unknown))?;
-        let reply = read_frame(stream)?
-            .ok_or_else(|| anyhow!("coordinator closed during the store sync"))?;
-        match reply.frame_type {
-            FrameType::StorePut => {
-                let b = decode_store_put(&reply.payload).context("parse store sync reply")?;
-                for (p, t) in &b.entries {
-                    store.publish_table(&b.ctx, p, t);
-                }
-            }
-            FrameType::Error => {
-                bail!("coordinator store sync failed: {}", decode_error(&reply.payload))
-            }
-            t => bail!("unexpected {t:?} frame in the store sync"),
-        }
-    }
+    sync_with_fleet(stream, store, &sctx, &patterns)?;
     // Everything the replica holds *before* the solve came from the
     // fleet; anything beyond it afterwards is this job's fresh work.
-    let known: FnvMap<u64, ()> = patterns
-        .iter()
-        .filter(|p| store.contains(&sctx, p))
-        .map(|p| (sctx.content_hash(p), ()))
-        .collect();
+    let known = fleet_known(store, &sctx, &patterns);
     let hits_before = store.counters().hits;
 
     let plan = ShardPlan::new(spec.shards as usize);
     let fragment = session.solve_shard(&plan, spec.shard as usize)?;
-    let solved = fragment.solved_patterns();
     let store_hits = (store.counters().hits - hits_before) as usize;
+    publish_fresh(stream, &sctx, &known, store_hits, fragment)
+}
 
-    // Publish the range's freshly solved full-range tables back to the
-    // coordinator before returning the fragment (Pairs-tier partial
-    // solutions stay out of the store by design).
+/// Solve one snapshot-delivered shard job: the coordinator already
+/// scanned, so the payload carries a sealed "RCRG" registry snapshot
+/// instead of tensors. The worker rebuilds the registry from the
+/// snapshot and solves only the assigned range — per-job cost is
+/// O(in-range patterns), not O(total weights). The store sync likewise
+/// covers only the in-range patterns: nothing outside the range is
+/// solved here, so syncing the rest would move bytes for nothing.
+fn solve_snapshot_job(
+    stream: &mut TcpStream,
+    store: &StoreHandle,
+    payload: &[u8],
+    threads: usize,
+) -> Result<SolvedJob> {
+    let spec = decode_shard_snapshot_job(payload)?;
+    let (key, patterns) = decode_registry_snapshot(&spec.snapshot)?;
+    let mut session = CompileSession::for_key(&key);
+    session.set_threads(threads);
+    session.set_store(store.clone());
+
+    let plan = ShardPlan::new(spec.shards as usize);
+    if spec.shard as usize >= plan.shards() {
+        bail!("shard {} out of range for a {}-way plan", spec.shard, plan.shards());
+    }
+    let range = plan.range(spec.shard as usize, patterns.len());
+    let sctx = StoreCtx::new(key.cfg, key.pipeline);
+    let in_range = &patterns[range];
+    sync_with_fleet(stream, store, &sctx, in_range)?;
+    let known = fleet_known(store, &sctx, in_range);
+    let hits_before = store.counters().hits;
+
+    let fragment = session.solve_shard_from_snapshot(&spec.snapshot, &plan, spec.shard as usize)?;
+    let store_hits = (store.counters().hits - hits_before) as usize;
+    publish_fresh(stream, &sctx, &known, store_hits, fragment)
+}
+
+/// Pre-solve store sync: ask the coordinator for whichever of
+/// `patterns` this replica does not hold yet and install the reply. The
+/// reply is consumed before any bail below it, so every error leaves
+/// the stream at a frame boundary.
+fn sync_with_fleet(
+    stream: &mut TcpStream,
+    store: &StoreHandle,
+    sctx: &StoreCtx,
+    patterns: &[GroupFaults],
+) -> Result<()> {
+    let unknown: Vec<GroupFaults> =
+        patterns.iter().filter(|p| !store.contains(sctx, p)).cloned().collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    write_frame(stream, FrameType::StoreGet, &encode_store_get(sctx, &unknown))?;
+    let reply = read_frame(stream)?
+        .ok_or_else(|| anyhow!("coordinator closed during the store sync"))?;
+    match reply.frame_type {
+        FrameType::StorePut => {
+            let b = decode_store_put(&reply.payload).context("parse store sync reply")?;
+            for (p, t) in &b.entries {
+                store.publish_table(&b.ctx, p, t);
+            }
+            Ok(())
+        }
+        FrameType::Error => {
+            bail!("coordinator store sync failed: {}", decode_error(&reply.payload))
+        }
+        t => bail!("unexpected {t:?} frame in the store sync"),
+    }
+}
+
+/// Content hashes of the job patterns the replica holds after the sync
+/// but before the solve — the boundary between fleet work and this
+/// job's fresh work.
+fn fleet_known(store: &StoreHandle, sctx: &StoreCtx, patterns: &[GroupFaults]) -> FnvMap<u64, ()> {
+    patterns
+        .iter()
+        .filter(|p| store.contains(sctx, p))
+        .map(|p| (sctx.content_hash(p), ()))
+        .collect()
+}
+
+/// Publish the range's freshly solved full-range tables back to the
+/// coordinator before returning the fragment (Pairs-tier partial
+/// solutions stay out of the store by design), then pack the result.
+fn publish_fresh(
+    stream: &mut TcpStream,
+    sctx: &StoreCtx,
+    known: &FnvMap<u64, ()>,
+    store_hits: usize,
+    fragment: ShardFragment,
+) -> Result<SolvedJob> {
     let fresh: Vec<(GroupFaults, Vec<Outcome>)> = fragment
         .parts()
         .filter_map(|(p, s)| match s {
@@ -179,11 +257,11 @@ fn solve_job(
         })
         .collect();
     if !fresh.is_empty() {
-        write_frame(stream, FrameType::StorePut, &encode_store_put(&sctx, &fresh))?;
+        write_frame(stream, FrameType::StorePut, &encode_store_put(sctx, &fresh))?;
     }
     Ok(SolvedJob {
         fragment_bytes: fragment.to_bytes(),
-        solved,
+        solved: fragment.solved_patterns(),
         store_hits,
         published: fresh.len(),
     })

@@ -2,7 +2,11 @@
 //!
 //! * A distributed compile — coordinator + 2 workers — produces compiled
 //!   bitmaps AND fetched RCSS session bytes byte-identical to a local
-//!   unsharded `CompileSession` compile.
+//!   unsharded `CompileSession` compile (the default snapshot-dispatch
+//!   path, where workers receive a sealed "RCRG" registry instead of the
+//!   tensor set).
+//! * Snapshot dispatch and tensor dispatch produce identical results and
+//!   session bytes — the A/B pin of the two job flavors.
 //! * Killing a worker mid-solve reassigns its pattern range to the live
 //!   worker and the job still completes, byte-identically.
 //! * Malformed, truncated, and wrong-version frames are rejected cleanly
@@ -45,6 +49,7 @@ fn serve_opts(shard_min_weights: usize) -> ServeOptions {
         shard_min_weights,
         max_shards: 8,
         worker_timeout: Duration::from_secs(30),
+        snapshot_dispatch: true,
     }
 }
 
@@ -131,11 +136,57 @@ fn fabric_distributed_compile_is_byte_identical_to_local() {
     let stats = server.join().unwrap();
     assert_eq!(stats.jobs, 2);
     assert_eq!(stats.distributed_jobs, 1);
+    assert_eq!(
+        stats.snapshot_rounds, 1,
+        "a table-tier distributed round must go out as a registry snapshot"
+    );
     // Workers observe a clean EOF once the fabric stops.
     let r1 = w1.join().unwrap();
     let r2 = w2.join().unwrap();
     assert_eq!(r1.jobs + r2.jobs, 2, "each worker solved its range");
     assert!(r1.patterns_solved + r2.patterns_solved > 0);
+}
+
+/// The A/B pin of the two shard-job flavors: a fabric dispatching sealed
+/// registry snapshots and one shipping tensor sets must produce
+/// identical compiled outputs and identical fetched RCSS bytes — both
+/// equal to the local unsharded reference.
+#[test]
+fn fabric_snapshot_and_tensor_dispatch_are_byte_identical() {
+    let tensors = model(2_200);
+    let chip_seed = 11;
+    let mut fetched = Vec::new();
+    for snapshot_dispatch in [true, false] {
+        let mut sopts = serve_opts(1);
+        sopts.snapshot_dispatch = snapshot_dispatch;
+        let (addr, server) = start_server(sopts);
+        let addr_s = addr.to_string();
+        let (wa, wb) = (addr_s.clone(), addr_s.clone());
+        let w1 = thread::spawn(move || run_worker(&wa, 1).unwrap());
+        let w2 = thread::spawn(move || run_worker(&wb, 1).unwrap());
+        wait_for_workers(addr, 2);
+
+        let mut client = CompileClient::connect(&addr_s).unwrap();
+        let (results, summary) =
+            client.compile_model(chip_seed, CFG, Method::Complete, &tensors).unwrap();
+        assert_eq!(summary.shards, 2);
+        let (want, want_bytes) = local_reference(chip_seed, &tensors);
+        assert_results_match(&results, &want);
+        let bytes = client.fetch_session(chip_seed).unwrap();
+        assert_eq!(bytes, want_bytes, "dispatch={snapshot_dispatch}: RCSS must equal local");
+        fetched.push(bytes);
+
+        client.shutdown_server().unwrap();
+        let stats = server.join().unwrap();
+        assert_eq!(
+            stats.snapshot_rounds,
+            if snapshot_dispatch { 1 } else { 0 },
+            "snapshot_rounds must reflect the dispatch mode"
+        );
+        let (r1, r2) = (w1.join().unwrap(), w2.join().unwrap());
+        assert!(r1.patterns_solved + r2.patterns_solved > 0);
+    }
+    assert_eq!(fetched[0], fetched[1], "the two dispatch modes must agree byte-for-byte");
 }
 
 #[test]

@@ -4,6 +4,11 @@
 //! serialization round-trip; and fragments from a mismatched chip,
 //! config, or pipeline fingerprint — or an incomplete/duplicated shard
 //! set — are rejected cleanly.
+//!
+//! The snapshot path gets the same treatment: shards solved from a
+//! sealed "RCRG" registry snapshot (no tensor set, no re-scan) produce
+//! fragments byte-identical to the tensor-shipping path, and snapshots
+//! with the wrong identity, tier, or corrupted bytes are refused.
 
 use rchg::coordinator::{CompileSession, CompiledTensor, Method, ShardFragment, ShardPlan};
 use rchg::experiments::compile_time::synthetic_model_tensors;
@@ -49,6 +54,27 @@ fn solve_shards(
                 session.submit(name, ws.clone());
             }
             let fragment = session.solve_shard(&plan, k).unwrap();
+            ShardFragment::from_bytes(&fragment.to_bytes()).unwrap()
+        })
+        .collect()
+}
+
+/// Worker-side sessions for the snapshot path: rebuilt from chip +
+/// method alone, handed only the sealed registry snapshot — these
+/// sessions never see the tensor set.
+fn solve_shards_from_snapshot(
+    cfg: GroupConfig,
+    chip: &ChipFaults,
+    snapshot: &[u8],
+    shards: usize,
+    threads: usize,
+) -> Vec<ShardFragment> {
+    let plan = ShardPlan::new(shards);
+    (0..shards)
+        .map(|k| {
+            let mut session =
+                CompileSession::builder(cfg).method(Method::Complete).threads(threads).chip(chip);
+            let fragment = session.solve_shard_from_snapshot(snapshot, &plan, k).unwrap();
             ShardFragment::from_bytes(&fragment.to_bytes()).unwrap()
         })
         .collect()
@@ -103,6 +129,95 @@ fn merged_shards_match_single_process_for_k_1_2_4_8() {
         // And the save after recompiling is unchanged too.
         assert_eq!(merged.to_bytes().unwrap(), solo_bytes);
     }
+}
+
+#[test]
+fn snapshot_shards_are_byte_identical_to_tensor_shards() {
+    // Acceptance: for K ∈ {1, 2, 4}, solving every shard from the
+    // coordinator's registry snapshot — no tensors, no re-scan — yields
+    // fragments byte-identical to the tensor-shipping path, and their
+    // merge reproduces the unsharded session's RCSS bytes and bitmaps.
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(21, FaultRates::paper_default());
+    let tensors = model(&cfg, 6_000);
+    let (solo_out, solo_bytes) = compile_solo(cfg, &chip, Method::Complete, &tensors);
+
+    let mut coordinator = CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
+    for (name, ws) in &tensors {
+        coordinator.submit(name, ws.clone());
+    }
+    let snapshot = coordinator.scan_to_snapshot().unwrap();
+
+    for shards in [1usize, 2, 4] {
+        let from_tensors = solve_shards(cfg, &chip, Method::Complete, &tensors, shards, 2);
+        let from_snapshot = solve_shards_from_snapshot(cfg, &chip, &snapshot, shards, 2);
+        assert_eq!(from_tensors.len(), from_snapshot.len());
+        for (a, b) in from_tensors.iter().zip(&from_snapshot) {
+            assert_eq!(a.to_bytes(), b.to_bytes(), "K={shards}: fragment bytes diverged");
+        }
+        let mut merged = CompileSession::from_fragments(&from_snapshot).unwrap();
+        assert_eq!(
+            merged.to_bytes().unwrap(),
+            solo_bytes,
+            "K={shards}: merged snapshot-path RCSS diverged from the single-process save"
+        );
+        for (name, ws) in &tensors {
+            merged.submit(name, ws.clone());
+        }
+        for ((_, got), (_, want)) in merged.drain().iter().zip(&solo_out) {
+            assert_eq!(got.stats.unique_pairs, 0, "K={shards}: merged cache must be warm");
+            assert_eq!(got.decomps, want.decomps);
+            assert_eq!(got.errors, want.errors);
+        }
+    }
+}
+
+#[test]
+fn snapshot_solve_guards_identity_tier_and_integrity() {
+    let cfg = GroupConfig::R2C2;
+    let chip = ChipFaults::new(21, FaultRates::paper_default());
+    let tensors = model(&cfg, 2_000);
+    let mut coordinator = CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
+    for (name, ws) in &tensors {
+        coordinator.submit(name, ws.clone());
+    }
+    let snapshot = coordinator.scan_to_snapshot().unwrap();
+    let plan = ShardPlan::new(2);
+    let fresh = || CompileSession::builder(cfg).method(Method::Complete).chip(&chip);
+
+    // The happy path works — the rejections below are not spurious.
+    assert!(fresh().solve_shard_from_snapshot(&snapshot, &plan, 0).is_ok());
+
+    // A session for a different chip refuses the snapshot.
+    let other = ChipFaults::new(22, FaultRates::paper_default());
+    let mut wrong_chip = CompileSession::builder(cfg).method(Method::Complete).chip(&other);
+    let err = wrong_chip.solve_shard_from_snapshot(&snapshot, &plan, 0).unwrap_err().to_string();
+    assert!(err.contains("chip seed"), "unhelpful error: {err}");
+
+    // A different grouping config refuses too (the key carries it).
+    let mut wrong_cfg =
+        CompileSession::builder(GroupConfig::R1C4).method(Method::Complete).chip(&chip);
+    assert!(wrong_cfg.solve_shard_from_snapshot(&snapshot, &plan, 0).is_err());
+
+    // Per-weight tiers have no tensor-free solve: the gate names the tier.
+    let mut per_weight = CompileSession::builder(cfg).method(Method::IlpOnly).chip(&chip);
+    let err = per_weight.solve_shard_from_snapshot(&snapshot, &plan, 0).unwrap_err().to_string();
+    assert!(err.contains("table tier"), "unhelpful error: {err}");
+
+    // Shard index out of range.
+    assert!(fresh().solve_shard_from_snapshot(&snapshot, &plan, 2).is_err());
+
+    // Corruption and truncation are rejected by the sealed codec.
+    let mut flipped = snapshot.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    assert!(fresh().solve_shard_from_snapshot(&flipped, &plan, 0).is_err());
+    assert!(fresh()
+        .solve_shard_from_snapshot(&snapshot[..snapshot.len() - 5], &plan, 0)
+        .is_err());
+    // An RCSS session save is not a registry snapshot.
+    let rcss = coordinator.to_bytes().unwrap();
+    assert!(fresh().solve_shard_from_snapshot(&rcss, &plan, 0).is_err());
 }
 
 #[test]

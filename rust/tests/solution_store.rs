@@ -249,6 +249,7 @@ fn serve_opts(shard_min_weights: usize) -> ServeOptions {
         shard_min_weights,
         max_shards: 8,
         worker_timeout: Duration::from_secs(30),
+        snapshot_dispatch: true,
     }
 }
 
