@@ -469,6 +469,47 @@ mod tests {
     }
 
     #[test]
+    fn golden_rcrg_snapshot_matches_the_blessed_bytes() {
+        use super::super::classes::PatternRegistry;
+
+        // Generated independently of this encoder by
+        // `tests/fixtures/make_fixtures.py`: chip 7, paper rates, R2C2,
+        // default pipeline, two patterns (all-free; pos[0]=SA0,
+        // neg[3]=SA1). Pins the RCRG v1 byte layout itself, not just the
+        // round-trip.
+        const RCRG: &[u8] = include_bytes!("../../tests/fixtures/rcrg_v1_snapshot.bin");
+
+        let (key, patterns) = decode_registry_snapshot(RCRG).expect("golden snapshot must parse");
+        assert_eq!(key.chip.chip_seed, 7);
+        assert_eq!(key.chip.rates, FaultRates::paper_default());
+        assert_eq!(key.cfg, GroupConfig::R2C2);
+        assert_eq!(key.pipeline, PipelineOptions::default());
+        assert_eq!(patterns.len(), 2);
+        assert_eq!(patterns[0], GroupFaults::free(4));
+        assert_eq!(patterns[1].pos[0], FaultState::Sa0);
+        assert_eq!(patterns[1].neg[3], FaultState::Sa1);
+
+        // Re-interning the decoded patterns and re-encoding must land on
+        // the exact golden bytes.
+        let mut registry = PatternRegistry::new(key.cfg);
+        for (i, p) in patterns.iter().enumerate() {
+            assert_eq!(registry.intern(p) as usize, i);
+        }
+        assert_eq!(
+            encode_registry_snapshot(&key, &registry),
+            RCRG,
+            "the snapshot encoder no longer produces the golden RCRG bytes"
+        );
+
+        // Corruption anywhere is rejected before parsing.
+        for i in 0..RCRG.len() {
+            let mut bad = RCRG.to_vec();
+            bad[i] ^= 0xff;
+            assert!(decode_registry_snapshot(&bad).is_err(), "flip at {i} must be rejected");
+        }
+    }
+
+    #[test]
     fn key_roundtrip_and_mismatch_reporting() {
         let chip = ChipFaults::new(42, FaultRates::paper_default());
         let key = CacheKey::new(&chip, GroupConfig::R2C2, PipelineOptions::default());

@@ -10,6 +10,8 @@
 //!   rchg submit …               send a compile job to a fabric coordinator
 //!   rchg shard-solve …          solve shard k/K of one chip's compile
 //!   rchg merge-shards …         reassemble shard fragments into a warm cache
+//!   rchg chaos …                seeded fault-injection soak of a localhost fleet
+//!                               (requires a `--features failpoints` build)
 //!   rchg eval-cnn …             CNN accuracy under SAFs   (Table I/Fig 8/9)
 //!   rchg eval-lm …              LM perplexity under SAFs  (Table III)
 //!   rchg compile-time …         compilation-time study    (Table II/Fig 10)
@@ -198,7 +200,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("threads", "solver threads for the compile/shard workloads", Some("1"))
                 .opt("no-fabric", "skip the localhost fabric round-trip workload", None)
                 .opt("out", "also write the JSON report to this path", None)
-                .opt("pr", "PR number stamped into the report", Some("8"))
+                .opt("pr", "PR number stamped into the report", Some("9"))
                 .opt("check", "validate an existing report file against the schema, then exit", None);
             let args = cli.parse(rest);
             if let Some(path) = args.get("check") {
@@ -216,7 +218,7 @@ fn main() -> anyhow::Result<()> {
             if args.get_bool("no-fabric") {
                 o.fabric = false;
             }
-            let doc = bench::run(&o, quick, args.get_usize("pr", 8))?;
+            let doc = bench::run(&o, quick, args.get_usize("pr", 9))?;
             if let Some(path) = args.get("out") {
                 std::fs::write(path, doc.pretty() + "\n")?;
                 eprintln!("bench report written to {path}");
@@ -504,6 +506,23 @@ fn main() -> anyhow::Result<()> {
                 report.jobs, report.patterns_solved, report.store_hits, report.store_published,
             );
         }
+        "chaos" => {
+            let cli = Cli::new(
+                "seeded chaos soak: run randomized failpoint schedules against localhost fleets \
+                 and check every job ends byte-identical or with a typed error",
+            )
+            .opt("seed", "base schedule seed (each seed replays exactly)", Some("1"))
+            .opt("seeds", "number of consecutive seeds to run", Some("1"))
+            .opt("scenarios", "random scenarios per seed", Some("4"))
+            .opt("weights", "synthetic model size per job", Some("900"));
+            let args = cli.parse(rest);
+            run_chaos(
+                args.get_u64("seed", 1),
+                args.get_u64("seeds", 1),
+                args.get_usize("scenarios", 4),
+                args.get_usize("weights", 900),
+            )?;
+        }
         "submit" => {
             let cli = Cli::new("send a compile job to a fabric coordinator")
                 .opt("connect", "coordinator address", Some("127.0.0.1:7077"))
@@ -732,6 +751,7 @@ fn main() -> anyhow::Result<()> {
                  \x20 submit           send a compile job to a fabric coordinator\n\
                  \x20 shard-solve      solve shard k/K of one chip's compile (fan one chip out)\n\
                  \x20 merge-shards     reassemble shard fragments into a warm session cache\n\
+                 \x20 chaos            seeded fault-injection soak (needs --features failpoints)\n\
                  \x20 eval-cnn         Table I / Fig 8 / Fig 9\n\
                  \x20 eval-lm          Table III\n\
                  \x20 compile-time     Table II / Fig 10\n\
@@ -755,6 +775,45 @@ fn parse_table_budget(s: &str) -> anyhow::Result<TableBudget> {
             anyhow::anyhow!("bad --table-budget {s:?} (per-session | auto | bytes)")
         })?),
     })
+}
+
+/// `rchg chaos` soak loop: randomized failpoint schedules against
+/// throwaway localhost fleets, one report line per seed. Every scenario
+/// must end byte-identical to a fault-free compile or with a typed error
+/// — the first violation aborts with the failing `(seed, scenario)` so
+/// the run can be replayed exactly.
+#[cfg(feature = "failpoints")]
+fn run_chaos(seed: u64, seeds: u64, scenarios: usize, weights: usize) -> anyhow::Result<()> {
+    use rchg::net::chaos;
+    let t = Timer::start();
+    let mut completed = 0usize;
+    let mut typed_errors = 0usize;
+    for s in seed..seed + seeds.max(1) {
+        let report = chaos::run_seed(s, scenarios, weights)?;
+        println!(
+            "chaos seed {s}: {} scenario(s), {} completed byte-identical, {} typed error(s)",
+            report.scenarios, report.completed, report.typed_errors
+        );
+        completed += report.completed;
+        typed_errors += report.typed_errors;
+    }
+    println!(
+        "chaos: invariant held across {} scenario(s) ({completed} completed, {typed_errors} \
+         typed errors) in {}",
+        completed + typed_errors,
+        fmt_dur(t.secs()),
+    );
+    Ok(())
+}
+
+/// Feature-off stub for `rchg chaos`: the hooks compile to no-ops in
+/// this binary, so there is nothing to inject.
+#[cfg(not(feature = "failpoints"))]
+fn run_chaos(_seed: u64, _seeds: u64, _scenarios: usize, _weights: usize) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this rchg was built without the `failpoints` feature; rebuild with \
+         `cargo build --release --features failpoints` to run the chaos soak"
+    )
 }
 
 /// Parse the `--shard k/K` spec (1-based index, e.g. `2/4`).

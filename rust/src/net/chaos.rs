@@ -1,0 +1,399 @@
+//! Chaos harness for the compile fabric (requires the `failpoints`
+//! feature).
+//!
+//! One **scenario** = one localhost fleet (coordinator + workers in this
+//! process), one set of armed failpoints, one compile job. After the
+//! faulted job the harness checks the repo's spine invariant:
+//!
+//! * the job **completed** — then its per-tensor outputs and its fetched
+//!   RCSS session bytes must be byte-identical to a fault-free local
+//!   compile of the same chip; or
+//! * the job **failed with a typed error** — then the fabric must still
+//!   be alive: a follow-up fault-free job on the same fleet must
+//!   complete byte-identically.
+//!
+//! Anything else — a hang (caught by a watchdog), a panic, or
+//! silently-wrong bytes — is an invariant violation and fails the run.
+//!
+//! Scenarios come in two kinds: **scripted** (one per failpoint, see
+//! `tests/chaos.rs`) and **seeded random schedules** ([`random_scenario`]
+//! arms 1–2 points drawn from [`MENU`] with [`Rng`]-derived parameters).
+//! Both replay exactly from their seed/spec — report a failing seed and
+//! anyone can reproduce the run with `rchg chaos --seed N`.
+
+use super::{run_worker, CompileClient, FabricServer, ServeOptions, TensorResult};
+use crate::coordinator::{
+    CompileOptions, CompileSession, CompiledTensor, Method, ServiceOptions, TableBudget,
+};
+use crate::experiments::compile_time::synthetic_model_tensors;
+use crate::fault::bank::ChipFaults;
+use crate::fault::FaultRates;
+use crate::grouping::GroupConfig;
+use crate::util::failpoint;
+use crate::util::prng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// Grouping config every chaos fleet compiles (matches `tests/net_fabric.rs`).
+pub const CFG: GroupConfig = GroupConfig::R2C2;
+
+/// Per-scenario wall-clock bound. A scenario that has not produced an
+/// outcome by then counts as a hang — itself an invariant violation.
+pub const WATCHDOG: Duration = Duration::from_secs(180);
+
+/// One chaos scenario: which failpoints are armed while one compile job
+/// runs against a fresh localhost fleet.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Label for reports ("frame-corrupt-shard-result", "rand-7-2", …).
+    pub name: String,
+    /// `(failpoint, spec)` pairs armed for the faulted job.
+    pub failpoints: Vec<(String, String)>,
+    /// Worker processes (threads here) joining the fleet.
+    pub workers: usize,
+    /// Give the coordinator a file-tier solution store (required by the
+    /// `store.*` points; they never fire on a memory-only store).
+    pub store_dir: bool,
+    /// Ship registry snapshots (`ShardSnapshotJob`) vs tensor sets
+    /// (`ShardJob`) — chooses which frame tag the job path writes.
+    pub snapshot_dispatch: bool,
+    /// Coordinator's silent-worker deadline. Scripted stall scenarios
+    /// lower this so a stalled frame converts into a timeout quickly.
+    pub worker_timeout_ms: u64,
+}
+
+impl Scenario {
+    pub fn new(name: &str, failpoints: &[(&str, &str)]) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            failpoints: failpoints
+                .iter()
+                .map(|(n, s)| (n.to_string(), s.to_string()))
+                .collect(),
+            workers: 2,
+            store_dir: false,
+            snapshot_dispatch: true,
+            worker_timeout_ms: 30_000,
+        }
+    }
+}
+
+/// How one scenario ended (both ends satisfy the invariant).
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    /// The faulted job completed byte-identically.
+    pub completed: bool,
+    /// The typed error the faulted job surfaced (when not completed).
+    pub error: Option<String>,
+}
+
+/// Aggregate of one seeded schedule (see [`run_seed`]).
+#[derive(Clone, Debug, Default)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub scenarios: usize,
+    /// Faulted jobs that completed byte-identically despite the faults.
+    pub completed: usize,
+    /// Faulted jobs that surfaced a typed error (fabric stayed alive).
+    pub typed_errors: usize,
+}
+
+/// The deterministic tensor set every scenario compiles.
+pub fn model(limit: usize) -> Vec<(String, Vec<i64>)> {
+    synthetic_model_tensors("resnet20", &CFG, limit).expect("synthetic model")
+}
+
+/// Fault-free single-process reference: per-tensor outputs + the RCSS
+/// bytes a local session saves after compiling the same tensor set.
+pub fn local_reference(
+    chip_seed: u64,
+    tensors: &[(String, Vec<i64>)],
+) -> (Vec<(String, CompiledTensor)>, Vec<u8>) {
+    let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+    let mut session = CompileSession::builder(CFG).method(Method::Complete).chip(&chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    let out = session.drain();
+    let bytes = session.to_bytes().expect("reference session serializes");
+    (out, bytes)
+}
+
+/// Compare a fabric job's results against the local reference —
+/// `Err` (not a panic) on any divergence, so the chaos driver can report
+/// the scenario that broke byte-identity.
+pub fn check_results(
+    got: &[TensorResult],
+    want: &[(String, CompiledTensor)],
+) -> Result<()> {
+    if got.len() != want.len() {
+        bail!("tensor count diverged: fabric {} vs local {}", got.len(), want.len());
+    }
+    for (g, (name, w)) in got.iter().zip(want) {
+        if &g.name != name {
+            bail!("tensor order diverged: fabric {:?} vs local {:?}", g.name, name);
+        }
+        if g.errors != w.errors {
+            bail!("residual errors of {name} diverged from the fault-free compile");
+        }
+        if g.decomps != w.decomps {
+            bail!("bitmaps of {name} diverged from the fault-free compile");
+        }
+    }
+    Ok(())
+}
+
+/// Fabric options every scenario serves under: always fan out
+/// (`shard_min_weights = 1`), paper-default fault rates.
+pub fn chaos_serve_opts(scenario: &Scenario, store_dir: Option<PathBuf>) -> ServeOptions {
+    let mut opts = CompileOptions::new(CFG, Method::Complete);
+    opts.threads = 2;
+    ServeOptions {
+        service: ServiceOptions {
+            opts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: None,
+            store_dir,
+        },
+        shard_min_weights: 1,
+        max_shards: 8,
+        worker_timeout: Duration::from_millis(scenario.worker_timeout_ms.max(1)),
+        snapshot_dispatch: scenario.snapshot_dispatch,
+    }
+}
+
+/// A unique scratch directory under the system temp dir (no timestamps —
+/// a process-wide counter keeps replays deterministic).
+pub fn scratch_dir(label: &str) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("rchg-chaos-{}-{label}-{n}", std::process::id()))
+}
+
+/// Poll the fabric until `n` workers sit idle in the pool (bounded).
+pub fn wait_for_workers(addr: SocketAddr, n: usize) -> Result<()> {
+    let mut client = CompileClient::connect(&addr.to_string())?;
+    for _ in 0..600 {
+        if client.info()?.workers as usize >= n {
+            return Ok(());
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    bail!("{n} workers never registered with the fabric at {addr}")
+}
+
+/// Run one scenario under the watchdog. `Ok` means the invariant held
+/// (either way the job ended); `Err` carries the violation — including
+/// "scenario hung" and "scenario panicked", which the in-scenario code
+/// can never report about itself.
+pub fn run_scenario(
+    scenario: &Scenario,
+    chip_seed: u64,
+    weight_limit: usize,
+) -> Result<ScenarioOutcome> {
+    let (tx, rx) = mpsc::channel();
+    let s = scenario.clone();
+    let body = thread::spawn(move || {
+        let out = run_scenario_inner(&s, chip_seed, weight_limit);
+        let _ = tx.send(out);
+    });
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(outcome) => {
+            body.join().map_err(|_| anyhow!("scenario {} panicked", scenario.name))?;
+            outcome.with_context(|| format!("scenario {}", scenario.name))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // The body died without sending — a panic mid-scenario.
+            failpoint::clear();
+            let _ = body.join();
+            bail!("scenario {} panicked before reporting an outcome", scenario.name)
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            // Leak the wedged fleet (it holds an ephemeral port and some
+            // threads); disarm everything so the next scenario is clean.
+            failpoint::clear();
+            bail!("scenario {} hung past {:?} — the no-hang invariant is broken", scenario.name, WATCHDOG)
+        }
+    }
+}
+
+fn run_scenario_inner(
+    scenario: &Scenario,
+    chip_seed: u64,
+    weight_limit: usize,
+) -> Result<ScenarioOutcome> {
+    failpoint::clear();
+    let tensors = model(weight_limit);
+    // The fault-free truth, computed before anything is armed.
+    let (want, want_bytes) = local_reference(chip_seed, &tensors);
+
+    let store_dir = scenario.store_dir.then(|| scratch_dir("store"));
+    if let Some(d) = &store_dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let server = FabricServer::bind("127.0.0.1:0", chaos_serve_opts(scenario, store_dir.clone()))
+        .context("bind chaos fabric")?;
+    let addr = server.local_addr();
+    let server = thread::spawn(move || server.run());
+    let addr_s = addr.to_string();
+    let workers: Vec<_> = (0..scenario.workers)
+        .map(|_| {
+            let a = addr_s.clone();
+            // A worker killed by a failpoint returns Err — that is the
+            // scenario, not a harness failure.
+            thread::spawn(move || run_worker(&a, 1))
+        })
+        .collect();
+    wait_for_workers(addr, scenario.workers)?;
+
+    // Arm, run the faulted job, disarm. The registry is process-global,
+    // so failpoints see client, coordinator, and worker traffic alike —
+    // specs use `tag=` to pick a conversation leg.
+    for (name, spec) in &scenario.failpoints {
+        failpoint::configure(name, spec)
+            .with_context(|| format!("arm failpoint {name} = {spec:?}"))?;
+    }
+    let faulted = CompileClient::connect(&addr_s)
+        .context("connect faulted client")
+        .and_then(|mut client| {
+            let (results, _summary) =
+                client.compile_model(chip_seed, CFG, Method::Complete, &tensors)?;
+            let session = client.fetch_session(chip_seed)?;
+            Ok((results, session))
+        });
+    failpoint::clear();
+
+    let outcome = match faulted {
+        Ok((results, session_bytes)) => {
+            check_results(&results, &want).context("faulted job completed with wrong bytes")?;
+            if session_bytes != want_bytes {
+                bail!("faulted job's fetched RCSS bytes diverged from a fault-free save");
+            }
+            ScenarioOutcome { completed: true, error: None }
+        }
+        Err(e) => {
+            // A typed error is a legal ending — but only if the fabric
+            // survived it: the same fleet must now complete the same job
+            // fault-free, byte-identically.
+            let mut client =
+                CompileClient::connect(&addr_s).context("fabric died after a typed error")?;
+            let (results, _summary) = client
+                .compile_model(chip_seed, CFG, Method::Complete, &tensors)
+                .context("fault-free recovery job failed after a typed error")?;
+            check_results(&results, &want).context("recovery job diverged")?;
+            let session = client.fetch_session(chip_seed).context("recovery session fetch")?;
+            if session != want_bytes {
+                bail!("recovery job's fetched RCSS bytes diverged from a fault-free save");
+            }
+            ScenarioOutcome { completed: false, error: Some(format!("{e:#}")) }
+        }
+    };
+
+    // Tear the fleet down; worker threads end on the coordinator's EOF.
+    CompileClient::connect(&addr_s)?.shutdown_server()?;
+    server.join().map_err(|_| anyhow!("fabric server panicked"))??;
+    for w in workers {
+        // Err = the scenario killed this worker; panic = harness bug.
+        let _ = w.join().map_err(|_| anyhow!("worker thread panicked"))?;
+    }
+    if let Some(d) = &store_dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    Ok(outcome)
+}
+
+/// The failpoints seeded schedules draw from; [`random_scenario`] fills
+/// in each pick's spec with `Rng`-derived parameters.
+pub const MENU: &[&str] = &[
+    "net.frame.corrupt",
+    "net.frame.truncate",
+    "net.frame.wrong_version",
+    "worker.crash_before_solve",
+    "worker.crash_after_solve",
+    "worker.drop_store_sync",
+    "server.drop_fragment",
+    "server.requeue_race",
+    "store.torn_blob_write",
+    "store.blob_read_error",
+];
+
+/// Frame tags the random frame-level faults aim at: the job-path legs.
+/// (Handshake legs are exercised by scripted scenarios; randomly breaking
+/// `Hello` would mostly test the harness's ability to start a fleet.)
+const FRAME_TAGS: &[&str] =
+    &["ShardSnapshotJob", "ShardResult", "StorePut", "StoreGet", "CompileResult"];
+
+/// Derive scenario `idx` of the schedule `seed`: 1–2 distinct menu
+/// entries with seeded parameters. Same (seed, idx) → same scenario,
+/// always.
+pub fn random_scenario(seed: u64, idx: usize) -> Scenario {
+    let mut rng = Rng::new(seed ^ 0x6368_616f_73).fork(idx as u64);
+    let k = 1 + rng.index(2);
+    let picks = rng.sample_indices(MENU.len(), k);
+    let mut s = Scenario::new(&format!("rand-{seed}-{idx}"), &[]);
+    s.workers = 1 + rng.index(2);
+    for p in picks {
+        let name = MENU[p];
+        let spec = match name {
+            // Byte 16+ is payload/checksum territory on every frame: the
+            // corruption is always caught by the checksum, never by a
+            // resized length field (which would stall the reader until
+            // its socket timeout — a scripted concern, not a random one).
+            "net.frame.corrupt" => format!(
+                "corrupt={}; tag={}; count=1",
+                16 + rng.index(8),
+                FRAME_TAGS[rng.index(FRAME_TAGS.len())]
+            ),
+            "net.frame.truncate" => format!(
+                "truncate={}; tag={}; count=1",
+                rng.index(24),
+                FRAME_TAGS[rng.index(FRAME_TAGS.len())]
+            ),
+            "net.frame.wrong_version" => format!(
+                "wrong_version; tag={}; count=1",
+                FRAME_TAGS[rng.index(FRAME_TAGS.len())]
+            ),
+            "worker.drop_store_sync" => "return".to_string(),
+            "store.torn_blob_write" => {
+                s.store_dir = true;
+                format!("truncate={}; count=2", 1 + rng.index(64))
+            }
+            "store.blob_read_error" => {
+                s.store_dir = true;
+                "return; count=3".to_string()
+            }
+            // The lifecycle/scheduling points: one deterministic firing
+            // (an unlimited requeue_race would never drain the round).
+            _ => "return; count=1".to_string(),
+        };
+        s.name.push_str(&format!("+{name}"));
+        s.failpoints.push((name.to_string(), spec));
+    }
+    s
+}
+
+/// Run `scenarios` seeded random scenarios and fold the outcomes.
+/// `Err` = some scenario violated the invariant; the message names the
+/// scenario, which encodes `(seed, idx)` for replay.
+pub fn run_seed(seed: u64, scenarios: usize, weight_limit: usize) -> Result<ChaosReport> {
+    let mut report = ChaosReport { seed, ..ChaosReport::default() };
+    for idx in 0..scenarios {
+        let scenario = random_scenario(seed, idx);
+        let chip_seed = 100 + idx as u64;
+        let outcome = run_scenario(&scenario, chip_seed, weight_limit)
+            .with_context(|| format!("chaos seed {seed}, scenario {idx}"))?;
+        report.scenarios += 1;
+        if outcome.completed {
+            report.completed += 1;
+        } else {
+            report.typed_errors += 1;
+        }
+    }
+    Ok(report)
+}

@@ -30,6 +30,8 @@
 //! files. Byte layouts and deployment topologies are documented in
 //! `docs/ARCHITECTURE.md`.
 
+#[cfg(feature = "failpoints")]
+pub mod chaos;
 pub mod client;
 pub mod protocol;
 pub mod server;

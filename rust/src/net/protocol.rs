@@ -45,6 +45,7 @@ use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::{Bitmap, Decomposition, GroupConfig};
 use crate::store::{read_store_ctx, StoreCtx};
+use crate::util::failpoint;
 use crate::util::prop::{fnv1a, fnv1a_with};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
@@ -181,9 +182,52 @@ pub fn write_frame(w: &mut impl Write, frame_type: FrameType, payload: &[u8]) ->
             payload.len()
         );
     }
-    w.write_all(&frame_bytes(frame_type, payload))
-        .context("write RCWP frame")?;
+    let mut buf = frame_bytes(frame_type, payload);
+    if failpoint::ENABLED {
+        inject_frame_failpoints(w, frame_type, &mut buf)?;
+    }
+    w.write_all(&buf).context("write RCWP frame")?;
     w.flush().context("flush RCWP frame")?;
+    Ok(())
+}
+
+/// Chaos-suite hooks on the frame write path (`net.frame.*`, see
+/// [`crate::util::failpoint`]). The sites tag every evaluation with the
+/// frame-type debug name so a spec like `tag=ShardResult` targets one
+/// conversation leg even when client, coordinator, and workers share the
+/// process. Only reached when [`failpoint::ENABLED`]; a release build
+/// never pays the tag allocation.
+fn inject_frame_failpoints(
+    w: &mut impl Write,
+    frame_type: FrameType,
+    buf: &mut [u8],
+) -> Result<()> {
+    use crate::util::failpoint::Action;
+    let tag = format!("{frame_type:?}");
+    if let Action::Delay(d) = failpoint::eval("net.frame.stall", Some(&tag)) {
+        std::thread::sleep(d);
+    }
+    if let Action::Truncate(n) = failpoint::eval("net.frame.truncate", Some(&tag)) {
+        // A crash mid-write: the peer sees a torn frame then EOF.
+        let n = n.min(buf.len());
+        w.write_all(&buf[..n]).context("write RCWP frame")?;
+        w.flush().ok();
+        bail!("failpoint net.frame.truncate: sent {n} of {} frame bytes", buf.len());
+    }
+    if let Action::Corrupt(i) = failpoint::eval("net.frame.corrupt", Some(&tag)) {
+        // One flipped bit pattern on the wire; the peer's checksum (or
+        // header validation) must reject the frame.
+        let i = i.min(buf.len() - 1);
+        buf[i] ^= 0xff;
+    }
+    if failpoint::eval("net.frame.wrong_version", Some(&tag)) == Action::WrongVersion {
+        // Patch the version field and re-seal the checksum, so the peer
+        // exercises its version check rather than the checksum path.
+        buf[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+        let body = buf.len() - 8;
+        let sum = fnv1a(&buf[..body]);
+        buf[body..].copy_from_slice(&sum.to_le_bytes());
+    }
     Ok(())
 }
 

@@ -40,6 +40,7 @@ use crate::coordinator::{
 };
 use crate::fault::bank::ChipFaults;
 use crate::store::StoreHandle;
+use crate::util::failpoint;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -581,6 +582,21 @@ fn drive_worker(mut w: WorkerConn, round: &ShardRound<'_>) -> Option<WorkerConn>
         match dispatch_one(&mut w, round, shard) {
             Ok(frag) => {
                 *round.frags[shard].lock().expect("fragment lock") = Some(frag);
+                // Chaos hook: the requeue race — a solved range is pushed
+                // back as if its result had been lost, so some worker (or
+                // the local fallback) solves it a second time. The
+                // duplicate fragment must be byte-identical and merging it
+                // must be idempotent. Arm with `count=1` or the round
+                // never drains.
+                if failpoint::fires("server.requeue_race") {
+                    eprintln!(
+                        "fabric: failpoint server.requeue_race: requeueing solved shard {}/{}",
+                        shard + 1,
+                        round.shards
+                    );
+                    round.pending.lock().expect("pending lock").push(shard);
+                    round.reassigned.fetch_add(1, Ordering::Relaxed);
+                }
             }
             Err(e) => {
                 eprintln!(
@@ -662,6 +678,13 @@ fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Res
                 }
                 if let Some(why) = round.key.mismatch(frag.cache_key()) {
                     bail!("worker fragment does not belong to this job: {why}");
+                }
+                // Chaos hook: a coordinator that loses a fully valid
+                // fragment after receiving it (result arrived past the
+                // deadline, say). The caller requeues the range and drops
+                // this worker — the late-fragment merge case.
+                if failpoint::fires("server.drop_fragment") {
+                    bail!("failpoint server.drop_fragment: discarding the valid fragment");
                 }
                 return Ok(frag);
             }

@@ -45,6 +45,7 @@ use crate::coordinator::persist::{decode_registry_snapshot, CacheKey};
 use crate::coordinator::{CompileSession, Outcome, PatternSolution, ShardFragment, ShardPlan};
 use crate::fault::GroupFaults;
 use crate::store::{StoreCtx, StoreHandle};
+use crate::util::failpoint;
 use crate::util::fnv::FnvMap;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
@@ -90,11 +91,19 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
         };
         match frame.frame_type {
             FrameType::ShardJob | FrameType::ShardSnapshotJob => {
+                // Chaos hook: a worker that dies the moment a job lands.
+                // The error propagates out of `run_worker`, the stream
+                // drops, and the coordinator requeues the range.
+                failpoint::check("worker.crash_before_solve")?;
                 let outcome = if frame.frame_type == FrameType::ShardJob {
                     solve_job(&mut stream, &store, &frame.payload, threads)
                 } else {
                     solve_snapshot_job(&mut stream, &store, &frame.payload, threads)
                 };
+                // Chaos hook: a worker that solves the range but dies
+                // before reporting — the costliest requeue case (the work
+                // is redone elsewhere; dedupe keeps the bytes identical).
+                failpoint::check("worker.crash_after_solve")?;
                 match outcome {
                     Ok(done) => {
                         write_frame(&mut stream, FrameType::ShardResult, &done.fragment_bytes)?;
@@ -203,6 +212,12 @@ fn sync_with_fleet(
     sctx: &StoreCtx,
     patterns: &[GroupFaults],
 ) -> Result<()> {
+    // Chaos hook: a worker whose fleet-store sync silently fails. Every
+    // pattern then solves locally — slower, byte-identical (the store's
+    // determinism contract is exactly what this exercises).
+    if failpoint::fires("worker.drop_store_sync") {
+        return Ok(());
+    }
     let unknown: Vec<GroupFaults> =
         patterns.iter().filter(|p| !store.contains(sctx, p)).cloned().collect();
     if unknown.is_empty() {

@@ -52,6 +52,7 @@ use crate::coordinator::{Method, Outcome, PatternSolution, PipelineOptions};
 use crate::fault::bank::ChipFaults;
 use crate::fault::{FaultRates, GroupFaults};
 use crate::grouping::GroupConfig;
+use crate::util::failpoint;
 use crate::util::fnv::FnvMap;
 use crate::util::prop::{fnv1a_with, FNV1A_OFFSET};
 use anyhow::{anyhow, bail, Context, Result};
@@ -383,6 +384,14 @@ impl SolutionStore {
         }
         if let Some(dir) = self.dir.clone() {
             let path = Self::blob_path(&dir, hash);
+            // Chaos hook: the file tier's read fails (disk error, blob
+            // vanished mid-read). Must count as an `io_errors` miss and
+            // fall through to a local solve — never an error to the job.
+            if failpoint::fires("store.blob_read_error") {
+                self.counters.io_errors += 1;
+                self.counters.misses += 1;
+                return None;
+            }
             match std::fs::read(&path) {
                 Ok(bytes) => match decode_blob(&bytes, ctx, pattern) {
                     Ok(table) => {
@@ -426,6 +435,17 @@ impl SolutionStore {
             if !path.exists() {
                 let tmp = path.with_extension("rcps.tmp");
                 let blob = encode_blob(ctx, pattern, outcomes);
+                // Chaos hook: a torn blob lands at the final path as if a
+                // crash had bypassed the temp-file rename. Nothing notices
+                // *here* — the next read must reject it (checksum) and
+                // re-solve, which is what the chaos suite asserts.
+                if let failpoint::Action::Truncate(n) =
+                    failpoint::eval("store.torn_blob_write", None)
+                {
+                    let n = n.min(blob.len().saturating_sub(1));
+                    let _ = std::fs::write(&path, &blob[..n]);
+                    return;
+                }
                 let wrote = std::fs::write(&tmp, blob)
                     .and_then(|()| std::fs::rename(&tmp, &path));
                 if wrote.is_err() {

@@ -1,0 +1,358 @@
+//! Deterministic failpoint injection for the fabric chaos suite.
+//!
+//! A *failpoint* is a named hook compiled into a fragile seam of the
+//! fabric (frame writes, worker lifecycle, coordinator scheduling, store
+//! I/O). In a normal build the hooks are zero-cost no-ops: the whole
+//! registry is gated behind the `failpoints` cargo feature, and with the
+//! feature off [`eval`] is an `#[inline(always)]` constant
+//! [`Action::Nothing`] the optimizer deletes. With the feature on, a test
+//! (or `rchg chaos`) arms points by name with a small spec string and the
+//! site acts out the configured fault — deterministically, so a failing
+//! chaos seed replays exactly.
+//!
+//! # Naming convention
+//!
+//! Failpoint names are `area.point`, where `area` is the subsystem that
+//! hosts the hook (`net.frame`, `worker`, `server`, `store`) and `point`
+//! names the seam. The full set this build compiles in:
+//!
+//! | name | site | effect when armed |
+//! |---|---|---|
+//! | `net.frame.stall` | [`write_frame`] | sleep before the write (timeout path) |
+//! | `net.frame.truncate` | [`write_frame`] | send a prefix, then fail the write |
+//! | `net.frame.corrupt` | [`write_frame`] | flip one byte of the wire frame |
+//! | `net.frame.wrong_version` | [`write_frame`] | patch the version field (re-sealed) |
+//! | `worker.crash_before_solve` | `run_worker` | drop the coordinator link pre-solve |
+//! | `worker.crash_after_solve` | `run_worker` | solve, then drop the link unreported |
+//! | `worker.drop_store_sync` | `sync_with_fleet` | skip the fleet-store sync |
+//! | `server.drop_fragment` | `dispatch_one` | discard a valid fragment, drop worker |
+//! | `server.requeue_race` | `drive_worker` | requeue an already-solved shard |
+//! | `store.torn_blob_write` | `publish_table` | land a truncated blob, no rename |
+//! | `store.blob_read_error` | `lookup_table` | fail the file-tier read |
+//!
+//! [`write_frame`]: crate::net::protocol::write_frame
+//!
+//! # Spec grammar
+//!
+//! A spec is `kind[=arg]` followed by `;`-separated modifiers:
+//!
+//! ```text
+//! return                      fire the point's early-exit behavior
+//! delay=MILLIS                sleep MILLIS before proceeding
+//! truncate=N                  keep only the first N bytes
+//! corrupt[=I]                 flip byte I (default: the last byte)
+//! wrong_version               patch the protocol version field
+//! off                         parse-checked no-op (placeholder)
+//! ```
+//!
+//! Modifiers: `tag=T` fires only when the site's tag equals `T` (frame
+//! sites tag with the [`FrameType`] debug name, e.g. `ShardResult`);
+//! `skip=N` ignores the first N matching evaluations; `count=N` fires at
+//! most N times (default: unlimited). Example:
+//!
+//! ```text
+//! corrupt=17; tag=ShardResult; skip=1; count=2
+//! ```
+//!
+//! flips byte 17 of the second and third `ShardResult` frames written by
+//! this process, and nothing else.
+//!
+//! [`FrameType`]: crate::net::protocol::FrameType
+
+#[cfg(feature = "failpoints")]
+use anyhow::bail;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Whether this build compiled the failpoint registry in. `false` means
+/// every [`eval`] call is a constant no-op.
+pub const ENABLED: bool = cfg!(feature = "failpoints");
+
+/// What an armed failpoint tells its site to do. Sites only honor the
+/// variants that make sense for them (a store hook ignores
+/// `WrongVersion`); everything else falls through to normal execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Not armed (or filtered out): proceed normally.
+    Nothing,
+    /// Take the site's early-exit path (crash, skip, drop, fail).
+    Return,
+    /// Sleep this long, then proceed normally.
+    Delay(Duration),
+    /// Keep only the first `n` bytes of whatever the site is writing.
+    Truncate(usize),
+    /// Flip byte `i` (site-defined wrap-around) of the site's buffer.
+    Corrupt(usize),
+    /// Patch the wire-protocol version field.
+    WrongVersion,
+}
+
+#[cfg(feature = "failpoints")]
+mod registry {
+    use super::Action;
+    use anyhow::{bail, Result};
+    use std::collections::HashMap;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+    use std::time::Duration;
+
+    pub(super) struct Entry {
+        pub(super) raw: String,
+        pub(super) action: Action,
+        pub(super) tag: Option<String>,
+        pub(super) skip_left: u64,
+        pub(super) count_left: u64,
+    }
+
+    pub(super) fn table() -> MutexGuard<'static, HashMap<String, Entry>> {
+        static TABLE: OnceLock<Mutex<HashMap<String, Entry>>> = OnceLock::new();
+        // A panic while holding the lock poisons it; the registry is
+        // plain data, so recover rather than cascade the panic.
+        TABLE
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Parse a spec string (see the module docs for the grammar).
+    pub(super) fn parse(raw: &str) -> Result<Entry> {
+        let mut action = None;
+        let mut tag = None;
+        let mut skip = 0u64;
+        let mut count = u64::MAX;
+        for (i, tok) in raw.split(';').map(str::trim).enumerate() {
+            if tok.is_empty() {
+                continue;
+            }
+            let (k, v) = match tok.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (tok, None),
+            };
+            let int = |what: &str| -> Result<u64> {
+                v.ok_or_else(|| anyhow::anyhow!("failpoint spec: {what} needs =N in {raw:?}"))?
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("failpoint spec: bad number for {what} in {raw:?}"))
+            };
+            if i == 0 {
+                action = Some(match k {
+                    "off" => Action::Nothing,
+                    "return" => Action::Return,
+                    "delay" => Action::Delay(Duration::from_millis(int("delay")?)),
+                    "truncate" => Action::Truncate(int("truncate")? as usize),
+                    "corrupt" => Action::Corrupt(match v {
+                        Some(_) => int("corrupt")? as usize,
+                        None => usize::MAX, // site wraps: flips the last byte
+                    }),
+                    "wrong_version" => Action::WrongVersion,
+                    other => bail!("failpoint spec: unknown action {other:?} in {raw:?}"),
+                });
+                continue;
+            }
+            match k {
+                "tag" => {
+                    let t = v.ok_or_else(|| anyhow::anyhow!("failpoint spec: tag needs =NAME"))?;
+                    tag = Some(t.to_string());
+                }
+                "skip" => skip = int("skip")?,
+                "count" => count = int("count")?,
+                other => bail!("failpoint spec: unknown modifier {other:?} in {raw:?}"),
+            }
+        }
+        let action =
+            action.ok_or_else(|| anyhow::anyhow!("failpoint spec: empty spec {raw:?}"))?;
+        Ok(Entry { raw: raw.to_string(), action, tag, skip_left: skip, count_left: count })
+    }
+}
+
+/// Arm failpoint `name` with `spec` (replacing any prior arming). Errors
+/// on a malformed spec, and always errors in a build without the
+/// `failpoints` feature — arming a point that cannot fire is a test bug.
+#[cfg(feature = "failpoints")]
+pub fn configure(name: &str, spec: &str) -> Result<()> {
+    let entry = registry::parse(spec)?;
+    registry::table().insert(name.to_string(), entry);
+    Ok(())
+}
+
+/// Feature-off twin of [`configure`]: always an error, because arming a
+/// point that cannot fire is a test bug.
+#[cfg(not(feature = "failpoints"))]
+pub fn configure(name: &str, spec: &str) -> Result<()> {
+    let _ = (name, spec);
+    anyhow::bail!("this binary was built without the `failpoints` feature")
+}
+
+/// Disarm failpoint `name` (no-op if it was not armed).
+pub fn remove(name: &str) {
+    #[cfg(feature = "failpoints")]
+    registry::table().remove(name);
+    #[cfg(not(feature = "failpoints"))]
+    let _ = name;
+}
+
+/// Disarm every failpoint. Chaos scenarios call this between runs so a
+/// leftover arming can never leak into the next scenario.
+pub fn clear() {
+    #[cfg(feature = "failpoints")]
+    registry::table().clear();
+}
+
+/// The currently armed failpoints as `(name, spec)` pairs, sorted by
+/// name (empty without the feature).
+#[cfg(feature = "failpoints")]
+pub fn list() -> Vec<(String, String)> {
+    let mut v: Vec<(String, String)> =
+        registry::table().iter().map(|(k, e)| (k.clone(), e.raw.clone())).collect();
+    v.sort();
+    v
+}
+
+/// Feature-off twin of [`list`]: nothing is ever armed.
+#[cfg(not(feature = "failpoints"))]
+pub fn list() -> Vec<(String, String)> {
+    Vec::new()
+}
+
+/// Evaluate failpoint `name` at a site. `tag` is the site's dynamic
+/// context (frame sites pass the frame-type name); an armed point with a
+/// `tag=` filter fires only on a matching tag, and a non-matching
+/// evaluation consumes neither `skip` nor `count`. Returns the armed
+/// [`Action`] (consuming one `count`) or [`Action::Nothing`].
+#[cfg(feature = "failpoints")]
+pub fn eval(name: &str, tag: Option<&str>) -> Action {
+    let mut table = registry::table();
+    let Some(entry) = table.get_mut(name) else {
+        return Action::Nothing;
+    };
+    if let Some(want) = &entry.tag {
+        if tag != Some(want.as_str()) {
+            return Action::Nothing;
+        }
+    }
+    if entry.skip_left > 0 {
+        entry.skip_left -= 1;
+        return Action::Nothing;
+    }
+    if entry.count_left == 0 {
+        return Action::Nothing;
+    }
+    entry.count_left -= 1;
+    entry.action
+}
+
+/// No-op twin of [`eval`] for builds without the `failpoints` feature:
+/// a constant the optimizer deletes along with the site's dead arms.
+#[cfg(not(feature = "failpoints"))]
+#[inline(always)]
+pub fn eval(name: &str, tag: Option<&str>) -> Action {
+    let _ = (name, tag);
+    Action::Nothing
+}
+
+/// `bail!`-style helper: `Err` with a uniform message when the armed
+/// action is [`Action::Return`], `Ok(())` otherwise. Sites whose crash
+/// semantics are "return an error here" use this one-liner.
+pub fn check(name: &str) -> Result<()> {
+    #[cfg(feature = "failpoints")]
+    if eval(name, None) == Action::Return {
+        bail!("failpoint {name} triggered");
+    }
+    #[cfg(not(feature = "failpoints"))]
+    let _ = name;
+    Ok(())
+}
+
+/// `true` when the armed action for `name` is [`Action::Return`] —
+/// for sites whose early exit is a silent skip rather than an error.
+pub fn fires(name: &str) -> bool {
+    eval(name, None) == Action::Return
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// The registry is process-global; serialize the tests that mutate it.
+    fn guard() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn unarmed_is_nothing() {
+        let _g = guard();
+        clear();
+        assert_eq!(eval("no.such.point", None), Action::Nothing);
+        assert!(check("no.such.point").is_ok());
+        assert!(!fires("no.such.point"));
+    }
+
+    #[test]
+    fn arm_fire_disarm() {
+        let _g = guard();
+        clear();
+        configure("t.point", "return").unwrap();
+        assert_eq!(list(), vec![("t.point".to_string(), "return".to_string())]);
+        assert!(fires("t.point"));
+        assert!(check("t.point").is_err());
+        remove("t.point");
+        assert_eq!(eval("t.point", None), Action::Nothing);
+        assert!(list().is_empty());
+    }
+
+    #[test]
+    fn skip_and_count_are_deterministic() {
+        let _g = guard();
+        clear();
+        configure("t.count", "corrupt=3; skip=2; count=2").unwrap();
+        assert_eq!(eval("t.count", None), Action::Nothing); // skip 1
+        assert_eq!(eval("t.count", None), Action::Nothing); // skip 2
+        assert_eq!(eval("t.count", None), Action::Corrupt(3)); // fire 1
+        assert_eq!(eval("t.count", None), Action::Corrupt(3)); // fire 2
+        assert_eq!(eval("t.count", None), Action::Nothing); // exhausted
+        clear();
+    }
+
+    #[test]
+    fn tag_filter_consumes_nothing() {
+        let _g = guard();
+        clear();
+        configure("t.tag", "truncate=5; tag=ShardResult; count=1").unwrap();
+        // Wrong / missing tags do not fire and do not burn the count.
+        assert_eq!(eval("t.tag", Some("Hello")), Action::Nothing);
+        assert_eq!(eval("t.tag", None), Action::Nothing);
+        assert_eq!(eval("t.tag", Some("ShardResult")), Action::Truncate(5));
+        assert_eq!(eval("t.tag", Some("ShardResult")), Action::Nothing);
+        clear();
+    }
+
+    #[test]
+    fn spec_parsing_accepts_the_grammar_and_rejects_junk() {
+        let _g = guard();
+        clear();
+        configure("t.a", "off").unwrap();
+        assert_eq!(eval("t.a", None), Action::Nothing);
+        configure("t.b", "delay=40").unwrap();
+        assert_eq!(eval("t.b", None), Action::Delay(Duration::from_millis(40)));
+        configure("t.c", "corrupt").unwrap();
+        assert_eq!(eval("t.c", None), Action::Corrupt(usize::MAX));
+        configure("t.d", "wrong_version").unwrap();
+        assert_eq!(eval("t.d", None), Action::WrongVersion);
+        for bad in ["", "explode", "delay", "truncate=x", "return; bogus=1", "corrupt=-1"] {
+            assert!(configure("t.bad", bad).is_err(), "spec {bad:?} should be rejected");
+        }
+        clear();
+    }
+
+    #[test]
+    fn rearming_replaces_counters() {
+        let _g = guard();
+        clear();
+        configure("t.rearm", "return; count=1").unwrap();
+        assert!(fires("t.rearm"));
+        assert!(!fires("t.rearm"));
+        configure("t.rearm", "return; count=1").unwrap();
+        assert!(fires("t.rearm"));
+        clear();
+    }
+}

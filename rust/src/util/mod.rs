@@ -1,8 +1,9 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! PRNG, JSON, CLI parsing, timing/benchmarks, thread pooling, property
-//! testing and binary tensor I/O.
+//! testing, deterministic failpoint injection, and binary tensor I/O.
 
 pub mod cli;
+pub mod failpoint;
 pub mod fnv;
 pub mod io;
 pub mod json;

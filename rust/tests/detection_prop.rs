@@ -1,0 +1,140 @@
+//! Property tests for fault-map extraction (`fault::detection`).
+//!
+//! Every property here is *exact* — no statistical thresholds — so the
+//! suite is deterministic by construction: `prop_check` derives each
+//! case's `Rng` from a fixed base seed and reports the failing seed for
+//! replay. The statistical behaviour of noisy detection (vote counts vs
+//! misclassification rates) is covered by the module's unit tests; these
+//! properties pin the contracts the rest of the repo leans on — exact
+//! recovery at zero noise, honest bookkeeping, and same-seed determinism.
+
+use rchg::fault::detection::{march_detect, PhysicalArray};
+use rchg::fault::{FaultRates, FaultState};
+use rchg::util::prng::Rng;
+use rchg::util::prop::prop_check;
+use rchg::{prop_assert, prop_assert_eq};
+
+/// Random rates well above the paper defaults so every case sees all
+/// three states; random geometry spans 1-bit cells to 3-bit cells.
+fn random_case(rng: &mut Rng) -> (PhysicalArray, Vec<FaultState>) {
+    let cells = 1 + rng.index(600);
+    let levels = 2 + rng.index(7) as u8;
+    let rates = FaultRates { p_sa0: 0.3 * rng.f64(), p_sa1: 0.3 * rng.f64() };
+    let arr = PhysicalArray::sample(cells, levels, &rates, rng);
+    let truth = arr.truth.clone();
+    (arr, truth)
+}
+
+#[test]
+fn prop_noiseless_march_recovers_any_injected_map_exactly() {
+    prop_check("march-noiseless-exact", 200, |rng| {
+        let (mut arr, truth) = random_case(rng);
+        let votes = 1 + rng.index(9);
+        let det = march_detect(&mut arr, 0.0, votes, rng);
+        prop_assert_eq!(det.misclassified, 0);
+        prop_assert_eq!(det.measured, truth);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_misclassified_count_is_the_measured_truth_divergence() {
+    // The reported counter must always equal an independent recount —
+    // under noise too, where measured and truth genuinely diverge.
+    prop_check("march-misclassified-recount", 150, |rng| {
+        let (mut arr, truth) = random_case(rng);
+        let noise = 0.4 * rng.f64();
+        let votes = 1 + rng.index(7);
+        let det = march_detect(&mut arr, noise, votes, rng);
+        prop_assert_eq!(det.measured.len(), truth.len());
+        let recount =
+            det.measured.iter().zip(&truth).filter(|(m, t)| m != t).count();
+        prop_assert_eq!(det.misclassified, recount);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_same_seed_detection_replays_identically() {
+    // The whole experiments layer assumes a (chip, seed) pair replays to
+    // the same measured map; noise must come only from the passed Rng.
+    prop_check("march-seeded-determinism", 100, |rng| {
+        let (arr, _) = random_case(rng);
+        let noise = 0.3 * rng.f64();
+        let votes = 1 + rng.index(9);
+        let replay_seed = rng.next_u64();
+        let mut a = arr.clone();
+        let det_a = march_detect(&mut a, noise, votes, &mut Rng::new(replay_seed));
+        let mut b = arr.clone();
+        let det_b = march_detect(&mut b, noise, votes, &mut Rng::new(replay_seed));
+        prop_assert_eq!(det_a.measured, det_b.measured);
+        prop_assert_eq!(det_a.misclassified, det_b.misclassified);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_even_vote_counts_round_up_to_the_next_odd() {
+    // `march_detect` normalises `votes` to `max(1) | 1` *before* any
+    // randomness is consumed, so votes = 2k and votes = 2k+1 must be
+    // byte-for-byte the same procedure under the same Rng seed.
+    prop_check("march-votes-round-odd", 100, |rng| {
+        let (arr, _) = random_case(rng);
+        let noise = 0.3 * rng.f64();
+        let even = 2 * (1 + rng.index(4)); // 2, 4, 6, 8
+        let replay_seed = rng.next_u64();
+        let mut a = arr.clone();
+        let det_even = march_detect(&mut a, noise, even, &mut Rng::new(replay_seed));
+        let mut b = arr.clone();
+        let det_odd = march_detect(&mut b, noise, even + 1, &mut Rng::new(replay_seed));
+        prop_assert_eq!(det_even.measured, det_odd.measured);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_detection_is_independent_of_prior_array_contents() {
+    // The march sequence writes before every read; whatever a previous
+    // workload left programmed in the cells must not leak into the map.
+    prop_check("march-ignores-prior-writes", 100, |rng| {
+        let (arr, _) = random_case(rng);
+        let noise = 0.2 * rng.f64();
+        let replay_seed = rng.next_u64();
+        let mut fresh = arr.clone();
+        let mut dirty = arr.clone();
+        for idx in 0..dirty.truth.len() {
+            dirty.write(idx, rng.index(dirty.levels as usize) as u8);
+        }
+        let det_fresh = march_detect(&mut fresh, noise, 3, &mut Rng::new(replay_seed));
+        let det_dirty = march_detect(&mut dirty, noise, 3, &mut Rng::new(replay_seed));
+        prop_assert_eq!(det_fresh.measured, det_dirty.measured);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_handcrafted_maps_classify_per_cell() {
+    // Point-wise ground truth: overwrite the sampled map with a crafted
+    // one mixing all three states at known positions, then check the
+    // classification cell by cell at zero noise.
+    prop_check("march-handcrafted-cells", 100, |rng| {
+        let cells = 3 + rng.index(100);
+        let levels = 2 + rng.index(7) as u8;
+        let mut arr =
+            PhysicalArray::sample(cells, levels, &FaultRates { p_sa0: 0.0, p_sa1: 0.0 }, rng);
+        let mut truth = vec![FaultState::Free; cells];
+        for slot in truth.iter_mut() {
+            *slot = match rng.index(3) {
+                0 => FaultState::Free,
+                1 => FaultState::Sa0,
+                _ => FaultState::Sa1,
+            };
+        }
+        arr.truth = truth.clone();
+        let det = march_detect(&mut arr, 0.0, 1, rng);
+        for (idx, (m, t)) in det.measured.iter().zip(&truth).enumerate() {
+            prop_assert!(m == t, "cell {idx}: measured {m:?}, injected {t:?} (L={levels})");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,222 @@
+#!/usr/bin/env python3
+"""Golden byte fixtures for every persisted/wire codec in the repo.
+
+Generates one canonical binary per format, independently of the Rust
+encoders, so `tests/golden_formats.rs` (and the RCRG unit test in
+`coordinator/persist.rs`) can pin the byte layouts: a refactor that
+changes any codec's bytes fails against these files, not only against
+its own round-trip.
+
+Formats (layouts transcribed from the Rust sources, all little-endian,
+sealed with a trailing FNV-1a-64 checksum except the RCWP frame, whose
+checksum covers header+payload):
+
+* RCWP v1 frame      — net/protocol.rs   (rcwp_hello_v1.bin)
+* RCSS v2 session    — coordinator/session.rs (rcss_v2_empty.bin)
+* RCSF v1 fragment   — coordinator/shard.rs   (rcsf_v1_fragment.bin)
+* RCRG v1 snapshot   — coordinator/persist.rs (rcrg_v1_snapshot.bin)
+* RCPS v1 store blob — store/mod.rs           (rcps_v1_blob.bin)
+
+Re-run this script to bless new bytes after an *intentional* format
+change (then bump the relevant version constant and document the
+migration): `python3 rust/tests/fixtures/make_fixtures.py`
+"""
+
+import os
+import struct
+
+OUT = os.path.dirname(os.path.abspath(__file__))
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def i64(v):
+    return struct.pack("<q", v)
+
+
+def f64_bits(v):
+    return struct.pack("<d", v)  # same IEEE-754 bits Rust's to_bits() writes
+
+
+def seal(payload: bytes) -> bytes:
+    return payload + u64(fnv1a(payload))
+
+
+# ---- shared constants (must mirror the Rust sources) --------------------
+
+CHIP_SEED = 7
+P_SA0 = 0.0175  # fault::DEFAULT_P_SA0
+P_SA1 = 0.0904  # fault::DEFAULT_P_SA1
+ROWS, COLS, LEVELS = 2, 2, 4  # GroupConfig::R2C2
+CELLS = ROWS * COLS
+MAX_PER_ARRAY = ROWS * (LEVELS**COLS - 1)  # 30
+TABLE_LEN = 2 * MAX_PER_ARRAY + 1  # 61
+METHOD_COMPLETE = 0
+TABLE_VALUE_LIMIT = 4096  # PipelineOptions::default()
+SPARSEST = 0
+
+FREE, SA0, SA1 = 0, 1, 2  # FaultState codes
+TAG_TABLE, TAG_PAIRS, TAG_EMPTY = 0, 1, 2
+
+
+def cache_key() -> bytes:
+    """persist::write_key — 50 bytes shared by RCSS/RCSF/RCRG."""
+    return (
+        u64(CHIP_SEED)
+        + f64_bits(P_SA0)
+        + f64_bits(P_SA1)
+        + u32(ROWS)
+        + u32(COLS)
+        + u32(LEVELS)
+        + bytes([METHOD_COMPLETE, SPARSEST])
+        + i64(TABLE_VALUE_LIMIT)
+        + u32(CELLS)
+    )
+
+
+def outcome(idx: int) -> bytes:
+    """persist::push_outcome — error i64, stage u8, pos/neg cell bytes.
+
+    Values vary with the table index so byte-identity checks are not
+    trivially all-zero: cell levels stay < LEVELS, stage codes stay in
+    the valid 0..=8 range.
+    """
+    pos = bytes([idx % LEVELS, 0, 0, 0])
+    neg = bytes([0, (idx // LEVELS) % LEVELS, 0, 0])
+    return i64(0) + bytes([idx % 3]) + pos + neg
+
+
+def full_table() -> bytes:
+    return bytes([TAG_TABLE]) + b"".join(outcome(i) for i in range(TABLE_LEN))
+
+
+def pattern(pos, neg) -> bytes:
+    assert len(pos) == len(neg) == CELLS
+    return bytes(pos) + bytes(neg)
+
+
+# ---- RCWP v1: one Hello frame (worker with 3 solve threads) -------------
+
+def rcwp_hello() -> bytes:
+    payload = u32(3)  # encode_hello(3)
+    head = u32(0x52435750) + u32(1) + u32(1) + u32(len(payload))  # magic, ver, Hello
+    body = head + payload
+    return body + u64(fnv1a(body))
+
+
+# ---- RCSS v2: an empty warm session (0 patterns) ------------------------
+# The only session file whose decode -> re-encode is byte-stable by the
+# format's own contract (save_parts drops never-hit warm entries).
+
+def rcss_empty() -> bytes:
+    payload = u32(0x52435353) + u32(2) + cache_key() + u32(0)
+    return seal(payload)
+
+
+# ---- RCSF v1: shard 1 of a 2-way plan over 6 patterns -------------------
+# ShardPlan::new(2).range(1, 6) == 3..6, so the fragment carries 3 parts
+# exercising all three solution tags: a dense table, a pairs map (sorted
+# by weight, as the Rust encoder writes), and an empty (unsolved) slot.
+
+def rcsf_fragment() -> bytes:
+    parts = (
+        pattern([FREE] * 4, [FREE] * 4)
+        + full_table()
+        + pattern([SA0, FREE, FREE, FREE], [FREE, SA1, FREE, FREE])
+        + bytes([TAG_PAIRS])
+        + u32(2)
+        + i64(-2)
+        + outcome(1)
+        + i64(5)
+        + outcome(2)
+        + pattern([FREE, FREE, SA1, FREE], [SA0, FREE, FREE, FREE])
+        + bytes([TAG_EMPTY])
+    )
+    payload = (
+        u32(0x52435346)
+        + u32(1)
+        + cache_key()
+        + u32(1)  # shard
+        + u32(2)  # shards
+        + u32(6)  # n_patterns
+        + u32(3)  # start
+        + u32(3)  # len
+        + parts
+    )
+    return seal(payload)
+
+
+# ---- RCRG v1: a 2-pattern registry snapshot -----------------------------
+
+def rcrg_snapshot() -> bytes:
+    payload = (
+        u32(0x52435247)
+        + u32(1)
+        + cache_key()
+        + u32(2)
+        + pattern([FREE] * 4, [FREE] * 4)
+        + pattern([SA0, FREE, FREE, FREE], [FREE, FREE, FREE, SA1])
+    )
+    return seal(payload)
+
+
+# ---- RCPS v1: one store blob (full-range table for one pattern) ---------
+# Header is StoreCtx::push_bytes — the cache key minus the chip fields
+# (chip identity is excluded from a solution's identity by design).
+
+def rcps_blob() -> bytes:
+    ctx = (
+        u32(ROWS)
+        + u32(COLS)
+        + u32(LEVELS)
+        + bytes([METHOD_COMPLETE, SPARSEST])
+        + i64(TABLE_VALUE_LIMIT)
+        + u32(CELLS)
+    )
+    payload = (
+        u32(0x52435053)
+        + u32(1)
+        + ctx
+        + pattern([FREE, SA0, FREE, FREE], [FREE, FREE, FREE, SA1])
+        + full_table()
+    )
+    return seal(payload)
+
+
+FIXTURES = {
+    "rcwp_hello_v1.bin": rcwp_hello,
+    "rcss_v2_empty.bin": rcss_empty,
+    "rcsf_v1_fragment.bin": rcsf_fragment,
+    "rcrg_v1_snapshot.bin": rcrg_snapshot,
+    "rcps_v1_blob.bin": rcps_blob,
+}
+
+
+def main():
+    for name, build in FIXTURES.items():
+        data = build()
+        path = os.path.join(OUT, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes, fnv1a={fnv1a(data):016x}")
+
+
+if __name__ == "__main__":
+    main()

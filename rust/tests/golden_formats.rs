@@ -1,0 +1,216 @@
+//! Golden byte fixtures for every codec: RCWP frames, RCSS sessions,
+//! RCSF fragments, and RCPS store blobs (the `pub(crate)` RCRG snapshot
+//! codec has its golden test inside `coordinator/persist.rs`).
+//!
+//! The fixtures under `tests/fixtures/` are generated *independently of
+//! the Rust encoders* by `make_fixtures.py`, so these tests pin the
+//! actual byte layouts — a refactor that changes any format's bytes
+//! fails here even if its own round-trip still passes. After an
+//! intentional format change, bump the version constant, re-run the
+//! generator to bless new bytes, and document the migration (see
+//! `docs/TESTING.md`).
+
+use rchg::coordinator::session::{SESSION_MAGIC, SESSION_VERSION};
+use rchg::coordinator::{
+    CompileSession, Method, PipelineOptions, ShardFragment, FRAGMENT_VERSION,
+};
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::{FaultRates, FaultState, GroupFaults};
+use rchg::grouping::GroupConfig;
+use rchg::net::protocol::{frame_bytes, read_frame, WIRE_VERSION};
+use rchg::net::FrameType;
+use rchg::store::{decode_blob, encode_blob, StoreCtx};
+use rchg::util::prop::fnv1a;
+use std::io::Cursor;
+
+const RCWP: &[u8] = include_bytes!("fixtures/rcwp_hello_v1.bin");
+const RCSS: &[u8] = include_bytes!("fixtures/rcss_v2_empty.bin");
+const RCSF: &[u8] = include_bytes!("fixtures/rcsf_v1_fragment.bin");
+const RCPS: &[u8] = include_bytes!("fixtures/rcps_v1_blob.bin");
+
+/// The fixtures' shared identity: chip 7, paper rates, R2C2, default
+/// pipeline (Complete, table limit 4096, not sparsest).
+const CHIP_SEED: u64 = 7;
+const CFG: GroupConfig = GroupConfig::R2C2;
+
+/// Flip every byte of a sealed fixture one at a time and require the
+/// decoder to reject each mutant — corruption anywhere (payload or
+/// checksum) must be caught before parsing.
+fn assert_rejects_every_flip(bytes: &[u8], what: &str, decode: impl Fn(&[u8]) -> bool) {
+    for i in 0..bytes.len() {
+        let mut bad = bytes.to_vec();
+        bad[i] ^= 0xff;
+        assert!(!decode(&bad), "{what}: flipped byte {i} must be rejected");
+    }
+}
+
+/// Truncate a fixture at every length below its full size and require
+/// rejection (offset 0 is excluded where an empty input is a legal
+/// clean-EOF, as for wire frames).
+fn assert_rejects_every_truncation(
+    bytes: &[u8],
+    from: usize,
+    what: &str,
+    decode: impl Fn(&[u8]) -> bool,
+) {
+    for len in from..bytes.len() {
+        assert!(!decode(&bytes[..len]), "{what}: truncation to {len} bytes must be rejected");
+    }
+}
+
+/// Patch one byte of a sealed payload and re-seal so the checksum passes
+/// — the way to prove a *semantic* validation fires, not the checksum.
+fn reseal_with(bytes: &[u8], at: usize, value: u8) -> Vec<u8> {
+    let mut payload = bytes[..bytes.len() - 8].to_vec();
+    payload[at] = value;
+    let sum = fnv1a(&payload);
+    payload.extend_from_slice(&sum.to_le_bytes());
+    payload
+}
+
+// ---- RCWP v1 wire frame -------------------------------------------------
+
+#[test]
+fn golden_rcwp_hello_frame() {
+    let frame = read_frame(&mut Cursor::new(RCWP))
+        .expect("golden frame must parse")
+        .expect("golden frame is not a clean EOF");
+    assert_eq!(frame.frame_type, FrameType::Hello);
+    assert_eq!(frame.payload, 3u32.to_le_bytes(), "a 3-thread hello");
+    assert_eq!(
+        frame_bytes(frame.frame_type, &frame.payload),
+        RCWP,
+        "the frame encoder no longer produces the golden RCWP bytes"
+    );
+}
+
+#[test]
+fn golden_rcwp_rejects_corruption_truncation_and_wrong_version() {
+    let parses = |b: &[u8]| matches!(read_frame(&mut Cursor::new(b)), Ok(Some(_)));
+    assert_rejects_every_flip(RCWP, "RCWP", parses);
+    // Truncating to 0 bytes is a clean EOF (Ok(None)), every other prefix
+    // is a mid-frame cut and must error.
+    assert!(matches!(read_frame(&mut Cursor::new(&RCWP[..0])), Ok(None)));
+    assert_rejects_every_truncation(RCWP, 1, "RCWP", parses);
+    // Version patched and re-sealed: the version check itself must fire.
+    let mut bumped = RCWP.to_vec();
+    bumped[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    let body = bumped.len() - 8;
+    let sum = fnv1a(&bumped[..body]);
+    bumped[body..].copy_from_slice(&sum.to_le_bytes());
+    let err = read_frame(&mut Cursor::new(&bumped[..])).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+// ---- RCSS v2 session cache ----------------------------------------------
+
+#[test]
+fn golden_rcss_empty_session_roundtrips() {
+    let session = CompileSession::from_bytes(RCSS).expect("golden session must parse");
+    assert_eq!(session.chip().expect("persisted sessions carry a chip").chip_seed, CHIP_SEED);
+    // An empty session is the one session whose decode -> re-encode is
+    // byte-stable by contract (save_parts drops never-hit warm entries).
+    assert_eq!(
+        session.to_bytes().unwrap(),
+        RCSS,
+        "the session encoder no longer produces the golden RCSS bytes"
+    );
+    // And a session built from scratch through the public API must land
+    // on the same bytes — generator and encoder agree on the layout.
+    let chip = ChipFaults::new(CHIP_SEED, FaultRates::paper_default());
+    let built = CompileSession::builder(CFG).method(Method::Complete).chip(&chip);
+    assert_eq!(built.to_bytes().unwrap(), RCSS);
+}
+
+#[test]
+fn golden_rcss_rejects_corruption_truncation_and_bad_header() {
+    let parses = |b: &[u8]| CompileSession::from_bytes(b).is_ok();
+    assert_rejects_every_flip(RCSS, "RCSS", parses);
+    assert_rejects_every_truncation(RCSS, 0, "RCSS", parses);
+    assert_eq!(&RCSS[0..4], SESSION_MAGIC.to_le_bytes().as_slice());
+    // Semantic rejections, re-sealed so the checksum passes: bad magic,
+    // unsupported version (a v1 pair cache must not half-parse).
+    let err = CompileSession::from_bytes(&reseal_with(RCSS, 0, b'X')).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+    let err =
+        CompileSession::from_bytes(&reseal_with(RCSS, 4, SESSION_VERSION as u8 - 1)).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+// ---- RCSF v1 shard fragment ---------------------------------------------
+
+#[test]
+fn golden_rcsf_fragment_roundtrips_all_three_tags() {
+    let frag = ShardFragment::from_bytes(RCSF).expect("golden fragment must parse");
+    assert_eq!(frag.chip_seed(), CHIP_SEED);
+    // Shard 1 of a 2-way plan over 6 patterns: ids 3..6.
+    assert_eq!(frag.range(), 3..6);
+    assert_eq!(frag.total_patterns(), 6);
+    // Three parts: one dense table, one pairs map, one empty slot.
+    assert_eq!(frag.solved_patterns(), 2);
+    let parts: Vec<_> = frag.parts().collect();
+    assert_eq!(parts.len(), 3);
+    assert!(parts[0].1.is_some() && parts[1].1.is_some() && parts[2].1.is_none());
+    assert_eq!(parts[1].0.pos[0], FaultState::Sa0);
+    assert_eq!(parts[1].0.neg[1], FaultState::Sa1);
+    assert_eq!(
+        frag.to_bytes(),
+        RCSF,
+        "the fragment encoder no longer produces the golden RCSF bytes"
+    );
+}
+
+#[test]
+fn golden_rcsf_rejects_corruption_truncation_and_bad_framing() {
+    let parses = |b: &[u8]| ShardFragment::from_bytes(b).is_ok();
+    assert_rejects_every_flip(RCSF, "RCSF", parses);
+    for len in [0, 8, 15, 16, 57, RCSF.len() / 2, RCSF.len() - 1] {
+        assert!(!parses(&RCSF[..len]), "truncation to {len} bytes must be rejected");
+    }
+    // Re-sealed semantic rejections: version from a future build, and a
+    // shard index outside its own plan (offset 58 = magic+version+key).
+    let err =
+        ShardFragment::from_bytes(&reseal_with(RCSF, 4, FRAGMENT_VERSION as u8 + 1)).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+    let err = ShardFragment::from_bytes(&reseal_with(RCSF, 58, 5)).unwrap_err();
+    assert!(err.to_string().contains("shard"), "{err}");
+}
+
+// ---- RCPS v1 store blob -------------------------------------------------
+
+/// The identity the golden RCPS blob answers for.
+fn rcps_identity() -> (StoreCtx, GroupFaults) {
+    let ctx = StoreCtx::new(CFG, PipelineOptions::default());
+    let mut pattern = GroupFaults::free(CFG.cells());
+    pattern.pos[1] = FaultState::Sa0;
+    pattern.neg[3] = FaultState::Sa1;
+    (ctx, pattern)
+}
+
+#[test]
+fn golden_rcps_blob_roundtrips() {
+    let (ctx, pattern) = rcps_identity();
+    let table = decode_blob(RCPS, &ctx, &pattern).expect("golden blob must parse");
+    assert_eq!(table.len(), ctx.table_len(), "a full-range R2C2 table has 61 entries");
+    assert_eq!(
+        encode_blob(&ctx, &pattern, &table),
+        RCPS,
+        "the store blob encoder no longer produces the golden RCPS bytes"
+    );
+}
+
+#[test]
+fn golden_rcps_rejects_corruption_and_foreign_identities() {
+    let (ctx, pattern) = rcps_identity();
+    let parses = |b: &[u8]| decode_blob(b, &ctx, &pattern).is_ok();
+    assert_rejects_every_flip(RCPS, "RCPS", parses);
+    assert_rejects_every_truncation(RCPS, 0, "RCPS", parses);
+    // A valid blob answering a *different* request must be refused — the
+    // hash-collision guard: never adopt a foreign pattern's solution.
+    let other_pattern = GroupFaults::free(CFG.cells());
+    assert!(decode_blob(RCPS, &ctx, &other_pattern).is_err());
+    let other_pipeline =
+        PipelineOptions { table_value_limit: 512, ..PipelineOptions::default() };
+    let other_ctx = StoreCtx::new(CFG, other_pipeline);
+    assert!(decode_blob(RCPS, &other_ctx, &pattern).is_err());
+}
