@@ -39,6 +39,7 @@ use super::pipeline::{
 use crate::fault::{GroupFaults, PatternKey};
 use crate::grouping::{Decomposition, GroupConfig};
 use crate::ilp::IlpStats;
+use crate::obs;
 use crate::util::fnv::FnvMap;
 use crate::util::pool::{parallel_map_ranges, parallel_work_steal, split_ranges};
 use crate::util::timer::{StageClock, Timer};
@@ -580,12 +581,18 @@ pub(super) fn solve_fresh(
             let mut hits: Vec<(usize, Vec<Outcome>)> = Vec::new();
             let mut misses: Vec<usize> = Vec::new();
             if let Some(store) = &store {
+                // Rooted (not parented) because this sequential consult
+                // loop is shared by the local batch and the shard-solve
+                // paths, which trace under different parents.
+                let mut csp = obs::span("compile.store_consult");
                 for (i, &(pid, _)) in scan.fresh_patterns.iter().enumerate() {
                     match store.lookup_table(&sctx, &cache.registry.ctx(pid).faults) {
                         Some(t) => hits.push((i, t)),
                         None => misses.push(i),
                     }
                 }
+                csp.field_u64("hits", hits.len() as u64);
+                csp.field_u64("misses", misses.len() as u64);
             } else {
                 misses.extend(0..scan.fresh_patterns.len());
             }
@@ -652,9 +659,27 @@ fn compile_batch_inner(
     cache: &mut SolveCache,
 ) -> Vec<CompiledTensor> {
     let timer = Timer::start();
-    let mut scan = scan_batch(jobs, opts, cache, false);
-    let solve_secs = solve_fresh(&mut scan, opts, cache);
+    // One span tree per batch, opened on the (sequential) driver thread:
+    // the parallel solve fan-out carries no spans of its own, so the
+    // record stream's deterministic skeleton is identical at any thread
+    // count (pinned by `tests/obs.rs`). Phase timings subsume what
+    // `StageClock` reports per stage bucket.
+    let mut bspan = obs::span("compile.batch");
+    bspan.field_u64("tensors", jobs.len() as u64);
+    let mut scan = {
+        let mut ssp = obs::child_span("compile.scan", bspan.handle());
+        let scan = scan_batch(jobs, opts, cache, false);
+        ssp.field_u64("unique_patterns", cache.registry.len() as u64);
+        ssp.field_u64("fresh_patterns", scan.fresh_patterns.len() as u64);
+        scan
+    };
+    let solve_secs = {
+        let mut vsp = obs::child_span("compile.solve", bspan.handle());
+        vsp.field_str("tier", if scan.tier == SolveTier::BatchTable { "table" } else { "pairs" });
+        solve_fresh(&mut scan, opts, cache)
+    };
     let BatchScan { mut per_tensor, tensor_pids, .. } = scan;
+    let scatter_span = obs::child_span("compile.scatter", bspan.handle());
 
     // Phase 4 — scatter: map every weight to its outcome. The per-pattern
     // solution views are borrowed once for the whole batch (hoisting the
@@ -697,6 +722,8 @@ fn compile_batch_inner(
         results.push(CompiledTensor { cfg: opts.cfg, decomps, errors, stats });
     }
 
+    drop(scatter_span);
+
     let wall = timer.secs();
     let total_weights: usize = jobs.iter().map(|j| j.weights.len()).sum();
     let total_solve: f64 = solve_secs.iter().sum();
@@ -708,6 +735,38 @@ fn compile_batch_inner(
             solve_secs[ti] + overhead * r.stats.weights as f64 / total_weights as f64
         };
     }
+
+    // Mirror the batch's deltas into the global registry — this is the
+    // single choke point every session/service/fabric compile flows
+    // through, so `compile.*` counters unify what the per-tensor
+    // `CompileStats` structs report piecemeal. Metrics never feed an
+    // output byte (the legacy `dedupe = false` path is uninstrumented by
+    // design: it exists as an equivalence baseline, not a product path).
+    let mut fresh_pairs = 0u64;
+    let mut dedup_hits = 0u64;
+    let mut tables = 0u64;
+    let mut store_hits = 0u64;
+    let mut store_misses = 0u64;
+    for r in &results {
+        fresh_pairs += r.stats.unique_pairs as u64;
+        dedup_hits += r.stats.dedup_hits as u64;
+        tables += r.stats.pattern_tables_built as u64;
+        store_hits += r.stats.store_hits as u64;
+        store_misses += r.stats.store_misses as u64;
+    }
+    let m = obs::metrics();
+    m.inc("compile.batches", 1);
+    m.inc("compile.weights", total_weights as u64);
+    m.inc("compile.fresh_pairs", fresh_pairs);
+    m.inc("compile.dedup_hits", dedup_hits);
+    m.inc("compile.pattern_tables_built", tables);
+    m.inc("compile.store_hits", store_hits);
+    m.inc("compile.store_misses", store_misses);
+    m.observe("compile.batch_us", (wall * 1e6) as u64);
+    bspan.field_u64("weights", total_weights as u64);
+    bspan.field_u64("fresh_pairs", fresh_pairs);
+    bspan.field_u64("dedup_hits", dedup_hits);
+    bspan.field_u64("pattern_tables_built", tables);
     results
 }
 

@@ -84,6 +84,7 @@ use super::pipeline::{Method, PipelineOptions, SolveTier};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::GroupConfig;
+use crate::obs;
 use crate::store::StoreHandle;
 use crate::util::fnv::FnvMap;
 use crate::util::prop::fnv1a;
@@ -540,6 +541,9 @@ impl CompileSession {
     /// from an earlier file but never used since are dropped, so files do
     /// not grow monotonically across model revisions.
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        // Covers both file saves and fabric session fetches; the span is
+        // rooted because serialization runs outside any compile batch.
+        let mut sp = obs::span("session.save");
         let chip = self
             .chip
             .as_ref()
@@ -558,6 +562,7 @@ impl CompileSession {
         let pipeline = cache.pipeline().copied().unwrap_or(self.opts.pipeline);
         let key = CacheKey::new(chip, self.opts.cfg, pipeline);
         let parts = cache.save_parts();
+        sp.field_u64("patterns", parts.len() as u64);
 
         let entries: usize = parts.iter().map(|(_, s)| s.len()).sum();
         let mut buf: Vec<u8> =
@@ -573,7 +578,10 @@ impl CompileSession {
             // faster than v1's per-pair (pid, w) framing.
             write_pattern_solution(&mut buf, pattern, Some(solution));
         }
-        Ok(seal(buf))
+        let sealed = seal(buf);
+        sp.field_u64("bytes", sealed.len() as u64);
+        obs::metrics().inc("session.saves", 1);
+        Ok(sealed)
     }
 
     /// Load a previously saved session. The rehydrated session starts
@@ -592,6 +600,8 @@ impl CompileSession {
     /// first and rejecting any malformed input — including v1 pair-cache
     /// files — with an error.
     pub fn from_bytes(bytes: &[u8]) -> Result<CompileSession> {
+        let mut sp = obs::span("session.load");
+        sp.field_u64("bytes", bytes.len() as u64);
         let payload = unseal(bytes)?;
         let mut r = Reader::new(payload);
         let magic = r.u32()?;
@@ -626,6 +636,8 @@ impl CompileSession {
         })?;
         let mut opts = CompileOptions::new(key.cfg, key.pipeline.method);
         opts.pipeline = key.pipeline;
+        sp.field_u64("patterns", n_patterns as u64);
+        obs::metrics().inc("session.loads", 1);
         Ok(CompileSession {
             opts,
             chip: Some(key.chip),

@@ -4,7 +4,8 @@
 //! ResNet-20-shaped tensors, dedupe ratio, `DiffTable` builds/s (vectorized
 //! vs scalar reference), batch-scan throughput (parallel vs sequential
 //! reference, plus "RCRG" registry-snapshot codec rates), shard merge
-//! time, and a localhost fabric round-trip — and emits a schema-stable
+//! time, a localhost fabric round-trip, and the traced-vs-untraced
+//! compile overhead (`obs_overhead`) — and emits a schema-stable
 //! JSON report. The report for
 //! PR *n* is committed at the repo root as `BENCH_<n>.json`, so the perf
 //! trajectory across PRs is a diffable artifact; CI runs the same suite
@@ -34,6 +35,7 @@ use crate::fault::bank::ChipFaults;
 use crate::fault::{FaultRates, GroupFaults};
 use crate::grouping::GroupConfig;
 use crate::net::{run_worker, CompileClient, FabricServer, ServeOptions};
+use crate::obs;
 use crate::store::StoreHandle;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -320,6 +322,26 @@ fn fabric_fields(m: Option<&FabricMeasurement>) -> Vec<(&'static str, Json)> {
     ]
 }
 
+struct ObsOverheadMeasurement {
+    weights: usize,
+    /// Records the traced run emitted (header + spans). Deterministic:
+    /// compile spans come from the sequential driver thread only, so the
+    /// count is a pure function of the seeded workload.
+    trace_records: u64,
+    untraced_secs: f64,
+    traced_secs: f64,
+}
+
+fn obs_overhead_fields(m: Option<&ObsOverheadMeasurement>) -> Vec<(&'static str, Json)> {
+    let f = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    vec![
+        ("weights", f(m.map(|m| m.weights as f64))),
+        ("trace_records", f(m.map(|m| m.trace_records as f64))),
+        ("untraced_secs", f(m.map(|m| m.untraced_secs))),
+        ("traced_secs", f(m.map(|m| m.traced_secs))),
+    ]
+}
+
 fn per_sec(count: usize, secs: f64) -> f64 {
     count as f64 / secs.max(1e-12)
 }
@@ -560,6 +582,39 @@ fn run_fabric(o: &BenchOptions) -> Result<FabricMeasurement> {
     })
 }
 
+/// Tracing overhead over the cold compile path: the same seeded compile
+/// once untraced and once with an in-memory JSON-lines sink installed.
+/// The record count is deterministic (spans come from the sequential
+/// batch driver only); the wall-clock pair is what `bench_compile`'s
+/// criterion bounds. Byte-identity of traced vs untraced outputs is
+/// pinned separately in `tests/obs.rs` — this workload only measures.
+fn run_obs_overhead(o: &BenchOptions) -> Result<ObsOverheadMeasurement> {
+    let cfg = GroupConfig::R2C2;
+    let tensors = synthetic_model_tensors(BENCH_MODEL, &cfg, o.compile_limit)?;
+    let chip = ChipFaults::new(BENCH_CHIP_SEED, FaultRates::paper_default());
+    let run = || {
+        let mut session = CompileSession::builder(cfg)
+            .method(Method::Complete)
+            .threads(o.threads)
+            .chip(&chip);
+        let t = Timer::start();
+        let out = session.compile_model(&tensors);
+        let secs = t.secs();
+        let weights: usize = out.iter().map(|(_, c, _)| c.stats.weights).sum();
+        (weights, secs)
+    };
+    obs::set_sink(None);
+    let (weights, untraced_secs) = run();
+    let mem = obs::MemorySink::new(1 << 16);
+    obs::set_sink(Some(Box::new(mem)));
+    let (traced_weights, traced_secs) = run();
+    let trace_records = obs::set_sink(None);
+    if weights != traced_weights {
+        return Err(anyhow!("traced compile changed the workload size"));
+    }
+    Ok(ObsOverheadMeasurement { weights, trace_records, untraced_secs, traced_secs })
+}
+
 // ---------------------------------------------------------------------
 // Report assembly.
 // ---------------------------------------------------------------------
@@ -597,7 +652,14 @@ fn assemble(
 }
 
 /// Run the whole suite and return the JSON report.
+///
+/// Suites serialize process-wide: the `obs_overhead` workload installs
+/// the process-global trace sink, and a concurrently running suite's
+/// compile spans would otherwise leak into its record count (the harness
+/// contract tests run several tiny suites in one test binary).
 pub fn run(o: &BenchOptions, quick: bool, pr: usize) -> Result<Json> {
+    static RUN_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = RUN_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     let mut workloads: Vec<(String, Json)> = Vec::new();
     for cfg in BENCH_CONFIGS {
         let m = run_compile(cfg, o)?;
@@ -621,6 +683,8 @@ pub fn run(o: &BenchOptions, quick: bool, pr: usize) -> Result<Json> {
         workload_obj(fabric_fields(None))
     };
     workloads.push(("fabric_roundtrip".to_string(), fabric));
+    let m = run_obs_overhead(o)?;
+    workloads.push(("obs_overhead".to_string(), workload_obj(obs_overhead_fields(Some(&m)))));
     Ok(assemble(quick, pr, o.threads, workloads))
 }
 
@@ -641,6 +705,7 @@ pub fn skeleton(pr: usize) -> Json {
     }
     workloads.push(("shard_merge_r2c2".to_string(), workload_obj(shard_merge_fields(None))));
     workloads.push(("fabric_roundtrip".to_string(), workload_obj(fabric_fields(None))));
+    workloads.push(("obs_overhead".to_string(), workload_obj(obs_overhead_fields(None))));
     let mut doc = assemble(false, pr, 1, workloads);
     // Run-dependent header scalars are null in the skeleton; `pr` stays,
     // since it names the report regardless of whether anyone measured.

@@ -127,6 +127,7 @@ pub mod ilp;
 pub mod metrics;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod store;

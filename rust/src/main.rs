@@ -8,6 +8,8 @@
 //!   rchg serve …                compile-fabric coordinator daemon (TCP)
 //!   rchg worker …               fabric worker: solve shard jobs for a coordinator
 //!   rchg submit …               send a compile job to a fabric coordinator
+//!   rchg top …                  scrape a coordinator's live metrics registry
+//!   rchg trace-check …          validate a --trace-out JSON-lines dump
 //!   rchg shard-solve …          solve shard k/K of one chip's compile
 //!   rchg merge-shards …         reassemble shard fragments into a warm cache
 //!   rchg chaos …                seeded fault-injection soak of a localhost fleet
@@ -38,6 +40,7 @@ use rchg::experiments::Table;
 use rchg::fault::FaultRates;
 use rchg::grouping::GroupConfig;
 use rchg::net::{run_worker, CompileClient, FabricServer, ServeOptions as FabricServeOptions};
+use rchg::obs;
 use rchg::runtime::{artifacts_dir, Runtime};
 use rchg::store::StoreHandle;
 use rchg::util::cli::Cli;
@@ -200,7 +203,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("threads", "solver threads for the compile/shard workloads", Some("1"))
                 .opt("no-fabric", "skip the localhost fabric round-trip workload", None)
                 .opt("out", "also write the JSON report to this path", None)
-                .opt("pr", "PR number stamped into the report", Some("9"))
+                .opt("pr", "PR number stamped into the report", Some("10"))
                 .opt("check", "validate an existing report file against the schema, then exit", None);
             let args = cli.parse(rest);
             if let Some(path) = args.get("check") {
@@ -218,7 +221,7 @@ fn main() -> anyhow::Result<()> {
             if args.get_bool("no-fabric") {
                 o.fabric = false;
             }
-            let doc = bench::run(&o, quick, args.get_usize("pr", 9))?;
+            let doc = bench::run(&o, quick, args.get_usize("pr", 10))?;
             if let Some(path) = args.get("out") {
                 std::fs::write(path, doc.pretty() + "\n")?;
                 eprintln!("bench report written to {path}");
@@ -241,7 +244,8 @@ fn main() -> anyhow::Result<()> {
                     "store-dir",
                     "fleet solution store directory (reuse pattern tables across chips/runs)",
                     None,
-                );
+                )
+                .opt("trace-out", "write a JSON-lines span trace to this path", None);
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
                 .ok_or_else(|| anyhow::anyhow!("bad config"))?;
@@ -251,6 +255,10 @@ fn main() -> anyhow::Result<()> {
                 Some(dir) => Some(StoreHandle::with_dir(std::path::Path::new(&dir))?),
                 None => None,
             };
+            let trace_out = args.get("trace-out");
+            if let Some(path) = &trace_out {
+                install_trace_sink(path)?;
+            }
             let r = measure_with_store(
                 args.get_str("model", "resnet20"),
                 cfg,
@@ -295,6 +303,9 @@ fn main() -> anyhow::Result<()> {
                      and published",
                     r.store_hits, r.store_misses
                 );
+            }
+            if let Some(path) = &trace_out {
+                finish_trace_sink(path);
             }
         }
         "serve-batch" => {
@@ -383,10 +394,13 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", t.render());
                 let store_hits: usize = per_chip.values().map(|s| s.store_hits).sum();
                 let store_misses: usize = per_chip.values().map(|s| s.store_misses).sum();
-                if store_hits + store_misses > 0 {
+                let sc = service.store().counters();
+                if store_hits + store_misses > 0 || sc.rejected_blobs + sc.io_errors > 0 {
                     println!(
                         "solution store: {store_hits} pattern table(s) served from the \
-                         fleet store, {store_misses} solved fresh and published"
+                         fleet store, {store_misses} solved fresh and published \
+                         ({} corrupt blob(s) rejected, {} I/O error(s))",
+                        sc.rejected_blobs, sc.io_errors
                     );
                 }
                 let persist_failures = service.persist_errors().len();
@@ -448,7 +462,8 @@ fn main() -> anyhow::Result<()> {
                     "tensor-jobs",
                     "ship tensor sets to workers instead of sealed registry snapshots",
                     None,
-                );
+                )
+                .opt("trace-out", "write a JSON-lines span trace to this path", None);
             let args = cli.parse(rest);
             let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
                 .ok_or_else(|| anyhow::anyhow!("bad config"))?;
@@ -471,6 +486,10 @@ fn main() -> anyhow::Result<()> {
                 ),
                 snapshot_dispatch: !args.get_bool("tensor-jobs"),
             };
+            let trace_out = args.get("trace-out");
+            if let Some(path) = &trace_out {
+                install_trace_sink(path)?;
+            }
             let server = FabricServer::bind(args.get_str("listen", "127.0.0.1:7077"), sopts)?;
             println!(
                 "rchg fabric: listening on {} ({} {:?}) — add workers with \
@@ -480,6 +499,9 @@ fn main() -> anyhow::Result<()> {
                 cfg,
                 method,
             );
+            // `run` consumes the server; keep a store handle for the
+            // shutdown summary (the handle shares the live counters).
+            let store = server.store();
             let stats = server.run()?;
             println!(
                 "fabric stopped: {} jobs ({} distributed, {} via registry snapshots), \
@@ -491,6 +513,17 @@ fn main() -> anyhow::Result<()> {
                 stats.shards_dispatched,
                 stats.reassignments,
             );
+            let sc = store.counters();
+            if sc.hits + sc.misses + sc.publishes + sc.rejected_blobs + sc.io_errors > 0 {
+                println!(
+                    "solution store: {} hit(s) / {} miss(es), {} published, {} evicted, \
+                     {} corrupt blob(s) rejected, {} I/O error(s)",
+                    sc.hits, sc.misses, sc.publishes, sc.evictions, sc.rejected_blobs, sc.io_errors
+                );
+            }
+            if let Some(path) = &trace_out {
+                finish_trace_sink(path);
+            }
         }
         "worker" => {
             let cli = Cli::new("fabric worker: solve shard jobs handed down by a coordinator")
@@ -505,6 +538,9 @@ fn main() -> anyhow::Result<()> {
                  {} table(s) published); coordinator hung up",
                 report.jobs, report.patterns_solved, report.store_hits, report.store_published,
             );
+            if !report.metrics.is_empty() {
+                print!("{}", report.metrics.render());
+            }
         }
         "chaos" => {
             let cli = Cli::new(
@@ -533,6 +569,7 @@ fn main() -> anyhow::Result<()> {
                 .opt("limit", "max weights", Some("60000"))
                 .opt("fetch-session", "also download the chip's warm RCSS cache to this path", None)
                 .opt("info", "print fabric status instead of compiling", None)
+                .opt("stats", "print the coordinator's live metrics instead of compiling", None)
                 .opt("shutdown", "stop the coordinator when done", None);
             let args = cli.parse(rest);
             let addr = args.get_str("connect", "127.0.0.1:7077");
@@ -544,6 +581,8 @@ fn main() -> anyhow::Result<()> {
                      ({} distributed, {} shard reassignments)",
                     i.workers, i.sessions, i.jobs, i.distributed_jobs, i.reassignments,
                 );
+            } else if args.get_bool("stats") {
+                print!("{}", client.stats()?.render());
             } else {
                 let cfg = GroupConfig::parse(args.get_str("config", "r2c2"))
                     .ok_or_else(|| anyhow::anyhow!("bad config"))?;
@@ -602,6 +641,39 @@ fn main() -> anyhow::Result<()> {
                 client.shutdown_server()?;
                 println!("fabric {addr}: shutdown requested");
             }
+        }
+        "top" => {
+            let cli = Cli::new("scrape a fabric coordinator's live metrics registry")
+                .opt("connect", "coordinator address", Some("127.0.0.1:7077"))
+                .opt("watch", "keep scraping until interrupted", None)
+                .opt("interval-secs", "seconds between scrapes with --watch", Some("2"));
+            let args = cli.parse(rest);
+            let addr = args.get_str("connect", "127.0.0.1:7077");
+            let interval =
+                std::time::Duration::from_secs(args.get_u64("interval-secs", 2).max(1));
+            loop {
+                // One connection per scrape, so a coordinator that stops
+                // mid-watch ends the loop with a clean connect error.
+                let mut client = CompileClient::connect(addr)?;
+                let snap = client.stats()?;
+                println!("fabric {addr} — {} metric(s)", snap.len());
+                print!("{}", snap.render());
+                if !args.get_bool("watch") {
+                    break;
+                }
+                std::thread::sleep(interval);
+                println!();
+            }
+        }
+        "trace-check" => {
+            let cli = Cli::new("validate a --trace-out JSON-lines trace dump")
+                .opt("file", "trace path", Some("trace.jsonl"));
+            let args = cli.parse(rest);
+            let path = args.get_str("file", "trace.jsonl");
+            let text = std::fs::read_to_string(path)?;
+            let n = obs::validate_trace(&text)
+                .map_err(|e| anyhow::anyhow!("{path}: invalid trace: {e}"))?;
+            println!("{path}: {} ok ({n} record(s))", obs::TRACE_SCHEMA);
         }
         "shard-solve" => {
             let cli = Cli::new("solve shard k/K of one chip's compile (fan one chip out)")
@@ -749,6 +821,8 @@ fn main() -> anyhow::Result<()> {
                  \x20 serve            compile-fabric coordinator daemon (schedules shard-solves on workers)\n\
                  \x20 worker           fabric worker: solve shard jobs for a coordinator\n\
                  \x20 submit           send a compile job to a fabric coordinator\n\
+                 \x20 top              scrape a coordinator's live metrics registry (--watch to follow)\n\
+                 \x20 trace-check      validate a --trace-out JSON-lines trace dump\n\
                  \x20 shard-solve      solve shard k/K of one chip's compile (fan one chip out)\n\
                  \x20 merge-shards     reassemble shard fragments into a warm session cache\n\
                  \x20 chaos            seeded fault-injection soak (needs --features failpoints)\n\
@@ -763,6 +837,20 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Install the JSON-lines trace sink behind `--trace-out`.
+fn install_trace_sink(path: &str) -> anyhow::Result<()> {
+    let sink = obs::FileSink::create(std::path::Path::new(path))
+        .map_err(|e| anyhow::anyhow!("create trace file {path}: {e}"))?;
+    obs::set_sink(Some(Box::new(sink)));
+    Ok(())
+}
+
+/// Remove the trace sink (flushing the file) and report what was written.
+fn finish_trace_sink(path: &str) {
+    let n = obs::set_sink(None);
+    eprintln!("trace: {n} record(s) written to {path}");
 }
 
 /// Parse the `--table-budget` policy shared by `serve-batch` and `serve`:

@@ -10,11 +10,12 @@
 //! anywhere with `CompileSession::from_bytes`.
 
 use super::protocol::{
-    decode_error, decode_info, decode_summary, decode_tensor_result, encode_chip_seed,
-    encode_compile_request, read_frame, write_frame, FabricInfo, FabricSummary, FrameType,
-    TensorResult,
+    decode_error, decode_info, decode_stats, decode_summary, decode_tensor_result,
+    encode_chip_seed, encode_compile_request, read_frame, write_frame, FabricInfo, FabricSummary,
+    FrameType, TensorResult,
 };
 use crate::coordinator::Method;
+use crate::obs::MetricsSnapshot;
 use crate::grouping::GroupConfig;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
@@ -78,6 +79,20 @@ impl CompileClient {
             FrameType::InfoReply => decode_info(&frame.payload),
             FrameType::Error => bail!("fabric: {}", decode_error(&frame.payload)),
             t => bail!("unexpected {t:?} frame for an info request"),
+        }
+    }
+
+    /// Scrape the coordinator's live metrics registry (queue depth,
+    /// per-shard latency histogram, store hit counters, job totals) as a
+    /// name-sorted snapshot — the wire behind `rchg submit --stats` and
+    /// `rchg top`.
+    pub fn stats(&mut self) -> Result<MetricsSnapshot> {
+        write_frame(&mut self.stream, FrameType::StatsPull, &[])?;
+        let frame = self.expect_frame("fabric stats")?;
+        match frame.frame_type {
+            FrameType::StatsPush => decode_stats(&frame.payload),
+            FrameType::Error => bail!("fabric: {}", decode_error(&frame.payload)),
+            t => bail!("unexpected {t:?} frame for a stats request"),
         }
     }
 

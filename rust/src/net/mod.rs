@@ -19,7 +19,9 @@
 //!   time (its range is reassigned to a live worker, or solved locally).
 //! * **client** ([`CompileClient`], `rchg submit --connect <addr>`) —
 //!   submits jobs, streams results, fetches warm RCSS session bytes,
-//!   inspects fabric status, and can stop the daemon.
+//!   inspects fabric status, scrapes the coordinator's live metrics
+//!   registry (`StatsPull` → `StatsPush`, see [`crate::obs`] and
+//!   `rchg top`), and can stop the daemon.
 //!
 //! The wire protocol ("RCWP" v1, [`protocol`]) is length-prefixed framed
 //! binary — magic, version, frame type, payload length, FNV-1a checksum

@@ -44,6 +44,7 @@ use crate::coordinator::{Method, Outcome, PatternSolution, PipelineOptions};
 use crate::fault::bank::ChipFaults;
 use crate::fault::GroupFaults;
 use crate::grouping::{Bitmap, Decomposition, GroupConfig};
+use crate::obs::{Histogram, MetricValue, MetricsSnapshot};
 use crate::store::{read_store_ctx, StoreCtx};
 use crate::util::failpoint;
 use crate::util::prop::{fnv1a, fnv1a_with};
@@ -103,6 +104,12 @@ pub enum FrameType {
     /// shards · snapshot bytes). The snapshot-path replacement for
     /// `ShardJob` on table-tier rounds.
     ShardSnapshotJob,
+    /// Client → server: scrape the coordinator's live metrics registry
+    /// (`rchg submit --stats`, `rchg top`). Empty payload.
+    StatsPull,
+    /// Server → client: a name-sorted metrics snapshot (counters, gauges,
+    /// fixed-layout log2 histograms) — the reply to a `StatsPull`.
+    StatsPush,
 }
 
 impl FrameType {
@@ -125,6 +132,8 @@ impl FrameType {
             FrameType::StoreGet => 14,
             FrameType::StorePut => 15,
             FrameType::ShardSnapshotJob => 16,
+            FrameType::StatsPull => 17,
+            FrameType::StatsPush => 18,
         }
     }
 
@@ -146,6 +155,8 @@ impl FrameType {
             14 => FrameType::StoreGet,
             15 => FrameType::StorePut,
             16 => FrameType::ShardSnapshotJob,
+            17 => FrameType::StatsPull,
+            18 => FrameType::StatsPush,
             _ => return None,
         })
     }
@@ -631,6 +642,77 @@ pub fn decode_info(payload: &[u8]) -> Result<FabricInfo> {
     Ok(i)
 }
 
+/// StatsPush payload: a name-sorted [`MetricsSnapshot`]. Layout per
+/// entry: `u32 name_len · name bytes · u8 kind` then the kind's body —
+/// counter (`0`): `u64`; gauge (`1`): `i64`; histogram (`2`):
+/// `u64 count · u64 sum · HIST_BUCKETS × u64`. The bucket count is fixed
+/// by [`crate::obs::HIST_BUCKETS`]; changing the histogram layout is a
+/// wire-protocol bump.
+pub fn encode_stats(snap: &MetricsSnapshot) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + snap.entries.len() * 32);
+    push_u32(&mut buf, snap.entries.len() as u32);
+    for (name, value) in &snap.entries {
+        push_u32(&mut buf, name.len() as u32);
+        buf.extend_from_slice(name.as_bytes());
+        match value {
+            MetricValue::Counter(c) => {
+                buf.push(0);
+                push_u64(&mut buf, *c);
+            }
+            MetricValue::Gauge(g) => {
+                buf.push(1);
+                push_i64(&mut buf, *g);
+            }
+            MetricValue::Histogram(h) => {
+                buf.push(2);
+                push_u64(&mut buf, h.count);
+                push_u64(&mut buf, h.sum);
+                for b in &h.buckets {
+                    push_u64(&mut buf, *b);
+                }
+            }
+        }
+    }
+    buf
+}
+
+pub fn decode_stats(payload: &[u8]) -> Result<MetricsSnapshot> {
+    let mut r = Reader::new(payload);
+    let n = r.u32()? as usize;
+    if n > 65_536 {
+        bail!("unreasonable metric count {n} in RCWP stats payload");
+    }
+    let mut entries = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let name_len = r.u32()? as usize;
+        if name_len > 4_096 {
+            bail!("unreasonable metric name length {name_len} in RCWP stats payload");
+        }
+        let name = std::str::from_utf8(r.bytes(name_len)?)
+            .context("metric name is not UTF-8")?
+            .to_string();
+        let value = match r.u8()? {
+            0 => MetricValue::Counter(r.u64()?),
+            1 => MetricValue::Gauge(r.i64()?),
+            2 => {
+                let count = r.u64()?;
+                let sum = r.u64()?;
+                let mut h = Histogram { count, sum, ..Histogram::default() };
+                for b in h.buckets.iter_mut() {
+                    *b = r.u64()?;
+                }
+                MetricValue::Histogram(h)
+            }
+            k => bail!("unknown metric kind {k} for {name:?} in RCWP stats payload"),
+        };
+        entries.push((name, value));
+    }
+    if r.remaining() != 0 {
+        bail!("stats payload has {} trailing bytes", r.remaining());
+    }
+    Ok(MetricsSnapshot { entries })
+}
+
 /// A decoded [`FrameType::StoreGet`]: which of these fault patterns does
 /// the fleet store hold, under one store context?
 #[derive(Clone, Debug)]
@@ -742,7 +824,7 @@ mod tests {
 
     #[test]
     fn frame_roundtrip_every_type() {
-        for t in (1..=16).filter_map(FrameType::from_code) {
+        for t in (1..=18).filter_map(FrameType::from_code) {
             let payload = vec![0xAB; 37];
             let bytes = frame_bytes(t, &payload);
             let frame = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
@@ -969,6 +1051,46 @@ mod tests {
         let mut long = put.clone();
         long.push(0);
         assert!(decode_store_put(&long).is_err());
+    }
+
+    #[test]
+    fn stats_roundtrip_and_rejection() {
+        use crate::obs::{bucket_index, HIST_BUCKETS};
+        let mut h = Histogram::default();
+        h.observe(0);
+        h.observe(900);
+        h.observe(u64::MAX);
+        let snap = MetricsSnapshot {
+            entries: vec![
+                ("compile.weights".to_string(), MetricValue::Counter(4096)),
+                ("fabric.queue_depth".to_string(), MetricValue::Gauge(-2)),
+                ("fabric.shard.latency_us".to_string(), MetricValue::Histogram(h.clone())),
+            ],
+        };
+        let payload = encode_stats(&snap);
+        let back = decode_stats(&payload).unwrap();
+        assert_eq!(back, snap);
+        let hb = back.histogram("fabric.shard.latency_us").unwrap();
+        assert_eq!(hb.count, 3);
+        assert_eq!(hb.buckets[0], 1);
+        assert_eq!(hb.buckets[bucket_index(900)], 1);
+        assert_eq!(hb.buckets[HIST_BUCKETS - 1], 1);
+        // An empty snapshot is a valid reply (a fresh coordinator).
+        let empty = decode_stats(&encode_stats(&MetricsSnapshot::default())).unwrap();
+        assert!(empty.is_empty());
+        // Truncation anywhere fails cleanly; trailing garbage is rejected.
+        for cut in 0..payload.len() {
+            assert!(decode_stats(&payload[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(decode_stats(&long).is_err());
+        // An unknown metric kind is rejected.
+        let mut bad_kind = encode_stats(&MetricsSnapshot {
+            entries: vec![("x".to_string(), MetricValue::Counter(1))],
+        });
+        bad_kind[4 + 4 + 1] = 9;
+        assert!(decode_stats(&bad_kind).is_err());
     }
 
     #[test]

@@ -29,9 +29,9 @@
 
 use super::protocol::{
     decode_chip_seed, decode_compile_request, decode_error, decode_hello, decode_store_get,
-    decode_store_put, encode_info, encode_shard_job, encode_shard_snapshot_job, encode_store_put,
-    encode_summary, encode_tensor_result, read_frame, write_frame, CompileRequest, FabricInfo,
-    FabricSummary, Frame, FrameType, TensorResult,
+    decode_store_put, encode_info, encode_shard_job, encode_shard_snapshot_job, encode_stats,
+    encode_store_put, encode_summary, encode_tensor_result, read_frame, write_frame,
+    CompileRequest, FabricInfo, FabricSummary, Frame, FrameType, TensorResult,
 };
 use crate::coordinator::persist::CacheKey;
 use crate::coordinator::{
@@ -39,13 +39,15 @@ use crate::coordinator::{
     SolveTier,
 };
 use crate::fault::bank::ChipFaults;
+use crate::obs;
 use crate::store::StoreHandle;
 use crate::util::failpoint;
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long a freshly accepted connection gets to send its opening frame.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -87,6 +89,22 @@ pub struct FabricStats {
     /// snapshots instead of tensor sets (see
     /// [`ServeOptions::snapshot_dispatch`]).
     pub snapshot_rounds: u64,
+}
+
+impl FabricStats {
+    /// Mirror these lifetime counters into the global [`obs`] registry as
+    /// `fabric.*` gauges. Called at scrape time (a `StatsPull`), never on
+    /// the dispatch path — the stats struct stays the single writer and
+    /// the registry is a read-time mirror.
+    pub fn record_metrics(&self) {
+        let m = obs::metrics();
+        m.gauge("fabric.workers_joined", self.workers_joined as i64);
+        m.gauge("fabric.jobs", self.jobs as i64);
+        m.gauge("fabric.distributed_jobs", self.distributed_jobs as i64);
+        m.gauge("fabric.shards_dispatched", self.shards_dispatched as i64);
+        m.gauge("fabric.reassignments", self.reassignments as i64);
+        m.gauge("fabric.snapshot_rounds", self.snapshot_rounds as i64);
+    }
 }
 
 struct WorkerConn {
@@ -178,6 +196,13 @@ impl FabricServer {
         self.state.listen_addr
     }
 
+    /// The fabric's fleet solution store. [`FabricServer::run`] consumes
+    /// the server, so callers that want to report store counters after
+    /// shutdown clone this handle first.
+    pub fn store(&self) -> StoreHandle {
+        self.state.store.clone()
+    }
+
     /// Accept and serve connections until a [`FrameType::Shutdown`] frame
     /// arrives, then wait for in-flight compile jobs to finish on their
     /// own connections before returning. Each connection is handled on
@@ -262,6 +287,7 @@ fn handle_connection(state: Arc<FabricState>, mut stream: TcpStream) -> Result<(
             }
             FrameType::FetchSession => handle_fetch(&state, &mut stream, &frame.payload)?,
             FrameType::Info => handle_info(&state, &mut stream)?,
+            FrameType::StatsPull => handle_stats(&state, &mut stream)?,
             FrameType::Shutdown => {
                 state.shutdown.store(true, Ordering::SeqCst);
                 // Wake the accept loop so it observes the flag.
@@ -287,6 +313,11 @@ fn register_worker(state: &Arc<FabricState>, mut stream: TcpStream, payload: &[u
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".into());
     eprintln!("fabric: worker {id} joined from {peer} ({threads} threads)");
+    obs::event(
+        "fabric.worker.joined",
+        obs::SpanHandle::NONE,
+        vec![("worker", Json::Num(id as f64)), ("threads", Json::Num(threads as f64))],
+    );
     state.workers.lock().expect("worker pool lock").push(WorkerConn { id, stream });
     state.stats.lock().expect("stats lock").workers_joined += 1;
     Ok(())
@@ -421,6 +452,9 @@ fn distributed_compile(
     state: &Arc<FabricState>,
     req: &CompileRequest,
 ) -> Result<(Vec<TensorResult>, FabricSummary)> {
+    let mut dspan = obs::span("fabric.distribute");
+    dspan.field_u64("chip_seed", req.chip_seed);
+    dspan.field_u64("weights", req.tensors.iter().map(|(_, ws)| ws.len() as u64).sum());
     let sopts = &state.sopts;
     let chip = ChipFaults::new(req.chip_seed, sopts.service.rates);
     let mut claimed: Vec<WorkerConn> =
@@ -528,9 +562,15 @@ fn distributed_compile(
         let live = state.service.lock().expect("service lock").sessions().count() + 1;
         session.set_table_memory_bytes((total / live).max(1));
     }
-    session
-        .merge_fragments(&fragments)
-        .context("merge worker shard fragments")?;
+    dspan.field_u64("shards", shards as u64);
+    dspan.field_u64("shard_solves", shard_solves);
+    {
+        let mut msp = obs::child_span("fabric.merge", dspan.handle());
+        msp.field_u64("fragments", fragments.len() as u64);
+        session
+            .merge_fragments(&fragments)
+            .context("merge worker shard fragments")?;
+    }
     for (name, ws) in &req.tensors {
         session.submit(name, ws.clone());
     }
@@ -623,6 +663,11 @@ fn drive_worker(mut w: WorkerConn, round: &ShardRound<'_>) -> Option<WorkerConn>
 /// worker-reported error, or a fragment that does not match the
 /// assignment — makes the caller requeue the range and drop the worker.
 fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Result<ShardFragment> {
+    let dispatched_at = Instant::now();
+    let mut sp = obs::span("fabric.shard");
+    sp.field_u64("worker", w.id);
+    sp.field_u64("shard", shard as u64);
+    sp.field_u64("shards", round.shards as u64);
     let timeout = Some(round.sopts.worker_timeout);
     w.stream.set_read_timeout(timeout).context("set worker read timeout")?;
     w.stream.set_write_timeout(timeout).context("set worker write timeout")?;
@@ -686,6 +731,12 @@ fn dispatch_one(w: &mut WorkerConn, round: &ShardRound<'_>, shard: usize) -> Res
                 if failpoint::fires("server.drop_fragment") {
                     bail!("failpoint server.drop_fragment: discarding the valid fragment");
                 }
+                // Dispatch-to-fragment wall time, including the worker's
+                // interleaved store traffic — the fleet's per-shard
+                // latency distribution scraped by `rchg top`.
+                let lat_us = dispatched_at.elapsed().as_micros() as u64;
+                obs::metrics().observe("fabric.shard.latency_us", lat_us);
+                sp.field_u64("solved_patterns", frag.solved_patterns() as u64);
                 return Ok(frag);
             }
             FrameType::Error => bail!("worker reported: {}", decode_error(&frame.payload)),
@@ -722,6 +773,28 @@ fn handle_fetch(state: &Arc<FabricState>, stream: &mut TcpStream, payload: &[u8]
             Ok(())
         }
     }
+}
+
+/// Answer a [`FrameType::StatsPull`]: refresh the scrape-time gauges
+/// (fabric counters, live pool/queue state, store counters), snapshot the
+/// global registry, and ship it as one [`FrameType::StatsPush`]. The
+/// compile-path counters and the shard latency histogram are already in
+/// the registry — this only mirrors the lifetime structs that keep their
+/// own single-writer state.
+fn handle_stats(state: &Arc<FabricState>, stream: &mut TcpStream) -> Result<()> {
+    state.stats.lock().expect("stats lock").record_metrics();
+    let m = obs::metrics();
+    m.gauge(
+        "fabric.workers_idle",
+        state.workers.lock().expect("worker pool lock").len() as i64,
+    );
+    m.gauge("fabric.queue_depth", state.active_jobs.load(Ordering::SeqCst) as i64);
+    m.gauge(
+        "fabric.sessions_warm",
+        state.service.lock().expect("service lock").sessions().count() as i64,
+    );
+    state.store.counters().record_metrics();
+    write_frame(stream, FrameType::StatsPush, &encode_stats(&m.snapshot()))
 }
 
 fn handle_info(state: &Arc<FabricState>, stream: &mut TcpStream) -> Result<()> {

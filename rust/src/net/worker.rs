@@ -44,6 +44,7 @@ use super::protocol::{
 use crate::coordinator::persist::{decode_registry_snapshot, CacheKey};
 use crate::coordinator::{CompileSession, Outcome, PatternSolution, ShardFragment, ShardPlan};
 use crate::fault::GroupFaults;
+use crate::obs::{self, MetricsSnapshot};
 use crate::store::{StoreCtx, StoreHandle};
 use crate::util::failpoint;
 use crate::util::fnv::FnvMap;
@@ -51,7 +52,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
 
 /// What a worker accomplished before its coordinator hung up.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct WorkerReport {
     /// Shard jobs solved and returned.
     pub jobs: u64,
@@ -62,6 +63,11 @@ pub struct WorkerReport {
     pub store_hits: u64,
     /// Fresh pattern tables published back to the coordinator.
     pub store_published: u64,
+    /// The worker process's full [`obs`] registry, snapshotted when the
+    /// loop ends — `worker.*` counters plus whatever the solve sessions
+    /// recorded — so `rchg worker` prints one unified exposition instead
+    /// of growing ad-hoc summary fields.
+    pub metrics: MetricsSnapshot,
 }
 
 /// Connect to a coordinator at `addr` and solve shard jobs until it
@@ -95,6 +101,11 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
                 // The error propagates out of `run_worker`, the stream
                 // drops, and the coordinator requeues the range.
                 failpoint::check("worker.crash_before_solve")?;
+                let mut sp = obs::span("worker.job");
+                sp.field_str(
+                    "kind",
+                    if frame.frame_type == FrameType::ShardJob { "tensors" } else { "snapshot" },
+                );
                 let outcome = if frame.frame_type == FrameType::ShardJob {
                     solve_job(&mut stream, &store, &frame.payload, threads)
                 } else {
@@ -111,9 +122,16 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
                         report.patterns_solved += done.solved as u64;
                         report.store_hits += done.store_hits as u64;
                         report.store_published += done.published as u64;
+                        sp.field_u64("solved_patterns", done.solved as u64);
+                        sp.field_u64("store_hits", done.store_hits as u64);
+                        let m = obs::metrics();
+                        m.inc("worker.jobs", 1);
+                        m.inc("worker.patterns_solved", done.solved as u64);
                     }
                     Err(e) => {
                         eprintln!("worker: shard job failed: {e:#}");
+                        sp.field_str("error", &format!("{e:#}"));
+                        obs::metrics().inc("worker.job_errors", 1);
                         write_frame(&mut stream, FrameType::Error, format!("{e:#}").as_bytes())?;
                     }
                 }
@@ -122,6 +140,7 @@ pub fn run_worker(addr: &str, threads: usize) -> Result<WorkerReport> {
             t => bail!("unexpected {t:?} frame from coordinator"),
         }
     }
+    report.metrics = obs::metrics().snapshot();
     Ok(report)
 }
 

@@ -1,0 +1,291 @@
+//! Process-global metrics registry: named counters, gauges, and
+//! fixed-layout log2 histograms behind one [`metrics()`] handle.
+//!
+//! This unifies the repo's pre-existing counter families — per-compile
+//! `CompileStats` deltas, lifetime `StoreCounters`, coordinator
+//! `FabricStats` — without touching how those structs feed deterministic
+//! outputs. The mirroring convention (see each `record_metrics` impl):
+//!
+//! * **Per-compilation deltas** (`CompileStats`) are `inc`'d into
+//!   counters once per batch, at the point the batch's stats are merged —
+//!   never per weight or per lookup, so no hot solve path takes the
+//!   registry lock.
+//! * **Lifetime absolutes** (`StoreCounters`, `FabricStats`) are `gauge`'d
+//!   at snapshot/report time: the source struct stays the single writer
+//!   and the gauge is a scrape-time mirror, which keeps the registry off
+//!   the store's lookup path entirely.
+//!
+//! Metrics are observability only: no compiled byte ever depends on a
+//! registry value, and the registry itself is deterministic in *layout*
+//! (BTreeMap-ordered names, fixed histogram buckets) though not in the
+//! values timing-derived observations take.
+//!
+//! ## Histogram layout (pinned by `tests/obs.rs`)
+//!
+//! [`HIST_BUCKETS`] = 33 log2 buckets with [`bucket_index`]: bucket 0
+//! holds exactly `{0}`, bucket `k` (1 ≤ k ≤ 31) holds `[2^(k-1), 2^k)`,
+//! and bucket 32 is the overflow `[2^31, ∞)`. The layout is part of the
+//! `StatsPush` wire contract — changing it is a protocol bump.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Number of histogram buckets: zero bucket + 31 log2 ranges + overflow.
+pub const HIST_BUCKETS: usize = 33;
+
+/// Log2 bucket for `v`: 0 for 0, otherwise `floor(log2(v)) + 1` capped
+/// at the overflow bucket.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Fixed-layout log2 histogram (see module docs for the bucket scheme).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { count: 0, sum: 0, buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.buckets[bucket_index(v)] += 1;
+    }
+}
+
+/// One registered metric. The kind is implied by the first operation on
+/// a name; mixing operations on one name replaces the value with the new
+/// kind (a naming bug, not a panic — the registry is observability and
+/// must never take a workload down).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(Histogram),
+}
+
+/// The registry: a name-ordered map guarded by one mutex. All access is
+/// through [`metrics()`]; the map order makes [`MetricsSnapshot`] and
+/// [`MetricsSnapshot::render`] layout-deterministic.
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, MetricValue>>,
+}
+
+static GLOBAL: Metrics = Metrics { inner: Mutex::new(BTreeMap::new()) };
+
+/// The process-global registry handle.
+pub fn metrics() -> &'static Metrics {
+    &GLOBAL
+}
+
+impl Metrics {
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, MetricValue>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Add `by` to the counter `name` (creating it at 0).
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut map = self.lock();
+        match map.get_mut(name) {
+            Some(MetricValue::Counter(c)) => *c = c.saturating_add(by),
+            _ => {
+                map.insert(name.to_string(), MetricValue::Counter(by));
+            }
+        }
+    }
+
+    /// Set the gauge `name` to `v`.
+    pub fn gauge(&self, name: &str, v: i64) {
+        self.lock().insert(name.to_string(), MetricValue::Gauge(v));
+    }
+
+    /// Record `v` into the histogram `name` (creating it empty).
+    pub fn observe(&self, name: &str, v: u64) {
+        let mut map = self.lock();
+        match map.get_mut(name) {
+            Some(MetricValue::Histogram(h)) => h.observe(v),
+            _ => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                map.insert(name.to_string(), MetricValue::Histogram(h));
+            }
+        }
+    }
+
+    /// Point-in-time copy of every registered metric, name-sorted.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            entries: self.lock().iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        }
+    }
+
+    /// Drop every metric (tests only — the registry is process-global).
+    pub fn reset(&self) {
+        self.lock().clear();
+    }
+}
+
+/// A name-sorted copy of the registry, as scraped locally or carried by
+/// a `StatsPush` frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsSnapshot {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+
+    /// Counter value, 0 when absent or not a counter.
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.get(name) {
+            Some(MetricValue::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Gauge value, 0 when absent or not a gauge.
+    pub fn gauge(&self, name: &str) -> i64 {
+        match self.get(name) {
+            Some(MetricValue::Gauge(g)) => *g,
+            _ => 0,
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        match self.get(name) {
+            Some(MetricValue::Histogram(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Stable text exposition: one line per metric, name-sorted, kind
+    /// prefix first, nonzero histogram buckets as `b<i>=<n>`. This is
+    /// what `rchg submit --stats` and `rchg top` print.
+    ///
+    /// ```text
+    /// counter compile.weights 4096
+    /// gauge store.hits 17
+    /// hist fabric.shard.latency_us count=3 sum=812 b9=2 b10=1
+    /// ```
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.entries {
+            match value {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("counter {name} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("gauge {name} {g}\n"));
+                }
+                MetricValue::Histogram(h) => {
+                    out.push_str(&format!("hist {name} count={} sum={}", h.count, h.sum));
+                    for (i, b) in h.buckets.iter().enumerate() {
+                        if *b != 0 {
+                            out.push_str(&format!(" b{i}={b}"));
+                        }
+                    }
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and other lib tests (e.g. the
+    // compiler's) mirror their own metrics into it concurrently, so these
+    // tests serialize on this lock, use distinctive name prefixes, and
+    // assert only on entries they created — never on the whole registry.
+    // The strict whole-registry determinism pins live in `tests/obs.rs`,
+    // where the integration binary serializes all emission.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn only(prefix: &str, snap: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            entries: snap.entries.iter().filter(|(k, _)| k.starts_with(prefix)).cloned().collect(),
+        }
+    }
+
+    #[test]
+    fn bucket_layout_is_pinned() {
+        assert_eq!(HIST_BUCKETS, 33);
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index((1 << 31) - 1), 31);
+        assert_eq!(bucket_index(1 << 31), 32);
+        assert_eq!(bucket_index(u64::MAX), 32);
+    }
+
+    #[test]
+    fn registry_ops_and_snapshot() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let m = metrics();
+        m.inc("t_ops.a.count", 2);
+        m.inc("t_ops.a.count", 3);
+        m.gauge("t_ops.b.depth", -4);
+        m.gauge("t_ops.b.depth", 7);
+        m.observe("t_ops.c.lat_us", 0);
+        m.observe("t_ops.c.lat_us", 5);
+        m.observe("t_ops.c.lat_us", 5);
+        let snap = m.snapshot();
+        assert_eq!(snap.counter("t_ops.a.count"), 5);
+        assert_eq!(snap.gauge("t_ops.b.depth"), 7);
+        let h = snap.histogram("t_ops.c.lat_us").unwrap();
+        assert_eq!((h.count, h.sum), (3, 10));
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[bucket_index(5)], 2);
+        // Missing names read as zero, not a panic.
+        assert_eq!(snap.counter("nope"), 0);
+        assert_eq!(snap.gauge("nope"), 0);
+        assert!(snap.histogram("nope").is_none());
+        m.reset();
+        assert!(only("t_ops.", &m.snapshot()).is_empty());
+    }
+
+    #[test]
+    fn render_is_name_sorted_and_stable() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let m = metrics();
+        m.observe("t_render.z.hist", 3);
+        m.inc("t_render.m.count", 1);
+        m.gauge("t_render.a.gauge", 9);
+        let text = only("t_render.", &m.snapshot()).render();
+        assert_eq!(
+            text,
+            "gauge t_render.a.gauge 9\ncounter t_render.m.count 1\n\
+             hist t_render.z.hist count=1 sum=3 b2=1\n"
+        );
+        m.reset();
+    }
+}

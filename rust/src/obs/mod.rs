@@ -1,0 +1,32 @@
+//! Unified observability: span/event tracing over the compile pipeline
+//! and a process-global metrics registry, shared by the CLI, the fabric
+//! coordinator, and workers.
+//!
+//! Two halves, one contract:
+//!
+//! * [`trace`] — RAII [`span`]s with explicit parent handles and
+//!   structured fields, emitted as schema-stable JSON-lines
+//!   (`rchg-trace-v1`) through a pluggable [`Sink`]. Zero-cost when no
+//!   sink is installed.
+//! * [`metrics`] — named counters/gauges/histograms behind one global
+//!   [`metrics()`] handle, rendered as a stable text exposition and
+//!   shipped over RCWP as `StatsPush` frames for `rchg submit --stats`
+//!   and `rchg top`.
+//!
+//! The contract: observability never changes an output byte. Compiled
+//! bitmaps and all RCSS/RCSF/RCPS persistence are byte-identical with
+//! tracing on or off (pinned by `tests/obs.rs`), and timing values are
+//! segregated by name ([`is_timing_key`]) so the deterministic skeleton
+//! of a trace can be diffed across runs. See `docs/OBSERVABILITY.md`
+//! for the span taxonomy, metric name inventory, and wire layout.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    bucket_index, metrics, Histogram, MetricValue, Metrics, MetricsSnapshot, HIST_BUCKETS,
+};
+pub use trace::{
+    child_span, enabled, event, is_timing_key, set_sink, span, strip_timings, validate_trace,
+    FileSink, MemorySink, Sink, Span, SpanHandle, TRACE_SCHEMA,
+};

@@ -1,0 +1,563 @@
+//! Span/event tracing core: RAII scopes over the compile pipeline,
+//! emitted as JSON-lines through a pluggable [`Sink`].
+//!
+//! ## Model
+//!
+//! A [`Span`] is an RAII scope: [`span`] opens a root scope,
+//! [`child_span`] parents one explicitly via a [`SpanHandle`] (no
+//! thread-local ambient context — parenthood is always explicit, so a
+//! span can be handed across helper functions without hidden state).
+//! Structured `key=value` fields attach with [`Span::field_u64`] and
+//! friends; the record is emitted when the span drops. [`event`] emits a
+//! zero-duration record for point-in-time occurrences (a worker joining,
+//! a blob rejected).
+//!
+//! ## Record stream
+//!
+//! One JSON object per line. The first record of every sink is the
+//! header `{"ev":"trace","schema":"rchg-trace-v1","seq":0}`; every
+//! subsequent record carries a monotonic per-process `seq` assigned at
+//! emission, so `seq` equals the line index and a truncated trace is
+//! detectable. Span records:
+//!
+//! ```text
+//! {"dur_us":…,"ev":"span","fields":{…},"name":"compile.solve",
+//!  "parent":1,"seq":3,"span":2,"start_us":…}
+//! ```
+//!
+//! Spans close innermost-first, so a child's record precedes its
+//! parent's — consumers rebuild the tree from `span`/`parent` ids, not
+//! from line order.
+//!
+//! ## Timing segregation (the determinism contract)
+//!
+//! Exactly like `rchg bench`'s `is_timing_field` split, every wall-clock
+//! leaf is named so tests can strip it: `start_us`, `dur_us`, `at_us`,
+//! and any field key ending in `_us`, `_secs`, or `_per_sec` are timing
+//! ([`is_timing_key`]); everything else — names, ids, counts, sequence
+//! numbers — is the deterministic skeleton, byte-identical across two
+//! runs of the same workload ([`strip_timings`] nulls the timing leaves
+//! so tests can diff the rest). Tracing itself never feeds an output
+//! byte: compiled bitmaps and RCSS/RCSF/RCPS bytes are identical with
+//! tracing on or off.
+//!
+//! ## Cost when disabled
+//!
+//! With no sink installed, [`span`]/[`child_span`]/[`event`] are
+//! `#[inline(always)]` early-returns behind one relaxed atomic load —
+//! the runtime analogue of `util::failpoint`'s feature-gated no-ops
+//! (tracing is a deploy-time switch, so it cannot be a compile-time
+//! feature). No allocation, no lock, no clock read happens on the
+//! disabled path; the `obs_overhead` bench criterion pins it.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// Schema tag stamped into every trace header record; bump on any
+/// record-shape change.
+pub const TRACE_SCHEMA: &str = "rchg-trace-v1";
+
+/// Where trace records go, one JSON object per call. Implementations are
+/// best-effort: a failing sink must not fail the traced workload.
+pub trait Sink: Send {
+    fn write_line(&mut self, line: &str);
+    fn flush(&mut self) {}
+}
+
+/// JSON-lines file sink (`rchg compile --trace-out`). Write errors are
+/// reported to stderr once and the sink goes quiet — tracing is
+/// observability, never a reason to fail a compile.
+pub struct FileSink {
+    w: BufWriter<File>,
+    failed: bool,
+}
+
+impl FileSink {
+    pub fn create(path: &Path) -> std::io::Result<FileSink> {
+        Ok(FileSink { w: BufWriter::new(File::create(path)?), failed: false })
+    }
+}
+
+impl Sink for FileSink {
+    fn write_line(&mut self, line: &str) {
+        if self.failed {
+            return;
+        }
+        if let Err(e) = writeln!(self.w, "{line}") {
+            self.failed = true;
+            eprintln!("obs: trace sink write failed ({e}); tracing disabled for this sink");
+        }
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Bounded in-memory ring-buffer sink for tests: install a clone via
+/// [`set_sink`], keep the original to read the captured lines back.
+#[derive(Clone)]
+pub struct MemorySink {
+    buf: Arc<Mutex<VecDeque<String>>>,
+    cap: usize,
+}
+
+impl MemorySink {
+    /// Ring buffer holding at most `cap` lines (oldest dropped first).
+    pub fn new(cap: usize) -> MemorySink {
+        MemorySink { buf: Arc::new(Mutex::new(VecDeque::new())), cap: cap.max(1) }
+    }
+
+    /// Captured lines, oldest first.
+    pub fn lines(&self) -> Vec<String> {
+        self.buf.lock().unwrap_or_else(PoisonError::into_inner).iter().cloned().collect()
+    }
+}
+
+impl Sink for MemorySink {
+    fn write_line(&mut self, line: &str) {
+        let mut buf = self.buf.lock().unwrap_or_else(PoisonError::into_inner);
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(line.to_string());
+    }
+}
+
+struct SinkState {
+    sink: Box<dyn Sink>,
+    /// `start_us`/`at_us` origin: sink installation time.
+    epoch: Instant,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Next record sequence number (== records emitted so far).
+static SEQ: AtomicU64 = AtomicU64::new(0);
+/// Last span id handed out (0 is reserved for "no parent").
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Option<SinkState>> = Mutex::new(None);
+
+/// Install (or with `None`, remove) the process-global trace sink and
+/// write the schema header record. The sequence and span-id counters
+/// reset to zero on every call, so two traced runs in one process
+/// produce comparable records. Returns the number of records emitted to
+/// the *previous* sink (after its final flush).
+pub fn set_sink(sink: Option<Box<dyn Sink>>) -> u64 {
+    let mut guard = SINK.lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(old) = guard.as_mut() {
+        old.sink.flush();
+    }
+    let written = SEQ.load(Ordering::SeqCst);
+    SEQ.store(0, Ordering::SeqCst);
+    NEXT_SPAN_ID.store(0, Ordering::SeqCst);
+    match sink {
+        Some(s) => {
+            let mut st = SinkState { sink: s, epoch: Instant::now() };
+            let header = Json::obj(vec![
+                ("ev", Json::Str("trace".into())),
+                ("schema", Json::Str(TRACE_SCHEMA.into())),
+                ("seq", Json::Num(SEQ.fetch_add(1, Ordering::SeqCst) as f64)),
+            ]);
+            st.sink.write_line(&header.to_string());
+            *guard = Some(st);
+            ENABLED.store(true, Ordering::SeqCst);
+        }
+        None => {
+            *guard = None;
+            ENABLED.store(false, Ordering::SeqCst);
+        }
+    }
+    written
+}
+
+/// Is a sink installed? One relaxed load — the whole cost of every
+/// disabled-path trace call.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Opaque reference to a live span, used to parent children explicitly.
+/// `SpanHandle::NONE` (id 0) means "root".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanHandle(u64);
+
+impl SpanHandle {
+    pub const NONE: SpanHandle = SpanHandle(0);
+
+    pub fn id(&self) -> u64 {
+        self.0
+    }
+}
+
+/// An RAII trace scope; emits one `"ev":"span"` record on drop. Dead
+/// (tracing-disabled) spans carry no state and cost nothing beyond the
+/// enabled check.
+pub struct Span {
+    live: bool,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    fields: Vec<(&'static str, Json)>,
+    start: Option<Instant>,
+}
+
+/// Open a root span.
+#[inline(always)]
+pub fn span(name: &'static str) -> Span {
+    child_span(name, SpanHandle::NONE)
+}
+
+/// Open a span parented under `parent` (see [`Span::handle`]).
+#[inline(always)]
+pub fn child_span(name: &'static str, parent: SpanHandle) -> Span {
+    if !enabled() {
+        return Span { live: false, id: 0, parent: 0, name, fields: Vec::new(), start: None };
+    }
+    Span {
+        live: true,
+        id: NEXT_SPAN_ID.fetch_add(1, Ordering::SeqCst) + 1,
+        parent: parent.0,
+        name,
+        fields: Vec::new(),
+        start: Some(Instant::now()),
+    }
+}
+
+impl Span {
+    /// Handle for parenting children under this span. A dead span hands
+    /// out `SpanHandle::NONE`, so children of a disabled span are
+    /// (dead) roots — consistent either way.
+    pub fn handle(&self) -> SpanHandle {
+        SpanHandle(self.id)
+    }
+
+    #[inline(always)]
+    pub fn field_u64(&mut self, key: &'static str, v: u64) {
+        if self.live {
+            self.fields.push((key, Json::Num(v as f64)));
+        }
+    }
+
+    #[inline(always)]
+    pub fn field_i64(&mut self, key: &'static str, v: i64) {
+        if self.live {
+            self.fields.push((key, Json::Num(v as f64)));
+        }
+    }
+
+    #[inline(always)]
+    pub fn field_f64(&mut self, key: &'static str, v: f64) {
+        if self.live {
+            self.fields.push((key, Json::Num(v)));
+        }
+    }
+
+    #[inline(always)]
+    pub fn field_str(&mut self, key: &'static str, v: &str) {
+        if self.live {
+            self.fields.push((key, Json::Str(v.to_string())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let start = self.start.take().expect("live span has a start instant");
+        let dur_us = start.elapsed().as_micros() as u64;
+        let fields = std::mem::take(&mut self.fields);
+        emit_record("span", self.name, self.parent, fields, |rec, epoch| {
+            let start_us = start.duration_since(epoch).as_micros() as u64;
+            rec.push(("span", Json::Num(self.id as f64)));
+            rec.push(("start_us", Json::Num(start_us as f64)));
+            rec.push(("dur_us", Json::Num(dur_us as f64)));
+        });
+    }
+}
+
+/// Emit a zero-duration `"ev":"event"` record (point-in-time log line —
+/// the queryable-event-log half of the trace stream).
+#[inline(always)]
+pub fn event(name: &'static str, parent: SpanHandle, fields: Vec<(&'static str, Json)>) {
+    if !enabled() {
+        return;
+    }
+    emit_record("event", name, parent.0, fields, |rec, epoch| {
+        rec.push(("at_us", Json::Num(epoch.elapsed().as_micros() as f64)));
+    });
+}
+
+/// Shared emission tail: take the sink lock, assign the record's `seq`,
+/// assemble the JSON object (common keys + the caller's extras), write
+/// one line. The sink may have been removed since the span opened — then
+/// the record is silently dropped (the run is no longer being traced).
+fn emit_record(
+    ev: &str,
+    name: &str,
+    parent: u64,
+    fields: Vec<(&'static str, Json)>,
+    extra: impl FnOnce(&mut Vec<(&'static str, Json)>, Instant),
+) {
+    let mut guard = SINK.lock().unwrap_or_else(PoisonError::into_inner);
+    let Some(st) = guard.as_mut() else { return };
+    let seq = SEQ.fetch_add(1, Ordering::SeqCst);
+    let fields_obj =
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect());
+    let mut rec: Vec<(&'static str, Json)> = vec![
+        ("ev", Json::Str(ev.to_string())),
+        ("seq", Json::Num(seq as f64)),
+        ("name", Json::Str(name.to_string())),
+        ("parent", Json::Num(parent as f64)),
+        ("fields", fields_obj),
+    ];
+    extra(&mut rec, st.epoch);
+    st.sink.write_line(&Json::obj(rec).to_string());
+}
+
+/// Is this record/field key a wall-clock leaf? The trace analogue of
+/// `rchg bench`'s `is_timing_field`: `_us`/`_secs`/`_per_sec` suffixes
+/// (which cover the record-level `start_us`/`dur_us`/`at_us`).
+pub fn is_timing_key(name: &str) -> bool {
+    name.ends_with("_us") || name.ends_with("_secs") || name.ends_with("_per_sec")
+}
+
+/// Null every timing leaf of a parsed trace record (recursively), keeping
+/// the deterministic skeleton — two traced runs of the same sequential
+/// workload must agree on the result exactly.
+pub fn strip_timings(v: &Json) -> Json {
+    match v {
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .map(|(k, val)| {
+                    let stripped =
+                        if is_timing_key(k) { Json::Null } else { strip_timings(val) };
+                    (k.clone(), stripped)
+                })
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_timings).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Validate a JSON-lines trace dump against the `rchg-trace-v1` schema:
+/// header first, every line a well-formed record of a known kind with
+/// its required keys, `seq` equal to the line index. Returns the record
+/// count. This is the `rchg trace-check` core and the CI smoke check.
+pub fn validate_trace(text: &str) -> Result<u64, String> {
+    let mut n = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            return Err(format!("line {}: empty line inside the trace", i + 1));
+        }
+        let rec = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let ev = rec
+            .get("ev")
+            .as_str()
+            .ok_or_else(|| format!("line {}: missing \"ev\"", i + 1))?
+            .to_string();
+        let seq = rec
+            .get("seq")
+            .as_f64()
+            .ok_or_else(|| format!("line {}: missing \"seq\"", i + 1))? as u64;
+        if seq != i as u64 {
+            return Err(format!("line {}: seq {seq} breaks the monotonic sequence", i + 1));
+        }
+        match (i, ev.as_str()) {
+            (0, "trace") => {
+                let schema = rec.get("schema").as_str().unwrap_or("");
+                if schema != TRACE_SCHEMA {
+                    return Err(format!(
+                        "header schema {schema:?} (this build reads {TRACE_SCHEMA:?})"
+                    ));
+                }
+            }
+            (0, other) => return Err(format!("first record is {other:?}, not the header")),
+            (_, "trace") => return Err(format!("line {}: duplicate header", i + 1)),
+            (_, "span") => {
+                for key in ["name", "parent", "fields", "span", "start_us", "dur_us"] {
+                    if matches!(rec.get(key), Json::Null) {
+                        return Err(format!("line {}: span record missing {key:?}", i + 1));
+                    }
+                }
+            }
+            (_, "event") => {
+                for key in ["name", "parent", "fields", "at_us"] {
+                    if matches!(rec.get(key), Json::Null) {
+                        return Err(format!("line {}: event record missing {key:?}", i + 1));
+                    }
+                }
+            }
+            (_, other) => return Err(format!("line {}: unknown record kind {other:?}", i + 1)),
+        }
+        n += 1;
+    }
+    if n == 0 {
+        return Err("empty trace (no header record)".to_string());
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global, and instrumented code in *other* lib
+    // tests (compiler batches, session save/load) emits records whenever
+    // any sink is installed — so these tests serialize on this lock, use
+    // distinctive span names, and assert only on records they emitted
+    // themselves. The strict whole-trace determinism pins live in
+    // `tests/obs.rs`, where the integration binary serializes emission.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Parse the captured lines, keeping this test's own records (names
+    /// starting with `prefix`) in emission order.
+    fn ours(lines: &[String], prefix: &str) -> Vec<Json> {
+        lines
+            .iter()
+            .map(|l| Json::parse(l).expect("trace line parses"))
+            .filter(|r| r.get("name").as_str().map_or(false, |n| n.starts_with(prefix)))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        set_sink(None);
+        assert!(!enabled());
+        let mut s = span("t_inert_noop");
+        s.field_u64("n", 3);
+        assert_eq!(s.handle(), SpanHandle::NONE);
+        drop(s);
+        event("t_inert_ping", SpanHandle::NONE, vec![]);
+        // None of that reached the sink installed afterwards: the header
+        // is there, our pre-sink spans and events are not.
+        let mem = MemorySink::new(4096);
+        set_sink(Some(Box::new(mem.clone())));
+        assert!(set_sink(None) >= 1, "the header record was counted");
+        let lines = mem.lines();
+        assert!(lines[0].contains(TRACE_SCHEMA));
+        assert!(ours(&lines, "t_inert_").is_empty());
+    }
+
+    #[test]
+    fn span_records_validate_and_nest() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let mem = MemorySink::new(4096);
+        set_sink(Some(Box::new(mem.clone())));
+        {
+            let mut root = span("t_nest_root");
+            root.field_u64("weights", 10);
+            let mut child = child_span("t_nest_child", root.handle());
+            child.field_str("what", "inner");
+            event("t_nest_ping", root.handle(), vec![("n", Json::Num(1.0))]);
+        }
+        set_sink(None);
+        let recs = ours(&mem.lines(), "t_nest_");
+        assert_eq!(recs.len(), 3);
+        // Emission order: event, then child (drops first), then root.
+        let (ping, child, root) = (&recs[0], &recs[1], &recs[2]);
+        assert_eq!(ping.get("ev").as_str(), Some("event"));
+        assert!(ping.get("at_us").as_f64().is_some());
+        assert_eq!(child.get("ev").as_str(), Some("span"));
+        assert_eq!(child.get("name").as_str(), Some("t_nest_child"));
+        assert_eq!(root.get("name").as_str(), Some("t_nest_root"));
+        assert!(child.get("start_us").as_f64().is_some());
+        assert!(child.get("dur_us").as_f64().is_some());
+        assert_eq!(child.get("parent"), root.get("span"));
+        assert_eq!(ping.get("parent"), root.get("span"));
+        assert_eq!(root.get("parent").as_f64(), Some(0.0));
+        assert_eq!(root.get("fields").get("weights").as_f64(), Some(10.0));
+        assert_eq!(child.get("fields").get("what").as_str(), Some("inner"));
+    }
+
+    #[test]
+    fn set_sink_resets_sequence_for_comparable_runs() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut headers = Vec::new();
+        let mut dumps = Vec::new();
+        for _ in 0..2 {
+            let mem = MemorySink::new(4096);
+            set_sink(Some(Box::new(mem.clone())));
+            {
+                let root = span("t_reset_run");
+                let _child = child_span("t_reset_step", root.handle());
+            }
+            set_sink(None);
+            let lines = mem.lines();
+            headers.push(Json::parse(&lines[0]).unwrap());
+            dumps.push(ours(&lines, "t_reset_"));
+        }
+        // Installing a sink restarts the stream: the header is seq 0 both
+        // times (the counter reset is what makes two runs comparable).
+        for h in &headers {
+            assert_eq!(h.get("seq").as_f64(), Some(0.0));
+            assert_eq!(h.get("schema").as_str(), Some(TRACE_SCHEMA));
+        }
+        // Our records agree across runs once wall-clock leaves and the
+        // ids concurrent emitters can shift are nulled; the id-exact pin
+        // is in `tests/obs.rs`.
+        let skeleton = |recs: &[Json]| -> Vec<Json> {
+            recs.iter()
+                .map(|r| {
+                    let mut stripped = strip_timings(r);
+                    if let Json::Obj(o) = &mut stripped {
+                        for key in ["seq", "span", "parent"] {
+                            if o.contains_key(key) {
+                                o.insert(key.to_string(), Json::Null);
+                            }
+                        }
+                    }
+                    stripped
+                })
+                .collect()
+        };
+        assert_eq!(skeleton(&dumps[0]), skeleton(&dumps[1]));
+    }
+
+    #[test]
+    fn validate_trace_rejects_malformed_dumps() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        assert!(validate_trace("").is_err());
+        assert!(validate_trace("{\"ev\":\"span\",\"seq\":0}").is_err(), "no header");
+        let header = format!("{{\"ev\":\"trace\",\"schema\":\"{TRACE_SCHEMA}\",\"seq\":0}}");
+        assert!(validate_trace(&header).is_ok());
+        let wrong_schema = "{\"ev\":\"trace\",\"schema\":\"rchg-trace-v0\",\"seq\":0}";
+        assert!(validate_trace(wrong_schema).is_err());
+        let bad_seq = format!("{header}\n{{\"ev\":\"event\",\"seq\":7}}");
+        assert!(validate_trace(&bad_seq).is_err());
+        let missing_keys = format!("{header}\n{{\"ev\":\"span\",\"seq\":1}}");
+        assert!(validate_trace(&missing_keys).is_err());
+        assert!(validate_trace(&format!("{header}\nnot json")).is_err());
+    }
+
+    #[test]
+    fn timing_keys_are_segregated() {
+        assert!(is_timing_key("start_us"));
+        assert!(is_timing_key("dur_us"));
+        assert!(is_timing_key("at_us"));
+        assert!(is_timing_key("scan_secs"));
+        assert!(is_timing_key("weights_per_sec"));
+        assert!(!is_timing_key("seq"));
+        assert!(!is_timing_key("weights"));
+        assert!(!is_timing_key("name"));
+        let rec = Json::parse(
+            "{\"dur_us\":5,\"fields\":{\"n\":2,\"solve_secs\":0.1},\"seq\":1}",
+        )
+        .unwrap();
+        let stripped = strip_timings(&rec);
+        assert_eq!(stripped.get("dur_us"), &Json::Null);
+        assert_eq!(stripped.get("fields").get("solve_secs"), &Json::Null);
+        assert_eq!(stripped.get("fields").get("n").as_f64(), Some(2.0));
+        assert_eq!(stripped.get("seq").as_f64(), Some(1.0));
+    }
+}

@@ -250,6 +250,21 @@ impl StoreCounters {
         let total = self.hits + self.misses;
         (total > 0).then(|| self.hits as f64 / total as f64)
     }
+
+    /// Mirror these lifetime totals into the global [`crate::obs`]
+    /// registry as gauges. Called at scrape time (`StatsPull`, CLI
+    /// summaries) rather than on the lookup hot path, so the store never
+    /// takes the registry lock while solving.
+    pub fn record_metrics(&self) {
+        let m = crate::obs::metrics();
+        m.gauge("store.hits", self.hits as i64);
+        m.gauge("store.file_hits", self.file_hits as i64);
+        m.gauge("store.misses", self.misses as i64);
+        m.gauge("store.publishes", self.publishes as i64);
+        m.gauge("store.evictions", self.evictions as i64);
+        m.gauge("store.rejected_blobs", self.rejected_blobs as i64);
+        m.gauge("store.io_errors", self.io_errors as i64);
+    }
 }
 
 /// One resident solution: the full identity (for equality verification on

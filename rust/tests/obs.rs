@@ -1,0 +1,283 @@
+//! Observability acceptance tests: the determinism contract of the
+//! tracing subsystem and the live fleet-telemetry path.
+//!
+//! * The histogram bucket layout is pinned — it is part of the
+//!   `StatsPush` wire contract (changing it is a protocol bump).
+//! * A traced sequential compile emits a schema-valid `rchg-trace-v1`
+//!   stream whose timing-stripped skeleton is byte-identical across two
+//!   runs — and tracing never changes a compiled output byte.
+//! * A distributed (coordinator + workers) compile is byte-identical
+//!   with tracing on vs off, and the multi-threaded trace stream is
+//!   still schema-valid.
+//! * `StatsPull` against a live fabric returns the coordinator's real
+//!   registry: job counters, shard-latency histogram, store gauges.
+//!
+//! The trace sink and the metrics registry are process-global, so every
+//! test that touches them holds `OBS_LOCK` (the `fabric_`-prefixed tests
+//! additionally run under `--test-threads=1` in CI's bounded socket
+//! step, like `tests/net_fabric.rs`).
+
+use rchg::coordinator::{CompileSession, CompiledTensor, Method};
+use rchg::experiments::compile_time::synthetic_model_tensors;
+use rchg::fault::bank::ChipFaults;
+use rchg::fault::FaultRates;
+use rchg::grouping::GroupConfig;
+use rchg::net::{run_worker, CompileClient, FabricServer, ServeOptions};
+use rchg::obs;
+use rchg::util::json::Json;
+use std::net::SocketAddr;
+use std::sync::{Mutex, PoisonError};
+use std::thread;
+use std::time::Duration;
+
+const CFG: GroupConfig = GroupConfig::R2C2;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn model(limit: usize) -> Vec<(String, Vec<i64>)> {
+    synthetic_model_tensors("resnet20", &CFG, limit).unwrap()
+}
+
+fn serve_opts(shard_min_weights: usize) -> ServeOptions {
+    use rchg::coordinator::{CompileOptions, ServiceOptions, TableBudget};
+    let mut opts = CompileOptions::new(CFG, Method::Complete);
+    opts.threads = 2;
+    ServeOptions {
+        service: ServiceOptions {
+            opts,
+            rates: FaultRates::paper_default(),
+            table_budget: TableBudget::PerSession,
+            cache_dir: None,
+            store_dir: None,
+        },
+        shard_min_weights,
+        max_shards: 8,
+        worker_timeout: Duration::from_secs(30),
+        snapshot_dispatch: true,
+    }
+}
+
+fn start_server(sopts: ServeOptions) -> (SocketAddr, thread::JoinHandle<rchg::net::FabricStats>) {
+    let server = FabricServer::bind("127.0.0.1:0", sopts).unwrap();
+    let addr = server.local_addr();
+    let handle = thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+fn wait_for_workers(addr: SocketAddr, n: usize) {
+    let mut client = CompileClient::connect(&addr.to_string()).unwrap();
+    for _ in 0..600 {
+        if client.info().unwrap().workers as usize >= n {
+            return;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("{n} workers never registered with the fabric at {addr}");
+}
+
+/// One local sequential compile of `tensors` for `chip_seed`: the
+/// compiled outputs plus the RCSS session bytes.
+fn local_compile(
+    chip_seed: u64,
+    tensors: &[(String, Vec<i64>)],
+) -> (Vec<(String, CompiledTensor)>, Vec<u8>) {
+    let chip = ChipFaults::new(chip_seed, FaultRates::paper_default());
+    let mut session = CompileSession::builder(CFG).method(Method::Complete).threads(2).chip(&chip);
+    for (name, ws) in tensors {
+        session.submit(name, ws.clone());
+    }
+    let out = session.drain();
+    let bytes = session.to_bytes().unwrap();
+    (out, bytes)
+}
+
+#[test]
+fn obs_histogram_bucket_layout_is_pinned() {
+    // Part of the StatsPush wire contract — see docs/OBSERVABILITY.md.
+    assert_eq!(obs::HIST_BUCKETS, 33);
+    let pins = [
+        (0u64, 0usize),
+        (1, 1),
+        (2, 2),
+        (3, 2),
+        (4, 3),
+        (1023, 10),
+        (1024, 11),
+        ((1 << 31) - 1, 31),
+        (1 << 31, 32),
+        (u64::MAX, 32),
+    ];
+    for (v, bucket) in pins {
+        assert_eq!(obs::bucket_index(v), bucket, "bucket_index({v})");
+    }
+}
+
+#[test]
+fn obs_trace_schema_roundtrip_is_deterministic() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let tensors = model(1_500);
+
+    // Reference run with tracing off.
+    obs::set_sink(None);
+    let (want, want_bytes) = local_compile(5, &tensors);
+
+    // Two identical traced runs.
+    let mut dumps = Vec::new();
+    for _ in 0..2 {
+        let mem = obs::MemorySink::new(1 << 16);
+        obs::set_sink(Some(Box::new(mem.clone())));
+        let (got, got_bytes) = local_compile(5, &tensors);
+        let written = obs::set_sink(None);
+
+        // Tracing never changes an output byte.
+        assert_eq!(got.len(), want.len());
+        for ((gn, gt), (wn, wt)) in got.iter().zip(&want) {
+            assert_eq!(gn, wn);
+            assert_eq!(gt.decomps, wt.decomps, "bitmaps of {gn} changed under tracing");
+            assert_eq!(gt.errors, wt.errors);
+        }
+        assert_eq!(got_bytes, want_bytes, "RCSS bytes changed under tracing");
+
+        let lines = mem.lines();
+        assert_eq!(lines.len() as u64, written, "set_sink(None) reports the record count");
+        // The dump is schema-valid end to end.
+        assert_eq!(obs::validate_trace(&lines.join("\n")).unwrap(), written);
+        dumps.push(lines);
+    }
+
+    // The full timing-stripped skeletons — names, seq, span/parent ids,
+    // deterministic fields — agree byte-for-byte across the two runs.
+    let strip = |lines: &[String]| -> Vec<String> {
+        lines
+            .iter()
+            .map(|l| obs::strip_timings(&Json::parse(l).unwrap()).to_string())
+            .collect()
+    };
+    assert_eq!(strip(&dumps[0]), strip(&dumps[1]), "traced runs must have identical skeletons");
+
+    // The span taxonomy over the compile pipeline is present.
+    let names: Vec<String> = dumps[0]
+        .iter()
+        .filter_map(|l| Json::parse(l).unwrap().get("name").as_str().map(String::from))
+        .collect();
+    for expect in ["compile.batch", "compile.scan", "compile.solve", "compile.scatter", "session.save"]
+    {
+        assert!(names.iter().any(|n| n == expect), "missing span {expect:?} in {names:?}");
+    }
+}
+
+#[test]
+fn fabric_trace_on_vs_off_byte_identity() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let tensors = model(2_000);
+    let (want, want_bytes) = local_compile(7, &tensors);
+
+    let mut fetched = Vec::new();
+    for traced in [false, true] {
+        let mem = obs::MemorySink::new(1 << 16);
+        obs::set_sink(traced.then(|| Box::new(mem.clone()) as Box<dyn obs::Sink>));
+
+        let (addr, server) = start_server(serve_opts(1)); // force fan-out
+        let addr_s = addr.to_string();
+        let (wa, wb) = (addr_s.clone(), addr_s.clone());
+        let w1 = thread::spawn(move || run_worker(&wa, 1).unwrap());
+        let w2 = thread::spawn(move || run_worker(&wb, 1).unwrap());
+        wait_for_workers(addr, 2);
+
+        let mut client = CompileClient::connect(&addr_s).unwrap();
+        let (results, summary) =
+            client.compile_model(7, CFG, Method::Complete, &tensors).unwrap();
+        assert_eq!(summary.shards, 2, "traced={traced}: 2 idle workers => a 2-way plan");
+        assert_eq!(results.len(), want.len());
+        for (g, (name, w)) in results.iter().zip(&want) {
+            assert_eq!(&g.name, name);
+            assert_eq!(g.decomps, w.decomps, "traced={traced}: bitmaps of {name}");
+            assert_eq!(g.errors, w.errors);
+        }
+        let bytes = client.fetch_session(7).unwrap();
+        assert_eq!(bytes, want_bytes, "traced={traced}: fetched RCSS must equal a local save");
+        fetched.push(bytes);
+
+        client.shutdown_server().unwrap();
+        server.join().unwrap();
+        w1.join().unwrap();
+        w2.join().unwrap();
+
+        let written = obs::set_sink(None);
+        if traced {
+            // The concurrent (server + worker threads) stream is still
+            // schema-valid: seq is assigned under the sink lock, so it
+            // equals the line index even with many emitting threads.
+            let lines = mem.lines();
+            assert!(written > 1, "a traced distributed compile emits spans");
+            assert_eq!(obs::validate_trace(&lines.join("\n")).unwrap(), written);
+            let names: Vec<String> = lines
+                .iter()
+                .filter_map(|l| Json::parse(l).unwrap().get("name").as_str().map(String::from))
+                .collect();
+            for expect in ["fabric.distribute", "fabric.shard", "fabric.merge", "worker.job"] {
+                assert!(names.iter().any(|n| n == expect), "missing span {expect:?}");
+            }
+        }
+    }
+    assert_eq!(fetched[0], fetched[1], "tracing on vs off must agree byte-for-byte");
+}
+
+#[test]
+fn fabric_stats_pull_reports_live_metrics() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    obs::set_sink(None);
+    obs::metrics().reset();
+
+    let tensors = model(2_000);
+    let (addr, server) = start_server(serve_opts(1));
+    let addr_s = addr.to_string();
+    let (wa, wb) = (addr_s.clone(), addr_s.clone());
+    let w1 = thread::spawn(move || run_worker(&wa, 1).unwrap());
+    let w2 = thread::spawn(move || run_worker(&wb, 1).unwrap());
+    wait_for_workers(addr, 2);
+
+    let mut client = CompileClient::connect(&addr_s).unwrap();
+
+    // A scrape before any job still answers (zeroed gauges, no panic).
+    let cold = client.stats().unwrap();
+    assert_eq!(cold.gauge("fabric.jobs"), 0);
+    assert_eq!(cold.gauge("fabric.workers_joined"), 2);
+
+    let (_, summary) = client.compile_model(7, CFG, Method::Complete, &tensors).unwrap();
+    assert_eq!(summary.shards, 2);
+
+    let snap = client.stats().unwrap();
+    // Coordinator-side gauges reflect the finished job.
+    assert_eq!(snap.gauge("fabric.jobs"), 1);
+    assert_eq!(snap.gauge("fabric.distributed_jobs"), 1);
+    assert_eq!(snap.gauge("fabric.workers_joined"), 2);
+    assert!(snap.gauge("fabric.shards_dispatched") >= 2);
+    assert_eq!(snap.gauge("fabric.sessions_warm"), 1);
+    // The per-shard latency histogram recorded every dispatched range.
+    let lat = snap.histogram("fabric.shard.latency_us").expect("shard latency histogram");
+    assert!(lat.count >= 2, "2 shard ranges => 2 latency observations, got {}", lat.count);
+    assert_eq!(lat.buckets.iter().sum::<u64>(), lat.count);
+    // Compile counters were mirrored once per batch on the coordinator.
+    assert!(snap.counter("compile.batches") >= 1);
+    assert!(snap.counter("compile.weights") > 0);
+    // Store gauges are present even for a storeless fabric (all zero).
+    for name in ["store.hits", "store.misses", "store.io_errors", "store.rejected_blobs"] {
+        assert!(snap.get(name).is_some(), "missing {name} in the scrape");
+    }
+    // In-process workers share the registry, so their counters show too.
+    assert!(snap.counter("worker.jobs") >= 2);
+
+    // The text exposition carries every scraped entry, name-sorted.
+    let text = snap.render();
+    assert_eq!(text.lines().count(), snap.len());
+    let mut lines: Vec<&str> = text.lines().collect();
+    lines.sort_by_key(|l| l.split_whitespace().nth(1).unwrap_or("").to_string());
+    assert_eq!(lines, text.lines().collect::<Vec<_>>(), "render must be name-sorted");
+
+    client.shutdown_server().unwrap();
+    server.join().unwrap();
+    w1.join().unwrap();
+    w2.join().unwrap();
+    obs::metrics().reset();
+}
